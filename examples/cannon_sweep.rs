@@ -1,0 +1,94 @@
+//! Regenerate **Figure 5**: run time of multi-level Cannon on the
+//! Epiphany-III vs the inner block size `k = n/(N·M)`, for several
+//! matrix sizes, with the compute/bandwidth crossover `k_equal` marked.
+//!
+//! Two series per matrix size:
+//! * `sim`  — the exact Eq. 1 ledger of the executed loop, produced by
+//!   the pure cost walk (`algos::cannon_ml::simulate_cost`) so the full
+//!   `k` range is covered without hour-long gang runs;
+//! * `exec` — the real SPMD gang with real data (numerics verified),
+//!   for the points whose `M³` hyperstep count is tractable; printed to
+//!   show sim ≡ exec.
+//!
+//! ```sh
+//! cargo run --release --offline --example cannon_sweep
+//! cargo run --release --offline --example cannon_sweep -- --verify-cost
+//! ```
+
+use bsps::algos::{baselines, cannon_ml};
+use bsps::coordinator::BspsEnv;
+use bsps::model::params::AcceleratorParams;
+use bsps::model::predict;
+use bsps::util::humanfmt::seconds;
+use bsps::util::prng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    let machine = AcceleratorParams::epiphany3();
+    let grid_n = machine.grid_n();
+    let verify = std::env::args().any(|a| a == "--verify-cost");
+
+    println!(
+        "# Figure 5: multi-level Cannon run time vs k on {} (N={grid_n})",
+        machine.name
+    );
+    println!("# k_equal (paper §6): {:.2}  (paper: ≈ 8)", predict::k_equal(&machine));
+    println!(
+        "{:>5} {:>5} {:>6} {:>12} {:>12} {:>12} {:>10}",
+        "n", "k", "M", "sim", "Eq.2", "exec", "side"
+    );
+
+    for n in [128usize, 256, 512] {
+        for k in [1usize, 2, 4, 8, 16, 32] {
+            if n % (grid_n * k) != 0 {
+                continue;
+            }
+            let m = n / (grid_n * k);
+            let ledger = cannon_ml::simulate_cost(&machine, n, m)?;
+            let sim = ledger.summarize(&machine);
+            let pred = predict::cannon_cost(&machine, n, m);
+
+            // Execute with real data where M³ stays tractable.
+            let exec = if m * m * m <= 512 {
+                let mut rng = SplitMix64::new(n as u64);
+                let a = rng.f32_vec(n * n, -1.0, 1.0);
+                let b = rng.f32_vec(n * n, -1.0, 1.0);
+                let env = BspsEnv::native(machine.clone());
+                let run = cannon_ml::run(&env, &a, &b, n, m)?;
+                // Verify numerics against the sequential baseline.
+                let (want, _) = baselines::seq_matmul(&a, &b, n);
+                let max_err = run
+                    .c
+                    .iter()
+                    .zip(&want)
+                    .map(|(g, w)| (g - w).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(max_err < 0.3, "numerics diverged: {max_err}");
+                Some(run.report.sim_seconds)
+            } else {
+                None
+            };
+
+            println!(
+                "{:>5} {:>5} {:>6} {:>12} {:>12} {:>12} {:>10}",
+                n,
+                k,
+                m,
+                seconds(sim.total_seconds),
+                seconds(pred.seconds),
+                exec.map(seconds).unwrap_or_else(|| "-".into()),
+                if pred.bandwidth_heavy { "bandwidth" } else { "compute" },
+            );
+
+            if verify {
+                if let Some(exec_s) = exec {
+                    let rel = (exec_s - sim.total_seconds).abs() / exec_s;
+                    println!("        cost-walk vs executed: rel err {rel:.2e}");
+                }
+            }
+        }
+        println!();
+    }
+    println!("# paper shape: larger M (smaller k) -> higher run time;");
+    println!("# block size should be chosen as large as local memory allows.");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Regenerate the paper's raw-measurement artifacts from the simulated
+//! hardware: **Table 1** (per-core speeds to shared memory) and
+//! **Figure 4** (single-core speed vs transfer size), plus the §5
+//! parameter fit that turns them into `(e, g, l)`.
+//!
+//! ```sh
+//! cargo run --release --offline --example memspeed            # Table 1 + fit
+//! cargo run --release --offline --example memspeed -- --figure4
+//! ```
+
+use bsps::model::calibrate;
+use bsps::sim::extmem::{Actor, Dir, ExtMemModel, NetState};
+use bsps::sim::membench;
+use bsps::sim::noc::Noc;
+use bsps::util::humanfmt::mbps;
+
+fn main() {
+    let mem = ExtMemModel::epiphany3();
+    let figure4 = std::env::args().any(|a| a == "--figure4");
+
+    if figure4 {
+        println!("# Figure 4: single core, free network (speeds in MB/s)");
+        println!("{:>10} {:>12} {:>12} {:>14}", "bytes", "read", "write", "write+burst");
+        for p in membench::fig4(&mem) {
+            println!(
+                "{:>10} {:>12.2} {:>12.2} {:>14.2}",
+                p.bytes,
+                p.read_bps / 1e6,
+                p.write_bps / 1e6,
+                p.write_burst_bps / 1e6
+            );
+        }
+        return;
+    }
+
+    println!("# Table 1: communication speeds to shared memory (per core)");
+    println!("{:<6} {:<10} {:>12} {:>12}", "Actor", "Network", "Read", "Write");
+    let paper = [
+        ("Core", "contested", 8.3, 14.1),
+        ("Core", "free", 8.9, 270.0),
+        ("DMA", "contested", 11.0, 12.1),
+        ("DMA", "free", 80.0, 230.0),
+    ];
+    for (row, (actor, state, p_read, p_write)) in
+        membench::table1(&mem).iter().zip(paper)
+    {
+        println!(
+            "{:<6} {:<10} {:>12} {:>12}   (paper: {p_read} / {p_write} MB/s)",
+            actor,
+            state,
+            mbps(row.read_bps),
+            mbps(row.write_bps)
+        );
+    }
+
+    println!("\n# §5 parameter fit from these measurements");
+    let noc = Noc::epiphany3(4);
+    let samples = membench::comm_sweep(&noc, 512, 8);
+    let contested = mem.bandwidth(Actor::Dma, Dir::Read, NetState::Contested);
+    let cal = calibrate::calibrate(120.0e6, contested, &samples, 0.0);
+    println!("e = {:.2} FLOP/float   (paper: ≈ 43.4)", cal.e);
+    println!("g = {:.3} FLOP/float  (paper: ≈ 5.59)", cal.g);
+    println!("l = {:.1} FLOP        (paper: ≈ 136)", cal.l);
+}

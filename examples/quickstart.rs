@@ -1,0 +1,50 @@
+//! Quickstart: the BSPS public API in ~40 lines.
+//!
+//! Computes an inner product with Algorithm 1 (paper §3.1) on the
+//! simulated Epiphany-III, then — if `make artifacts` has run — repeats
+//! it with the PJRT backend so the token compute goes through the AOT
+//! Pallas kernel.
+//!
+//! ```sh
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use bsps::algos::inner_product;
+use bsps::coordinator::BspsEnv;
+use bsps::model::params::AcceleratorParams;
+use bsps::util::prng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    // A machine: 16 cores, 32 KB scratchpads, e = 43.4 FLOP/float.
+    let machine = AcceleratorParams::epiphany3();
+    println!("machine: {} (p={}, e={})", machine.name, machine.p, machine.e);
+
+    // A workload: two vectors of 2^16 f32s, streamed in 64-word tokens.
+    let mut rng = SplitMix64::new(7);
+    let n = 1 << 16;
+    let u = rng.f32_vec(n, -1.0, 1.0);
+    let v = rng.f32_vec(n, -1.0, 1.0);
+
+    // Algorithm 1 on the native backend.
+    let env = BspsEnv::native(machine.clone());
+    let run = inner_product::run(&env, &u, &v, 64)?;
+    let reference: f32 = u.iter().zip(&v).map(|(a, b)| a * b).sum();
+    println!("native:  alpha = {:.4} (reference {reference:.4})", run.alpha);
+    println!("         {}", run.report.render());
+    println!(
+        "         predicted: {} hypersteps, bandwidth heavy = {}",
+        run.predicted.hypersteps, run.predicted.bandwidth_heavy
+    );
+
+    // Same thing through the three-layer path: rust -> PJRT -> XLA HLO
+    // containing the interpret-mode Pallas kernel.
+    match BspsEnv::pjrt(machine, "artifacts") {
+        Ok(env_pjrt) => {
+            let run = inner_product::run(&env_pjrt, &u, &v, 64)?;
+            println!("pjrt:    alpha = {:.4}", run.alpha);
+            println!("         {}", run.report.render());
+        }
+        Err(e) => println!("pjrt:    skipped ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! The §7 sparse extension as a standalone scenario: a 2D 5-point
+//! Laplacian stencil matrix (the classic scientific-computing workload)
+//! streamed through the accelerator in ELLPACK row-block tokens.
+//!
+//! ```sh
+//! cargo run --release --offline --example spmv_scenario
+//! ```
+
+use bsps::algos::spmv::{run, EllMatrix};
+use bsps::coordinator::BspsEnv;
+use bsps::model::params::AcceleratorParams;
+use bsps::util::humanfmt::seconds;
+use bsps::util::prng::SplitMix64;
+
+/// 5-point Laplacian on a `side × side` grid.
+fn laplacian(side: usize) -> EllMatrix {
+    let n = side * side;
+    let mut triplets = Vec::new();
+    for row in 0..side {
+        for col in 0..side {
+            let i = row * side + col;
+            triplets.push((i, i, 4.0f32));
+            if row > 0 {
+                triplets.push((i, i - side, -1.0));
+            }
+            if row + 1 < side {
+                triplets.push((i, i + side, -1.0));
+            }
+            if col > 0 {
+                triplets.push((i, i - 1, -1.0));
+            }
+            if col + 1 < side {
+                triplets.push((i, i + 1, -1.0));
+            }
+        }
+    }
+    EllMatrix::from_triplets(n, 5, &triplets).expect("stencil fits nnz=5")
+}
+
+fn main() -> anyhow::Result<()> {
+    let machine = AcceleratorParams::epiphany3();
+    let env = BspsEnv::native(machine.clone());
+    let side = 64; // n = 4096
+    let a = laplacian(side);
+    let mut rng = SplitMix64::new(17);
+    let x = rng.f32_vec(a.n, -1.0, 1.0);
+
+    let run = run(&env, &a, &x, 16)?;
+    let want = a.matvec_ref(&x);
+    let max_err = run
+        .y
+        .iter()
+        .zip(&want)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0f32, f32::max);
+
+    println!("5-point Laplacian SpMV: n = {} (grid {side}×{side})", a.n);
+    println!("max |err| vs reference = {max_err:.2e}");
+    println!("{}", run.report.render());
+    println!(
+        "arithmetic intensity is ~2 FLOP/word: on e = {} every hyperstep \
+         is bandwidth heavy — the sparse regime the paper's model flags \
+         immediately (sim {} total).",
+        machine.e,
+        seconds(run.report.sim_seconds)
+    );
+    assert!(max_err < 1e-3);
+    Ok(())
+}

@@ -1,0 +1,123 @@
+"""AOT compiler: lower every L2 entry point to HLO text artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is **HLO text**, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``
+so the rust side always unwraps a 1-tuple.
+
+Besides the ``<name>.hlo.txt`` files this writes ``manifest.txt``, one
+line per artifact::
+
+    name|in=f32[8,8];f32[8,8]|out=f32[8,8]
+
+which the rust artifact registry parses to know each executable's
+signature without touching the HLO.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _s(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def catalog():
+    """The artifact catalog: (name, fn, example_args).
+
+    Shapes correspond to the block/token sizes exercised by the rust
+    benches (see DESIGN.md per-experiment index). Block sizes follow
+    Fig. 5's k sweep; token sizes follow the Algorithm 1 analysis.
+    """
+    entries = []
+    for k in (4, 8, 16, 32):
+        entries.append(
+            (f"token_mm_acc_k{k}", model.token_mm_acc,
+             [_s((k, k)), _s((k, k)), _s((k, k))])
+        )
+    for c in (64, 256, 1024):
+        entries.append(
+            (f"inprod_partial_c{c}", model.inprod_partial,
+             [_s((1,)), _s((c,)), _s((c,))])
+        )
+    entries.append(
+        ("streamed_inprod_n4096_c64", model.streamed_inprod_c64,
+         [_s((4096,)), _s((4096,))])
+    )
+    entries.append(
+        ("streamed_mm_n64_b16", model.streamed_matmul_b16,
+         [_s((64, 64)), _s((64, 64))])
+    )
+    for n in (1024, 4096):
+        entries.append(
+            (f"axpy_n{n}", model.axpy, [_s((1,)), _s((n,)), _s((n,))])
+        )
+    entries.append(
+        ("spmv_ell_r64_nnz8_n64", model.spmv_ell,
+         [_s((64, 8)), _s((64, 8), I32), _s((64,))])
+    )
+    return entries
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jaxpr → HLO text (see module docstring).
+
+    We go through ``compiler_ir(dialect="hlo")`` which yields an
+    XlaComputation directly. (The alternative StableHLO-text →
+    ``mlir_module_to_xla_computation`` route trips over a printer/parser
+    skew for interpret-mode pallas modules containing dynamic_slice.)
+    Single-output entry points lower to a plain array root, so the rust
+    side reads the result literal directly — no tuple unwrap.
+    """
+    return lowered.compiler_ir(dialect="hlo").as_hlo_text()
+
+
+def _sig(spec) -> str:
+    dt = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[spec.dtype]
+    dims = ",".join(str(d) for d in spec.shape)
+    return f"{dt}[{dims}]"
+
+
+def build(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, fn, args in catalog():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *args)
+        in_sig = ";".join(_sig(a) for a in args)
+        out_sig = ";".join(_sig(o) for o in outs)
+        manifest_lines.append(f"{name}|in={in_sig}|out={out_sig}")
+        print(f"  {name}: {len(text)} chars, in={in_sig} out={out_sig}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return manifest_lines
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts")
+    args = parser.parse_args()
+    lines = build(args.out)
+    print(f"wrote {len(lines)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from . import axpy, inner_product, matmul_block, ref, spmv  # noqa: F401

@@ -1,0 +1,45 @@
+"""L1 Pallas kernel for AXPY — the §7 video-pipeline per-frame compute.
+
+The paper's future-work section imagines real-time video processing where
+each hyperstep analyses one frame and the hypersteps must stay
+*bandwidth heavy* so the feed is processed in real time. Our video
+pipeline example (rust/src/algos/video.rs) charges its per-frame compute
+as a small constant-work filter; this kernel is the PJRT-executed
+realization of that filter: ``y + alpha * x`` over a frame-sized vector,
+streamed through VMEM in token-sized blocks.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = y_ref[...] + alpha_ref[0] * x_ref[...]
+
+
+def axpy(alpha, x, y, *, token: int | None = None):
+    """Return ``y + alpha * x`` (f32), optionally streamed in tokens.
+
+    ``alpha`` is passed as a (1,) f32 array so the whole computation has
+    array inputs (scalars complicate the PJRT literal marshaling on the
+    rust side for no benefit).
+    """
+    (n,) = x.shape
+    assert y.shape == (n,)
+    if token is None:
+        token = n
+    assert n % token == 0
+    m = n // token
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((token,), lambda i: (i,)),
+            pl.BlockSpec((token,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((token,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(alpha, x, y)

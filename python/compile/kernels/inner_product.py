@@ -1,0 +1,78 @@
+"""L1 Pallas kernels for the streaming inner product (paper §3.1).
+
+``inprod_partial`` is Algorithm 1's per-hyperstep body: the two resident
+tokens (subvectors of C components each) are multiplied element-wise and
+reduced, and the result is added to the running partial sum alpha_s held
+by the core.
+
+``streamed_inprod`` collapses the whole token loop of Algorithm 1 into a
+single Pallas grid: the grid axis is the hyperstep index, the BlockSpec
+carves the per-core stream Σ_s into C-sized tokens, and the scalar
+accumulator is carried in the resident (1, 1) output block — the same
+structural trick as the paper's partial-sum register.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _inprod_partial_kernel(acc_ref, u_ref, v_ref, o_ref):
+    o_ref[...] = acc_ref[...] + jnp.dot(
+        u_ref[...], v_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def inprod_partial(acc, u, v):
+    """One hyperstep of Algorithm 1: return ``acc + <u, v>``.
+
+    ``acc`` is a scalar f32 (shape ()); ``u``/``v`` are the two resident
+    tokens of C f32 components.
+    """
+    (c,) = u.shape
+    assert v.shape == (c,)
+    return pl.pallas_call(
+        _inprod_partial_kernel,
+        out_shape=jax.ShapeDtypeStruct((), jnp.float32),
+        interpret=True,
+    )(acc, u, v)
+
+
+def _streamed_inprod_kernel(u_ref, v_ref, o_ref, *, num_tokens):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        u_ref[...], v_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def streamed_inprod(u, v, *, token: int = 64):
+    """Full Algorithm 1 token loop for one core's streams.
+
+    Returns the scalar partial sum alpha_s = <u, v> over the whole
+    per-core stream, streamed through VMEM in C-sized tokens.
+    """
+    (n,) = u.shape
+    assert v.shape == (n,)
+    assert n % token == 0, "stream length must be a multiple of the token size"
+    m = n // token
+
+    kernel = functools.partial(_streamed_inprod_kernel, num_tokens=m)
+    out = pl.pallas_call(
+        kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((token,), lambda i: (i,)),
+            pl.BlockSpec((token,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(u, v)
+    return out[0]

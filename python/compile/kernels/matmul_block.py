@@ -1,0 +1,102 @@
+"""L1 Pallas kernels for the Cannon token compute (paper §3.2).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper streams
+k×k matrix blocks ("tokens") from shared DRAM into each core's 32 KB
+scratchpad via DMA, overlapping the fetch with the block product of the
+current hyperstep. On a TPU-shaped machine the same insight maps onto the
+Pallas execution model: BlockSpec describes the HBM→VMEM token schedule,
+the grid plays the role of the hyperstep loop, and Pallas's implicit
+double buffering is the paper's asynchronous DMA prefetch.
+
+Two kernels:
+
+* ``token_mm_acc``   — a single hyperstep's compute: C += A·B on one
+  resident block triple. This is what the rust coordinator dispatches
+  per (core, hyperstep) through PJRT.
+* ``streamed_matmul`` — the whole Algorithm 2 collapsed into one grid:
+  an (M, M, M)-grid blocked matmul whose index maps reproduce the
+  paper's stream orders (Σ^A row-major revisited M times, Σ^B
+  column-major looped M times) and whose resident output block is the
+  C-token that Algorithm 2 writes up every M hypersteps.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers to plain HLO that
+the rust runtime loads unchanged.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_acc_kernel(c_ref, a_ref, b_ref, o_ref):
+    """o = c + a @ b on blocks already resident in VMEM."""
+    o_ref[...] = c_ref[...] + jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def token_mm_acc(c, a, b):
+    """One Cannon hyperstep: return ``c + a @ b`` for k×k f32 blocks.
+
+    The block is a *token* in the paper's sense: it must fit in core-local
+    memory. k is static; the rust side picks the executable compiled for
+    its block size (artifacts/token_mm_acc_k*.hlo.txt).
+    """
+    k = c.shape[0]
+    assert c.shape == (k, k) and a.shape == (k, k) and b.shape == (k, k)
+    return pl.pallas_call(
+        _mm_acc_kernel,
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        interpret=True,
+    )(c, a, b)
+
+
+def _streamed_mm_kernel(a_ref, b_ref, o_ref, *, num_k):
+    """Grid-streamed blocked matmul accumulating into the resident C block.
+
+    Grid = (M, M, M) over (i, j, k). The k axis is innermost, so the
+    output block for (i, j) stays resident in VMEM across the k-sweep and
+    is complete when k == M-1 — exactly Algorithm 2's "after every M
+    hypersteps we have completely computed one block of C".
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def streamed_matmul(a, b, *, block: int = 16):
+    """Full multi-level product A·B via one Pallas grid.
+
+    BlockSpec index maps mirror the paper's streams:
+      * A block (i, k)   — row-major outer blocks, each revisited for
+        every j (the ``↻ M times`` in Σ^A),
+      * B block (k, j)   — column-major outer blocks, looped once per i
+        (the ``↻ M times`` around all of Σ^B).
+    """
+    n, n2 = a.shape
+    nb, n3 = b.shape
+    assert n == n2 == nb == n3, "square matrices only"
+    assert n % block == 0, "matrix size must be a multiple of the block"
+    m = n // block  # the paper's M: number of outer blocks per dimension
+
+    kernel = functools.partial(_streamed_mm_kernel, num_k=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(m, m, m),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block, block), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(a, b)

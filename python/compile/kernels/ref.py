@@ -1,0 +1,53 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy only. pytest (python/tests/) asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-generated
+shape/value sweeps — this is the core correctness signal for L1.
+
+The semantics mirror the paper's per-hyperstep token compute:
+
+* ``token_mm_acc``    — the Cannon inner step: C_ij += A_ik · B_kj on
+  k×k blocks resident in core-local memory (paper §3.2).
+* ``inprod_partial``  — Algorithm 1's per-token partial sum:
+  alpha_s += sigma_v · sigma_u (paper §3.1).
+* ``streamed_matmul`` — the full multi-level product, i.e. what the
+  M³ hypersteps of Algorithm 2 compute end to end.
+* ``axpy``            — y += alpha·x, the per-frame compute of the §7
+  video-pipeline example.
+* ``spmv_ell``        — ELLPACK sparse matrix–vector product, the §7
+  sparse extension.
+"""
+
+import jax.numpy as jnp
+
+
+def token_mm_acc(c, a, b):
+    """Return c + a @ b (f32 accumulate)."""
+    return c + jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def inprod_partial(acc, u, v):
+    """Return acc + <u, v> as a scalar f32."""
+    return acc + jnp.dot(u, v, preferred_element_type=jnp.float32)
+
+
+def streamed_matmul(a, b):
+    """Return a @ b (f32)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def axpy(alpha, x, y):
+    """Return y + alpha * x."""
+    return y + alpha * x
+
+
+def spmv_ell(values, cols, x):
+    """ELLPACK SpMV: y[i] = sum_j values[i, j] * x[cols[i, j]].
+
+    ``cols`` entries equal to -1 denote padding and contribute zero
+    (their value slot is also zero by construction, but we mask anyway).
+    """
+    gathered = x[jnp.clip(cols, 0, x.shape[0] - 1)]
+    mask = (cols >= 0).astype(values.dtype)
+    return jnp.sum(values * gathered * mask, axis=1)

@@ -1,0 +1,43 @@
+"""L1 Pallas kernel for ELLPACK SpMV — the §7 sparse extension.
+
+The paper's future work mentions "preliminary work on sparse matrix
+vector multiplication ... within the BSPS model". We realize the
+per-hyperstep compute as an ELLPACK-format SpMV: each core holds a token
+of ``rows`` matrix rows (values + column indices, padded to a fixed
+``nnz_per_row``) plus the dense input vector block, and produces the
+corresponding slice of y.
+
+ELLPACK is the natural sparse token format for a scratchpad machine: it
+is rectangular (so a token has a static size, as Definition 1 requires)
+and its gather is regular.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_ell_kernel(values_ref, cols_ref, x_ref, o_ref):
+    values = values_ref[...]
+    cols = cols_ref[...]
+    x = x_ref[...]
+    n = x.shape[0]
+    gathered = x[jnp.clip(cols, 0, n - 1)]
+    mask = (cols >= 0).astype(values.dtype)
+    o_ref[...] = jnp.sum(values * gathered * mask, axis=1)
+
+
+def spmv_ell(values, cols, x):
+    """ELLPACK SpMV token compute: y[i] = Σ_j values[i,j] · x[cols[i,j]].
+
+    ``cols`` entries of -1 are padding and contribute zero. The whole
+    token (values, cols, x) is resident — the rust coordinator streams
+    row-block tokens and the matching x window per hyperstep.
+    """
+    rows, nnz = values.shape
+    assert cols.shape == (rows, nnz)
+    return pl.pallas_call(
+        _spmv_ell_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=True,
+    )(values, cols, x)

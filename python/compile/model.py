@@ -1,0 +1,58 @@
+"""L2 — JAX compute graphs for the per-token work (build-time only).
+
+Each function here is a complete hyperstep compute that the rust
+coordinator dispatches through PJRT. They call the L1 Pallas kernels so
+the kernels lower into the same HLO module.
+
+Conventions shared with the rust runtime (rust/src/runtime/):
+
+* All scalars travel as shape-(1,) f32 arrays — PJRT literal marshaling
+  stays uniform (every input/output is an array).
+* Every entry point returns a tuple (lowered with ``return_tuple=True``);
+  the rust side unwraps with ``to_tuple1()``.
+* Shapes are static; one artifact is emitted per (entry point, shape)
+  combination used by the benches. The catalog lives in aot.py.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import axpy as _axpy
+from .kernels import inner_product as _ip
+from .kernels import matmul_block as _mm
+from .kernels import spmv as _spmv
+
+
+def token_mm_acc(c, a, b):
+    """Cannon hyperstep: C_token += A_token · B_token (paper Alg. 2)."""
+    return (_mm.token_mm_acc(c, a, b),)
+
+
+def streamed_matmul_b16(a, b):
+    """Whole multi-level matmul as one grid-streamed kernel (block=16)."""
+    return (_mm.streamed_matmul(a, b, block=16),)
+
+
+def inprod_partial(acc, u, v):
+    """Inner-product hyperstep: alpha_s += <sigma_u, sigma_v> (Alg. 1).
+
+    ``acc`` is shape (1,); the kernel consumes/produces a scalar which we
+    re-wrap so the artifact I/O is uniform arrays.
+    """
+    out = _ip.inprod_partial(acc[0], u, v)
+    return (jnp.reshape(out, (1,)),)
+
+
+def streamed_inprod_c64(u, v):
+    """Whole per-core token loop of Algorithm 1 (token size 64)."""
+    out = _ip.streamed_inprod(u, v, token=64)
+    return (jnp.reshape(out, (1,)),)
+
+
+def axpy(alpha, x, y):
+    """Video-pipeline frame filter: y + alpha·x (paper §7)."""
+    return (_axpy.axpy(alpha, x, y),)
+
+
+def spmv_ell(values, cols, x):
+    """Sparse extension: ELLPACK SpMV row-block token (paper §7)."""
+    return (_spmv.spmv_ell(values, cols, x),)

@@ -1,0 +1,145 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and values; assert_allclose against ref. This is
+the core correctness signal for the kernels that end up inside the AOT
+artifacts the rust runtime executes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import axpy, inner_product, matmul_block, ref, spmv
+
+F32 = np.float32
+
+finite = st.floats(
+    min_value=-1e3, max_value=1e3, allow_nan=False, width=32
+)
+
+
+def arrays(shape):
+    """Random f32 arrays, seeded by hypothesis (drawing whole large lists
+    element-wise trips the large_base_example health check)."""
+    return st.integers(min_value=0, max_value=2**32 - 1).map(
+        lambda seed: np.random.default_rng(seed)
+        .uniform(-100.0, 100.0, size=shape)
+        .astype(F32)
+    )
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=25, deadline=None)
+@given(st.data(), st.sampled_from([2, 3, 4, 8, 16]))
+def test_token_mm_acc_matches_ref(data, k):
+    c = data.draw(arrays((k, k)))
+    a = data.draw(arrays((k, k)))
+    b = data.draw(arrays((k, k)))
+    got = matmul_block.token_mm_acc(jnp.asarray(c), jnp.asarray(a), jnp.asarray(b))
+    want = ref.token_mm_acc(c, a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data(), st.sampled_from([(16, 4), (16, 8), (32, 8), (48, 16)]))
+def test_streamed_matmul_matches_ref(data, nb):
+    n, block = nb
+    a = data.draw(arrays((n, n)))
+    b = data.draw(arrays((n, n)))
+    got = matmul_block.streamed_matmul(jnp.asarray(a), jnp.asarray(b), block=block)
+    want = ref.streamed_matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-2)
+
+
+def test_streamed_matmul_identity():
+    n = 32
+    eye = np.eye(n, dtype=F32)
+    a = np.arange(n * n, dtype=F32).reshape(n, n) / n
+    got = matmul_block.streamed_matmul(jnp.asarray(a), jnp.asarray(eye), block=8)
+    np.testing.assert_allclose(np.asarray(got), a, rtol=1e-5)
+
+
+def test_streamed_matmul_rejects_non_divisible():
+    a = jnp.zeros((10, 10), jnp.float32)
+    with pytest.raises(AssertionError):
+        matmul_block.streamed_matmul(a, a, block=3)
+
+
+# ----------------------------------------------------------- inner product
+
+@settings(max_examples=25, deadline=None)
+@given(st.data(), st.sampled_from([1, 4, 64, 256]), finite)
+def test_inprod_partial_matches_ref(data, c, acc):
+    u = data.draw(arrays((c,)))
+    v = data.draw(arrays((c,)))
+    acc = F32(acc)
+    got = inner_product.inprod_partial(jnp.asarray(acc), jnp.asarray(u), jnp.asarray(v))
+    want = ref.inprod_partial(acc, u, v)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-3, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data(), st.sampled_from([(64, 16), (128, 32), (256, 64)]))
+def test_streamed_inprod_matches_ref(data, nt):
+    n, token = nt
+    u = data.draw(arrays((n,)))
+    v = data.draw(arrays((n,)))
+    got = inner_product.streamed_inprod(jnp.asarray(u), jnp.asarray(v), token=token)
+    np.testing.assert_allclose(
+        float(got), float(np.dot(u, v)), rtol=1e-3, atol=1e-1
+    )
+
+
+def test_streamed_inprod_zero():
+    u = jnp.zeros((128,), jnp.float32)
+    assert float(inner_product.streamed_inprod(u, u, token=32)) == 0.0
+
+
+# ------------------------------------------------------------------- axpy
+
+@settings(max_examples=20, deadline=None)
+@given(st.data(), st.sampled_from([(32, 8), (64, 64), (128, 32)]), finite)
+def test_axpy_matches_ref(data, nt, alpha):
+    n, token = nt
+    x = data.draw(arrays((n,)))
+    y = data.draw(arrays((n,)))
+    alpha = F32(alpha)
+    got = axpy.axpy(
+        jnp.asarray([alpha]), jnp.asarray(x), jnp.asarray(y), token=token
+    )
+    want = ref.axpy(alpha, x, y)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-2)
+
+
+# ------------------------------------------------------------------- spmv
+
+@settings(max_examples=15, deadline=None)
+@given(st.data(), st.sampled_from([(8, 2, 8), (16, 4, 16), (64, 8, 64)]))
+def test_spmv_ell_matches_ref(data, spec):
+    rows, nnz, n = spec
+    vals = data.draw(arrays((rows, nnz)))
+    x = data.draw(arrays((n,)))
+    cols_flat = data.draw(
+        st.lists(
+            st.integers(min_value=-1, max_value=n - 1),
+            min_size=rows * nnz, max_size=rows * nnz,
+        )
+    )
+    cols = np.asarray(cols_flat, dtype=np.int32).reshape(rows, nnz)
+    vals = vals * (cols >= 0)  # padding slots carry zero values
+    got = spmv.spmv_ell(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x))
+    want = ref.spmv_ell(vals, cols, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-2)
+
+
+def test_spmv_ell_dense_equivalence():
+    """A fully-dense ELL token must equal the dense matvec."""
+    rng = np.random.default_rng(7)
+    n = 16
+    dense = rng.standard_normal((n, n)).astype(F32)
+    cols = np.tile(np.arange(n, dtype=np.int32), (n, 1))
+    x = rng.standard_normal(n).astype(F32)
+    got = spmv.spmv_ell(jnp.asarray(dense), jnp.asarray(cols), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), dense @ x, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,73 @@
+"""L2 correctness: model entry points — shapes, dtypes, and numerics.
+
+These are the exact functions the AOT catalog lowers; anything asserted
+here holds for the artifacts the rust runtime executes.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+F32 = np.float32
+rng = np.random.default_rng(42)
+
+
+def _r(*shape):
+    return rng.standard_normal(shape).astype(F32)
+
+
+def test_token_mm_acc_tuple_shape():
+    c, a, b = _r(8, 8), _r(8, 8), _r(8, 8)
+    (out,) = model.token_mm_acc(jnp.asarray(c), jnp.asarray(a), jnp.asarray(b))
+    assert out.shape == (8, 8) and out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), ref.token_mm_acc(c, a, b), rtol=1e-4)
+
+
+def test_inprod_partial_scalar_as_1vec():
+    acc, u, v = np.asarray([1.5], dtype=F32), _r(64), _r(64)
+    (out,) = model.inprod_partial(jnp.asarray(acc), jnp.asarray(u), jnp.asarray(v))
+    assert out.shape == (1,)
+    np.testing.assert_allclose(
+        float(out[0]), float(ref.inprod_partial(acc[0], u, v)), rtol=1e-4
+    )
+
+
+def test_streamed_inprod_c64():
+    u, v = _r(4096), _r(4096)
+    (out,) = model.streamed_inprod_c64(jnp.asarray(u), jnp.asarray(v))
+    assert out.shape == (1,)
+    np.testing.assert_allclose(float(out[0]), float(u @ v), rtol=1e-3)
+
+
+def test_streamed_matmul_b16():
+    a, b = _r(64, 64), _r(64, 64)
+    (out,) = model.streamed_matmul_b16(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-3, atol=1e-3)
+
+
+def test_axpy():
+    alpha, x, y = np.asarray([0.25], dtype=F32), _r(1024), _r(1024)
+    (out,) = model.axpy(jnp.asarray(alpha), jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(out), ref.axpy(alpha[0], x, y), rtol=1e-5)
+
+
+def test_spmv_ell():
+    vals = _r(64, 8)
+    cols = rng.integers(-1, 64, size=(64, 8)).astype(np.int32)
+    vals = vals * (cols >= 0)
+    x = _r(64)
+    (out,) = model.spmv_ell(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.spmv_ell(vals, cols, x)), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_entry_points_jit_stable():
+    """Every catalog entry must lower under jit with static shapes."""
+    from compile.aot import catalog
+
+    for name, fn, args in catalog():
+        jax.jit(fn).lower(*args)  # raises on failure

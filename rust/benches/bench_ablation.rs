@@ -1,0 +1,127 @@
+//! Bench: ablations over the design choices DESIGN.md calls out.
+//!
+//! 1. **prefetch on/off** — the paper's `preload` flag: overlap hides
+//!    the fetch behind compute (Eq. 1's `max`) vs paying both serially.
+//! 2. **contested vs free `e`** — the §5 pessimism: what the same
+//!    program would cost if a lone core had the link to itself.
+//! 3. **flat vs multi-level Cannon** — the cost of streaming when the
+//!    matrix would (hypothetically) fit on-chip.
+//! 4. **naive vs overlapped streaming matmul** — `max(a,b)` vs `a+b`.
+//! 5. **token size sweep** — "the block size should always be chosen as
+//!    large as the limited amount of local memory allows".
+
+use bsps::algos::{baselines, cannon_ml, inner_product};
+use bsps::coordinator::BspsEnv;
+use bsps::model::calibrate::e_from_bandwidth;
+use bsps::model::params::AcceleratorParams;
+use bsps::model::predict;
+use bsps::util::benchtool::section;
+use bsps::util::humanfmt::seconds;
+use bsps::util::prng::SplitMix64;
+
+fn main() {
+    let machine = AcceleratorParams::epiphany3();
+    let mut rng = SplitMix64::new(123);
+
+    section("ablation 1: prefetch (preload=1) vs serial fetch (preload=0)");
+    let n = 1 << 14;
+    let u = rng.f32_vec(n, -1.0, 1.0);
+    let v = rng.f32_vec(n, -1.0, 1.0);
+    let with = inner_product::run(&BspsEnv::native(machine.clone()), &u, &v, 64).unwrap();
+    let without = inner_product::run(
+        &BspsEnv::native(machine.clone()).without_prefetch(),
+        &u,
+        &v,
+        64,
+    )
+    .unwrap();
+    println!(
+        "prefetch on : {}   (fetch hidden behind compute)",
+        seconds(with.report.sim_seconds)
+    );
+    println!(
+        "prefetch off: {}   ({:.2}× slower)",
+        seconds(without.report.sim_seconds),
+        without.report.sim_seconds / with.report.sim_seconds
+    );
+    assert!(without.report.bsps_flops > with.report.bsps_flops);
+    // The overlap benefit peaks when compute and fetch balance — run the
+    // balanced Cannon point (k ≈ k_equal) both ways too.
+    let a = rng.f32_vec(128 * 128, -1.0, 1.0);
+    let b = rng.f32_vec(128 * 128, -1.0, 1.0);
+    let cw = cannon_ml::run(&BspsEnv::native(machine.clone()), &a, &b, 128, 4).unwrap();
+    let cwo = cannon_ml::run(
+        &BspsEnv::native(machine.clone()).without_prefetch(),
+        &a,
+        &b,
+        128,
+        4,
+    )
+    .unwrap();
+    println!(
+        "cannon k=8 prefetch on : {}   off: {}   ({:.2}× slower without)",
+        seconds(cw.report.sim_seconds),
+        seconds(cwo.report.sim_seconds),
+        cwo.report.sim_seconds / cw.report.sim_seconds
+    );
+    assert!(cwo.report.bsps_flops > cw.report.bsps_flops);
+
+    section("ablation 2: contested vs free external bandwidth");
+    let e_free = e_from_bandwidth(machine.r, 80.0e6); // free DMA read
+    let mut free_machine = machine.clone();
+    free_machine.e = e_free;
+    free_machine.name = "epiphany3-freelink";
+    for (label, m) in [("contested (e=43.4)", machine.clone()), ("free (e=6.0)", free_machine)] {
+        let ledger = cannon_ml::simulate_cost(&m, 256, 16).unwrap();
+        let s = ledger.summarize(&m);
+        println!(
+            "{label}: {} ({} bandwidth-heavy of {})",
+            seconds(s.total_seconds),
+            s.bandwidth_heavy,
+            s.hypersteps
+        );
+    }
+
+    section("ablation 3: flat Cannon (fits on chip) vs multi-level (streamed)");
+    let n = 64; // k=16 flat; the streamed variant pays the stream fetches
+    let flat_flops = {
+        // Flat Cannon = M=1: one hyperstep whose fetch is also streamed,
+        // so compare against a *resident* run: compute side only.
+        let pred = predict::cannon_cost(&machine, n, 1);
+        pred.compute_per_hyperstep
+    };
+    let streamed = predict::cannon_cost(&machine, n, 2); // k=8
+    println!(
+        "resident compute (k=16): {}   streamed M=2 (k=8): {}  ({:.2}× for streaming)",
+        seconds(machine.flops_to_seconds(flat_flops)),
+        seconds(streamed.seconds),
+        streamed.flops / flat_flops
+    );
+
+    section("ablation 4: overlapped (Eq. 1 max) vs naive (sum) streaming matmul");
+    for (n, m) in [(128usize, 4usize), (256, 8), (512, 16)] {
+        let bsps = predict::cannon_cost(&machine, n, m).flops;
+        let naive = baselines::naive_streaming_matmul_cost(&machine, n, m);
+        println!(
+            "n={n} M={m} (k={}): overlap {} vs naive {}  (overlap wins {:.2}×)",
+            n / (4 * m),
+            seconds(machine.flops_to_seconds(bsps)),
+            seconds(machine.flops_to_seconds(naive)),
+            naive / bsps
+        );
+        assert!(naive > bsps);
+    }
+
+    section("ablation 5: token size sweep (paper: as large as L allows)");
+    let words = machine.effective_local_words(true);
+    for c in [16usize, 64, 256, 1024] {
+        let pred = predict::inprod_cost(&machine, 1 << 16, c);
+        let fits = 2 * c <= words; // two streams open
+        println!(
+            "C={c:>5}: {}  ({} hypersteps){}",
+            seconds(pred.seconds),
+            pred.hypersteps,
+            if fits { "" } else { "  [exceeds L/2!]" }
+        );
+    }
+}

@@ -1,0 +1,86 @@
+//! Bench: the L3 engine hot paths (the §Perf targets in DESIGN.md).
+//!
+//! * gang spawn + teardown (fixed cost per algorithm run)
+//! * superstep barrier round-trip
+//! * hyperstep with stream move_down (the steady-state token loop)
+//! * native vs PJRT token-compute dispatch latency
+
+use std::sync::Arc;
+
+use bsps::bsp::run_gang;
+use bsps::coordinator::ComputeBackend;
+use bsps::model::params::AcceleratorParams;
+use bsps::stream::StreamRegistry;
+use bsps::util::benchtool::{bench, bench_throughput, section, BenchConfig};
+
+fn machine(p: usize) -> AcceleratorParams {
+    let mut m = AcceleratorParams::epiphany3();
+    m.p = p;
+    m
+}
+
+fn main() {
+    let cfg = BenchConfig { warmup_iters: 2, samples: 8, iters_per_sample: 1 };
+
+    section("gang lifecycle");
+    for p in [1usize, 4, 16] {
+        let m = machine(p);
+        let r = bench(&format!("run_gang(p={p}) empty"), cfg, |_| {
+            run_gang(&m, None, false, |_| {})
+        });
+        println!("{}", r.row());
+    }
+
+    section("superstep barrier round-trips (p=16, 100 syncs)");
+    let m = machine(16);
+    let r = bench_throughput("sync×100", cfg, 100.0, |_| {
+        run_gang(&m, None, false, |ctx| {
+            for _ in 0..100 {
+                ctx.sync();
+            }
+        })
+    });
+    println!("{}", r.row());
+
+    section("steady-state token loop (p=16, 64 hypersteps, C=64)");
+    let m = machine(16);
+    let r = bench_throughput("hyperstep+move_down ×64", cfg, 64.0, |_| {
+        let mut reg = StreamRegistry::new(&m);
+        for _ in 0..16 {
+            reg.create(64 * 64, 64, None).unwrap();
+        }
+        let reg = Arc::new(reg);
+        run_gang(&m, Some(reg), true, |ctx| {
+            let h = ctx.stream_open(ctx.pid()).unwrap();
+            let mut tok = Vec::new();
+            for _ in 0..64 {
+                ctx.stream_move_down(h, &mut tok, true).unwrap();
+                ctx.hyperstep_sync();
+            }
+            ctx.stream_close(h).unwrap();
+        })
+    });
+    println!("{}", r.row());
+
+    section("token-compute dispatch (k=8 block mm_acc)");
+    let native = ComputeBackend::Native;
+    let a = vec![1.0f32; 64];
+    let b = vec![2.0f32; 64];
+    let r = bench("native mm_acc k=8", BenchConfig { warmup_iters: 10, samples: 10, iters_per_sample: 1000 }, |_| {
+        let mut c = vec![0.0f32; 64];
+        native.mm_acc(&mut c, &a, &b, 8).unwrap()
+    });
+    println!("{}", r.row());
+
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        let pjrt = ComputeBackend::pjrt("artifacts").unwrap();
+        let r = bench("pjrt   mm_acc k=8", BenchConfig { warmup_iters: 3, samples: 10, iters_per_sample: 10 }, |_| {
+            let mut c = vec![0.0f32; 64];
+            pjrt.mm_acc(&mut c, &a, &b, 8).unwrap()
+        });
+        println!("{}", r.row());
+        println!("(PJRT dispatch latency is the per-token overhead the coordinator amortizes)");
+    } else {
+        println!("pjrt: skipped (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench: regenerate **Figure 4** (single-core read/write speed vs
+//! transfer size, free network) and assert the paper's qualitative
+//! features: overhead-dominated small transfers, burst jumps, and the
+//! non-monotonic plain-write curve.
+
+use bsps::sim::extmem::ExtMemModel;
+use bsps::sim::membench;
+use bsps::util::benchtool::{bench, section, BenchConfig};
+
+fn main() {
+    section("Figure 4: speed vs transfer size (single core, free network)");
+    let mem = ExtMemModel::epiphany3();
+    let pts = membench::fig4(&mem);
+    println!("{:>10} {:>12} {:>12} {:>14}", "bytes", "read MB/s", "write MB/s", "burst MB/s");
+    for p in &pts {
+        println!(
+            "{:>10} {:>12.2} {:>12.2} {:>14.2}",
+            p.bytes,
+            p.read_bps / 1e6,
+            p.write_bps / 1e6,
+            p.write_burst_bps / 1e6
+        );
+    }
+
+    // Qualitative checks the paper's figure shows.
+    let first = pts.first().unwrap();
+    let last = pts.last().unwrap();
+    // Overhead at small sizes: pronounced for the fast write paths,
+    // visible for the (slow, so less overhead-sensitive) read path.
+    assert!(first.read_bps < last.read_bps / 1.5, "read overhead at small sizes");
+    let burst_peak = pts.iter().map(|p| p.write_burst_bps).fold(0.0, f64::max);
+    assert!(first.write_burst_bps < burst_peak / 10.0, "write overhead at small sizes");
+    assert!(burst_peak > 200.0e6, "burst mode reaches its fast path");
+    // Burst jumps: at least one strict decrease in the burst series.
+    let burst_has_jump =
+        pts.windows(2).any(|w| w[1].write_burst_bps < w[0].write_burst_bps * 0.98);
+    assert!(burst_has_jump, "burst interrupts visible");
+    // Plain write non-monotonic: peak strictly above the tail.
+    let write_peak = pts.iter().map(|p| p.write_bps).fold(0.0, f64::max);
+    assert!(write_peak > last.write_bps * 1.5, "write-buffer hump visible");
+    println!("qualitative features: overhead ✓  burst jumps ✓  write hump ✓");
+
+    section("curve-generation timing");
+    let r = bench("membench::fig4", BenchConfig::default(), |_| membench::fig4(&mem));
+    println!("{}", r.row());
+}

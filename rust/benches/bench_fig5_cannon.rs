@@ -1,0 +1,67 @@
+//! Bench: regenerate **Figure 5** — multi-level Cannon run time vs the
+//! inner block size `k`, for n ∈ {128, 256, 512} on the Epiphany-III
+//! model — and assert the paper's claims:
+//!
+//! 1. for fixed `n`, larger `M` (smaller `k`) gives a higher run time;
+//! 2. the asymptotic compute/fetch crossover `k_equal ≈ 8`;
+//! 3. the executed gang (real data) agrees with the cost walk.
+
+use bsps::algos::cannon_ml;
+use bsps::coordinator::BspsEnv;
+use bsps::model::params::AcceleratorParams;
+use bsps::model::predict;
+use bsps::util::benchtool::section;
+use bsps::util::humanfmt::seconds;
+use bsps::util::prng::SplitMix64;
+
+fn main() {
+    let machine = AcceleratorParams::epiphany3();
+    let grid_n = machine.grid_n();
+    section("Figure 5: Cannon run time vs k (simulated seconds)");
+    let k_eq = predict::k_equal(&machine);
+    println!("k_equal = {k_eq:.2} (paper: ≈ 8)");
+    assert!((k_eq - 8.0).abs() < 0.2);
+
+    for n in [128usize, 256, 512] {
+        let mut prev: Option<f64> = None;
+        print!("n={n:>4}:");
+        for k in [1usize, 2, 4, 8, 16, 32] {
+            if n % (grid_n * k) != 0 {
+                continue;
+            }
+            let m = n / (grid_n * k);
+            let ledger = cannon_ml::simulate_cost(&machine, n, m).unwrap();
+            let t = ledger.summarize(&machine).total_seconds;
+            print!("  k={k}: {}", seconds(t));
+            if let Some(p) = prev {
+                assert!(t < p, "time must fall as k grows (n={n}, k={k})");
+            }
+            prev = Some(t);
+        }
+        println!();
+    }
+    println!("shape ✓: run time falls monotonically with k (paper Fig. 5)");
+
+    section("executed-vs-simulated agreement (real data, wall-timed)");
+    let mut rng = SplitMix64::new(55);
+    for (n, m) in [(64usize, 2usize), (128, 4), (128, 2)] {
+        let a = rng.f32_vec(n * n, -1.0, 1.0);
+        let b = rng.f32_vec(n * n, -1.0, 1.0);
+        let env = BspsEnv::native(machine.clone());
+        let t0 = std::time::Instant::now();
+        let run = cannon_ml::run(&env, &a, &b, n, m).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let sim = cannon_ml::simulate_cost(&machine, n, m)
+            .unwrap()
+            .summarize(&machine)
+            .total_flops;
+        let rel = (sim - run.report.bsps_flops).abs() / sim;
+        println!(
+            "n={n} M={m} k={}: exec {} (wall {}), cost-walk rel err {rel:.2e}",
+            run.k,
+            seconds(run.report.sim_seconds),
+            seconds(wall)
+        );
+        assert!(rel < 1e-6);
+    }
+}

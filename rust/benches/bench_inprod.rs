@@ -1,0 +1,79 @@
+//! Bench: Algorithm 1's cost analysis (paper §3.1) — closed form vs the
+//! executed runtime over a token-size sweep, plus the bandwidth-heavy
+//! classification (`e > 1` ⇒ every hyperstep bandwidth heavy).
+
+use bsps::algos::inner_product;
+use bsps::coordinator::BspsEnv;
+use bsps::model::params::AcceleratorParams;
+use bsps::util::benchtool::section;
+use bsps::util::humanfmt::seconds;
+use bsps::util::prng::SplitMix64;
+
+fn main() {
+    let machine = AcceleratorParams::epiphany3();
+    section("Algorithm 1: T = n·max{2C, 2Ce} + p + (p−1)g + l");
+    let n = 1 << 16;
+    let mut rng = SplitMix64::new(77);
+    let u = rng.f32_vec(n, -1.0, 1.0);
+    let v = rng.f32_vec(n, -1.0, 1.0);
+    let want: f32 = u.iter().zip(&v).map(|(a, b)| a * b).sum();
+
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "C", "predicted", "exact", "measured", "hsteps", "wall"
+    );
+    for c in [16usize, 64, 256, 1024] {
+        let env = BspsEnv::native(machine.clone());
+        let t0 = std::time::Instant::now();
+        let run = inner_product::run(&env, &u, &v, c).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        assert!((run.alpha - want).abs() / want.abs().max(1.0) < 1e-2);
+        assert_eq!(run.report.ledger.bandwidth_heavy, run.report.ledger.hypersteps);
+        // The paper's formula `n·max{2C, 2Ce}` drops the sync latency;
+        // our runtime carries `l` *inside* the compute side of each
+        // hyperstep (plus the registration superstep in the first one).
+        // The exact expected ledger:
+        let cf = c as f64;
+        let hsteps = run.report.ledger.hypersteps as f64;
+        let fetch = 2.0 * cf * machine.e;
+        let exact = (2.0 * cf + 2.0 * machine.l).max(fetch)
+            + (hsteps - 1.0) * (2.0 * cf + machine.l).max(fetch);
+        let rel = (run.report.bsps_flops - exact).abs() / exact;
+        assert!(rel < 1e-9, "C={c}: measured vs exact off by {rel}");
+        println!(
+            "{:>6} {:>12} {:>12} {:>12} {:>10} {:>10}",
+            c,
+            seconds(run.predicted.seconds),
+            seconds(machine.flops_to_seconds(exact)),
+            seconds(run.report.sim_seconds),
+            run.report.ledger.hypersteps,
+            seconds(wall),
+        );
+    }
+    println!("every hyperstep bandwidth heavy (e = {} > 1) ✓", machine.e);
+
+    section("larger tokens amortize latency (paper: pick C as large as L allows)");
+    // On the Epiphany-III link (e = 43.4) the fetch side dominates for
+    // every C, so the *simulated* total is C-invariant — the paper's
+    // guidance bites (a) in host overhead per hyperstep and (b) on
+    // machines whose hypersteps are compute bound. Show (b) with a
+    // fast-link variant:
+    let mut fast = machine.clone();
+    fast.e = 0.5;
+    fast.name = "epiphany3-fastlink";
+    let small = inner_product::run(&BspsEnv::native(fast.clone()), &u, &v, 16)
+        .unwrap()
+        .report
+        .sim_seconds;
+    let large = inner_product::run(&BspsEnv::native(fast.clone()), &u, &v, 1024)
+        .unwrap()
+        .report
+        .sim_seconds;
+    println!(
+        "e=0.5: C=16: {}  C=1024: {}  speedup {:.2}× (latency amortized)",
+        seconds(small),
+        seconds(large),
+        small / large
+    );
+    assert!(large < small);
+}

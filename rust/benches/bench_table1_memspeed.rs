@@ -1,0 +1,46 @@
+//! Bench: regenerate **Table 1** (communication speeds to shared
+//! memory) and time the simulated measurement itself.
+//!
+//! Paper row order: {Core, DMA} × {contested, free}; speeds per core.
+
+use bsps::sim::extmem::{Actor, ExtMemModel, NetState};
+use bsps::sim::membench;
+use bsps::util::benchtool::{bench, section, BenchConfig};
+use bsps::util::humanfmt::mbps;
+
+fn main() {
+    section("Table 1: communication speeds to shared memory (per core)");
+    let mem = ExtMemModel::epiphany3();
+    let paper = [
+        (Actor::Core, NetState::Contested, 8.3e6, 14.1e6),
+        (Actor::Core, NetState::Free, 8.9e6, 270.0e6),
+        (Actor::Dma, NetState::Contested, 11.0e6, 12.1e6),
+        (Actor::Dma, NetState::Free, 80.0e6, 230.0e6),
+    ];
+    let rows = membench::table1(&mem);
+    let mut worst_rel = 0.0f64;
+    for (row, (actor, state, p_read, p_write)) in rows.iter().zip(paper) {
+        assert_eq!(row.actor, actor);
+        assert_eq!(row.state, state);
+        let rel_r = (row.read_bps - p_read).abs() / p_read;
+        let rel_w = (row.write_bps - p_write).abs() / p_write;
+        worst_rel = worst_rel.max(rel_r).max(rel_w);
+        println!(
+            "{:?}/{:?}: read {} (paper {}), write {} (paper {})",
+            actor,
+            state,
+            mbps(row.read_bps),
+            mbps(p_read),
+            mbps(row.write_bps),
+            mbps(p_write)
+        );
+    }
+    println!("worst relative deviation from paper: {:.1}%", worst_rel * 100.0);
+    assert!(worst_rel < 0.05, "Table 1 reproduction drifted: {worst_rel}");
+
+    section("measurement-harness timing");
+    let r = bench("membench::table1", BenchConfig::default(), |_| {
+        membench::table1(&mem)
+    });
+    println!("{}", r.row());
+}

@@ -1,0 +1,105 @@
+//! Baselines the BSPS algorithms are measured against.
+//!
+//! * [`seq_matmul`] / [`seq_dot`] — single-core reference computations
+//!   with their model cost (`2n³` resp. `2n` FLOPs at rate `r`); the
+//!   speedup denominators.
+//! * [`naive_streaming_matmul_cost`] — multi-level Cannon *without*
+//!   overlap: every hyperstep pays compute **plus** fetch
+//!   (`T_h + e·2k²`) instead of Eq. 1's `max`. This is what a
+//!   straightforward port without the DMA double buffer would cost —
+//!   the ablation showing why pseudo-streaming's overlap matters.
+
+use crate::coordinator::compute::native_mm_acc;
+use crate::model::params::AcceleratorParams;
+
+/// Sequential matmul (row-major). Returns `(c, model_flops)`.
+pub fn seq_matmul(a: &[f32], b: &[f32], n: usize) -> (Vec<f32>, f64) {
+    let mut c = vec![0.0f32; n * n];
+    native_mm_acc(&mut c, a, b, n);
+    (c, 2.0 * (n as f64).powi(3))
+}
+
+/// Sequential dot product. Returns `(alpha, model_flops)`.
+pub fn seq_dot(u: &[f32], v: &[f32]) -> (f32, f64) {
+    let alpha = u.iter().zip(v).map(|(a, b)| a * b).sum();
+    (alpha, 2.0 * u.len() as f64)
+}
+
+/// Single-core model seconds for a FLOP count.
+pub fn seq_seconds(m: &AcceleratorParams, flops: f64) -> f64 {
+    m.flops_to_seconds(flops)
+}
+
+/// Cost (FLOPs) of multi-level Cannon with **no prefetch overlap**:
+/// `M³ · (N(2k³ + 2k²g + l) + e·2k²)`.
+pub fn naive_streaming_matmul_cost(m: &AcceleratorParams, n: usize, big_m: usize) -> f64 {
+    let grid_n = m.grid_n();
+    assert!(n % (grid_n * big_m) == 0);
+    let k = (n / (grid_n * big_m)) as f64;
+    let compute = grid_n as f64 * (2.0 * k * k * k + 2.0 * k * k * m.g + m.l);
+    let fetch = m.e * 2.0 * k * k;
+    (big_m * big_m * big_m) as f64 * (compute + fetch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::predict::cannon_cost;
+    use crate::util::prng::SplitMix64;
+
+    #[test]
+    fn seq_matmul_correct_small() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        let (c, flops) = seq_matmul(&a, &b, 2);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+        assert_eq!(flops, 16.0);
+    }
+
+    #[test]
+    fn seq_dot_correct() {
+        let (alpha, flops) = seq_dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        assert_eq!(alpha, 32.0);
+        assert_eq!(flops, 6.0);
+    }
+
+    #[test]
+    fn overlap_never_loses_to_naive() {
+        // max(a,b) ≤ a+b: the BSPS cost is bounded by the naive cost,
+        // with equality only if one side is zero.
+        let m = AcceleratorParams::epiphany3();
+        for (n, big_m) in [(64, 1), (64, 2), (128, 2), (128, 4), (256, 4)] {
+            let bsps = cannon_cost(&m, n, big_m).flops;
+            let naive = naive_streaming_matmul_cost(&m, n, big_m);
+            assert!(bsps < naive, "n={n} M={big_m}: {bsps} !< {naive}");
+        }
+    }
+
+    #[test]
+    fn overlap_benefit_largest_when_balanced() {
+        // Near k_equal the two sides of the max are comparable, so the
+        // naive version pays ~2×.
+        let m = AcceleratorParams::epiphany3();
+        let (n, big_m) = (128, 4); // k = 8 ≈ k_equal
+        let bsps = cannon_cost(&m, n, big_m).flops;
+        let naive = naive_streaming_matmul_cost(&m, n, big_m);
+        let ratio = naive / bsps;
+        assert!(ratio > 1.3, "expected sizeable overlap benefit, got {ratio}");
+    }
+
+    #[test]
+    fn parallel_speedup_over_sequential() {
+        // 16 cores doing 2n³ work in ~2n³/N² compute flops per Eq. 2:
+        // the compute-side speedup must approach p for compute-heavy k.
+        let m = AcceleratorParams::epiphany3();
+        let mut rng = SplitMix64::new(10);
+        let n = 64;
+        let a = rng.f32_vec(n * n, -1.0, 1.0);
+        let b = rng.f32_vec(n * n, -1.0, 1.0);
+        let (_, seq_flops) = seq_matmul(&a, &b, n);
+        let par = cannon_cost(&m, n, 1); // k=16, compute heavy
+        let speedup = seq_flops / par.flops;
+        assert!(speedup > 8.0, "speedup {speedup} too small for p=16");
+        assert!(speedup <= 16.0 + 1e-9);
+    }
+}

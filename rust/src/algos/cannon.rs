@@ -1,0 +1,177 @@
+//! Flat Cannon's algorithm on the `N×N` core grid (paper §3.2,
+//! "Cannon's algorithm") — used standalone when the matrices fit
+//! on-chip, and as the per-hyperstep inner program of Algorithm 2.
+//!
+//! Standard formulation (0-based): with the initial skew
+//! `a = A[s, (s+t) mod N]`, `b = B[(s+t) mod N, t]`, each of the `N`
+//! supersteps computes `c += a·b`, then shifts `a` one core left along
+//! the row and `b` one core up along the column (wraparound). After
+//! `N` steps core `(s,t)` holds `C[s,t]`.
+//!
+//! Each superstep a core sends and receives `2k²` words (one `k×k`
+//! block of each matrix), giving the `2k²g` term of Eq. 2.
+
+use crate::bsp::Ctx;
+use crate::coordinator::ComputeBackend;
+
+/// Run the `N`-superstep Cannon loop *inside* a gang. `a`/`b` are this
+/// core's pre-skewed blocks (consumed), `c` is the running accumulator.
+/// Uses the gang-registered variables `a_nx`/`b_nx` (length `k²`) which
+/// must have been registered by every core before the first call.
+///
+/// Returns the blocks as they ended up (useful when callers reuse them).
+pub fn cannon_inner(
+    ctx: &mut Ctx,
+    backend: &ComputeBackend,
+    mut a: Vec<f32>,
+    mut b: Vec<f32>,
+    c: &mut Vec<f32>,
+    k: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let grid_n = (ctx.nprocs() as f64).sqrt() as usize;
+    debug_assert_eq!(grid_n * grid_n, ctx.nprocs());
+    let (s, t) = (ctx.pid() / grid_n, ctx.pid() % grid_n);
+    let left = s * grid_n + (t + grid_n - 1) % grid_n;
+    let up = ((s + grid_n - 1) % grid_n) * grid_n + t;
+
+    for step in 0..grid_n {
+        let flops = backend.mm_acc(c, &a, &b, k).unwrap();
+        ctx.charge_flops(flops);
+        if step + 1 < grid_n {
+            // Shift: a -> left neighbour, b -> up neighbour.
+            ctx.put(left, "a_nx", 0, &a);
+            ctx.put(up, "b_nx", 0, &b);
+            ctx.sync();
+            a.copy_from_slice(&ctx.var("a_nx"));
+            b.copy_from_slice(&ctx.var("b_nx"));
+        }
+        // The final multiply's superstep is closed by the caller's next
+        // sync — in Algorithm 2 that is the hyperstep's own bulk
+        // synchronization, so a hyperstep contains exactly N supersteps.
+    }
+    (a, b)
+}
+
+/// The initial Cannon skew: which inner block core `(s,t)` starts with.
+pub fn initial_skew(s: usize, t: usize, grid_n: usize) -> usize {
+    (s + t) % grid_n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::run_gang;
+    use crate::coordinator::compute::native_mm_acc;
+    use crate::model::params::AcceleratorParams;
+    use crate::util::prng::SplitMix64;
+    use std::sync::Mutex;
+
+    /// Host-side driver for the tests: distribute, run, gather.
+    fn cannon_flat(a: &[f32], b: &[f32], n: usize, grid_n: usize) -> Vec<f32> {
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = grid_n * grid_n;
+        let k = n / grid_n;
+        let backend = ComputeBackend::Native;
+        let result = Mutex::new(vec![0.0f32; n * n]);
+
+        let block = |x: &[f32], bi: usize, bj: usize| -> Vec<f32> {
+            let mut out = Vec::with_capacity(k * k);
+            for r in 0..k {
+                let start = (bi * k + r) * n + bj * k;
+                out.extend_from_slice(&x[start..start + k]);
+            }
+            out
+        };
+
+        run_gang(&m, None, false, |ctx| {
+            let (s, t) = (ctx.pid() / grid_n, ctx.pid() % grid_n);
+            let skew = initial_skew(s, t, grid_n);
+            let my_a = block(a, s, skew);
+            let my_b = block(b, skew, t);
+            let mut my_c = vec![0.0f32; k * k];
+            ctx.register("a_nx", k * k).unwrap();
+            ctx.register("b_nx", k * k).unwrap();
+            ctx.sync();
+            cannon_inner(ctx, &backend, my_a, my_b, &mut my_c, k);
+            ctx.sync(); // close the final multiply's superstep
+            let mut res = result.lock().unwrap();
+            for r in 0..k {
+                let start = (s * k + r) * n + t * k;
+                res[start..start + k].copy_from_slice(&my_c[r * k..(r + 1) * k]);
+            }
+        });
+        result.into_inner().unwrap()
+    }
+
+    #[test]
+    fn matches_reference_matmul_2x2_grid() {
+        let n = 8;
+        let mut rng = SplitMix64::new(2);
+        let a = rng.f32_vec(n * n, -1.0, 1.0);
+        let b = rng.f32_vec(n * n, -1.0, 1.0);
+        let got = cannon_flat(&a, &b, n, 2);
+        let mut want = vec![0.0f32; n * n];
+        native_mm_acc(&mut want, &a, &b, n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn matches_reference_matmul_4x4_grid() {
+        let n = 16;
+        let mut rng = SplitMix64::new(3);
+        let a = rng.f32_vec(n * n, -1.0, 1.0);
+        let b = rng.f32_vec(n * n, -1.0, 1.0);
+        let got = cannon_flat(&a, &b, n, 4);
+        let mut want = vec![0.0f32; n * n];
+        native_mm_acc(&mut want, &a, &b, n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn identity_times_anything() {
+        let n = 8;
+        let mut eye = vec![0.0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let mut rng = SplitMix64::new(4);
+        let b = rng.f32_vec(n * n, -5.0, 5.0);
+        let got = cannon_flat(&eye, &b, n, 2);
+        for (g, w) in got.iter().zip(&b) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn superstep_traffic_is_2k2() {
+        // Each Cannon superstep (except the last) moves an A and a B
+        // block: h = 2k² — the 2k²g term of Eq. 2.
+        let n = 8;
+        let grid_n = 2;
+        let k = n / grid_n;
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = 4;
+        let backend = ComputeBackend::Native;
+        let out = run_gang(&m, None, false, |ctx| {
+            ctx.register("a_nx", k * k).unwrap();
+            ctx.register("b_nx", k * k).unwrap();
+            ctx.sync();
+            let a = vec![1.0f32; k * k];
+            let b = vec![1.0f32; k * k];
+            let mut c = vec![0.0f32; k * k];
+            cannon_inner(ctx, &backend, a, b, &mut c, k);
+            ctx.sync(); // close the final multiply's superstep
+        });
+        // Supersteps: 1 registration + grid_n Cannon steps.
+        assert_eq!(out.cost.len(), 1 + grid_n);
+        let shifting = &out.cost.supersteps[1]; // first Cannon superstep
+        assert_eq!(shifting.h, (2 * k * k) as u64);
+        assert_eq!(shifting.w_max, 2.0 * (k * k * k) as f64);
+        let last = &out.cost.supersteps[grid_n];
+        assert_eq!(last.h, 0, "no shift after the final multiply");
+    }
+}

@@ -1,0 +1,148 @@
+//! Algorithm 1 (paper §3.1): the streaming inner product.
+//!
+//! The vectors are cyclically distributed and tokenized by the host; in
+//! each of the `n = N/(pC)` hypersteps every core moves down one token
+//! of each stream, adds the partial dot product `σ^v · σ^u` to its
+//! running `α_s`, and after the token loop a single ordinary superstep
+//! broadcasts the partial sums so every core holds `α = Σ_t α_t`.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::{run_bsps, BspsEnv, Report};
+use crate::host::cyclic::cyclic_streams;
+use crate::model::predict::{inprod_cost, InprodPrediction};
+use crate::stream::StreamRegistry;
+
+/// Result of a streaming inner-product run.
+#[derive(Debug, Clone)]
+pub struct InprodRun {
+    /// The computed α = ⟨u, v⟩ (identical on every core).
+    pub alpha: f32,
+    /// Cost report of the run.
+    pub report: Report,
+    /// The closed-form prediction for the same parameters.
+    pub predicted: InprodPrediction,
+}
+
+/// Run Algorithm 1 on `env` for vectors `u`, `v` with token size
+/// `token_words` (the paper's `C`). Requires `p·C | N`.
+pub fn run(env: &BspsEnv, u: &[f32], v: &[f32], token_words: usize) -> Result<InprodRun> {
+    ensure!(u.len() == v.len(), "vector length mismatch");
+    let p = env.machine.p;
+    let mut reg = StreamRegistry::new(&env.machine);
+    let u_ids = cyclic_streams(&mut reg, u, p, token_words)?;
+    let v_ids = cyclic_streams(&mut reg, v, p, token_words)?;
+    let n_hypersteps = u.len() / (p * token_words);
+    let prefetch = env.prefetch;
+    // Per-core answer, communicated back to the host after the run (the
+    // paper: "this value can then be communicated back to the host").
+    let answers = std::sync::Mutex::new(vec![0.0f32; p]);
+
+    let (report, outcome) = run_bsps(env, Arc::new(reg), |ctx, backend| {
+        let s = ctx.pid();
+        let hu = ctx.stream_open(u_ids[s]).unwrap();
+        let hv = ctx.stream_open(v_ids[s]).unwrap();
+        ctx.register("alphas", p).unwrap();
+        ctx.sync(); // registration superstep
+
+        let mut alpha_s = 0.0f32;
+        let (mut tu, mut tv) = (Vec::new(), Vec::new());
+        for _ in 0..n_hypersteps {
+            ctx.stream_move_down(hu, &mut tu, prefetch).unwrap();
+            ctx.stream_move_down(hv, &mut tv, prefetch).unwrap();
+            let (next, flops) = backend.inprod_partial(alpha_s, &tu, &tv).unwrap();
+            alpha_s = next;
+            ctx.charge_flops(flops);
+            ctx.hyperstep_sync();
+        }
+        ctx.stream_close(hu).unwrap();
+        ctx.stream_close(hv).unwrap();
+
+        // Final ordinary superstep: BROADCAST(α_s); SYNC; α = Σ_t α_t.
+        ctx.broadcast("alphas", &[alpha_s]);
+        ctx.charge_flops(p as f64); // the p-term of the paper's cost
+        ctx.sync();
+        let alpha: f32 = ctx.var("alphas").iter().sum();
+        answers.lock().unwrap()[s] = alpha;
+    });
+    let answers = answers.into_inner().unwrap();
+    // Every core must have arrived at the same α.
+    let alpha = answers[0];
+    debug_assert!(answers.iter().all(|&a| (a - alpha).abs() < 1e-3));
+    let _ = outcome;
+    let predicted = inprod_cost(&env.machine, u.len(), token_words);
+    Ok(InprodRun { alpha, report, predicted })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::AcceleratorParams;
+    use crate::util::prng::SplitMix64;
+
+    fn env(p: usize) -> BspsEnv {
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = p;
+        BspsEnv::native(m)
+    }
+
+    #[test]
+    fn computes_the_inner_product() {
+        let mut rng = SplitMix64::new(1);
+        let u = rng.f32_vec(4 * 16 * 8, -1.0, 1.0);
+        let v = rng.f32_vec(4 * 16 * 8, -1.0, 1.0);
+        let run = run(&env(4), &u, &v, 16).unwrap();
+        let want: f32 = u.iter().zip(&v).map(|(a, b)| a * b).sum();
+        assert!((run.alpha - want).abs() < 1e-2, "{} vs {want}", run.alpha);
+    }
+
+    #[test]
+    fn hyperstep_count_matches_n_over_pc() {
+        let u = vec![1.0f32; 1024];
+        let run = run(&env(4), &u, &u, 16).unwrap();
+        // n = 1024 / (4·16) = 16 hypersteps
+        assert_eq!(run.report.ledger.hypersteps, 16);
+        assert_eq!(run.predicted.hypersteps, 16);
+    }
+
+    #[test]
+    fn bandwidth_heavy_on_epiphany() {
+        // e = 43.4 > 1: every hyperstep is bandwidth heavy (paper).
+        let u = vec![1.0f32; 512];
+        let run = run(&env(4), &u, &u, 8).unwrap();
+        assert_eq!(run.report.ledger.bandwidth_heavy, run.report.ledger.hypersteps);
+        assert!(run.predicted.bandwidth_heavy);
+    }
+
+    #[test]
+    fn measured_cost_matches_exact_ledger_form() {
+        // The paper's `n·max{2C, 2Ce}` drops the sync latency; our
+        // runtime carries `l` inside the compute side of each hyperstep
+        // (and the registration superstep inside the first). The exact
+        // expectation must match to float precision.
+        let m = env(4).machine.clone();
+        let u = vec![1.0f32; 2048];
+        let c = 32usize;
+        let run = run(&env(4), &u, &u, c).unwrap();
+        let n = run.report.ledger.hypersteps as f64;
+        let cf = c as f64;
+        let fetch = 2.0 * cf * m.e;
+        let exact = (2.0 * cf + 2.0 * m.l).max(fetch)
+            + (n - 1.0) * (2.0 * cf + m.l).max(fetch);
+        let rel = (run.report.bsps_flops - exact).abs() / exact;
+        assert!(rel < 1e-9, "measured {} vs exact {exact}", run.report.bsps_flops);
+        // The paper's simplified form agrees to within the latency slack
+        // (n+1 syncs of l, plus the final superstep it counts and the
+        // ledger does not).
+        let slack = (n + 1.0) * m.l + m.p as f64 + (m.p as f64 - 1.0) * m.g + m.l;
+        assert!((run.report.bsps_flops - run.predicted.flops).abs() <= slack);
+    }
+
+    #[test]
+    fn indivisible_input_rejected() {
+        let u = vec![0.0f32; 100];
+        assert!(run(&env(4), &u, &u, 16).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! BSPS algorithms: the paper's two worked examples (§3), the baselines
+//! they are compared against, and the §7 future-work extensions.
+//!
+//! | module | paper section | what it is |
+//! |---|---|---|
+//! | [`inner_product`] | §3.1, Algorithm 1 | streaming inner product, cyclic distribution |
+//! | [`cannon`] | §3.2 | flat Cannon on the core grid (matrix fits on chip) |
+//! | [`cannon_ml`] | §3.2, Algorithm 2 | multi-level Cannon over streams (M³ hypersteps) |
+//! | [`baselines`] | §6 context | sequential matmul / dot, naive non-overlapped streaming |
+//! | [`spmv`] | §7 | streaming ELLPACK sparse matrix–vector product |
+//! | [`sort`] | §7 | external-memory sample sort over streams |
+//! | [`video`] | §7 | real-time frame pipeline with a bandwidth-heaviness check |
+
+pub mod baselines;
+pub mod cannon;
+pub mod cannon_ml;
+pub mod inner_product;
+pub mod sort;
+pub mod spmv;
+pub mod video;

@@ -1,0 +1,230 @@
+//! External-memory sample sort over streams (paper §7: "preliminary
+//! work on … external sorting within the BSPS model").
+//!
+//! Three phases, all token-streamed:
+//!
+//! 1. **Sample** — every core streams its input partition once, keeping
+//!    a regular sample; one ordinary superstep gathers all samples and
+//!    every core derives the same `p−1` splitters.
+//! 2. **Distribute** — every core seeks back (`MOVE(Σ, −n)`), streams
+//!    its partition again and routes each element through external
+//!    memory: it writes, for every destination bucket `t`, the matching
+//!    elements into its private segment of bucket `t`'s exchange stream
+//!    (large data exchange goes through `E`, not the NoC — the BSPS
+//!    idiom).
+//! 3. **Merge** — core `t` streams its bucket's exchange segments down,
+//!    sorts locally (the bucket must fit in scratchpad; enforced), and
+//!    streams the sorted bucket up.
+//!
+//! Concatenating the buckets in core order yields the sorted output.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::{run_bsps, BspsEnv, Report};
+use crate::model::params::WORD_BYTES;
+use crate::stream::StreamRegistry;
+
+/// Result of the streaming sample sort.
+#[derive(Debug, Clone)]
+pub struct SortRun {
+    pub sorted: Vec<f32>,
+    pub report: Report,
+    /// Bucket sizes after distribution (diagnostics / balance checks).
+    pub bucket_sizes: Vec<usize>,
+}
+
+/// Sort `data` with token size `token_words` per stream op. Requires
+/// `p · token_words | data.len()`, and each resulting bucket must fit in
+/// the effective scratchpad.
+pub fn run(env: &BspsEnv, data: &[f32], token_words: usize) -> Result<SortRun> {
+    let p = env.machine.p;
+    let n = data.len();
+    ensure!(token_words > 0 && n % (p * token_words) == 0, "p·C | n required");
+    let per_core = n / p;
+    let tokens_per_core = per_core / token_words;
+    // Oversampling factor for splitter quality.
+    let sample_per_core = (4 * p).min(per_core);
+
+    let mut reg = StreamRegistry::new(&env.machine);
+    // Input streams: contiguous partition per core.
+    let mut in_ids = Vec::new();
+    for s in 0..p {
+        let part = &data[s * per_core..(s + 1) * per_core];
+        in_ids.push(reg.create(per_core, token_words, Some(part))?);
+    }
+    // Exchange streams: bucket t's stream holds p segments of per_core
+    // words (worst case: everything lands in one bucket), length-prefixed.
+    let seg_words = per_core + 1; // [count, elems…]
+    let mut ex_ids = Vec::new();
+    for _t in 0..p {
+        ex_ids.push(reg.create(p * seg_words, seg_words, None)?);
+    }
+    // Output: one stream per core holding its sorted bucket as a
+    // single [count, elems…, pad] segment. Buckets are only balanced in
+    // expectation, so each segment is sized for the worst case (all of
+    // the input in one bucket).
+    let out_seg_words = n + 1;
+    let mut out_ids = Vec::new();
+    for _t in 0..p {
+        out_ids.push(reg.create(out_seg_words, out_seg_words, None)?);
+    }
+
+    let reg = Arc::new(reg);
+    let prefetch = env.prefetch;
+
+    let (report, _) = run_bsps(env, Arc::clone(&reg), |ctx, _backend| {
+        let s = ctx.pid();
+        ctx.register("samples", p * sample_per_core).unwrap();
+        ctx.sync();
+
+        // ---- Phase 1: sample my partition.
+        let h_in = ctx.stream_open(in_ids[s]).unwrap();
+        let mut tok = Vec::new();
+        let mut mine = Vec::with_capacity(per_core);
+        for _ in 0..tokens_per_core {
+            ctx.stream_move_down(h_in, &mut tok, prefetch).unwrap();
+            ctx.charge_flops(tok.len() as f64); // sampling scan
+            mine.extend_from_slice(&tok);
+            ctx.hyperstep_sync();
+        }
+        let stride = (per_core / sample_per_core).max(1);
+        let mut sample: Vec<f32> = mine.iter().step_by(stride).cloned().collect();
+        sample.truncate(sample_per_core);
+        sample.resize(sample_per_core, f32::INFINITY); // pad (tiny inputs)
+        ctx.broadcast("samples", &sample);
+        ctx.sync();
+
+        // Identical splitters on every core.
+        let mut all = ctx.var("samples");
+        all.retain(|x| x.is_finite());
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let splitters: Vec<f32> = (1..p)
+            .map(|t| all[t * all.len() / p])
+            .collect();
+        ctx.charge_flops((all.len() as f64) * (all.len() as f64).log2().max(1.0));
+
+        // ---- Phase 2: route elements to buckets via external memory.
+        ctx.stream_seek(h_in, -(tokens_per_core as i64)).unwrap();
+        let mut buckets: Vec<Vec<f32>> = vec![Vec::new(); p];
+        for _ in 0..tokens_per_core {
+            ctx.stream_move_down(h_in, &mut tok, prefetch).unwrap();
+            for &x in &tok {
+                let t = splitters.partition_point(|&sp| sp <= x);
+                buckets[t].push(x);
+            }
+            ctx.charge_flops(tok.len() as f64 * (p as f64).log2().max(1.0));
+            ctx.hyperstep_sync();
+        }
+        ctx.stream_close(h_in).unwrap();
+        // Write my segment of every bucket's exchange stream. Rounds are
+        // staggered so that in round r core s holds bucket (s+r) mod p —
+        // exclusive opens never collide, and the hyperstep sync between
+        // rounds hands the streams over.
+        for round in 0..p {
+            let t = (s + round) % p;
+            let hx = ctx.stream_open(ex_ids[t]).unwrap();
+            ctx.stream_seek(hx, s as i64).unwrap(); // my segment slot
+            let mut seg = vec![0.0f32; seg_words];
+            seg[0] = buckets[t].len() as f32;
+            seg[1..1 + buckets[t].len()].copy_from_slice(&buckets[t]);
+            ctx.stream_move_up(hx, &seg).unwrap();
+            ctx.stream_close(hx).unwrap();
+            ctx.hyperstep_sync();
+        }
+
+        // ---- Phase 3: merge my bucket.
+        let hx = ctx.stream_open(ex_ids[s]).unwrap();
+        let mut bucket = Vec::new();
+        for _src in 0..p {
+            ctx.stream_move_down(hx, &mut tok, prefetch).unwrap();
+            let count = tok[0] as usize;
+            bucket.extend_from_slice(&tok[1..1 + count]);
+            ctx.hyperstep_sync();
+        }
+        ctx.stream_close(hx).unwrap();
+        // The bucket must fit in scratchpad to be sorted locally.
+        ctx.local_alloc(bucket.len() * WORD_BYTES).unwrap();
+        bucket.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ctx.charge_flops((bucket.len().max(2) as f64) * (bucket.len().max(2) as f64).log2());
+        ctx.local_free(bucket.len() * WORD_BYTES);
+
+        let ho = ctx.stream_open(out_ids[s]).unwrap();
+        let mut seg = vec![0.0f32; out_seg_words];
+        seg[0] = bucket.len() as f32;
+        seg[1..1 + bucket.len()].copy_from_slice(&bucket);
+        ctx.stream_move_up(ho, &seg).unwrap();
+        ctx.stream_close(ho).unwrap();
+        ctx.hyperstep_sync();
+    });
+
+    // Host: concatenate buckets in core order.
+    let mut sorted = Vec::with_capacity(n);
+    let mut bucket_sizes = Vec::with_capacity(p);
+    for t in 0..p {
+        let seg = reg.snapshot(out_ids[t])?;
+        let count = seg[0] as usize;
+        bucket_sizes.push(count);
+        sorted.extend_from_slice(&seg[1..1 + count]);
+    }
+    ensure!(sorted.len() == n, "lost elements: {} != {n}", sorted.len());
+    Ok(SortRun { sorted, report, bucket_sizes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::AcceleratorParams;
+    use crate::util::prng::SplitMix64;
+
+    fn env(p: usize) -> BspsEnv {
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = p;
+        BspsEnv::native(m)
+    }
+
+    #[test]
+    fn sorts_random_input() {
+        let mut rng = SplitMix64::new(20);
+        let data = rng.f32_vec(4 * 16 * 4, -100.0, 100.0);
+        let run = run(&env(4), &data, 16).unwrap();
+        let mut want = data.clone();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(run.sorted, want);
+    }
+
+    #[test]
+    fn sorts_already_sorted_and_reversed() {
+        let n = 2 * 8 * 4;
+        let asc: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let desc: Vec<f32> = (0..n).rev().map(|i| i as f32).collect();
+        for data in [asc.clone(), desc] {
+            let run = run(&env(2), &data, 8).unwrap();
+            assert_eq!(run.sorted, asc);
+        }
+    }
+
+    #[test]
+    fn duplicates_survive() {
+        let data = vec![5.0f32; 2 * 8 * 2];
+        let run = run(&env(2), &data, 8).unwrap();
+        assert_eq!(run.sorted, data);
+        assert_eq!(run.bucket_sizes.iter().sum::<usize>(), data.len());
+    }
+
+    #[test]
+    fn no_elements_lost_property() {
+        crate::util::prop::check("sample sort is a permutation", 10, |g| {
+            let p = 2;
+            let tokens = 1 + g.size(3);
+            let c = 8;
+            let n = p * c * tokens;
+            let data = g.rng.f32_vec(n, -50.0, 50.0);
+            let run = run(&env(p), &data, c).unwrap();
+            let mut want = data.clone();
+            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(run.sorted, want);
+        });
+    }
+}

@@ -1,0 +1,417 @@
+//! Streaming sparse matrix–vector multiplication (paper §7: "we have
+//! some preliminary work on sparse matrix vector multiplication …
+//! within the BSPS model").
+//!
+//! Layout: the `n×n` matrix is stored in ELLPACK form (fixed `nnz`
+//! slots per row, `-1`-padded) and split into row-block tokens of
+//! `rows_per_token` rows. Core `s` owns the row blocks `s, s+p, …`
+//! (block-cyclic). The dense vector `x` is small enough to sit in each
+//! core's scratchpad for the whole run (charged against `L`); values
+//! and column indices stream through, one token of each per hyperstep,
+//! and the resulting `y` rows stream up.
+//!
+//! Column indices travel in f32 streams (the registry is f32-typed);
+//! that is exact for all indices below 2²⁴, and `n` here is far below.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::{run_bsps, BspsEnv, Report};
+use crate::model::params::WORD_BYTES;
+use crate::stream::StreamRegistry;
+
+/// An ELLPACK matrix.
+#[derive(Debug, Clone)]
+pub struct EllMatrix {
+    pub n: usize,
+    pub nnz: usize,
+    /// `n × nnz` values, row-major; padding slots are 0.
+    pub values: Vec<f32>,
+    /// `n × nnz` column indices; `-1` = padding.
+    pub cols: Vec<i32>,
+}
+
+impl EllMatrix {
+    /// Build from triplets (row, col, value); rows may not exceed `nnz`
+    /// entries.
+    pub fn from_triplets(
+        n: usize,
+        nnz: usize,
+        triplets: &[(usize, usize, f32)],
+    ) -> Result<Self> {
+        let mut values = vec![0.0f32; n * nnz];
+        let mut cols = vec![-1i32; n * nnz];
+        let mut fill = vec![0usize; n];
+        for &(r, c, v) in triplets {
+            ensure!(r < n && c < n, "triplet ({r},{c}) out of range");
+            ensure!(fill[r] < nnz, "row {r} exceeds nnz = {nnz}");
+            values[r * nnz + fill[r]] = v;
+            cols[r * nnz + fill[r]] = c as i32;
+            fill[r] += 1;
+        }
+        Ok(Self { n, nnz, values, cols })
+    }
+
+    /// Dense reference product.
+    pub fn matvec_ref(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0f32; self.n];
+        for r in 0..self.n {
+            for j in 0..self.nnz {
+                let c = self.cols[r * self.nnz + j];
+                if c >= 0 {
+                    y[r] += self.values[r * self.nnz + j] * x[c as usize];
+                }
+            }
+        }
+        y
+    }
+}
+
+/// Result of a streaming SpMV run.
+#[derive(Debug, Clone)]
+pub struct SpmvRun {
+    pub y: Vec<f32>,
+    pub report: Report,
+}
+
+/// Run `y = A·x` streamed in row-block tokens of `rows_per_token` rows.
+/// Requires `p · rows_per_token | n`.
+pub fn run(env: &BspsEnv, a: &EllMatrix, x: &[f32], rows_per_token: usize) -> Result<SpmvRun> {
+    let p = env.machine.p;
+    let (n, nnz) = (a.n, a.nnz);
+    ensure!(x.len() == n, "x must have length n");
+    ensure!(rows_per_token > 0 && n % (p * rows_per_token) == 0, "p·rows | n required");
+    // x + one token of values + one of cols must fit next to the stream
+    // buffers; x is charged explicitly below.
+    let blocks_per_core = n / (p * rows_per_token);
+    let token_vals = rows_per_token * nnz;
+
+    let mut reg = StreamRegistry::new(&env.machine);
+    let mut val_ids = Vec::new();
+    let mut col_ids = Vec::new();
+    let mut y_ids = Vec::new();
+    for s in 0..p {
+        // Core s's row blocks, block-cyclic: block index b = s + j·p.
+        let mut vals = Vec::with_capacity(blocks_per_core * token_vals);
+        let mut cols = Vec::with_capacity(blocks_per_core * token_vals);
+        for j in 0..blocks_per_core {
+            let block = s + j * p;
+            let row0 = block * rows_per_token;
+            let start = row0 * nnz;
+            let end = (row0 + rows_per_token) * nnz;
+            vals.extend_from_slice(&a.values[start..end]);
+            cols.extend(a.cols[start..end].iter().map(|&c| c as f32));
+        }
+        val_ids.push(reg.create(vals.len(), token_vals, Some(&vals))?);
+        col_ids.push(reg.create(cols.len(), token_vals, Some(&cols))?);
+        y_ids.push(reg.create(blocks_per_core * rows_per_token, rows_per_token, None)?);
+    }
+    let reg = Arc::new(reg);
+    let prefetch = env.prefetch;
+    let x_shared = x.to_vec();
+    let err: Mutex<Option<String>> = Mutex::new(None);
+
+    let (report, _) = run_bsps(env, Arc::clone(&reg), |ctx, backend| {
+        let s = ctx.pid();
+        // x resides in scratchpad for the whole run.
+        if let Err(e) = ctx.local_alloc(x_shared.len() * WORD_BYTES) {
+            *err.lock().unwrap() = Some(e.to_string());
+            panic!("{e}");
+        }
+        let hv = ctx.stream_open(val_ids[s]).unwrap();
+        let hc = ctx.stream_open(col_ids[s]).unwrap();
+        let hy = ctx.stream_open(y_ids[s]).unwrap();
+        let (mut tv, mut tc) = (Vec::new(), Vec::new());
+        for _ in 0..blocks_per_core {
+            ctx.stream_move_down(hv, &mut tv, prefetch).unwrap();
+            ctx.stream_move_down(hc, &mut tc, prefetch).unwrap();
+            let cols_i32: Vec<i32> = tc.iter().map(|&c| c as i32).collect();
+            let (y_tok, flops) = backend
+                .spmv_ell(&tv, &cols_i32, &x_shared, rows_per_token, nnz)
+                .unwrap();
+            ctx.charge_flops(flops);
+            ctx.stream_move_up(hy, &y_tok).unwrap();
+            ctx.hyperstep_sync();
+        }
+        ctx.stream_close(hv).unwrap();
+        ctx.stream_close(hc).unwrap();
+        ctx.stream_close(hy).unwrap();
+        ctx.local_free(x_shared.len() * WORD_BYTES);
+    });
+
+    // Host gathers y from the per-core output streams (block-cyclic).
+    let mut y = vec![0.0f32; n];
+    for s in 0..p {
+        let data = reg.snapshot(y_ids[s])?;
+        for j in 0..blocks_per_core {
+            let block = s + j * p;
+            let row0 = block * rows_per_token;
+            y[row0..row0 + rows_per_token]
+                .copy_from_slice(&data[j * rows_per_token..(j + 1) * rows_per_token]);
+        }
+    }
+    Ok(SpmvRun { y, report })
+}
+
+/// Out-of-core SpMV: neither the matrix **nor `x`** fits in local
+/// memory. The columns are cut into `windows` blocks; the host re-packs
+/// each core's rows into per-window ELLPACK slices (entries whose column
+/// falls in window `w`), and `x` is streamed window by window: hyperstep
+/// `(j, w)` combines row-block token `j`'s window-`w` slice with the
+/// window-`w` token of `x`, accumulating into the local `y` rows. `x`
+/// windows are *revisited* per row block via `seek` — the same
+/// pseudo-streaming idiom as Algorithm 2's `MOVE(Σ^B, −M²)`.
+pub fn run_windowed(
+    env: &BspsEnv,
+    a: &EllMatrix,
+    x: &[f32],
+    rows_per_token: usize,
+    windows: usize,
+) -> Result<SpmvRun> {
+    let p = env.machine.p;
+    let (n, nnz) = (a.n, a.nnz);
+    ensure!(x.len() == n, "x must have length n");
+    ensure!(windows > 0 && n % windows == 0, "windows must divide n");
+    ensure!(rows_per_token > 0 && n % (p * rows_per_token) == 0, "p·rows | n required");
+    let win = n / windows;
+    let blocks_per_core = n / (p * rows_per_token);
+    // Per-(row-token, window) slice width: worst-case all nnz of a row
+    // land in one window.
+    let token_vals = rows_per_token * nnz;
+
+    let mut reg = StreamRegistry::new(&env.machine);
+    // One x stream shared *per core* (each core streams its own copy of
+    // the window sequence; the paper's streams are exclusively opened).
+    let mut x_ids = Vec::new();
+    let mut val_ids = Vec::new();
+    let mut col_ids = Vec::new();
+    let mut y_ids = Vec::new();
+    for s in 0..p {
+        // Matrix slices: for each of my row blocks, for each window, an
+        // ELL slice with LOCAL column indices (relative to the window).
+        let mut vals = Vec::new();
+        let mut cols = Vec::new();
+        for j in 0..blocks_per_core {
+            let block = s + j * p;
+            let row0 = block * rows_per_token;
+            for w in 0..windows {
+                let (lo, hi) = (w * win, (w + 1) * win);
+                for r in 0..rows_per_token {
+                    let mut slot = 0;
+                    for k in 0..nnz {
+                        let c = a.cols[(row0 + r) * nnz + k];
+                        if c >= 0 && (c as usize) >= lo && (c as usize) < hi {
+                            vals.push(a.values[(row0 + r) * nnz + k]);
+                            cols.push((c as usize - lo) as f32);
+                            slot += 1;
+                        }
+                    }
+                    for _ in slot..nnz {
+                        vals.push(0.0);
+                        cols.push(-1.0);
+                    }
+                }
+            }
+        }
+        val_ids.push(reg.create(vals.len(), token_vals, Some(&vals))?);
+        col_ids.push(reg.create(cols.len(), token_vals, Some(&cols))?);
+        x_ids.push(reg.create(n, win, Some(x))?);
+        y_ids.push(reg.create(blocks_per_core * rows_per_token, rows_per_token, None)?);
+    }
+    let reg = Arc::new(reg);
+    let prefetch = env.prefetch;
+
+    let (report, _) = run_bsps(env, Arc::clone(&reg), |ctx, backend| {
+        let s = ctx.pid();
+        let hv = ctx.stream_open(val_ids[s]).unwrap();
+        let hc = ctx.stream_open(col_ids[s]).unwrap();
+        let hx = ctx.stream_open(x_ids[s]).unwrap();
+        let hy = ctx.stream_open(y_ids[s]).unwrap();
+        let (mut tv, mut tc, mut tx) = (Vec::new(), Vec::new(), Vec::new());
+        for j in 0..blocks_per_core {
+            let mut y_rows = vec![0.0f32; rows_per_token];
+            for _w in 0..windows {
+                ctx.stream_move_down(hv, &mut tv, prefetch).unwrap();
+                ctx.stream_move_down(hc, &mut tc, prefetch).unwrap();
+                ctx.stream_move_down(hx, &mut tx, prefetch).unwrap();
+                let cols_i32: Vec<i32> = tc.iter().map(|&c| c as i32).collect();
+                let (part, flops) = backend
+                    .spmv_ell(&tv, &cols_i32, &tx, rows_per_token, nnz)
+                    .unwrap();
+                for (yi, pi) in y_rows.iter_mut().zip(&part) {
+                    *yi += pi;
+                }
+                ctx.charge_flops(flops + rows_per_token as f64);
+                ctx.hyperstep_sync();
+            }
+            ctx.stream_move_up(hy, &y_rows).unwrap();
+            if j + 1 < blocks_per_core {
+                // Revisit the x windows for the next row block.
+                ctx.stream_seek(hx, -(windows as i64)).unwrap();
+            }
+        }
+        ctx.stream_close(hv).unwrap();
+        ctx.stream_close(hc).unwrap();
+        ctx.stream_close(hx).unwrap();
+        ctx.stream_close(hy).unwrap();
+    });
+
+    let mut y = vec![0.0f32; n];
+    for s in 0..p {
+        let data = reg.snapshot(y_ids[s])?;
+        for j in 0..blocks_per_core {
+            let block = s + j * p;
+            let row0 = block * rows_per_token;
+            y[row0..row0 + rows_per_token]
+                .copy_from_slice(&data[j * rows_per_token..(j + 1) * rows_per_token]);
+        }
+    }
+    Ok(SpmvRun { y, report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::AcceleratorParams;
+    use crate::util::prng::SplitMix64;
+
+    fn env(p: usize) -> BspsEnv {
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = p;
+        BspsEnv::native(m)
+    }
+
+    fn random_matrix(n: usize, nnz: usize, seed: u64) -> EllMatrix {
+        let mut rng = SplitMix64::new(seed);
+        let mut triplets = Vec::new();
+        for r in 0..n {
+            let row_nnz = 1 + rng.next_range(0, nnz);
+            let mut used = std::collections::BTreeSet::new();
+            for _ in 0..row_nnz {
+                let c = rng.next_range(0, n);
+                if used.insert(c) {
+                    triplets.push((r, c, rng.next_f32_in(-1.0, 1.0)));
+                }
+            }
+        }
+        EllMatrix::from_triplets(n, nnz, &triplets).unwrap()
+    }
+
+    #[test]
+    fn matches_reference() {
+        let n = 128;
+        let a = random_matrix(n, 6, 11);
+        let mut rng = SplitMix64::new(12);
+        let x = rng.f32_vec(n, -1.0, 1.0);
+        let run = run(&env(4), &a, &x, 8).unwrap();
+        let want = a.matvec_ref(&x);
+        for (g, w) in run.y.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn hyperstep_count() {
+        let n = 128;
+        let a = random_matrix(n, 4, 13);
+        let x = vec![1.0f32; n];
+        let run = run(&env(4), &a, &x, 8).unwrap();
+        // blocks_per_core = 128 / (4·8) = 4
+        assert_eq!(run.report.ledger.hypersteps, 4);
+    }
+
+    #[test]
+    fn identity_matrix() {
+        let n = 64;
+        let triplets: Vec<_> = (0..n).map(|i| (i, i, 1.0f32)).collect();
+        let a = EllMatrix::from_triplets(n, 2, &triplets).unwrap();
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let run = run(&env(4), &a, &x, 4).unwrap();
+        assert_eq!(run.y, x);
+    }
+
+    #[test]
+    fn row_overflow_rejected() {
+        assert!(EllMatrix::from_triplets(4, 1, &[(0, 0, 1.0), (0, 1, 2.0)]).is_err());
+    }
+
+    #[test]
+    fn windowed_matches_reference() {
+        let n = 128;
+        let a = random_matrix(n, 6, 21);
+        let mut rng = SplitMix64::new(22);
+        let x = rng.f32_vec(n, -1.0, 1.0);
+        for windows in [1, 2, 4, 8] {
+            let run = run_windowed(&env(4), &a, &x, 8, windows).unwrap();
+            let want = a.matvec_ref(&x);
+            for (g, w) in run.y.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3, "windows={windows}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_equals_resident_variant() {
+        let n = 64;
+        let a = random_matrix(n, 4, 23);
+        let mut rng = SplitMix64::new(24);
+        let x = rng.f32_vec(n, -1.0, 1.0);
+        let resident = run(&env(4), &a, &x, 4).unwrap();
+        let windowed = run_windowed(&env(4), &a, &x, 4, 4).unwrap();
+        for (g, w) in windowed.y.iter().zip(&resident.y) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn windowed_hyperstep_count() {
+        let n = 128;
+        let a = random_matrix(n, 4, 25);
+        let x = vec![1.0f32; n];
+        let run = run_windowed(&env(4), &a, &x, 8, 4).unwrap();
+        // blocks_per_core · windows = 4 · 4 = 16 hypersteps
+        assert_eq!(run.report.ledger.hypersteps, 16);
+    }
+
+    #[test]
+    fn windowed_works_when_x_exceeds_scratchpad() {
+        // The whole point: x (n words) no longer needs to fit in L.
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = 2;
+        // L = 3 KB: x of 4096 words (16 KB) cannot be resident, but
+        // window tokens of 256 words + the ELL slices fit comfortably.
+        m.local_mem = 3 * 1024;
+        let envx = BspsEnv::native(m);
+        let n = 4096;
+        let tri: Vec<_> = (0..n).map(|i| (i, (i * 17) % n, 1.0f32)).collect();
+        let a = EllMatrix::from_triplets(n, 2, &tri).unwrap();
+        let x: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
+        let run = run_windowed(&envx, &a, &x, 16, 16).unwrap();
+        let want = a.matvec_ref(&x);
+        for (g, w) in run.y.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn windowed_rejects_bad_window_count() {
+        let a = random_matrix(64, 2, 26);
+        let x = vec![0.0f32; 64];
+        assert!(run_windowed(&env(4), &a, &x, 4, 3).is_err());
+    }
+
+    #[test]
+    fn x_too_large_for_scratchpad_fails() {
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = 2;
+        m.local_mem = 256; // 64 words: x of 128 won't fit
+        let envx = BspsEnv::native(m);
+        let a = random_matrix(128, 2, 14);
+        let x = vec![0.0f32; 128];
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run(&envx, &a, &x, 4)
+        }));
+        assert!(res.is_err(), "must refuse to overflow L");
+    }
+}

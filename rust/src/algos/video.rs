@@ -1,0 +1,181 @@
+//! Real-time video pipeline (paper §7: "applying the BSPS cost function
+//! to real-time video processing, where a frame is analyzed in each
+//! hyperstep. Here we could require the hypersteps to be bandwidth
+//! heavy to ensure that we are able to process the entire video feed in
+//! real time").
+//!
+//! Each frame is split into `p` horizontal bands; a hyperstep moves one
+//! band per core down, applies the per-pixel filter (an AXPY against
+//! the previous output band — a temporal smoothing filter), and streams
+//! the filtered band up. The run reports the simulated frame rate and
+//! whether the pipeline keeps up with a required FPS — including the
+//! paper's observation that a *bandwidth-heavy* pipeline is exactly one
+//! whose throughput is pinned by `e`, so more filter work would be free.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::{run_bsps, BspsEnv, Report};
+use crate::model::bsps::HeavySide;
+use crate::stream::StreamRegistry;
+
+/// Result of a video pipeline run.
+#[derive(Debug, Clone)]
+pub struct VideoRun {
+    /// Filtered frames, same layout as the input.
+    pub output: Vec<Vec<f32>>,
+    pub report: Report,
+    /// Simulated frames per second.
+    pub fps: f64,
+    /// Whether every hyperstep was bandwidth heavy (the real-time
+    /// headroom condition from §7).
+    pub bandwidth_heavy_throughout: bool,
+}
+
+/// Run the pipeline: `frames` of `pixels` f32s each, temporal filter
+/// `out = alpha·in + (1−alpha)·prev_out`, band size `pixels / p`.
+pub fn run(env: &BspsEnv, frames: &[Vec<f32>], alpha: f32) -> Result<VideoRun> {
+    ensure!(!frames.is_empty(), "no frames");
+    let p = env.machine.p;
+    let pixels = frames[0].len();
+    ensure!(pixels % p == 0, "p must divide the pixels per frame");
+    ensure!(frames.iter().all(|f| f.len() == pixels), "ragged frames");
+    let band = pixels / p;
+    let nframes = frames.len();
+
+    let mut reg = StreamRegistry::new(&env.machine);
+    // Input stream per core: its band of every frame, in time order.
+    let mut in_ids = Vec::new();
+    let mut out_ids = Vec::new();
+    for s in 0..p {
+        let mut data = Vec::with_capacity(nframes * band);
+        for f in frames {
+            data.extend_from_slice(&f[s * band..(s + 1) * band]);
+        }
+        in_ids.push(reg.create(nframes * band, band, Some(&data))?);
+        out_ids.push(reg.create(nframes * band, band, None)?);
+    }
+    let reg = Arc::new(reg);
+    let prefetch = env.prefetch;
+
+    let (report, outcome) = run_bsps(env, Arc::clone(&reg), |ctx, backend| {
+        let s = ctx.pid();
+        let hi = ctx.stream_open(in_ids[s]).unwrap();
+        let ho = ctx.stream_open(out_ids[s]).unwrap();
+        let mut tok = Vec::new();
+        let mut prev = vec![0.0f32; band];
+        for _ in 0..nframes {
+            ctx.stream_move_down(hi, &mut tok, prefetch).unwrap();
+            // out = prev + alpha·(in − prev) == alpha·in + (1−alpha)·prev
+            let diff: Vec<f32> = tok.iter().zip(&prev).map(|(i, o)| i - o).collect();
+            ctx.charge_flops(band as f64); // the subtraction
+            let flops = backend.axpy(alpha, &diff, &mut prev).unwrap();
+            ctx.charge_flops(flops);
+            ctx.stream_move_up(ho, &prev).unwrap();
+            ctx.hyperstep_sync();
+        }
+        ctx.stream_close(hi).unwrap();
+        ctx.stream_close(ho).unwrap();
+    });
+
+    // Gather output frames.
+    let mut output = vec![vec![0.0f32; pixels]; nframes];
+    for s in 0..p {
+        let data = reg.snapshot(out_ids[s])?;
+        for (f, frame) in output.iter_mut().enumerate() {
+            frame[s * band..(s + 1) * band]
+                .copy_from_slice(&data[f * band..(f + 1) * band]);
+        }
+    }
+
+    let fps = nframes as f64 / report.sim_seconds;
+    let m = &env.machine;
+    let bandwidth_heavy_throughout = outcome
+        .ledger
+        .hypersteps
+        .iter()
+        .all(|h| h.side(m) == HeavySide::Bandwidth);
+    Ok(VideoRun { output, report, fps, bandwidth_heavy_throughout })
+}
+
+/// Reference filter for tests.
+pub fn filter_ref(frames: &[Vec<f32>], alpha: f32) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(frames.len());
+    let mut prev = vec![0.0f32; frames[0].len()];
+    for f in frames {
+        let cur: Vec<f32> = f
+            .iter()
+            .zip(&prev)
+            .map(|(i, o)| o + alpha * (i - o))
+            .collect();
+        out.push(cur.clone());
+        prev = cur;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::AcceleratorParams;
+    use crate::util::prng::SplitMix64;
+
+    fn env(p: usize) -> BspsEnv {
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = p;
+        BspsEnv::native(m)
+    }
+
+    fn frames(n: usize, pixels: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n).map(|_| rng.f32_vec(pixels, 0.0, 255.0)).collect()
+    }
+
+    #[test]
+    fn filter_matches_reference() {
+        let fs = frames(6, 4 * 32, 30);
+        let run = run(&env(4), &fs, 0.25).unwrap();
+        let want = filter_ref(&fs, 0.25);
+        for (g, w) in run.output.iter().flatten().zip(want.iter().flatten()) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn one_hyperstep_per_frame() {
+        let fs = frames(9, 2 * 16, 31);
+        let run = run(&env(2), &fs, 0.5).unwrap();
+        assert_eq!(run.report.ledger.hypersteps, 9);
+    }
+
+    #[test]
+    fn epiphany_pipeline_is_bandwidth_heavy() {
+        // A light per-pixel filter on e = 43.4 is pinned by the link:
+        // the §7 condition holds and fps is set by bandwidth, not work.
+        let fs = frames(4, 4 * 64, 32);
+        let run = run(&env(4), &fs, 0.5).unwrap();
+        assert!(run.bandwidth_heavy_throughout);
+        assert!(run.fps > 0.0);
+    }
+
+    #[test]
+    fn cheap_link_makes_it_compute_heavy() {
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = 4;
+        m.e = 0.1; // GDDR-class external memory
+        let envx = BspsEnv::native(m);
+        let fs = frames(4, 4 * 64, 33);
+        let run = run(&envx, &fs, 0.5).unwrap();
+        assert!(!run.bandwidth_heavy_throughout);
+    }
+
+    #[test]
+    fn alpha_one_is_identity() {
+        let fs = frames(3, 2 * 8, 34);
+        let run = run(&env(2), &fs, 1.0).unwrap();
+        for (g, w) in run.output.iter().flatten().zip(fs.iter().flatten()) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,730 @@
+//! The SPMD superstep engine — a BSPlib-style runtime in Rust.
+//!
+//! `p` OS threads play the accelerator cores and run the same kernel on
+//! different data (SPMD). Within a superstep a core computes on its own
+//! registered variables and *queues* communication (buffered `put`s,
+//! `get`s, messages). At [`Ctx::sync`] the gang meets at a poisonable
+//! barrier; one leader applies all queued operations in a deterministic
+//! order, closes the superstep's cost record (`max_s w`, the h-relation),
+//! and the next superstep begins.
+//!
+//! The engine executes the **real numerics** while charging **virtual
+//! time** according to the machine model — the combination lets one run
+//! both verify results against oracles and reproduce the paper's timing
+//! claims (DESIGN.md "Hardware substitution").
+//!
+//! Streaming (`stream_*`) and hyperstep methods live on the same `Ctx`
+//! and are documented in `coordinator`; they are no-ops for plain BSP
+//! programs that never touch streams.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::bsp::barrier::{Barrier, PoisonOnPanic};
+use crate::model::bsps::{HyperstepCost, Ledger};
+use crate::model::cost::{BspCost, CoreStepUsage, SuperstepCost};
+use crate::model::params::{AcceleratorParams, WORD_BYTES};
+use crate::stream::{StreamHandle, StreamRegistry};
+use crate::util::pool::scoped_spmd;
+
+/// A buffered put, applied at the next sync.
+struct PutOp {
+    dst_pid: usize,
+    var: String,
+    offset: usize,
+    data: Vec<f32>,
+}
+
+/// A get request, resolved at the next sync (BSPlib semantics: the value
+/// read is the source's value at sync time).
+struct GetOp {
+    src_pid: usize,
+    src_var: String,
+    src_offset: usize,
+    dst_var: String,
+    dst_offset: usize,
+    len: usize,
+}
+
+/// A delivered message (BSPlib BSMP flavour, f32 payloads).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub src_pid: usize,
+    pub tag: u32,
+    pub payload: Vec<f32>,
+}
+
+/// State shared by the whole gang.
+pub(crate) struct Shared {
+    pub machine: AcceleratorParams,
+    barrier: Barrier,
+    /// Registered variables: name → one buffer per core.
+    vars: RwLock<BTreeMap<String, Vec<Mutex<Vec<f32>>>>>,
+    /// Communication queued this superstep, indexed by source pid.
+    puts: Vec<Mutex<Vec<PutOp>>>,
+    gets: Vec<Mutex<Vec<GetOp>>>,
+    outbox: Vec<Mutex<Vec<(usize, Message)>>>,
+    /// Messages readable this superstep, per core.
+    inbox: Vec<Mutex<Vec<Message>>>,
+    /// Per-core usage of the current superstep.
+    usage: Vec<Mutex<CoreStepUsage>>,
+    /// Closed supersteps.
+    pub cost: Mutex<BspCost>,
+    /// Streams (None for plain BSP programs).
+    pub streams: Option<Arc<StreamRegistry>>,
+    /// Per-core words prefetched (overlapped) this hyperstep.
+    fetch_words: Vec<Mutex<u64>>,
+    /// Hyperstep ledger (cut at `hyperstep_sync`).
+    pub ledger: Mutex<Ledger>,
+    /// Index into `cost.supersteps` where the current hyperstep began.
+    hyper_start: Mutex<usize>,
+    /// Per-core local-memory (scratchpad) usage in bytes.
+    local_used: Vec<Mutex<usize>>,
+    /// Whether prefetch double-buffering is charged on stream opens.
+    pub prefetch: bool,
+}
+
+impl Shared {
+    pub fn new(
+        machine: AcceleratorParams,
+        streams: Option<Arc<StreamRegistry>>,
+        prefetch: bool,
+    ) -> Self {
+        let p = machine.p;
+        Self {
+            machine,
+            barrier: Barrier::new(p),
+            vars: RwLock::new(BTreeMap::new()),
+            puts: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+            gets: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+            outbox: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+            inbox: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+            usage: (0..p).map(|_| Mutex::new(CoreStepUsage::default())).collect(),
+            cost: Mutex::new(BspCost::new()),
+            streams,
+            fetch_words: (0..p).map(|_| Mutex::new(0)).collect(),
+            ledger: Mutex::new(Ledger::new()),
+            hyper_start: Mutex::new(0),
+            local_used: (0..p).map(|_| Mutex::new(0)).collect(),
+            prefetch,
+        }
+    }
+}
+
+/// Per-core execution context handed to the SPMD kernel.
+pub struct Ctx {
+    pid: usize,
+    shared: Arc<Shared>,
+}
+
+impl Ctx {
+    /// This core's id, `bsp_pid()`.
+    pub fn pid(&self) -> usize {
+        self.pid
+    }
+
+    /// Number of cores, `bsp_nprocs()`.
+    pub fn nprocs(&self) -> usize {
+        self.shared.machine.p
+    }
+
+    /// The machine this gang runs on.
+    pub fn machine(&self) -> &AcceleratorParams {
+        &self.shared.machine
+    }
+
+    // ------------------------------------------------ local memory
+
+    /// Charge `bytes` of scratchpad memory on this core; errors if the
+    /// core's local memory `L` would overflow.
+    pub fn local_alloc(&self, bytes: usize) -> Result<()> {
+        let mut used = self.shared.local_used[self.pid].lock().unwrap();
+        let cap = self.shared.machine.local_mem;
+        if *used + bytes > cap {
+            return Err(anyhow!(
+                "core {}: local memory exhausted ({} + {bytes} B > L = {cap} B)",
+                self.pid,
+                *used
+            ));
+        }
+        *used += bytes;
+        Ok(())
+    }
+
+    /// Release `bytes` of scratchpad memory.
+    pub fn local_free(&self, bytes: usize) {
+        let mut used = self.shared.local_used[self.pid].lock().unwrap();
+        *used = used.saturating_sub(bytes);
+    }
+
+    /// Bytes of scratchpad currently charged on this core.
+    pub fn local_used(&self) -> usize {
+        *self.shared.local_used[self.pid].lock().unwrap()
+    }
+
+    // ------------------------------------------------ registered vars
+
+    /// Collective registration (`bsp_push_reg`): every core calls this
+    /// with the same name and length; each core gets its own buffer of
+    /// `len` f32 words, charged against its scratchpad.
+    pub fn register(&self, name: &str, len: usize) -> Result<()> {
+        self.local_alloc(len * WORD_BYTES)?;
+        {
+            let vars = self.shared.vars.read().unwrap();
+            if let Some(bufs) = vars.get(name) {
+                let mut buf = bufs[self.pid].lock().unwrap();
+                if buf.len() != len {
+                    buf.resize(len, 0.0);
+                }
+                return Ok(());
+            }
+        }
+        let mut vars = self.shared.vars.write().unwrap();
+        let p = self.nprocs();
+        let bufs = vars
+            .entry(name.to_string())
+            .or_insert_with(|| (0..p).map(|_| Mutex::new(Vec::new())).collect());
+        let mut buf = bufs[self.pid].lock().unwrap();
+        if buf.len() != len {
+            buf.resize(len, 0.0);
+        }
+        Ok(())
+    }
+
+    /// Read this core's buffer of `name` through `f`.
+    pub fn with_var<R>(&self, name: &str, f: impl FnOnce(&[f32]) -> R) -> R {
+        let vars = self.shared.vars.read().unwrap();
+        let bufs = vars.get(name).unwrap_or_else(|| panic!("unregistered var `{name}`"));
+        let buf = bufs[self.pid].lock().unwrap();
+        f(&buf)
+    }
+
+    /// Mutate this core's buffer of `name` through `f`.
+    pub fn with_var_mut<R>(&self, name: &str, f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+        let vars = self.shared.vars.read().unwrap();
+        let bufs = vars.get(name).unwrap_or_else(|| panic!("unregistered var `{name}`"));
+        let mut buf = bufs[self.pid].lock().unwrap();
+        f(&mut buf)
+    }
+
+    /// Clone this core's buffer of `name`.
+    pub fn var(&self, name: &str) -> Vec<f32> {
+        self.with_var(name, |v| v.to_vec())
+    }
+
+    // ------------------------------------------------ communication
+
+    /// Buffered put (`bsp_put`): copy `data` into `dst_pid`'s buffer of
+    /// `name` at `offset`, visible after the next sync.
+    pub fn put(&self, dst_pid: usize, name: &str, offset: usize, data: &[f32]) {
+        assert!(dst_pid < self.nprocs(), "put: bad pid {dst_pid}");
+        {
+            let mut u = self.shared.usage[self.pid].lock().unwrap();
+            u.sent += data.len() as u64;
+        }
+        {
+            let mut u = self.shared.usage[dst_pid].lock().unwrap();
+            u.received += data.len() as u64;
+        }
+        self.shared.puts[self.pid].lock().unwrap().push(PutOp {
+            dst_pid,
+            var: name.to_string(),
+            offset,
+            data: data.to_vec(),
+        });
+    }
+
+    /// Get (`bsp_hpget` semantics at sync): copy `len` words from
+    /// `src_pid`'s `src_var` at `src_offset` into this core's `dst_var`
+    /// at `dst_offset`, resolved with the source's values at sync time.
+    pub fn get(
+        &self,
+        src_pid: usize,
+        src_var: &str,
+        src_offset: usize,
+        dst_var: &str,
+        dst_offset: usize,
+        len: usize,
+    ) {
+        assert!(src_pid < self.nprocs(), "get: bad pid {src_pid}");
+        {
+            let mut u = self.shared.usage[self.pid].lock().unwrap();
+            u.received += len as u64;
+        }
+        {
+            let mut u = self.shared.usage[src_pid].lock().unwrap();
+            u.sent += len as u64;
+        }
+        self.shared.gets[self.pid].lock().unwrap().push(GetOp {
+            src_pid,
+            src_var: src_var.to_string(),
+            src_offset,
+            dst_var: dst_var.to_string(),
+            dst_offset,
+            len,
+        });
+    }
+
+    /// Send a tagged message (`bsp_send`), readable by `dst` after the
+    /// next sync via [`Ctx::move_messages`].
+    pub fn send(&self, dst_pid: usize, tag: u32, payload: Vec<f32>) {
+        assert!(dst_pid < self.nprocs(), "send: bad pid {dst_pid}");
+        let words = payload.len() as u64;
+        {
+            let mut u = self.shared.usage[self.pid].lock().unwrap();
+            u.sent += words;
+        }
+        {
+            let mut u = self.shared.usage[dst_pid].lock().unwrap();
+            u.received += words;
+        }
+        self.shared.outbox[self.pid]
+            .lock()
+            .unwrap()
+            .push((dst_pid, Message { src_pid: self.pid, tag, payload }));
+    }
+
+    /// Drain this core's inbox (`bsp_move`).
+    pub fn move_messages(&self) -> Vec<Message> {
+        std::mem::take(&mut self.shared.inbox[self.pid].lock().unwrap())
+    }
+
+    /// BROADCAST(a) from the paper's pseudocode: send `values` to every
+    /// other core's `name` buffer at `offset = pid·len` (gather layout),
+    /// and deposit our own slice locally.
+    pub fn broadcast(&self, name: &str, values: &[f32]) {
+        let len = values.len();
+        for t in 0..self.nprocs() {
+            if t != self.pid {
+                self.put(t, name, self.pid * len, values);
+            }
+        }
+        self.with_var_mut(name, |buf| {
+            buf[self.pid * len..(self.pid + 1) * len].copy_from_slice(values);
+        });
+    }
+
+    /// Charge `flops` of local work to this superstep.
+    pub fn charge_flops(&self, flops: f64) {
+        self.shared.usage[self.pid].lock().unwrap().flops += flops;
+    }
+
+    // ------------------------------------------------ superstep sync
+
+    /// Bulk synchronization (`bsp_sync`): the communication phase ends,
+    /// queued operations are applied, and the superstep's cost record is
+    /// closed. One barrier crossing: the last arrival applies the queued
+    /// operations while the gang is held (§Perf: this halves the
+    /// synchronization rounds per superstep).
+    pub fn sync(&self) {
+        let _guard = PoisonOnPanic(&self.shared.barrier);
+        self.shared.barrier.wait_leader(|| self.apply_superstep());
+    }
+
+    /// Leader-only: apply puts/gets/messages deterministically and close
+    /// the cost record.
+    fn apply_superstep(&self) {
+        let sh = &self.shared;
+        let vars = sh.vars.read().unwrap();
+
+        // Gets first (BSPlib: gets read the source values of *this*
+        // superstep, i.e. before any put of the same sync lands).
+        for pid in 0..self.nprocs() {
+            for op in sh.gets[pid].lock().unwrap().drain(..) {
+                let src_bufs = vars
+                    .get(&op.src_var)
+                    .unwrap_or_else(|| panic!("get: unregistered var `{}`", op.src_var));
+                let data: Vec<f32> = {
+                    let src = src_bufs[op.src_pid].lock().unwrap();
+                    src[op.src_offset..op.src_offset + op.len].to_vec()
+                };
+                let dst_bufs = vars
+                    .get(&op.dst_var)
+                    .unwrap_or_else(|| panic!("get: unregistered var `{}`", op.dst_var));
+                let mut dst = dst_bufs[pid].lock().unwrap();
+                dst[op.dst_offset..op.dst_offset + op.len].copy_from_slice(&data);
+            }
+        }
+
+        // Puts in source-pid order (deterministic overwrite semantics).
+        for pid in 0..self.nprocs() {
+            for op in sh.puts[pid].lock().unwrap().drain(..) {
+                let bufs = vars
+                    .get(&op.var)
+                    .unwrap_or_else(|| panic!("put: unregistered var `{}`", op.var));
+                let mut dst = bufs[op.dst_pid].lock().unwrap();
+                assert!(
+                    op.offset + op.data.len() <= dst.len(),
+                    "put overflows var `{}` on core {}",
+                    op.var,
+                    op.dst_pid
+                );
+                dst[op.offset..op.offset + op.data.len()].copy_from_slice(&op.data);
+            }
+        }
+
+        // Messages become readable next superstep.
+        for pid in 0..self.nprocs() {
+            for (dst, msg) in sh.outbox[pid].lock().unwrap().drain(..) {
+                sh.inbox[dst].lock().unwrap().push(msg);
+            }
+        }
+
+        // Close the cost record.
+        let usages: Vec<CoreStepUsage> = sh
+            .usage
+            .iter()
+            .map(|u| std::mem::take(&mut *u.lock().unwrap()))
+            .collect();
+        sh.cost.lock().unwrap().push(SuperstepCost::from_cores(&usages));
+    }
+
+    // ------------------------------------------------ streams
+
+    fn streams(&self) -> &StreamRegistry {
+        self.shared
+            .streams
+            .as_deref()
+            .expect("this gang was started without a stream registry")
+    }
+
+    /// `bsp_stream_open`. Charges local memory for the token buffer —
+    /// doubled when the gang runs with prefetching, since the buffer
+    /// holding the next token halves the usable space (§2).
+    pub fn stream_open(&self, stream_id: usize) -> Result<StreamHandle> {
+        let h = self.streams().open(stream_id, self.pid)?;
+        let factor = if self.shared.prefetch { 2 } else { 1 };
+        if let Err(e) = self.local_alloc(h.token_bytes * factor) {
+            let _ = self.streams().close(h, self.pid);
+            return Err(e);
+        }
+        Ok(h)
+    }
+
+    /// `bsp_stream_close`; releases the token buffer(s).
+    pub fn stream_close(&self, h: StreamHandle) -> Result<()> {
+        self.streams().close(h, self.pid)?;
+        let factor = if self.shared.prefetch { 2 } else { 1 };
+        self.local_free(h.token_bytes * factor);
+        Ok(())
+    }
+
+    /// `bsp_stream_move_down(preload)`: obtain the next token.
+    ///
+    /// Cost model: with `preload = true` the fetch is asynchronous (DMA)
+    /// and its words count toward the hyperstep's overlapped-fetch side
+    /// of Eq. 1; with `preload = false` the core stalls for the fetch,
+    /// which is charged as `e·words` on the compute side (this is what
+    /// the prefetch on/off ablation measures).
+    pub fn stream_move_down(
+        &self,
+        h: StreamHandle,
+        buf: &mut Vec<f32>,
+        preload: bool,
+    ) -> Result<usize> {
+        let words = self.streams().move_down(h, self.pid, buf)?;
+        if preload {
+            *self.shared.fetch_words[self.pid].lock().unwrap() += words as u64;
+        } else {
+            let mut u = self.shared.usage[self.pid].lock().unwrap();
+            u.flops += self.shared.machine.e * words as f64;
+        }
+        Ok(words)
+    }
+
+    /// `bsp_stream_move_up`: write a result token back. The DMA write
+    /// overlaps like a prefetch, so its words join the fetch side.
+    pub fn stream_move_up(&self, h: StreamHandle, token: &[f32]) -> Result<()> {
+        self.streams().move_up(h, self.pid, token)?;
+        *self.shared.fetch_words[self.pid].lock().unwrap() += token.len() as u64;
+        Ok(())
+    }
+
+    /// `bsp_stream_seek`: cursor update; free (a descriptor write).
+    pub fn stream_seek(&self, h: StreamHandle, delta_tokens: i64) -> Result<()> {
+        self.streams().seek(h, self.pid, delta_tokens)?;
+        Ok(())
+    }
+
+    // ------------------------------------------------ hypersteps
+
+    /// End the current hyperstep (paper §2): a bulk synchronization that
+    /// also closes the hyperstep's ledger row —
+    /// `T_h` = the BSP cost of the supersteps since the last cut, and
+    /// the fetch side = `max_s` (words core `s` prefetched).
+    pub fn hyperstep_sync(&self) {
+        // A single crossing: the leader closes the in-flight superstep
+        // *and* cuts the hyperstep ledger while the gang is held.
+        let _guard = PoisonOnPanic(&self.shared.barrier);
+        self.shared.barrier.wait_leader(|| {
+            self.apply_superstep();
+            let sh = &self.shared;
+            let cost = sh.cost.lock().unwrap();
+            let mut start = sh.hyper_start.lock().unwrap();
+            let compute: f64 = cost.supersteps[*start..]
+                .iter()
+                .map(|s| s.flops(&sh.machine))
+                .sum();
+            *start = cost.supersteps.len();
+            let fetch = sh
+                .fetch_words
+                .iter()
+                .map(|w| std::mem::take(&mut *w.lock().unwrap()))
+                .max()
+                .unwrap_or(0);
+            sh.ledger
+                .lock()
+                .unwrap()
+                .push(HyperstepCost { compute_flops: compute, fetch_words: fetch });
+        });
+    }
+}
+
+/// Result of an SPMD run.
+#[derive(Debug)]
+pub struct RunOutcome {
+    /// Superstep-level BSP cost.
+    pub cost: BspCost,
+    /// Hyperstep ledger (empty for plain BSP programs).
+    pub ledger: Ledger,
+    /// Host wall-clock of the gang execution.
+    pub wall_seconds: f64,
+}
+
+/// Run `kernel` in SPMD over the machine's `p` cores.
+///
+/// `streams`, if given, enables the `stream_*` primitives; `prefetch`
+/// selects the double-buffered cost treatment (see [`Ctx::stream_open`]).
+pub fn run_gang<F>(
+    machine: &AcceleratorParams,
+    streams: Option<Arc<StreamRegistry>>,
+    prefetch: bool,
+    kernel: F,
+) -> RunOutcome
+where
+    F: Fn(&mut Ctx) + Sync,
+{
+    let shared = Arc::new(Shared::new(machine.clone(), streams, prefetch));
+    let start = std::time::Instant::now();
+    {
+        let shared = &shared;
+        let kernel = &kernel;
+        scoped_spmd(machine.p, move |pid| {
+            // Poison the gang barrier if this core panics anywhere in the
+            // kernel, so cores blocked in sync() unwind instead of hanging.
+            let _guard = PoisonOnPanic(&shared.barrier);
+            let mut ctx = Ctx { pid, shared: Arc::clone(shared) };
+            kernel(&mut ctx);
+        });
+    }
+    let wall_seconds = start.elapsed().as_secs_f64();
+    let shared = Arc::try_unwrap(shared)
+        .unwrap_or_else(|_| panic!("gang threads leaked a Ctx"));
+    RunOutcome {
+        cost: shared.cost.into_inner().unwrap(),
+        ledger: shared.ledger.into_inner().unwrap(),
+        wall_seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine(p: usize) -> AcceleratorParams {
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = p;
+        m
+    }
+
+    #[test]
+    fn pid_and_nprocs() {
+        let out = run_gang(&machine(4), None, false, |ctx| {
+            assert!(ctx.pid() < 4);
+            assert_eq!(ctx.nprocs(), 4);
+        });
+        assert!(out.cost.is_empty());
+    }
+
+    #[test]
+    fn put_visible_after_sync_not_before() {
+        run_gang(&machine(2), None, false, |ctx| {
+            ctx.register("x", 1).unwrap();
+            ctx.with_var_mut("x", |v| v[0] = -1.0);
+            ctx.sync();
+            if ctx.pid() == 0 {
+                ctx.put(1, "x", 0, &[42.0]);
+            }
+            // Not yet visible.
+            if ctx.pid() == 1 {
+                assert_eq!(ctx.var("x")[0], -1.0);
+            }
+            ctx.sync();
+            if ctx.pid() == 1 {
+                assert_eq!(ctx.var("x")[0], 42.0);
+            }
+        });
+    }
+
+    #[test]
+    fn get_reads_pre_put_values() {
+        run_gang(&machine(2), None, false, |ctx| {
+            ctx.register("src", 1).unwrap();
+            ctx.register("dst", 1).unwrap();
+            ctx.with_var_mut("src", |v| v[0] = 10.0 + ctx.pid() as f32);
+            ctx.sync();
+            if ctx.pid() == 0 {
+                // Queue a put AND a get in the same superstep: the get
+                // must see the old value (gets resolve first).
+                ctx.put(1, "src", 0, &[99.0]);
+                ctx.get(1, "src", 0, "dst", 0, 1);
+            }
+            ctx.sync();
+            if ctx.pid() == 0 {
+                assert_eq!(ctx.var("dst")[0], 11.0);
+            }
+            if ctx.pid() == 1 {
+                assert_eq!(ctx.var("src")[0], 99.0);
+            }
+        });
+    }
+
+    #[test]
+    fn messages_delivered_next_superstep() {
+        run_gang(&machine(3), None, false, |ctx| {
+            let next = (ctx.pid() + 1) % 3;
+            ctx.send(next, 7, vec![ctx.pid() as f32]);
+            assert!(ctx.move_messages().is_empty());
+            ctx.sync();
+            let msgs = ctx.move_messages();
+            assert_eq!(msgs.len(), 1);
+            assert_eq!(msgs[0].tag, 7);
+            assert_eq!(msgs[0].src_pid, (ctx.pid() + 2) % 3);
+        });
+    }
+
+    #[test]
+    fn broadcast_gathers_all_values() {
+        run_gang(&machine(4), None, false, |ctx| {
+            ctx.register("all", 4).unwrap();
+            ctx.sync();
+            ctx.broadcast("all", &[ctx.pid() as f32 * 2.0]);
+            ctx.sync();
+            assert_eq!(ctx.var("all"), vec![0.0, 2.0, 4.0, 6.0]);
+        });
+    }
+
+    #[test]
+    fn cost_records_h_relation_and_work() {
+        let out = run_gang(&machine(2), None, false, |ctx| {
+            ctx.register("x", 8).unwrap();
+            ctx.sync(); // superstep 0: registration only
+            if ctx.pid() == 0 {
+                ctx.put(1, "x", 0, &[0.0; 5]);
+                ctx.charge_flops(100.0);
+            }
+            ctx.sync(); // superstep 1
+        });
+        assert_eq!(out.cost.len(), 2);
+        let s1 = out.cost.supersteps[1];
+        assert_eq!(s1.h, 5); // core 0 sent 5, core 1 received 5
+        assert_eq!(s1.w_max, 100.0);
+    }
+
+    #[test]
+    fn local_memory_budget_enforced() {
+        let mut m = machine(1);
+        m.local_mem = 64; // 16 words
+        run_gang(&m, None, false, |ctx| {
+            assert!(ctx.register("a", 8).is_ok()); // 32 B
+            assert!(ctx.register("b", 8).is_ok()); // 64 B total
+            assert!(ctx.register("c", 1).is_err()); // would exceed
+            ctx.local_free(32);
+            assert!(ctx.register("d", 8).is_ok());
+        });
+    }
+
+    #[test]
+    fn gang_panics_propagate_without_hanging() {
+        let result = std::panic::catch_unwind(|| {
+            run_gang(&machine(4), None, false, |ctx| {
+                if ctx.pid() == 2 {
+                    panic!("core 2 exploded");
+                }
+                ctx.sync(); // other cores must not hang here
+            });
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn streamed_gang_hypersteps_build_ledger() {
+        let m = machine(2);
+        let mut reg = StreamRegistry::new(&m);
+        // One stream per core, 4 tokens of 8 words each.
+        for core in 0..2 {
+            let init: Vec<f32> = (0..32).map(|i| (core * 100 + i) as f32).collect();
+            reg.create(32, 8, Some(&init)).unwrap();
+        }
+        let reg = Arc::new(reg);
+        let out = run_gang(&m, Some(Arc::clone(&reg)), true, |ctx| {
+            let h = ctx.stream_open(ctx.pid()).unwrap();
+            let mut buf = Vec::new();
+            for _ in 0..4 {
+                ctx.stream_move_down(h, &mut buf, true).unwrap();
+                ctx.charge_flops(2.0 * 8.0); // pretend: 2C flops on the token
+                ctx.hyperstep_sync();
+            }
+            ctx.stream_close(h).unwrap();
+        });
+        assert_eq!(out.ledger.hypersteps.len(), 4);
+        for h in &out.ledger.hypersteps {
+            assert_eq!(h.fetch_words, 8);
+            // compute = 16 flops work + l per sync'd superstep
+            assert!(h.compute_flops >= 16.0);
+        }
+        // e=43.4 -> fetch = 347.2 > compute -> all bandwidth heavy
+        let s = out.ledger.summarize(&m);
+        assert_eq!(s.bandwidth_heavy, 4);
+    }
+
+    #[test]
+    fn non_preload_charges_compute_side() {
+        let m = machine(1);
+        let mut reg = StreamRegistry::new(&m);
+        reg.create(8, 8, None).unwrap();
+        let out = run_gang(&m, Some(Arc::new(reg)), false, |ctx| {
+            let h = ctx.stream_open(0).unwrap();
+            let mut buf = Vec::new();
+            ctx.stream_move_down(h, &mut buf, false).unwrap();
+            ctx.hyperstep_sync();
+        });
+        let h = &out.ledger.hypersteps[0];
+        assert_eq!(h.fetch_words, 0, "no overlapped fetch");
+        // compute side carries e·8 = 347.2 plus the sync latency
+        assert!(h.compute_flops >= 43.4 * 8.0);
+    }
+
+    #[test]
+    fn stream_exclusivity_across_gang() {
+        let m = machine(2);
+        let mut reg = StreamRegistry::new(&m);
+        reg.create(8, 8, None).unwrap();
+        let out = run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+            ctx.sync();
+            if ctx.pid() == 0 {
+                let h = ctx.stream_open(0).unwrap();
+                ctx.sync(); // core 1 tries while we hold it…
+                ctx.sync(); // …strictly between these two barriers
+                ctx.stream_close(h).unwrap();
+            } else {
+                ctx.sync();
+                assert!(ctx.stream_open(0).is_err(), "exclusive open");
+                ctx.sync();
+            }
+        });
+        assert_eq!(out.cost.len(), 3);
+    }
+}

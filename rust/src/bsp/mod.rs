@@ -1,0 +1,14 @@
+//! The BSPlib-style SPMD runtime (paper §1) with the streaming
+//! extension's kernel-side primitives (paper §4) on the same context.
+//!
+//! * [`barrier`] — a poisonable generation barrier (a panicking core
+//!   unwinds the gang instead of deadlocking it).
+//! * [`engine`]  — the superstep engine: registered variables, buffered
+//!   `put`/`get`, BSMP-style messages, `sync`, per-superstep cost
+//!   records, scratchpad budgeting, and the `stream_*`/`hyperstep_sync`
+//!   primitives used by BSPS programs.
+
+pub mod barrier;
+pub mod engine;
+
+pub use engine::{run_gang, Ctx, Message, RunOutcome};

@@ -1,0 +1,114 @@
+//! Minimal argument parser: positionals + `--key value` + `--flag`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments in order (subcommand path first).
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("stray `--`");
+                }
+                // `--key=value` or `--key value` or bare flag.
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// The subcommand (first positional), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got `{v}`")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("run cannon --n 512 --m=16 --pjrt");
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.positional[1], "cannon");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 512);
+        assert_eq!(a.get_usize("m", 0).unwrap(), 16);
+        assert!(a.flag("pjrt"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("info");
+        assert_eq!(a.get_usize("n", 64).unwrap(), 64);
+        assert_eq!(a.get_f64("e", 43.4).unwrap(), 43.4);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("run --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --fast --n 3");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+}

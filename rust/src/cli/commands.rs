@@ -1,0 +1,303 @@
+//! Subcommand implementations for the `bsps` binary.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cli::args::Args;
+use crate::coordinator::BspsEnv;
+use crate::model::params::AcceleratorParams;
+use crate::model::{calibrate, predict};
+use crate::sim::extmem::{Actor, Dir, ExtMemModel, NetState};
+use crate::sim::membench;
+use crate::sim::noc::Noc;
+use crate::util::humanfmt;
+use crate::util::prng::SplitMix64;
+
+/// Dispatch a parsed command line. Returns the text to print.
+pub fn dispatch(args: &Args) -> Result<String> {
+    match args.subcommand() {
+        Some("info") => info(args),
+        Some("calibrate") => calibrate_cmd(args),
+        Some("predict") => predict_cmd(args),
+        Some("run") => run_cmd(args),
+        Some(other) => bail!("unknown subcommand `{other}` (try `bsps info`)"),
+        None => Ok(USAGE.to_string()),
+    }
+}
+
+const USAGE: &str = "\
+bsps — bulk-synchronous pseudo-streaming runtime (Buurlage et al. 2016)
+
+USAGE:
+  bsps info
+  bsps calibrate
+  bsps predict --n <size> --m <outer-blocks> [--machine <preset>]
+  bsps run inprod --n <len> --c <token> [--pjrt] [--no-prefetch]
+  bsps run cannon --n <size> --m <outer-blocks> [--pjrt]
+  bsps run spmv --n <size> --nnz <per-row> --rows <per-token>
+  bsps run sort --n <len> --c <token>
+  bsps run video --frames <count> --pixels <per-frame>
+
+Machine presets: epiphany3 (default), epiphany4, epiphany5, xeonphi_like.
+Paper benches: cargo bench (see rust/benches/, one per table/figure).";
+
+fn machine_from(args: &Args) -> Result<AcceleratorParams> {
+    // `--machine-config <file.toml>` (preset + [overrides]) wins over
+    // the bare `--machine <preset>`.
+    if let Some(path) = args.get("machine-config") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading machine config {path}: {e}"))?;
+        return Ok(crate::config::MachineConfig::from_toml(&text)?.params);
+    }
+    let name = args.get("machine").unwrap_or("epiphany3");
+    AcceleratorParams::preset(name).ok_or_else(|| anyhow!("unknown machine `{name}`"))
+}
+
+/// If `--trace <path>` was given, write the run's hyperstep CSV there.
+fn maybe_trace(args: &Args, ledger: &crate::model::bsps::Ledger, m: &AcceleratorParams) -> Result<String> {
+    if let Some(path) = args.get("trace") {
+        crate::coordinator::trace::write_csv(ledger, m, path)?;
+        Ok(format!("\ntrace written to {path}"))
+    } else {
+        Ok(String::new())
+    }
+}
+
+fn env_from(args: &Args) -> Result<BspsEnv> {
+    let machine = machine_from(args)?;
+    let mut env = if args.flag("pjrt") {
+        BspsEnv::pjrt(machine, "artifacts")?
+    } else {
+        BspsEnv::native(machine)
+    };
+    if args.flag("no-prefetch") {
+        env = env.without_prefetch();
+    }
+    Ok(env)
+}
+
+fn info(args: &Args) -> Result<String> {
+    let m = machine_from(args)?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "machine {}: p={} r={} FLOP/s g={} l={} e={} L={} E={}\n",
+        m.name,
+        m.p,
+        m.r,
+        m.g,
+        m.l,
+        m.e,
+        humanfmt::bytes(m.local_mem as u64),
+        humanfmt::bytes(m.ext_mem as u64)
+    ));
+    out.push_str(&format!(
+        "k_equal (paper §6 asymptotic crossover): {:.2}\n",
+        predict::k_equal(&m)
+    ));
+    match crate::runtime::artifact::Manifest::load("artifacts") {
+        Ok(man) => {
+            out.push_str(&format!("artifacts: {} entry points\n", man.entries.len()));
+        }
+        Err(_) => out.push_str("artifacts: not built (run `make artifacts`)\n"),
+    }
+    Ok(out)
+}
+
+fn calibrate_cmd(args: &Args) -> Result<String> {
+    let m = machine_from(args)?;
+    let mem = ExtMemModel::epiphany3();
+    let noc = Noc::epiphany3(m.grid_n());
+    let samples = membench::comm_sweep(&noc, 512, 8);
+    let contested = mem.bandwidth(Actor::Dma, Dir::Read, NetState::Contested);
+    let cal = calibrate::calibrate(m.r, contested, &samples, 0.0);
+    Ok(format!(
+        "calibration from simulated measurements (the §5 pipeline):\n\
+         e = {:.2} FLOP/float (contested DMA read {})\n\
+         g = {:.3} FLOP/float (fit slope, r²={:.6})\n\
+         l = {:.1} FLOP (fit intercept)\n\
+         paper: e ≈ 43.4, g ≈ 5.59, l ≈ 136",
+        cal.e,
+        humanfmt::mbps(contested),
+        cal.g,
+        cal.fit.r2,
+        cal.l
+    ))
+}
+
+fn predict_cmd(args: &Args) -> Result<String> {
+    let m = machine_from(args)?;
+    let n = args.get_usize("n", 512)?;
+    let big_m = args.get_usize("m", 16)?;
+    let p = predict::cannon_cost(&m, n, big_m);
+    Ok(format!(
+        "multi-level Cannon n={n}, M={big_m} on {}:\n\
+         k = {}  hypersteps = {}  {}\n\
+         compute/hyperstep = {:.1} FLOP, fetch/hyperstep = {} words\n\
+         T̃ = {} = {}",
+        m.name,
+        p.k,
+        p.hypersteps,
+        if p.bandwidth_heavy { "BANDWIDTH heavy" } else { "COMPUTATION heavy" },
+        p.compute_per_hyperstep,
+        p.fetch_words_per_hyperstep,
+        humanfmt::flops(p.flops),
+        humanfmt::seconds(p.seconds),
+    ))
+}
+
+fn run_cmd(args: &Args) -> Result<String> {
+    let algo = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("run: missing algorithm (inprod|cannon|spmv|sort|video)"))?;
+    let env = env_from(args)?;
+    let mut rng = SplitMix64::new(args.get_usize("seed", 42)? as u64);
+    match algo.as_str() {
+        "inprod" => {
+            let n = args.get_usize("n", 65536)?;
+            let c = args.get_usize("c", 64)?;
+            let u = rng.f32_vec(n, -1.0, 1.0);
+            let v = rng.f32_vec(n, -1.0, 1.0);
+            let run = crate::algos::inner_product::run(&env, &u, &v, c)?;
+            let want: f32 = u.iter().zip(&v).map(|(a, b)| a * b).sum();
+            let trace = maybe_trace(args, &run.report.rows, &env.machine)?;
+            Ok(format!(
+                "inner product N={n} C={c} [{}]\nalpha = {:.4} (reference {:.4})\n{}\npredicted: {} hypersteps, {}{trace}",
+                env.backend.name(),
+                run.alpha,
+                want,
+                run.report.render(),
+                run.predicted.hypersteps,
+                humanfmt::seconds(run.predicted.seconds),
+            ))
+        }
+        "cannon" => {
+            let n = args.get_usize("n", 64)?;
+            let m = args.get_usize("m", 2)?;
+            let a = rng.f32_vec(n * n, -1.0, 1.0);
+            let b = rng.f32_vec(n * n, -1.0, 1.0);
+            let run = crate::algos::cannon_ml::run(&env, &a, &b, n, m)?;
+            let (want, _) = crate::algos::baselines::seq_matmul(&a, &b, n);
+            let max_err = run
+                .c
+                .iter()
+                .zip(&want)
+                .map(|(g, w)| (g - w).abs())
+                .fold(0.0f32, f32::max);
+            let trace = maybe_trace(args, &run.report.rows, &env.machine)?;
+            Ok(format!(
+                "multi-level Cannon n={n} M={m} k={} [{}]\nmax |err| vs reference = {max_err:.2e}\n{}\npredicted (Eq.2): {}{trace}",
+                run.k,
+                env.backend.name(),
+                run.report.render(),
+                humanfmt::seconds(run.predicted.seconds),
+            ))
+        }
+        "spmv" => {
+            let n = args.get_usize("n", 1024)?;
+            let nnz = args.get_usize("nnz", 8)?;
+            let rows = args.get_usize("rows", 16)?;
+            let mut triplets = Vec::new();
+            for r in 0..n {
+                for _ in 0..nnz / 2 {
+                    triplets.push((r, rng.next_range(0, n), rng.next_f32_in(-1.0, 1.0)));
+                }
+            }
+            triplets.sort_by_key(|&(r, c, _)| (r, c));
+            triplets.dedup_by_key(|&mut (r, c, _)| (r, c));
+            let a = crate::algos::spmv::EllMatrix::from_triplets(n, nnz, &triplets)?;
+            let x = rng.f32_vec(n, -1.0, 1.0);
+            let run = crate::algos::spmv::run(&env, &a, &x, rows)?;
+            let want = a.matvec_ref(&x);
+            let max_err = run
+                .y
+                .iter()
+                .zip(&want)
+                .map(|(g, w)| (g - w).abs())
+                .fold(0.0f32, f32::max);
+            Ok(format!(
+                "streaming SpMV n={n} nnz={nnz} rows/token={rows}\nmax |err| = {max_err:.2e}\n{}",
+                run.report.render()
+            ))
+        }
+        "sort" => {
+            let n = args.get_usize("n", 16384)?;
+            let c = args.get_usize("c", 64)?;
+            let data = rng.f32_vec(n, -1000.0, 1000.0);
+            let run = crate::algos::sort::run(&env, &data, c)?;
+            let sorted_ok = run.sorted.windows(2).all(|w| w[0] <= w[1]);
+            Ok(format!(
+                "streaming sample sort n={n} C={c}\nsorted: {sorted_ok}, buckets = {:?}\n{}",
+                run.bucket_sizes,
+                run.report.render()
+            ))
+        }
+        "video" => {
+            let frames = args.get_usize("frames", 32)?;
+            let pixels = args.get_usize("pixels", 16 * 256)?;
+            let fs: Vec<Vec<f32>> =
+                (0..frames).map(|_| rng.f32_vec(pixels, 0.0, 255.0)).collect();
+            let run = crate::algos::video::run(&env, &fs, 0.25)?;
+            Ok(format!(
+                "video pipeline frames={frames} pixels={pixels}\nsimulated fps = {:.1}, bandwidth heavy throughout = {}\n{}",
+                run.fps,
+                run.bandwidth_heavy_throughout,
+                run.report.render()
+            ))
+        }
+        other => bail!("unknown algorithm `{other}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(cmd: &str) -> Result<String> {
+        dispatch(&Args::parse(cmd.split_whitespace().map(String::from))?)
+    }
+
+    #[test]
+    fn usage_without_subcommand() {
+        let out = run("").unwrap();
+        assert!(out.contains("USAGE"));
+    }
+
+    #[test]
+    fn info_shows_machine_and_k_equal() {
+        let out = run("info").unwrap();
+        assert!(out.contains("epiphany3"));
+        assert!(out.contains("k_equal"));
+    }
+
+    #[test]
+    fn calibrate_recovers_paper_parameters() {
+        let out = run("calibrate").unwrap();
+        assert!(out.contains("g = 5.59"), "{out}");
+        assert!(out.contains("e = 43.6"), "{out}");
+    }
+
+    #[test]
+    fn predict_cannon() {
+        let out = run("predict --n 512 --m 16").unwrap();
+        assert!(out.contains("k = 8"), "{out}");
+        assert!(out.contains("hypersteps = 4096"));
+    }
+
+    #[test]
+    fn run_inprod_small() {
+        let out = run("run inprod --n 1024 --c 16").unwrap();
+        assert!(out.contains("alpha"), "{out}");
+    }
+
+    #[test]
+    fn run_cannon_small() {
+        let out = run("run cannon --n 16 --m 2").unwrap();
+        assert!(out.contains("max |err|"), "{out}");
+    }
+
+    #[test]
+    fn unknown_subcommand_rejected() {
+        assert!(run("frobnicate").is_err());
+        assert!(run("run nothing").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Command-line launcher (clap is not in the offline crate set; the
+//! parser is hand-rolled in [`args`]).
+//!
+//! ```text
+//! bsps info                              # machine presets + artifacts
+//! bsps calibrate                         # §5: measure sim -> fit e,g,l
+//! bsps predict --n 512 --m 16            # Eq. 2 prediction
+//! bsps run inprod --n 65536 --c 64       # Algorithm 1
+//! bsps run cannon --n 64 --m 2           # Algorithm 2
+//! bsps run spmv / sort / video           # §7 extensions
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;

@@ -1,0 +1,113 @@
+//! Typed machine configuration: preset + overrides → [`AcceleratorParams`].
+//!
+//! ```toml
+//! # machine.toml
+//! preset = "epiphany3"
+//!
+//! [overrides]
+//! e = 20.0          # pretend the DRAM link were 2× faster
+//! local_mem = 65536
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::toml::{parse, Document};
+use crate::model::params::AcceleratorParams;
+
+/// Parsed machine configuration.
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    pub params: AcceleratorParams,
+}
+
+impl MachineConfig {
+    /// Build from TOML text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = parse(text).map_err(|e| anyhow!("machine config: {e}"))?;
+        Self::from_document(&doc)
+    }
+
+    /// Build from a parsed document (top-level `preset`, optional
+    /// `[overrides]` table).
+    pub fn from_document(doc: &Document) -> Result<Self> {
+        let top = doc.get("").ok_or_else(|| anyhow!("empty config"))?;
+        let preset = top
+            .get("preset")
+            .and_then(|v| v.as_str())
+            .unwrap_or("epiphany3");
+        let mut params = AcceleratorParams::preset(preset)
+            .ok_or_else(|| anyhow!("unknown machine preset `{preset}`"))?;
+
+        if let Some(ov) = doc.get("overrides") {
+            for (key, value) in ov {
+                let num = value
+                    .as_float()
+                    .with_context(|| format!("override `{key}` must be numeric"))?;
+                match key.as_str() {
+                    "p" => params.p = num as usize,
+                    "r" => params.r = num,
+                    "g" => params.g = num,
+                    "l" => params.l = num,
+                    "e" => params.e = num,
+                    "local_mem" => params.local_mem = num as usize,
+                    "ext_mem" => params.ext_mem = num as usize,
+                    other => bail!("unknown machine override `{other}`"),
+                }
+            }
+        }
+        validate(&params)?;
+        Ok(Self { params })
+    }
+}
+
+fn validate(m: &AcceleratorParams) -> Result<()> {
+    if m.p == 0 {
+        bail!("p must be positive");
+    }
+    if m.r <= 0.0 || m.g < 0.0 || m.l < 0.0 || m.e < 0.0 {
+        bail!("rates must be positive and costs non-negative");
+    }
+    if m.local_mem == 0 || m.ext_mem < m.local_mem {
+        bail!("need 0 < L ≤ E (got L={}, E={})", m.local_mem, m.ext_mem);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_epiphany3() {
+        let c = MachineConfig::from_toml("").unwrap();
+        assert_eq!(c.params.name, "epiphany3");
+        assert_eq!(c.params.p, 16);
+    }
+
+    #[test]
+    fn preset_and_overrides() {
+        let c = MachineConfig::from_toml(
+            "preset = \"epiphany3\"\n[overrides]\ne = 20.0\nlocal_mem = 65536\n",
+        )
+        .unwrap();
+        assert_eq!(c.params.e, 20.0);
+        assert_eq!(c.params.local_mem, 65536);
+        assert_eq!(c.params.g, 5.59); // untouched
+    }
+
+    #[test]
+    fn unknown_preset_rejected() {
+        assert!(MachineConfig::from_toml("preset = \"cray1\"").is_err());
+    }
+
+    #[test]
+    fn unknown_override_rejected() {
+        assert!(MachineConfig::from_toml("[overrides]\nwarp = 1.0").is_err());
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        assert!(MachineConfig::from_toml("[overrides]\np = 0").is_err());
+        assert!(MachineConfig::from_toml("[overrides]\next_mem = 1").is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Configuration system: a TOML-subset parser plus typed machine and
+//! run configs (serde/toml are not in the offline crate set).
+
+pub mod machine;
+pub mod toml;
+
+pub use machine::MachineConfig;
+pub use toml::{parse, Value};

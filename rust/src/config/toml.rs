@@ -1,0 +1,246 @@
+//! A TOML-subset parser.
+//!
+//! Supports exactly what the bsps configs need: `[section]` tables,
+//! `key = value` pairs with string / integer / float / boolean / flat
+//! array values, `#` comments, and blank lines. Nested tables, dates,
+//! multi-line strings and inline tables are out of scope.
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+/// A parsed scalar or flat array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Float accessor; integers coerce (TOML writers often drop `.0`).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// `section -> key -> value`; top-level keys live under `""`.
+pub type Document = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse errors with line numbers.
+#[derive(Debug, Error, PartialEq)]
+pub enum TomlError {
+    #[error("line {0}: expected `key = value`")]
+    BadPair(usize),
+    #[error("line {0}: unterminated string")]
+    UnterminatedString(usize),
+    #[error("line {0}: bad value `{1}`")]
+    BadValue(usize, String),
+    #[error("line {0}: bad section header")]
+    BadSection(usize),
+    #[error("line {0}: duplicate key `{1}`")]
+    DuplicateKey(usize, String),
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside a string starts a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str, lineno: usize) -> Result<Value, TomlError> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(TomlError::BadValue(lineno, raw.into()));
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        return match stripped.strip_suffix('"') {
+            Some(inner) if !inner.contains('"') => Ok(Value::Str(inner.to_string())),
+            _ => Err(TomlError::UnterminatedString(lineno)),
+        };
+    }
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = raw.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| TomlError::BadValue(lineno, raw.into()))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue; // trailing comma
+                }
+                items.push(parse_value(part, lineno)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    // Integers first (so `42` isn't a float), underscores allowed.
+    let cleaned = raw.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(TomlError::BadValue(lineno, raw.into()))
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Document, TomlError> {
+    let mut doc = Document::new();
+    doc.insert(String::new(), BTreeMap::new());
+    let mut section = String::new();
+
+    for (i, line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner.strip_suffix(']').ok_or(TomlError::BadSection(lineno))?;
+            let name = name.trim();
+            if name.is_empty() || name.contains(['[', ']']) {
+                return Err(TomlError::BadSection(lineno));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or(TomlError::BadPair(lineno))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(TomlError::BadPair(lineno));
+        }
+        let value = parse_value(value, lineno)?;
+        let table = doc.entry(section.clone()).or_default();
+        if table.insert(key.to_string(), value).is_some() {
+            return Err(TomlError::DuplicateKey(lineno, key.to_string()));
+        }
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_sections() {
+        let doc = parse(
+            r#"
+            name = "epiphany3"   # preset
+            cores = 16
+            e = 43.4
+            fast = false
+
+            [workload]
+            sizes = [128, 256, 512]
+            "#,
+        )
+        .unwrap();
+        let top = &doc[""];
+        assert_eq!(top["name"].as_str(), Some("epiphany3"));
+        assert_eq!(top["cores"].as_int(), Some(16));
+        assert_eq!(top["e"].as_float(), Some(43.4));
+        assert_eq!(top["fast"].as_bool(), Some(false));
+        let sizes = doc["workload"]["sizes"].as_array().unwrap();
+        assert_eq!(sizes.len(), 3);
+        assert_eq!(sizes[1].as_int(), Some(256));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = parse("x = 5").unwrap();
+        assert_eq!(doc[""]["x"].as_float(), Some(5.0));
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let doc = parse("mem = 32_768").unwrap();
+        assert_eq!(doc[""]["mem"].as_int(), Some(32768));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc[""]["tag"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        assert_eq!(parse("x 5").unwrap_err(), TomlError::BadPair(1));
+        assert_eq!(parse("\nx = ").unwrap_err(), TomlError::BadValue(2, "".into()));
+        assert_eq!(
+            parse("s = \"oops").unwrap_err(),
+            TomlError::UnterminatedString(1)
+        );
+        assert_eq!(parse("[bad").unwrap_err(), TomlError::BadSection(1));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert_eq!(
+            parse("a = 1\na = 2").unwrap_err(),
+            TomlError::DuplicateKey(2, "a".into())
+        );
+        // …but the same key in different sections is fine.
+        assert!(parse("a = 1\n[s]\na = 2").is_ok());
+    }
+
+    #[test]
+    fn empty_and_trailing_comma_arrays() {
+        let doc = parse("a = []\nb = [1, 2,]").unwrap();
+        assert_eq!(doc[""]["a"].as_array().unwrap().len(), 0);
+        assert_eq!(doc[""]["b"].as_array().unwrap().len(), 2);
+    }
+}

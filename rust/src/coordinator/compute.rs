@@ -1,0 +1,297 @@
+//! Per-token compute backends.
+//!
+//! The numeric work inside a hyperstep (the Cannon inner-block product,
+//! the inner-product partial sum, …) can run through either backend:
+//!
+//! * [`ComputeBackend::Native`] — straightforward Rust implementations;
+//!   used by large parameter sweeps where per-call dispatch latency to
+//!   PJRT would dominate the (tiny) token sizes.
+//! * [`ComputeBackend::Pjrt`] — the AOT artifacts produced from the L2
+//!   JAX graphs wrapping the L1 Pallas kernels. This is the "real"
+//!   three-layer path; the e2e example and the parity tests run it.
+//!
+//! Every method returns the model FLOP count for the operation so the
+//! caller can charge it to the BSP cost (`2k³` for a `k×k` block
+//! product, `2C` per token pair for the inner product, …).
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{HostTensor, PjrtEngine};
+
+/// Token-compute backend.
+#[derive(Clone)]
+pub enum ComputeBackend {
+    /// Plain Rust loops.
+    Native,
+    /// AOT-compiled XLA executables (L1 Pallas kernels inside).
+    Pjrt(PjrtEngine),
+}
+
+impl ComputeBackend {
+    /// Start a PJRT backend from an artifact directory.
+    pub fn pjrt(dir: &str) -> Result<Self> {
+        Ok(ComputeBackend::Pjrt(PjrtEngine::start(dir)?))
+    }
+
+    /// Block sizes the PJRT catalog covers for `mm_acc`.
+    pub const PJRT_MM_SIZES: [usize; 4] = [4, 8, 16, 32];
+
+    /// Whether `mm_acc` with block size `k` can run on this backend.
+    pub fn supports_mm(&self, k: usize) -> bool {
+        match self {
+            ComputeBackend::Native => true,
+            ComputeBackend::Pjrt(_) => Self::PJRT_MM_SIZES.contains(&k),
+        }
+    }
+
+    /// Cannon inner step: `c += a·b` on row-major `k×k` blocks.
+    /// Returns the FLOPs to charge (`2k³`).
+    pub fn mm_acc(&self, c: &mut Vec<f32>, a: &[f32], b: &[f32], k: usize) -> Result<f64> {
+        debug_assert_eq!(c.len(), k * k);
+        debug_assert_eq!(a.len(), k * k);
+        debug_assert_eq!(b.len(), k * k);
+        match self {
+            ComputeBackend::Native => {
+                native_mm_acc(c, a, b, k);
+            }
+            ComputeBackend::Pjrt(engine) => {
+                if !self.supports_mm(k) {
+                    return Err(anyhow!("no AOT artifact for block size k={k}"));
+                }
+                let name = format!("token_mm_acc_k{k}");
+                let out = engine.execute(
+                    &name,
+                    vec![
+                        HostTensor::F32(std::mem::take(c), vec![k, k]),
+                        HostTensor::F32(a.to_vec(), vec![k, k]),
+                        HostTensor::F32(b.to_vec(), vec![k, k]),
+                    ],
+                )?;
+                *c = out.into_f32();
+            }
+        }
+        Ok(2.0 * (k * k * k) as f64)
+    }
+
+    /// Token sizes the PJRT catalog covers for `inprod_partial`.
+    pub const PJRT_INPROD_SIZES: [usize; 3] = [64, 256, 1024];
+
+    /// Algorithm 1's hyperstep: `acc + <u, v>`. Returns `(new_acc,
+    /// flops)` with `flops = 2C`.
+    pub fn inprod_partial(&self, acc: f32, u: &[f32], v: &[f32]) -> Result<(f32, f64)> {
+        debug_assert_eq!(u.len(), v.len());
+        let c = u.len();
+        let flops = 2.0 * c as f64;
+        match self {
+            ComputeBackend::Native => {
+                let dot: f32 = u.iter().zip(v).map(|(a, b)| a * b).sum();
+                Ok((acc + dot, flops))
+            }
+            ComputeBackend::Pjrt(engine) => {
+                if !Self::PJRT_INPROD_SIZES.contains(&c) {
+                    return Err(anyhow!("no AOT artifact for token size C={c}"));
+                }
+                let name = format!("inprod_partial_c{c}");
+                let out = engine.execute(
+                    &name,
+                    vec![
+                        HostTensor::F32(vec![acc], vec![1]),
+                        HostTensor::F32(u.to_vec(), vec![c]),
+                        HostTensor::F32(v.to_vec(), vec![c]),
+                    ],
+                )?;
+                Ok((out.into_f32()[0], flops))
+            }
+        }
+    }
+
+    /// Frame filter `y += alpha·x` (video pipeline). Returns FLOPs (`2n`).
+    pub fn axpy(&self, alpha: f32, x: &[f32], y: &mut Vec<f32>) -> Result<f64> {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let flops = 2.0 * n as f64;
+        match self {
+            ComputeBackend::Native => {
+                for (yi, xi) in y.iter_mut().zip(x) {
+                    *yi += alpha * xi;
+                }
+                Ok(flops)
+            }
+            ComputeBackend::Pjrt(engine) => {
+                let name = format!("axpy_n{n}");
+                let out = engine.execute(
+                    &name,
+                    vec![
+                        HostTensor::F32(vec![alpha], vec![1]),
+                        HostTensor::F32(x.to_vec(), vec![n]),
+                        HostTensor::F32(std::mem::take(y), vec![n]),
+                    ],
+                )?;
+                *y = out.into_f32();
+                Ok(flops)
+            }
+        }
+    }
+
+    /// ELLPACK SpMV row-block token: `y[i] = Σ_j vals[i,j]·x[cols[i,j]]`
+    /// with `cols = -1` padding. Returns `(y, flops)`, `flops = 2·rows·nnz`.
+    pub fn spmv_ell(
+        &self,
+        vals: &[f32],
+        cols: &[i32],
+        x: &[f32],
+        rows: usize,
+        nnz: usize,
+    ) -> Result<(Vec<f32>, f64)> {
+        debug_assert_eq!(vals.len(), rows * nnz);
+        debug_assert_eq!(cols.len(), rows * nnz);
+        let flops = 2.0 * (rows * nnz) as f64;
+        match self {
+            ComputeBackend::Native => {
+                let mut y = vec![0.0f32; rows];
+                for i in 0..rows {
+                    let mut acc = 0.0f32;
+                    for j in 0..nnz {
+                        let col = cols[i * nnz + j];
+                        if col >= 0 {
+                            acc += vals[i * nnz + j] * x[col as usize];
+                        }
+                    }
+                    y[i] = acc;
+                }
+                Ok((y, flops))
+            }
+            ComputeBackend::Pjrt(engine) => {
+                let name = format!("spmv_ell_r{rows}_nnz{nnz}_n{}", x.len());
+                let out = engine.execute(
+                    &name,
+                    vec![
+                        HostTensor::F32(vals.to_vec(), vec![rows, nnz]),
+                        HostTensor::I32(cols.to_vec(), vec![rows, nnz]),
+                        HostTensor::F32(x.to_vec(), vec![x.len()]),
+                    ],
+                )?;
+                Ok((out.into_f32(), flops))
+            }
+        }
+    }
+
+    /// Human-readable backend name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeBackend::Native => "native",
+            ComputeBackend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+/// Row-major `c += a·b` (ikj loop order for cache-friendly b walks).
+pub fn native_mm_acc(c: &mut [f32], a: &[f32], b: &[f32], k: usize) {
+    for i in 0..k {
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            let brow = &b[kk * k..(kk + 1) * k];
+            let crow = &mut c[i * k..(i + 1) * k];
+            for (cij, bkj) in crow.iter_mut().zip(brow) {
+                *cij += aik * bkj;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::SplitMix64;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/manifest.txt").exists()
+    }
+
+    #[test]
+    fn native_mm_acc_matches_definition() {
+        // 2×2 hand check: c += a·b
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        let mut c = vec![1.0, 1.0, 1.0, 1.0];
+        let flops = ComputeBackend::Native.mm_acc(&mut c, &a, &b, 2).unwrap();
+        assert_eq!(c, vec![20.0, 23.0, 44.0, 51.0]);
+        assert_eq!(flops, 16.0);
+    }
+
+    #[test]
+    fn native_and_pjrt_agree_on_mm() {
+        if !artifacts_available() {
+            return;
+        }
+        let pjrt = ComputeBackend::pjrt("artifacts").unwrap();
+        let mut rng = SplitMix64::new(3);
+        for &k in &ComputeBackend::PJRT_MM_SIZES {
+            let a = rng.f32_vec(k * k, -1.0, 1.0);
+            let b = rng.f32_vec(k * k, -1.0, 1.0);
+            let c0 = rng.f32_vec(k * k, -1.0, 1.0);
+            let mut c_native = c0.clone();
+            let mut c_pjrt = c0.clone();
+            ComputeBackend::Native.mm_acc(&mut c_native, &a, &b, k).unwrap();
+            pjrt.mm_acc(&mut c_pjrt, &a, &b, k).unwrap();
+            for (x, y) in c_native.iter().zip(&c_pjrt) {
+                assert!((x - y).abs() < 1e-3, "k={k}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_and_pjrt_agree_on_inprod() {
+        if !artifacts_available() {
+            return;
+        }
+        let pjrt = ComputeBackend::pjrt("artifacts").unwrap();
+        let mut rng = SplitMix64::new(4);
+        for &c in &ComputeBackend::PJRT_INPROD_SIZES {
+            let u = rng.f32_vec(c, -1.0, 1.0);
+            let v = rng.f32_vec(c, -1.0, 1.0);
+            let (native, f1) = ComputeBackend::Native.inprod_partial(0.5, &u, &v).unwrap();
+            let (pj, f2) = pjrt.inprod_partial(0.5, &u, &v).unwrap();
+            assert!((native - pj).abs() < 1e-2, "C={c}: {native} vs {pj}");
+            assert_eq!(f1, f2);
+        }
+    }
+
+    #[test]
+    fn pjrt_rejects_uncatalogued_sizes() {
+        if !artifacts_available() {
+            return;
+        }
+        let pjrt = ComputeBackend::pjrt("artifacts").unwrap();
+        assert!(!pjrt.supports_mm(5));
+        let mut c = vec![0.0; 25];
+        assert!(pjrt.mm_acc(&mut c, &vec![0.0; 25], &vec![0.0; 25], 5).is_err());
+    }
+
+    #[test]
+    fn native_spmv_identity() {
+        let rows = 4;
+        let nnz = 2;
+        // Row i has a single 1.0 at column i; second slot padded.
+        let mut vals = vec![0.0f32; rows * nnz];
+        let mut cols = vec![-1i32; rows * nnz];
+        for i in 0..rows {
+            vals[i * nnz] = 1.0;
+            cols[i * nnz] = i as i32;
+        }
+        let x = vec![3.0, 1.0, 4.0, 1.5];
+        let (y, flops) =
+            ComputeBackend::Native.spmv_ell(&vals, &cols, &x, rows, nnz).unwrap();
+        assert_eq!(y, x);
+        assert_eq!(flops, 16.0);
+    }
+
+    #[test]
+    fn native_axpy() {
+        let x = vec![1.0, 2.0];
+        let mut y = vec![10.0, 20.0];
+        let flops = ComputeBackend::Native.axpy(0.5, &x, &mut y).unwrap();
+        assert_eq!(y, vec![10.5, 21.0]);
+        assert_eq!(flops, 4.0);
+    }
+}

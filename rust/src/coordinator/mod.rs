@@ -1,0 +1,22 @@
+//! The BSPS coordinator — the L3 glue that turns the pieces into the
+//! paper's programming model:
+//!
+//! * [`compute`] — the per-token compute backends: `Native` (plain Rust
+//!   loops) and `Pjrt` (the AOT-compiled XLA executables containing the
+//!   L1 Pallas kernels). Both produce identical numerics; tests assert
+//!   it. Every op returns the FLOP count to charge to the machine model.
+//! * [`env`]     — [`BspsEnv`]: machine + backend + prefetch policy, and
+//!   [`run_bsps`], which runs an SPMD kernel gang over a stream registry
+//!   and returns a [`report::Report`] combining real results with the
+//!   Eq. 1 ledger.
+//! * [`report`]  — per-run reporting: BSP cost, BSPS cost, hyperstep
+//!   classification, simulated seconds, host wall time.
+
+pub mod compute;
+pub mod env;
+pub mod trace;
+pub mod report;
+
+pub use compute::ComputeBackend;
+pub use env::{run_bsps, BspsEnv};
+pub use report::Report;

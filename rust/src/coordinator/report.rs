@@ -1,0 +1,86 @@
+//! Per-run reporting: the numbers the paper's evaluation plots.
+
+use crate::bsp::RunOutcome;
+use crate::model::bsps::LedgerSummary;
+use crate::model::params::AcceleratorParams;
+use crate::util::humanfmt;
+
+/// The combined result of a BSPS run: real numerics happened elsewhere;
+/// this captures the *cost* story.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Machine the run was costed on.
+    pub machine_name: &'static str,
+    /// Number of supersteps executed (across all hypersteps).
+    pub supersteps: usize,
+    /// Total classic-BSP cost of all supersteps, FLOPs.
+    pub bsp_flops: f64,
+    /// Eq. 1 BSPS cost, FLOPs.
+    pub bsps_flops: f64,
+    /// Eq. 1 BSPS cost in simulated seconds (via `r`).
+    pub sim_seconds: f64,
+    /// Ledger aggregate (hypersteps, heavy-side counts, …).
+    pub ledger: LedgerSummary,
+    /// The full per-hyperstep ledger (for traces and deep analysis).
+    pub rows: crate::model::bsps::Ledger,
+    /// Host wall-clock spent executing the gang.
+    pub wall_seconds: f64,
+}
+
+impl Report {
+    /// Build from a finished gang run.
+    pub fn from_outcome(m: &AcceleratorParams, out: &RunOutcome) -> Self {
+        let ledger = out.ledger.summarize(m);
+        Self {
+            machine_name: m.name,
+            supersteps: out.cost.len(),
+            bsp_flops: out.cost.total_flops(m),
+            bsps_flops: ledger.total_flops,
+            sim_seconds: ledger.total_seconds,
+            ledger,
+            rows: out.ledger.clone(),
+            wall_seconds: out.wall_seconds,
+        }
+    }
+
+    /// Stable, grep-able report rows.
+    pub fn render(&self) -> String {
+        format!(
+            "machine={} hypersteps={} supersteps={} \
+             bsps_cost={} sim_time={} bw_heavy={} comp_heavy={} wall={}",
+            self.machine_name,
+            self.ledger.hypersteps,
+            self.supersteps,
+            humanfmt::flops(self.bsps_flops),
+            humanfmt::seconds(self.sim_seconds),
+            self.ledger.bandwidth_heavy,
+            self.ledger.computation_heavy,
+            humanfmt::seconds(self.wall_seconds),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::bsps::{HyperstepCost, Ledger};
+    use crate::model::cost::{BspCost, SuperstepCost};
+
+    #[test]
+    fn report_aggregates_outcome() {
+        let m = AcceleratorParams::epiphany3();
+        let mut cost = BspCost::new();
+        cost.push(SuperstepCost { w_max: 1000.0, h: 0 });
+        let mut ledger = Ledger::new();
+        ledger.push(HyperstepCost { compute_flops: 1136.0, fetch_words: 10 });
+        let out = RunOutcome { cost, ledger, wall_seconds: 0.5 };
+        let r = Report::from_outcome(&m, &out);
+        assert_eq!(r.supersteps, 1);
+        assert!((r.bsp_flops - 1136.0).abs() < 1e-9);
+        assert!((r.bsps_flops - 1136.0).abs() < 1e-9); // compute heavy
+        assert_eq!(r.ledger.computation_heavy, 1);
+        let s = r.render();
+        assert!(s.contains("machine=epiphany3"));
+        assert!(s.contains("hypersteps=1"));
+    }
+}

@@ -1,0 +1,142 @@
+//! Per-hyperstep trace export.
+//!
+//! A `Ledger` knows the cost of each hyperstep; the trace renders it as
+//! a timeline (start/end per hyperstep, which side of Eq. 1's `max`
+//! bound it, the slack on the other side) and exports CSV that the
+//! figures in EXPERIMENTS.md — and any downstream plotting — can consume
+//! directly.
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use crate::model::bsps::{HeavySide, Ledger};
+use crate::model::params::AcceleratorParams;
+
+/// One row of the hyperstep timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRow {
+    pub hyperstep: usize,
+    /// Virtual start/end of the hyperstep, seconds.
+    pub start_s: f64,
+    pub end_s: f64,
+    pub compute_flops: f64,
+    pub fetch_words: u64,
+    pub side: HeavySide,
+    /// Time the non-binding side idles, seconds (overlap slack).
+    pub slack_s: f64,
+}
+
+/// Build the timeline for a ledger under machine `m`.
+pub fn timeline(ledger: &Ledger, m: &AcceleratorParams) -> Vec<TraceRow> {
+    let mut rows = Vec::with_capacity(ledger.hypersteps.len());
+    let mut t = 0.0f64;
+    for (i, h) in ledger.hypersteps.iter().enumerate() {
+        let dur = m.flops_to_seconds(h.flops(m));
+        rows.push(TraceRow {
+            hyperstep: i,
+            start_s: t,
+            end_s: t + dur,
+            compute_flops: h.compute_flops,
+            fetch_words: h.fetch_words,
+            side: h.side(m),
+            slack_s: m.flops_to_seconds(h.imbalance(m)),
+        });
+        t += dur;
+    }
+    rows
+}
+
+/// Render the timeline as CSV (header + one row per hyperstep).
+pub fn to_csv(rows: &[TraceRow]) -> String {
+    let mut out = String::from(
+        "hyperstep,start_s,end_s,compute_flops,fetch_words,side,slack_s\n",
+    );
+    for r in rows {
+        let side = match r.side {
+            HeavySide::Bandwidth => "bandwidth",
+            HeavySide::Computation => "computation",
+        };
+        out.push_str(&format!(
+            "{},{:.9},{:.9},{},{},{},{:.9}\n",
+            r.hyperstep, r.start_s, r.end_s, r.compute_flops, r.fetch_words, side, r.slack_s
+        ));
+    }
+    out
+}
+
+/// Write the CSV trace of `ledger` to `path`.
+pub fn write_csv(ledger: &Ledger, m: &AcceleratorParams, path: &str) -> Result<()> {
+    let rows = timeline(ledger, m);
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(to_csv(&rows).as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::bsps::HyperstepCost;
+
+    fn m() -> AcceleratorParams {
+        AcceleratorParams::epiphany3()
+    }
+
+    fn ledger() -> Ledger {
+        let mut l = Ledger::new();
+        l.push(HyperstepCost { compute_flops: 1000.0, fetch_words: 10 }); // comp
+        l.push(HyperstepCost { compute_flops: 100.0, fetch_words: 10 }); // bw
+        l
+    }
+
+    #[test]
+    fn timeline_is_contiguous_and_ordered() {
+        let rows = timeline(&ledger(), &m());
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].start_s, 0.0);
+        assert_eq!(rows[0].end_s, rows[1].start_s);
+        assert!(rows[1].end_s > rows[1].start_s);
+    }
+
+    #[test]
+    fn sides_and_slack() {
+        let rows = timeline(&ledger(), &m());
+        assert_eq!(rows[0].side, HeavySide::Computation);
+        assert_eq!(rows[1].side, HeavySide::Bandwidth);
+        // Slack of row 0 = (1000 − 434) flops of idle DMA time.
+        let want = m().flops_to_seconds(1000.0 - 434.0);
+        assert!((rows[0].slack_s - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_grammar() {
+        let csv = to_csv(&timeline(&ledger(), &m()));
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "hyperstep,start_s,end_s,compute_flops,fetch_words,side,slack_s"
+        );
+        let first = lines.next().unwrap();
+        assert!(first.starts_with("0,"));
+        assert!(first.contains(",computation,"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn write_csv_roundtrip(){
+        let dir = std::env::temp_dir().join("bsps_trace_test.csv");
+        let path = dir.to_str().unwrap();
+        write_csv(&ledger(), &m(), path).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn total_duration_matches_ledger_cost() {
+        let rows = timeline(&ledger(), &m());
+        let total = rows.last().unwrap().end_s;
+        let want = m().flops_to_seconds(ledger().total_flops(&m()));
+        assert!((total - want).abs() < 1e-12);
+    }
+}

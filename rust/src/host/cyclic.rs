@@ -1,0 +1,97 @@
+//! Cyclic vector distribution (paper §3.1, Fig. 2).
+//!
+//! Component `v_i` is assigned to core `s = i mod p`; each core's
+//! components are then cut into tokens of `C` words.
+
+use anyhow::{ensure, Result};
+
+use crate::stream::StreamRegistry;
+
+/// Split `v` cyclically over `p` cores: `out[s][j] = v[j·p + s]`.
+pub fn cyclic_split(v: &[f32], p: usize) -> Vec<Vec<f32>> {
+    let mut parts = vec![Vec::with_capacity(v.len().div_ceil(p)); p];
+    for (i, &x) in v.iter().enumerate() {
+        parts[i % p].push(x);
+    }
+    parts
+}
+
+/// Inverse of [`cyclic_split`].
+pub fn gather_cyclic(parts: &[Vec<f32>]) -> Vec<f32> {
+    let p = parts.len();
+    let n: usize = parts.iter().map(|q| q.len()).sum();
+    let mut v = vec![0.0f32; n];
+    for (s, part) in parts.iter().enumerate() {
+        for (j, &x) in part.iter().enumerate() {
+            v[j * p + s] = x;
+        }
+    }
+    v
+}
+
+/// Create one stream per core holding its cyclic share of `v`, cut into
+/// tokens of `token_words`. Requires `p·token_words | v.len()` (the
+/// paper's constant-token-size assumption). Returns the stream ids in
+/// core order.
+pub fn cyclic_streams(
+    reg: &mut StreamRegistry,
+    v: &[f32],
+    p: usize,
+    token_words: usize,
+) -> Result<Vec<usize>> {
+    ensure!(
+        token_words > 0 && v.len() % (p * token_words) == 0,
+        "p·C = {} must divide N = {}",
+        p * token_words,
+        v.len()
+    );
+    let parts = cyclic_split(v, p);
+    let mut ids = Vec::with_capacity(p);
+    for part in &parts {
+        ids.push(reg.create(part.len(), token_words, Some(part))?);
+    }
+    Ok(ids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_matches_figure2() {
+        // Fig. 2: p=3, v_i -> core i mod 3.
+        let v: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let parts = cyclic_split(&v, 3);
+        assert_eq!(parts[0], vec![0.0, 3.0, 6.0, 9.0, 12.0, 15.0, 18.0, 21.0]);
+        assert_eq!(parts[1][0], 1.0);
+        assert_eq!(parts[2][7], 23.0);
+    }
+
+    #[test]
+    fn gather_inverts_split() {
+        let v: Vec<f32> = (0..40).map(|i| (i as f32).sin()).collect();
+        for p in [1, 2, 4, 5, 8] {
+            assert_eq!(gather_cyclic(&cyclic_split(&v, p)), v, "p={p}");
+        }
+    }
+
+    #[test]
+    fn streams_have_token_structure() {
+        let mut reg = StreamRegistry::unbounded();
+        let v: Vec<f32> = (0..48).map(|i| i as f32).collect();
+        let ids = cyclic_streams(&mut reg, &v, 4, 3).unwrap();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        for &id in &ids {
+            assert_eq!(reg.token_count(id).unwrap(), 4); // 12 words / C=3
+        }
+        // First token of core 1's stream: components 1, 5, 9.
+        assert_eq!(reg.snapshot(1).unwrap()[..3], [1.0, 5.0, 9.0]);
+    }
+
+    #[test]
+    fn indivisible_rejected() {
+        let mut reg = StreamRegistry::unbounded();
+        let v = vec![0.0f32; 10];
+        assert!(cyclic_streams(&mut reg, &v, 4, 3).is_err());
+    }
+}

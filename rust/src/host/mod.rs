@@ -1,0 +1,15 @@
+//! Host-side data preparation (the paper treats the host as a black box
+//! that creates the streams; this module is that box).
+//!
+//! * [`cyclic`] — the cyclic vector distribution of §3.1 and its
+//!   inverse (gather).
+//! * [`cannon`] — the two-level block distribution of §3.2: outer `M×M`
+//!   blocks, inner `N×N` blocks with Cannon's initial skew, serialized
+//!   into per-core streams `Σ^A_{st}` (row-major, revisited) and
+//!   `Σ^B_{st}` (column-major, looped).
+
+pub mod cannon;
+pub mod cyclic;
+
+pub use cannon::{build_cannon_streams, gather_c, CannonStreams};
+pub use cyclic::{cyclic_split, cyclic_streams, gather_cyclic};

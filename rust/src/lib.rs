@@ -1,0 +1,38 @@
+//! # bsps — Bulk-Synchronous Pseudo-Streaming for many-core accelerators
+//!
+//! A reproduction of *"Bulk-synchronous pseudo-streaming algorithms for
+//! many-core accelerators"* (Buurlage, Bannink, Wits; 2016) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the BSPS coordinator: a BSP-accelerator machine
+//!   model `(p, r, g, l, e, L, E)`, a virtual-time simulator of an
+//!   Epiphany-III-like chip (2D mesh NoC, per-core scratchpad, DMA engines,
+//!   shared external DRAM with contention + burst behaviour), a BSPlib-style
+//!   SPMD runtime with the paper's proposed *streaming* extension
+//!   (`bsp_stream_*`), and a hyperstep scheduler that overlaps token
+//!   prefetch with the per-hyperstep BSP program.
+//! * **L2 (python/compile/model.py)** — JAX compute graphs for the
+//!   per-token work (block matmul-accumulate, partial inner products),
+//!   AOT-lowered to HLO text once at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels implementing the
+//!   token-level hot spots, lowered inside the L2 graphs.
+//!
+//! Python never runs on the request path: the Rust binary loads
+//! `artifacts/*.hlo.txt` through PJRT (`runtime`) and is self-contained.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a module and bench target.
+
+pub mod algos;
+pub mod bsp;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod host;
+pub mod model;
+pub mod stream;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use model::params::AcceleratorParams;

@@ -1,0 +1,16 @@
+//! `bsps` — the L3 coordinator binary. See `bsps` with no arguments for
+//! usage; DESIGN.md for the system inventory.
+
+use bsps::cli::{args::Args, commands};
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let result = Args::parse(raw).and_then(|args| commands::dispatch(&args));
+    match result {
+        Ok(text) => println!("{text}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! The BSPS cost function (paper §2, Eq. 1).
+//!
+//! A BSPS program is a sequence of `H` hypersteps. Hyperstep `h` runs an
+//! ordinary BSP program (cost `T_h` FLOPs) while the tokens for hyperstep
+//! `h+1` are fetched asynchronously from external memory; the hyperstep
+//! therefore costs
+//!
+//! ```text
+//! max( T_h ,  e · max_s Σ_{i ∈ O_s} C_i )
+//! ```
+//!
+//! and the program costs the sum over hypersteps (Eq. 1). A hyperstep is
+//! *bandwidth heavy* when the fetch dominates, *computation heavy*
+//! otherwise.
+
+use crate::model::params::AcceleratorParams;
+
+/// Which side of the `max` dominates a hyperstep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HeavySide {
+    /// Fetch time `e·ΣC_i` ≥ compute time `T_h`.
+    Bandwidth,
+    /// Compute time `T_h` > fetch time.
+    Computation,
+}
+
+/// Cost record of one hyperstep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HyperstepCost {
+    /// BSP cost `T_h` of the hyperstep's program, FLOPs.
+    pub compute_flops: f64,
+    /// `max_s Σ_{i∈O_s} C_i`: the largest number of words any core
+    /// fetches for the next hyperstep.
+    pub fetch_words: u64,
+}
+
+impl HyperstepCost {
+    /// Fetch cost in FLOPs: `e · fetch_words`.
+    pub fn fetch_flops(&self, m: &AcceleratorParams) -> f64 {
+        m.e * self.fetch_words as f64
+    }
+
+    /// The hyperstep's contribution to Eq. 1.
+    pub fn flops(&self, m: &AcceleratorParams) -> f64 {
+        self.compute_flops.max(self.fetch_flops(m))
+    }
+
+    /// Bandwidth- or computation-heavy (ties count as bandwidth heavy,
+    /// matching the paper's "if fetching takes more time ... bound by
+    /// the memory bandwidth" reading with ≥).
+    pub fn side(&self, m: &AcceleratorParams) -> HeavySide {
+        if self.fetch_flops(m) >= self.compute_flops {
+            HeavySide::Bandwidth
+        } else {
+            HeavySide::Computation
+        }
+    }
+
+    /// Time wasted waiting on the slower side, FLOPs (0 when balanced).
+    pub fn imbalance(&self, m: &AcceleratorParams) -> f64 {
+        (self.compute_flops - self.fetch_flops(m)).abs()
+    }
+}
+
+/// Ledger of a whole BSPS program: one row per hyperstep.
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    pub hypersteps: Vec<HyperstepCost>,
+}
+
+/// Aggregate view of a [`Ledger`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LedgerSummary {
+    pub hypersteps: usize,
+    pub total_flops: f64,
+    pub total_seconds: f64,
+    pub bandwidth_heavy: usize,
+    pub computation_heavy: usize,
+    /// Total compute FLOPs across hypersteps (Σ T_h).
+    pub compute_flops: f64,
+    /// Total fetch words across hypersteps.
+    pub fetch_words: u64,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, h: HyperstepCost) {
+        self.hypersteps.push(h);
+    }
+
+    /// Total BSPS cost in FLOPs (Eq. 1).
+    pub fn total_flops(&self, m: &AcceleratorParams) -> f64 {
+        self.hypersteps.iter().map(|h| h.flops(m)).sum()
+    }
+
+    /// Summarize the ledger under machine `m`.
+    pub fn summarize(&self, m: &AcceleratorParams) -> LedgerSummary {
+        let total_flops = self.total_flops(m);
+        let bandwidth_heavy = self
+            .hypersteps
+            .iter()
+            .filter(|h| h.side(m) == HeavySide::Bandwidth)
+            .count();
+        LedgerSummary {
+            hypersteps: self.hypersteps.len(),
+            total_flops,
+            total_seconds: m.flops_to_seconds(total_flops),
+            bandwidth_heavy,
+            computation_heavy: self.hypersteps.len() - bandwidth_heavy,
+            compute_flops: self.hypersteps.iter().map(|h| h.compute_flops).sum(),
+            fetch_words: self.hypersteps.iter().map(|h| h.fetch_words).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> AcceleratorParams {
+        AcceleratorParams::epiphany3()
+    }
+
+    #[test]
+    fn max_of_compute_and_fetch() {
+        let h = HyperstepCost { compute_flops: 1000.0, fetch_words: 10 };
+        // fetch = 43.4*10 = 434 < 1000 -> computation heavy
+        assert_eq!(h.side(&m()), HeavySide::Computation);
+        assert!((h.flops(&m()) - 1000.0).abs() < 1e-9);
+
+        let h = HyperstepCost { compute_flops: 100.0, fetch_words: 10 };
+        // fetch = 434 > 100 -> bandwidth heavy
+        assert_eq!(h.side(&m()), HeavySide::Bandwidth);
+        assert!((h.flops(&m()) - 434.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inprod_hyperstep_bandwidth_heavy_iff_e_gt_1() {
+        // Paper §3.1: hyperstep = max{2C, 2Ce}; bandwidth heavy iff e>1.
+        let c = 512u64;
+        let h = HyperstepCost { compute_flops: 2.0 * c as f64, fetch_words: 2 * c };
+        assert_eq!(h.side(&m()), HeavySide::Bandwidth); // e = 43.4 > 1
+
+        let mut cheap = m();
+        cheap.e = 0.5;
+        assert_eq!(h.side(&cheap), HeavySide::Computation);
+    }
+
+    #[test]
+    fn ledger_sums_eq1() {
+        let mut ledger = Ledger::new();
+        ledger.push(HyperstepCost { compute_flops: 1000.0, fetch_words: 10 });
+        ledger.push(HyperstepCost { compute_flops: 100.0, fetch_words: 10 });
+        let expect = 1000.0 + 434.0;
+        assert!((ledger.total_flops(&m()) - expect).abs() < 1e-9);
+        let s = ledger.summarize(&m());
+        assert_eq!(s.hypersteps, 2);
+        assert_eq!(s.bandwidth_heavy, 1);
+        assert_eq!(s.computation_heavy, 1);
+        assert_eq!(s.fetch_words, 20);
+    }
+
+    #[test]
+    fn empty_ledger() {
+        let ledger = Ledger::new();
+        assert_eq!(ledger.total_flops(&m()), 0.0);
+        let s = ledger.summarize(&m());
+        assert_eq!(s.hypersteps, 0);
+        assert_eq!(s.total_seconds, 0.0);
+    }
+
+    #[test]
+    fn imbalance_measures_overlap_slack() {
+        let h = HyperstepCost { compute_flops: 500.0, fetch_words: 10 };
+        assert!((h.imbalance(&m()) - (500.0f64 - 434.0).abs()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_fetch_is_computation_heavy_unless_zero_compute() {
+        let h = HyperstepCost { compute_flops: 1.0, fetch_words: 0 };
+        assert_eq!(h.side(&m()), HeavySide::Computation);
+        let h0 = HyperstepCost { compute_flops: 0.0, fetch_words: 0 };
+        assert_eq!(h0.side(&m()), HeavySide::Bandwidth); // tie -> bandwidth
+    }
+}

@@ -1,0 +1,131 @@
+//! §5's measurement→parameter pipeline: derive `(e, g, l)` for a machine
+//! from raw (simulated) measurements, exactly as the paper derives them
+//! from Parallella measurements.
+//!
+//! * `e` — from the **pessimistic** contested DMA read bandwidth ("we
+//!   expect that all cores will simultaneously be reading from the
+//!   external memory during a hyperstep").
+//! * `g`, `l` — a linear fit `time = l + g·words` on core-to-core write
+//!   timings over a range of message sizes, with the clock overhead
+//!   subtracted (the paper compensates for the hardware-clock cost).
+
+use crate::model::params::{AcceleratorParams, WORD_BYTES};
+use crate::util::fit::{linear_fit, LineFit};
+
+/// One core-to-core write measurement: message size and wall time.
+#[derive(Debug, Clone, Copy)]
+pub struct CommSample {
+    pub words: u64,
+    pub seconds: f64,
+}
+
+/// The calibrated parameters plus fit diagnostics.
+#[derive(Debug, Clone, Copy)]
+pub struct Calibration {
+    pub e: f64,
+    pub g: f64,
+    pub l: f64,
+    pub fit: LineFit,
+}
+
+/// Derive `e` from a bytes-per-second bandwidth measurement (§5):
+/// `e = r / (bandwidth / word_bytes)` FLOP per word.
+pub fn e_from_bandwidth(r_flops: f64, bytes_per_sec: f64) -> f64 {
+    assert!(bytes_per_sec > 0.0);
+    r_flops / (bytes_per_sec / WORD_BYTES as f64)
+}
+
+/// Fit `g` (slope) and `l` (intercept) from core-to-core write samples.
+/// `clock_overhead_seconds` is subtracted from every sample first.
+pub fn fit_g_l(
+    r_flops: f64,
+    samples: &[CommSample],
+    clock_overhead_seconds: f64,
+) -> (f64, f64, LineFit) {
+    let xs: Vec<f64> = samples.iter().map(|s| s.words as f64).collect();
+    let ys: Vec<f64> = samples
+        .iter()
+        .map(|s| (s.seconds - clock_overhead_seconds).max(0.0) * r_flops)
+        .collect();
+    let fit = linear_fit(&xs, &ys);
+    (fit.slope, fit.intercept.max(0.0), fit)
+}
+
+/// Full calibration from raw measurements.
+pub fn calibrate(
+    r_flops: f64,
+    contested_dma_read_bytes_per_sec: f64,
+    comm_samples: &[CommSample],
+    clock_overhead_seconds: f64,
+) -> Calibration {
+    let e = e_from_bandwidth(r_flops, contested_dma_read_bytes_per_sec);
+    let (g, l, fit) = fit_g_l(r_flops, comm_samples, clock_overhead_seconds);
+    Calibration { e, g, l, fit }
+}
+
+/// Produce an [`AcceleratorParams`] from a calibration, keeping the
+/// structural parameters (p, r, L, E) of `base`.
+pub fn apply(base: &AcceleratorParams, cal: &Calibration) -> AcceleratorParams {
+    AcceleratorParams { e: cal.e, g: cal.g, l: cal.l, ..base.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e_matches_paper_value() {
+        // 11 MB/s contested DMA read on a 120 MFLOP/s core -> ~43.6
+        let e = e_from_bandwidth(120.0e6, 11.0e6);
+        assert!((e - 43.64).abs() < 0.1, "e={e}");
+    }
+
+    #[test]
+    fn g_l_recovered_from_synthetic_measurements() {
+        let r = 120.0e6;
+        let (g_true, l_true) = (5.59, 136.0);
+        let overhead = 2.0e-6;
+        let samples: Vec<CommSample> = (1..=64)
+            .map(|w| CommSample {
+                words: w * 16,
+                seconds: (l_true + g_true * (w * 16) as f64) / r + overhead,
+            })
+            .collect();
+        let (g, l, fit) = fit_g_l(r, &samples, overhead);
+        assert!((g - g_true).abs() < 1e-6, "g={g}");
+        assert!((l - l_true).abs() < 1e-3, "l={l}");
+        assert!(fit.r2 > 0.999999);
+    }
+
+    #[test]
+    fn uncompensated_overhead_inflates_l() {
+        let r = 120.0e6;
+        let overhead = 10.0e-6; // 1200 FLOP worth of clock overhead
+        let samples: Vec<CommSample> = (1..=32)
+            .map(|w| CommSample {
+                words: w * 8,
+                seconds: (136.0 + 5.59 * (w * 8) as f64) / r + overhead,
+            })
+            .collect();
+        let (_, l_naive, _) = fit_g_l(r, &samples, 0.0);
+        let (_, l_comp, _) = fit_g_l(r, &samples, overhead);
+        assert!(l_naive > l_comp + 1000.0, "naive={l_naive} comp={l_comp}");
+        assert!((l_comp - 136.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn apply_overrides_only_egl() {
+        let base = AcceleratorParams::epiphany3();
+        let cal = Calibration {
+            e: 50.0,
+            g: 6.0,
+            l: 140.0,
+            fit: crate::util::fit::LineFit { slope: 6.0, intercept: 140.0, r2: 1.0 },
+        };
+        let m = apply(&base, &cal);
+        assert_eq!(m.p, base.p);
+        assert_eq!(m.e, 50.0);
+        assert_eq!(m.g, 6.0);
+        assert_eq!(m.l, 140.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Classic BSP cost accounting (paper §1).
+//!
+//! A BSP algorithm of `k` supersteps costs
+//! `T = Σ_i (max_s w_i^(s) + g·h_i + l)` where the *h-relation*
+//! `h_i = max_s max(t_i^(s), r_i^(s))` is the maximum number of words
+//! transmitted or received by any core in superstep `i`.
+
+use crate::model::params::AcceleratorParams;
+
+/// Per-core traffic and work in one superstep.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CoreStepUsage {
+    /// FLOPs of local work, `w_i^(s)`.
+    pub flops: f64,
+    /// Words transmitted, `t_i^(s)`.
+    pub sent: u64,
+    /// Words received, `r_i^(s)`.
+    pub received: u64,
+}
+
+/// Aggregated cost of one superstep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SuperstepCost {
+    /// `max_s w_i^(s)` in FLOPs.
+    pub w_max: f64,
+    /// The h-relation `h_i` in words.
+    pub h: u64,
+}
+
+impl SuperstepCost {
+    /// Build a superstep cost from per-core usage records.
+    pub fn from_cores(cores: &[CoreStepUsage]) -> Self {
+        assert!(!cores.is_empty(), "SuperstepCost: no cores");
+        let w_max = cores.iter().map(|c| c.flops).fold(0.0, f64::max);
+        let h = cores.iter().map(|c| c.sent.max(c.received)).max().unwrap_or(0);
+        Self { w_max, h }
+    }
+
+    /// Cost in FLOPs: `w + g·h + l`.
+    pub fn flops(&self, m: &AcceleratorParams) -> f64 {
+        self.w_max + m.g * self.h as f64 + m.l
+    }
+}
+
+/// Accumulated BSP cost of a whole program.
+#[derive(Debug, Clone, Default)]
+pub struct BspCost {
+    pub supersteps: Vec<SuperstepCost>,
+}
+
+impl BspCost {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one superstep.
+    pub fn push(&mut self, step: SuperstepCost) {
+        self.supersteps.push(step);
+    }
+
+    /// Total cost in FLOPs (the paper's `T`).
+    pub fn total_flops(&self, m: &AcceleratorParams) -> f64 {
+        self.supersteps.iter().map(|s| s.flops(m)).sum()
+    }
+
+    /// Total cost in seconds via `r`.
+    pub fn total_seconds(&self, m: &AcceleratorParams) -> f64 {
+        m.flops_to_seconds(self.total_flops(m))
+    }
+
+    /// Number of supersteps, `k`.
+    pub fn len(&self) -> usize {
+        self.supersteps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.supersteps.is_empty()
+    }
+
+    /// Total communication volume bound: `Σ_i h_i` (words).
+    pub fn total_h(&self) -> u64 {
+        self.supersteps.iter().map(|s| s.h).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> AcceleratorParams {
+        AcceleratorParams::epiphany3()
+    }
+
+    #[test]
+    fn h_relation_is_max_of_sent_and_received() {
+        let cores = vec![
+            CoreStepUsage { flops: 10.0, sent: 5, received: 2 },
+            CoreStepUsage { flops: 20.0, sent: 1, received: 9 },
+        ];
+        let s = SuperstepCost::from_cores(&cores);
+        assert_eq!(s.h, 9);
+        assert_eq!(s.w_max, 20.0);
+    }
+
+    #[test]
+    fn superstep_cost_formula() {
+        let s = SuperstepCost { w_max: 100.0, h: 10 };
+        let expect = 100.0 + 5.59 * 10.0 + 136.0;
+        assert!((s.flops(&m()) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_program_costs_zero() {
+        let c = BspCost::new();
+        assert_eq!(c.total_flops(&m()), 0.0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn sum_over_supersteps() {
+        let mut c = BspCost::new();
+        c.push(SuperstepCost { w_max: 10.0, h: 0 });
+        c.push(SuperstepCost { w_max: 0.0, h: 3 });
+        let expect = (10.0 + 136.0) + (5.59 * 3.0 + 136.0);
+        assert!((c.total_flops(&m()) - expect).abs() < 1e-9);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.total_h(), 3);
+    }
+
+    #[test]
+    fn zero_traffic_still_pays_latency() {
+        // A sync with no communication still costs l (the barrier).
+        let s = SuperstepCost { w_max: 0.0, h: 0 };
+        assert!((s.flops(&m()) - 136.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn broadcast_h_relation_example() {
+        // Algorithm 1's final superstep: each core sends (p-1) words and
+        // receives (p-1) words -> h = p-1.
+        let p = 16;
+        let cores: Vec<_> = (0..p)
+            .map(|_| CoreStepUsage {
+                flops: p as f64,
+                sent: (p - 1) as u64,
+                received: (p - 1) as u64,
+            })
+            .collect();
+        let s = SuperstepCost::from_cores(&cores);
+        assert_eq!(s.h, 15);
+    }
+}

@@ -1,0 +1,136 @@
+//! Heterogeneous BSPS (paper §7, final paragraph): *"it would be
+//! interesting to consider models in which there are different types of
+//! processing units, and to develop models that uses the BSP and BSPS
+//! costs to distribute the work of a single algorithm in this
+//! heterogeneous environment."*
+//!
+//! We model a host system with several accelerator *units* (e.g. an
+//! Epiphany chip next to a Xeon-Phi-class card), each a full BSP
+//! accelerator with its own `(p, r, g, l, e, L, E)`. A divisible
+//! workload of `W` FLOPs with arithmetic intensity `I` (FLOPs per word
+//! streamed) is split across units; each unit's share runs as a BSPS
+//! program whose hypersteps are compute- or bandwidth-heavy depending on
+//! its own `e` and `I`. The model answers the paper's question: *what
+//! fraction should each unit get so the makespan is minimal?*
+
+use crate::model::params::AcceleratorParams;
+
+/// Effective streaming throughput of one unit, FLOP/s: the unit
+/// processes `W` FLOPs while fetching `W/I` words; with overlap
+/// (Eq. 1), each hyperstep costs `max(compute, fetch)`, so the rate is
+/// bounded by the slower of aggregate compute and aggregate fetch.
+pub fn unit_throughput(m: &AcceleratorParams, intensity: f64) -> f64 {
+    assert!(intensity > 0.0, "need FLOPs-per-word > 0");
+    // Aggregate compute rate: p cores at r FLOP/s.
+    let compute = m.p as f64 * m.r;
+    // Aggregate fetch-limited rate: the link moves (r/e) words/s per
+    // core (e is FLOPs per word at rate r), i.e. I·(r/e) FLOP/s each.
+    let fetch = m.p as f64 * intensity * m.r / m.e;
+    compute.min(fetch)
+}
+
+/// The work split across units that equalizes finish times (the optimal
+/// split for divisible load): share_i ∝ throughput_i. Returns the
+/// fractions (summing to 1) and the resulting makespan in seconds for a
+/// total of `w_flops`.
+pub fn optimal_split(
+    units: &[AcceleratorParams],
+    intensity: f64,
+    w_flops: f64,
+) -> (Vec<f64>, f64) {
+    assert!(!units.is_empty());
+    let rates: Vec<f64> = units.iter().map(|u| unit_throughput(u, intensity)).collect();
+    let total: f64 = rates.iter().sum();
+    let fractions: Vec<f64> = rates.iter().map(|r| r / total).collect();
+    let makespan = w_flops / total;
+    (fractions, makespan)
+}
+
+/// Makespan for an arbitrary split (for comparing policies).
+pub fn makespan(
+    units: &[AcceleratorParams],
+    intensity: f64,
+    w_flops: f64,
+    fractions: &[f64],
+) -> f64 {
+    assert_eq!(units.len(), fractions.len());
+    units
+        .iter()
+        .zip(fractions)
+        .map(|(u, f)| f * w_flops / unit_throughput(u, intensity))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_intensity_is_fetch_bound_high_is_compute_bound() {
+        let m = AcceleratorParams::epiphany3();
+        // I = 2 (inner product): fetch-bound, rate = p·I·r/e.
+        let low = unit_throughput(&m, 2.0);
+        assert!((low - 16.0 * 2.0 * m.r / m.e).abs() < 1.0);
+        // I = 1000: compute-bound, rate = p·r.
+        let high = unit_throughput(&m, 1000.0);
+        assert!((high - 16.0 * m.r).abs() < 1.0);
+        assert!(high > low);
+    }
+
+    #[test]
+    fn crossover_intensity_is_e() {
+        // compute == fetch exactly when I == e: the paper's bandwidth-
+        // vs compute-heavy boundary re-expressed as intensity.
+        let m = AcceleratorParams::epiphany3();
+        let at_e = unit_throughput(&m, m.e);
+        assert!((at_e - m.p as f64 * m.r).abs() < 1e-6);
+        let below = unit_throughput(&m, m.e * 0.99);
+        assert!(below < at_e);
+    }
+
+    #[test]
+    fn identical_units_split_evenly() {
+        let units = vec![AcceleratorParams::epiphany3(); 4];
+        let (fractions, _) = optimal_split(&units, 8.0, 1e9);
+        for f in &fractions {
+            assert!((f - 0.25).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn faster_unit_gets_more_work() {
+        let units = vec![AcceleratorParams::epiphany3(), AcceleratorParams::xeonphi_like()];
+        let (fractions, _) = optimal_split(&units, 50.0, 1e9);
+        assert!(fractions[1] > 0.9, "the phi-class unit dominates: {fractions:?}");
+        assert!((fractions.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimal_split_beats_even_split() {
+        let units = vec![AcceleratorParams::epiphany3(), AcceleratorParams::xeonphi_like()];
+        let w = 1e10;
+        let i = 20.0;
+        let (fractions, best) = optimal_split(&units, i, w);
+        let even = makespan(&units, i, w, &[0.5, 0.5]);
+        assert!(best < even, "optimal {best} must beat even {even}");
+        // And the optimum equalizes: per-unit times match the makespan.
+        for (u, f) in units.iter().zip(&fractions) {
+            let t = f * w / unit_throughput(u, i);
+            assert!((t - best).abs() / best < 1e-9);
+        }
+    }
+
+    #[test]
+    fn intensity_changes_the_split() {
+        // A unit with a weak link loses share as intensity drops.
+        let mut weak_link = AcceleratorParams::xeonphi_like();
+        weak_link.e = 200.0;
+        let units = vec![AcceleratorParams::epiphany3(), weak_link];
+        let (hi, _) = optimal_split(&units, 1000.0, 1e9); // compute-bound
+        let (lo, _) = optimal_split(&units, 2.0, 1e9); // fetch-bound
+        assert!(
+            lo[1] < hi[1],
+            "weak-link unit's share must shrink when fetch-bound: {lo:?} vs {hi:?}"
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! The BSP-accelerator machine model and cost functions (paper §1–§2).
+//!
+//! * [`params`] — the parameter pack `(p, r, g, l, e, L, E)` defining a
+//!   BSP accelerator, with presets for the chips the paper discusses.
+//! * [`cost`] — classic BSP cost: `Σ_i (max_s w_i^(s) + g·h_i + l)`.
+//! * [`bsps`] — the BSPS cost of Eq. 1: per hyperstep,
+//!   `max(T_h, e·max_s Σ_{i∈O_s} C_i)`, with the bandwidth-heavy /
+//!   computation-heavy classification.
+//! * [`predict`] — closed-form costs for Algorithm 1 (inner product) and
+//!   Eq. 2 (multi-level Cannon), plus the `k_equal` crossover solver.
+//! * [`calibrate`] — §5's measurement→parameter fits: `g`, `l` from a
+//!   linear fit on core-to-core write timings; `e` from the pessimistic
+//!   contested DMA read bandwidth.
+
+pub mod bsps;
+pub mod calibrate;
+pub mod hetero;
+pub mod cost;
+pub mod params;
+pub mod predict;
+
+pub use bsps::{HeavySide, HyperstepCost, LedgerSummary};
+pub use cost::{BspCost, SuperstepCost};
+pub use params::AcceleratorParams;

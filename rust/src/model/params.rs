@@ -1,0 +1,194 @@
+//! The BSP accelerator parameter pack `(p, r, g, l, e, L, E)` (paper §2).
+
+/// A BSP accelerator. All communication parameters are in the paper's
+/// units: FLOPs (`l`) and FLOPs per data word (`g`, `e`), where one data
+/// word is one single-precision float (4 bytes, §2 "BSPS cost").
+#[derive(Debug, Clone, PartialEq)]
+pub struct AcceleratorParams {
+    /// Number of processing cores, `p`. For grid algorithms (Cannon)
+    /// `p = N×N` with `N = self.grid_n()`.
+    pub p: usize,
+    /// Computation rate of one core, FLOP/s.
+    pub r: f64,
+    /// Inverse bandwidth of inter-core communication, FLOP/word.
+    pub g: f64,
+    /// Latency (bulk-synchronization cost), FLOP.
+    pub l: f64,
+    /// Inverse bandwidth to the shared external memory pool, FLOP/word.
+    pub e: f64,
+    /// Local (scratchpad) memory per core, bytes.
+    pub local_mem: usize,
+    /// Shared external memory pool, bytes.
+    pub ext_mem: usize,
+    /// Human-readable name for reports.
+    pub name: &'static str,
+}
+
+/// Bytes per data word (single-precision float, §5).
+pub const WORD_BYTES: usize = 4;
+
+impl AcceleratorParams {
+    /// The Epiphany-III (E16G301) on the Parallella, with the parameters
+    /// measured in §5: 16 cores at 600 MHz doing on average 1 FLOP per
+    /// 5 clock cycles for representative compiled code, `g ≈ 5.59`,
+    /// `l ≈ 136`, `e ≈ 43.4` (pessimistic contested DMA read at
+    /// 11 MB/s), 32 KB SRAM per core, 32 MB shared DRAM.
+    pub fn epiphany3() -> Self {
+        Self {
+            p: 16,
+            r: 600.0e6 / 5.0, // 120 MFLOP/s
+            g: 5.59,
+            l: 136.0,
+            e: 43.4,
+            local_mem: 32 * 1024,
+            ext_mem: 32 * 1024 * 1024,
+            name: "epiphany3",
+        }
+    }
+
+    /// The 64-core Epiphany-IV (limited-production Parallella). Same
+    /// per-core microarchitecture; the shared-DRAM link is the same, so
+    /// with 4× the cores contending, the per-core `e` scales up 4×.
+    pub fn epiphany4() -> Self {
+        Self {
+            p: 64,
+            r: 600.0e6 / 5.0,
+            g: 5.59,
+            l: 170.0, // barrier over a 8×8 mesh is a little dearer
+            e: 4.0 * 43.4,
+            local_mem: 32 * 1024,
+            ext_mem: 32 * 1024 * 1024,
+            name: "epiphany4",
+        }
+    }
+
+    /// The announced 1024-core Epiphany-V (§5: 64-bit, more cores; we
+    /// keep f32 words for comparability). Parameters are projections:
+    /// 64 KB local memory per core, much wider external interface.
+    pub fn epiphany5() -> Self {
+        Self {
+            p: 1024,
+            r: 1.0e9,
+            g: 5.0,
+            l: 400.0,
+            e: 64.0,
+            local_mem: 64 * 1024,
+            ext_mem: 1024 * 1024 * 1024,
+            name: "epiphany5",
+        }
+    }
+
+    /// A Xeon-Phi-flavoured accelerator: fewer, fatter cores; large
+    /// local caches treated as scratchpad; fast GDDR external memory
+    /// (e < 1: hypersteps are practically never bandwidth heavy).
+    pub fn xeonphi_like() -> Self {
+        Self {
+            p: 61,
+            r: 16.0e9,
+            g: 2.0,
+            l: 1200.0,
+            e: 0.8,
+            local_mem: 512 * 1024,
+            ext_mem: 8 * 1024 * 1024 * 1024usize,
+            name: "xeonphi_like",
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "epiphany3" => Some(Self::epiphany3()),
+            "epiphany4" => Some(Self::epiphany4()),
+            "epiphany5" => Some(Self::epiphany5()),
+            "xeonphi_like" => Some(Self::xeonphi_like()),
+            _ => None,
+        }
+    }
+
+    /// Side length `N` of the square core grid; panics if `p` is not a
+    /// perfect square (Cannon requires a square grid).
+    pub fn grid_n(&self) -> usize {
+        let n = (self.p as f64).sqrt().round() as usize;
+        assert_eq!(n * n, self.p, "p = {} is not a perfect square", self.p);
+        n
+    }
+
+    /// Convert a FLOP count to wall seconds via `r`.
+    pub fn flops_to_seconds(&self, flops: f64) -> f64 {
+        flops / self.r
+    }
+
+    /// Local memory capacity in words.
+    pub fn local_mem_words(&self) -> usize {
+        self.local_mem / WORD_BYTES
+    }
+
+    /// External memory capacity in words.
+    pub fn ext_mem_words(&self) -> usize {
+        self.ext_mem / WORD_BYTES
+    }
+
+    /// Effective local token budget (words) when prefetching is on:
+    /// the prefetch buffer halves the usable local memory (§2).
+    pub fn effective_local_words(&self, prefetch: bool) -> usize {
+        if prefetch { self.local_mem_words() / 2 } else { self.local_mem_words() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epiphany3_matches_paper() {
+        let m = AcceleratorParams::epiphany3();
+        assert_eq!(m.p, 16);
+        assert_eq!(m.grid_n(), 4);
+        assert!((m.r - 120.0e6).abs() < 1.0);
+        assert!((m.g - 5.59).abs() < 1e-9);
+        assert!((m.l - 136.0).abs() < 1e-9);
+        assert!((m.e - 43.4).abs() < 1e-9);
+        assert_eq!(m.local_mem, 32 * 1024);
+        assert_eq!(m.ext_mem, 32 * 1024 * 1024);
+    }
+
+    #[test]
+    fn e_derivation_from_contested_dma_read() {
+        // §5: e = r / (bandwidth in floats/s) = (600MHz/5) / (11MB/s / 4B)
+        let r = 600.0e6 / 5.0;
+        let floats_per_sec = 11.0e6 / WORD_BYTES as f64;
+        let e = r / floats_per_sec;
+        // Paper rounds to 43.4; exact value is ~43.64.
+        assert!((e - 43.64).abs() < 0.1, "e={e}");
+        assert!((e - AcceleratorParams::epiphany3().e).abs() < 0.5);
+    }
+
+    #[test]
+    fn grid_n_rejects_non_square() {
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = 12;
+        let r = std::panic::catch_unwind(move || m.grid_n());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn seconds_conversion() {
+        let m = AcceleratorParams::epiphany3();
+        assert!((m.flops_to_seconds(120.0e6) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefetch_halves_local_budget() {
+        let m = AcceleratorParams::epiphany3();
+        assert_eq!(m.effective_local_words(false), 8192);
+        assert_eq!(m.effective_local_words(true), 4096);
+    }
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["epiphany3", "epiphany4", "epiphany5", "xeonphi_like"] {
+            assert!(AcceleratorParams::preset(name).is_some(), "{name}");
+        }
+        assert!(AcceleratorParams::preset("nope").is_none());
+    }
+}

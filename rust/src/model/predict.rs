@@ -1,0 +1,210 @@
+//! Closed-form BSPS cost predictions for the paper's two worked
+//! algorithms (§3), and the `k_equal` crossover of §6.
+
+use crate::model::params::AcceleratorParams;
+
+/// Prediction for the streaming inner product (paper §3.1):
+///
+/// ```text
+/// T_inprod = n · max{2C, 2Ce} + p + (p−1)g + l,    n = N/(pC)
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InprodPrediction {
+    /// Number of hypersteps `n = N/(pC)` per core.
+    pub hypersteps: usize,
+    /// Total cost, FLOPs.
+    pub flops: f64,
+    /// Total cost, seconds.
+    pub seconds: f64,
+    /// Whether the hypersteps are bandwidth heavy (`e > 1`).
+    pub bandwidth_heavy: bool,
+}
+
+/// Predict Algorithm 1's cost for vectors of length `n_total` streamed
+/// in tokens of `c` words per core. Panics unless `p·c` divides
+/// `n_total` (the paper's simplifying assumption of constant-size
+/// tokens).
+pub fn inprod_cost(m: &AcceleratorParams, n_total: usize, c: usize) -> InprodPrediction {
+    assert!(c > 0 && n_total % (m.p * c) == 0, "p·C must divide N");
+    let n = n_total / (m.p * c);
+    let per_hyperstep = (2.0 * c as f64).max(2.0 * c as f64 * m.e);
+    let final_step = m.p as f64 + (m.p as f64 - 1.0) * m.g + m.l;
+    let flops = n as f64 * per_hyperstep + final_step;
+    InprodPrediction {
+        hypersteps: n,
+        flops,
+        seconds: m.flops_to_seconds(flops),
+        bandwidth_heavy: m.e > 1.0,
+    }
+}
+
+/// Prediction for multi-level Cannon (paper §3.2, Eq. 2):
+///
+/// ```text
+/// T̃_cannon = M³ · max( N(2k³ + 2k²g + l), 2k²e ),   k = n/(N·M)
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CannonPrediction {
+    /// Inner block size `k = n/(N·M)`.
+    pub k: usize,
+    /// Number of hypersteps, `M³`.
+    pub hypersteps: usize,
+    /// Per-hyperstep compute (BSP cost of one inner Cannon run), FLOPs.
+    pub compute_per_hyperstep: f64,
+    /// Per-hyperstep fetch words (two k×k tokens).
+    pub fetch_words_per_hyperstep: u64,
+    /// Total cost, FLOPs.
+    pub flops: f64,
+    /// Total cost, seconds.
+    pub seconds: f64,
+    /// Whether hypersteps are bandwidth heavy.
+    pub bandwidth_heavy: bool,
+}
+
+/// Predict Algorithm 2's cost for an `n×n` product on an `N×N` grid with
+/// `M×M` outer blocks. Requires `N·M | n`.
+pub fn cannon_cost(m: &AcceleratorParams, n: usize, big_m: usize) -> CannonPrediction {
+    let grid_n = m.grid_n();
+    assert!(big_m > 0 && n % (grid_n * big_m) == 0, "N·M must divide n");
+    let k = n / (grid_n * big_m);
+    let kf = k as f64;
+    let compute = grid_n as f64 * (2.0 * kf * kf * kf + 2.0 * kf * kf * m.g + m.l);
+    let fetch_words = 2 * (k * k) as u64;
+    let fetch = m.e * fetch_words as f64;
+    let hypersteps = big_m * big_m * big_m;
+    let flops = hypersteps as f64 * compute.max(fetch);
+    CannonPrediction {
+        k,
+        hypersteps,
+        compute_per_hyperstep: compute,
+        fetch_words_per_hyperstep: fetch_words,
+        flops,
+        seconds: m.flops_to_seconds(flops),
+        bandwidth_heavy: fetch >= compute,
+    }
+}
+
+/// The `k_equal` crossover of §6: the block size where per-hyperstep
+/// compute and fetch balance. The paper equates the asymptotically
+/// dominant terms `N(2k³ + k²g) = 2k²e`, giving
+///
+/// ```text
+/// k_equal = (2e − N·g) / (2N)
+/// ```
+///
+/// which evaluates to ≈ 8 for the Epiphany-III parameters.
+pub fn k_equal(m: &AcceleratorParams) -> f64 {
+    let n = m.grid_n() as f64;
+    (2.0 * m.e - n * m.g) / (2.0 * n)
+}
+
+/// Numeric crossover on the *full* Eq. 2 balance
+/// `N(2k³ + 2k²g + l) = 2k²e`, scanning k in `[1, k_max]`. Returns the
+/// largest k (if any) at which a hyperstep is still bandwidth heavy —
+/// blocks larger than this are compute bound.
+pub fn k_equal_full(m: &AcceleratorParams, k_max: usize) -> Option<usize> {
+    let n = m.grid_n() as f64;
+    (1..=k_max)
+        .filter(|&k| {
+            let kf = k as f64;
+            let compute = n * (2.0 * kf.powi(3) + 2.0 * kf * kf * m.g + m.l);
+            let fetch = 2.0 * kf * kf * m.e;
+            fetch >= compute
+        })
+        .max()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> AcceleratorParams {
+        AcceleratorParams::epiphany3()
+    }
+
+    #[test]
+    fn k_equal_matches_paper_approx_8() {
+        let k = k_equal(&m());
+        assert!((k - 8.0).abs() < 0.2, "k_equal = {k}, paper says ≈ 8");
+    }
+
+    #[test]
+    fn inprod_hypersteps_count() {
+        // N = 2^16 components, p = 16, C = 64 -> n = 64 hypersteps.
+        let p = inprod_cost(&m(), 1 << 16, 64);
+        assert_eq!(p.hypersteps, 64);
+        assert!(p.bandwidth_heavy); // e = 43.4 > 1
+    }
+
+    #[test]
+    fn inprod_formula_exact() {
+        let mm = m();
+        let (n_total, c) = (16 * 4 * 8, 8); // n = 4 hypersteps
+        let p = inprod_cost(&mm, n_total, c);
+        let expect = 4.0 * (2.0 * 8.0 * 43.4) + 16.0 + 15.0 * 5.59 + 136.0;
+        assert!((p.flops - expect).abs() < 1e-9, "{} vs {expect}", p.flops);
+    }
+
+    #[test]
+    fn inprod_compute_heavy_when_e_below_1() {
+        let mut cheap = m();
+        cheap.e = 0.5;
+        let p = inprod_cost(&cheap, 1 << 16, 64);
+        assert!(!p.bandwidth_heavy);
+        // per-hyperstep cost is then 2C
+        let per = (p.flops - (16.0 + 15.0 * cheap.g + cheap.l)) / p.hypersteps as f64;
+        assert!((per - 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cannon_k_and_hypersteps() {
+        // n=512, N=4, M=16 -> k=8, M³=4096 hypersteps.
+        let p = cannon_cost(&m(), 512, 16);
+        assert_eq!(p.k, 8);
+        assert_eq!(p.hypersteps, 4096);
+        assert_eq!(p.fetch_words_per_hyperstep, 128);
+    }
+
+    #[test]
+    fn cannon_small_k_bandwidth_heavy_large_k_compute_heavy() {
+        // For fixed n, growing M shrinks k. Paper: small k -> fetch-bound
+        // *in the asymptotic regime*; pick k around the crossover.
+        let p_small = cannon_cost(&m(), 512, 128); // k=1
+        let p_big = cannon_cost(&m(), 512, 8); // k=16
+        assert!(!p_big.bandwidth_heavy, "k=16 must be compute heavy");
+        // k=1: compute = 4(2+2g+l) ≈ 4·148.7 ≈ 595 > fetch = 2e ≈ 87:
+        // with l in the balance tiny blocks are latency-bound, not
+        // bandwidth-bound (the full-equation nuance vs the paper's
+        // asymptotic k_equal).
+        assert!(!p_small.bandwidth_heavy);
+        // The asymptotic crossover is still ≈ 8 (k_equal test above).
+    }
+
+    #[test]
+    fn cannon_flops_monotone_in_m_for_fixed_n() {
+        // Paper §6: "a higher value of M ... gives a higher run time".
+        let mm = m();
+        let t_m4 = cannon_cost(&mm, 512, 4).flops; // k=32
+        let t_m8 = cannon_cost(&mm, 512, 8).flops; // k=16
+        let t_m16 = cannon_cost(&mm, 512, 16).flops; // k=8
+        let t_m32 = cannon_cost(&mm, 512, 32).flops; // k=4
+        assert!(t_m4 < t_m8 && t_m8 < t_m16 && t_m16 < t_m32);
+    }
+
+    #[test]
+    fn k_equal_full_exists_for_low_latency_machine() {
+        // With l = 0 the full balance has a bandwidth-heavy band
+        // k < (2e − 2Ng)/(2N)·…; just assert the scan finds it.
+        let mut m0 = m();
+        m0.l = 0.0;
+        let k = k_equal_full(&m0, 64).expect("crossover exists");
+        // N(2k³+2k²g) <= 2k²e  ->  k <= (e − N g)/N = (43.4−22.36)/4 ≈ 5.3
+        assert_eq!(k, 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cannon_rejects_indivisible() {
+        cannon_cost(&m(), 100, 3);
+    }
+}

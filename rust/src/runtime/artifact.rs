@@ -1,0 +1,173 @@
+//! Artifact manifest: the signatures of every AOT entry point.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt`, one line per
+//! artifact:
+//!
+//! ```text
+//! token_mm_acc_k8|in=f32[8,8];f32[8,8];f32[8,8]|out=f32[8,8]
+//! ```
+//!
+//! The registry parses this so the runtime knows each executable's
+//! input/output shapes without touching the HLO text.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element type of a tensor (the two the entry points use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSig {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        let (ty, rest) = s
+            .split_once('[')
+            .ok_or_else(|| anyhow!("bad tensor sig `{s}`"))?;
+        let dtype = match ty {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unsupported dtype `{other}`"),
+        };
+        let dims_str = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("bad tensor sig `{s}`"))?;
+        let dims = if dims_str.is_empty() {
+            Vec::new()
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| d.parse::<usize>().context("bad dim"))
+                .collect::<Result<_>>()?
+        };
+        Ok(Self { dtype, dims })
+    }
+}
+
+/// Signature of one entry point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Signature {
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Parsed manifest: entry-point name → signature, plus artifact paths.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, Signature>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        let entries = parse_manifest(&text)?;
+        Ok(Self { dir, entries })
+    }
+
+    /// Path of the HLO text for `name`.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Signature of `name`.
+    pub fn signature(&self, name: &str) -> Result<&Signature> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown entry point `{name}`"))
+    }
+}
+
+/// Parse manifest text into name → signature.
+pub fn parse_manifest(text: &str) -> Result<BTreeMap<String, Signature>> {
+    let mut entries = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split('|');
+        let name = parts
+            .next()
+            .filter(|n| !n.is_empty())
+            .ok_or_else(|| anyhow!("line {}: missing name", i + 1))?;
+        let ins = parts
+            .next()
+            .and_then(|p| p.strip_prefix("in="))
+            .ok_or_else(|| anyhow!("line {}: missing in=", i + 1))?;
+        let outs = parts
+            .next()
+            .and_then(|p| p.strip_prefix("out="))
+            .ok_or_else(|| anyhow!("line {}: missing out=", i + 1))?;
+        let sig = Signature {
+            inputs: ins.split(';').map(TensorSig::parse).collect::<Result<_>>()?,
+            outputs: outs.split(';').map(TensorSig::parse).collect::<Result<_>>()?,
+        };
+        if entries.insert(name.to_string(), sig).is_some() {
+            bail!("line {}: duplicate entry `{name}`", i + 1);
+        }
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_line() {
+        let m = parse_manifest("token_mm_acc_k8|in=f32[8,8];f32[8,8];f32[8,8]|out=f32[8,8]\n")
+            .unwrap();
+        let sig = &m["token_mm_acc_k8"];
+        assert_eq!(sig.inputs.len(), 3);
+        assert_eq!(sig.inputs[0].dims, vec![8, 8]);
+        assert_eq!(sig.inputs[0].elems(), 64);
+        assert_eq!(sig.outputs[0].dtype, DType::F32);
+    }
+
+    #[test]
+    fn parses_i32_and_1d() {
+        let m =
+            parse_manifest("spmv|in=f32[64,8];i32[64,8];f32[64]|out=f32[64]").unwrap();
+        assert_eq!(m["spmv"].inputs[1].dtype, DType::I32);
+        assert_eq!(m["spmv"].inputs[2].dims, vec![64]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_manifest("nonsense").is_err());
+        assert!(parse_manifest("a|in=f99[2]|out=f32[2]").is_err());
+        assert!(parse_manifest("a|in=f32[2|out=f32[2]").is_err());
+        assert!(parse_manifest("a|in=f32[2]|out=f32[2]\na|in=f32[2]|out=f32[2]").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Integration-ish: if `make artifacts` has run, the real manifest
+        // must parse and contain the required entry points.
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.entries.contains_key("token_mm_acc_k8"));
+            assert!(m.signature("token_mm_acc_k8").is_ok());
+            assert!(m.signature("missing").is_err());
+        }
+    }
+}

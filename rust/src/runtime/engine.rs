@@ -1,0 +1,309 @@
+//! The PJRT engine thread.
+//!
+//! The `xla` crate's client/executable/literal handles wrap raw C++
+//! pointers without `Send`, so one dedicated thread owns them all.
+//! Callers submit [`HostTensor`] inputs over a channel and block on the
+//! reply; executables are compiled from HLO text on first use and cached
+//! by entry-point name. Shapes are validated against the manifest before
+//! dispatch so a bad call fails with a readable error instead of an XLA
+//! abort.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::artifact::{DType, Manifest, TensorSig};
+
+/// A host-side tensor crossing the engine channel.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn sig(&self) -> TensorSig {
+        match self {
+            HostTensor::F32(_, dims) => TensorSig { dtype: DType::F32, dims: dims.clone() },
+            HostTensor::I32(_, dims) => TensorSig { dtype: DType::I32, dims: dims.clone() },
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        match self {
+            HostTensor::F32(v, _) => v.len(),
+            HostTensor::I32(v, _) => v.len(),
+        }
+    }
+
+    /// Unwrap f32 data (panics on dtype mismatch — callers know their
+    /// entry point's signature).
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            HostTensor::F32(v, _) => v,
+            HostTensor::I32(..) => panic!("expected f32 tensor"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32(v, dims) => {
+                let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+            HostTensor::I32(v, dims) => {
+                let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, sig: &TensorSig) -> Result<Self> {
+        Ok(match sig.dtype {
+            DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?, sig.dims.clone()),
+            DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?, sig.dims.clone()),
+        })
+    }
+}
+
+struct Request {
+    name: String,
+    inputs: Vec<HostTensor>,
+    reply: mpsc::Sender<Result<HostTensor>>,
+}
+
+/// Handle to the engine thread. Cheap to clone; the thread shuts down
+/// when the last handle drops.
+#[derive(Clone)]
+pub struct PjrtEngine {
+    tx: mpsc::Sender<Request>,
+    manifest: Arc<Manifest>,
+    _joiner: Arc<Joiner>,
+}
+
+/// Joins the engine thread when the last [`PjrtEngine`] clone drops.
+/// Field order in `PjrtEngine` matters: `tx` drops before `_joiner`, so
+/// by the time we join, every sender is gone and the loop has exited.
+struct Joiner {
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Drop for Joiner {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl PjrtEngine {
+    /// Start the engine for the artifacts in `dir`.
+    pub fn start(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Arc::new(Manifest::load(dir)?);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let thread_manifest = Arc::clone(&manifest);
+        let handle = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_loop(rx, thread_manifest))
+            .context("spawning pjrt engine thread")?;
+        Ok(Self {
+            tx,
+            manifest,
+            _joiner: Arc::new(Joiner { handle: Some(handle) }),
+        })
+    }
+
+    /// Execute entry point `name` with `inputs`; returns the single
+    /// output tensor. Validates shapes against the manifest first.
+    pub fn execute(&self, name: &str, inputs: Vec<HostTensor>) -> Result<HostTensor> {
+        let sig = self.manifest.signature(name)?;
+        if sig.inputs.len() != inputs.len() {
+            bail!(
+                "`{name}` expects {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (want, got)) in sig.inputs.iter().zip(&inputs).enumerate() {
+            if *want != got.sig() {
+                bail!("`{name}` input {i}: expected {want:?}, got {:?}", got.sig());
+            }
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request { name: name.to_string(), inputs, reply: reply_tx })
+            .map_err(|_| anyhow!("pjrt engine thread is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt engine dropped the request"))?
+    }
+
+    /// The manifest this engine serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+fn engine_loop(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the construction error.
+            for req in rx {
+                let _ = req.reply.send(Err(anyhow!("pjrt client failed: {e}")));
+            }
+            return;
+        }
+    };
+    let mut cache: BTreeMap<String, xla::PjRtLoadedExecutable> = BTreeMap::new();
+
+    for req in rx {
+        let result = serve(&client, &mut cache, &manifest, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn serve(
+    client: &xla::PjRtClient,
+    cache: &mut BTreeMap<String, xla::PjRtLoadedExecutable>,
+    manifest: &Manifest,
+    req: &Request,
+) -> Result<HostTensor> {
+    if !cache.contains_key(&req.name) {
+        let path = manifest.hlo_path(&req.name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("loading {path:?}"))?;
+        let exe = client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .with_context(|| format!("compiling `{}`", req.name))?;
+        cache.insert(req.name.clone(), exe);
+    }
+    let exe = cache.get(&req.name).expect("just inserted");
+
+    let literals: Vec<xla::Literal> = req
+        .inputs
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<_>>()?;
+    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    let out_sig = &manifest.signature(&req.name)?.outputs[0];
+    HostTensor::from_literal(&result, out_sig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/manifest.txt").exists()
+    }
+
+    #[test]
+    fn mm_acc_numerics() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = PjrtEngine::start("artifacts").unwrap();
+        let k = 8;
+        let c = HostTensor::F32(vec![1.0; k * k], vec![k, k]);
+        let a = HostTensor::F32(vec![2.0; k * k], vec![k, k]);
+        let b = HostTensor::F32(vec![3.0; k * k], vec![k, k]);
+        let out = engine.execute("token_mm_acc_k8", vec![c, a, b]).unwrap();
+        let v = out.into_f32();
+        assert_eq!(v.len(), k * k);
+        assert!(v.iter().all(|&x| (x - 49.0).abs() < 1e-4)); // 1 + 8·6
+    }
+
+    #[test]
+    fn executable_cache_makes_second_call_fast() {
+        if !artifacts_available() {
+            return;
+        }
+        let engine = PjrtEngine::start("artifacts").unwrap();
+        let mk = || {
+            vec![
+                HostTensor::F32(vec![0.0; 16], vec![4, 4]),
+                HostTensor::F32(vec![1.0; 16], vec![4, 4]),
+                HostTensor::F32(vec![1.0; 16], vec![4, 4]),
+            ]
+        };
+        let t0 = std::time::Instant::now();
+        engine.execute("token_mm_acc_k4", mk()).unwrap();
+        let cold = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        for _ in 0..10 {
+            engine.execute("token_mm_acc_k4", mk()).unwrap();
+        }
+        let warm = t1.elapsed() / 10;
+        assert!(warm < cold, "warm {warm:?} should beat cold {cold:?}");
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_inputs() {
+        if !artifacts_available() {
+            return;
+        }
+        let engine = PjrtEngine::start("artifacts").unwrap();
+        let bad = vec![HostTensor::F32(vec![0.0; 4], vec![2, 2])];
+        assert!(engine.execute("token_mm_acc_k8", bad).is_err());
+        assert!(engine
+            .execute("no_such_entry", vec![])
+            .is_err());
+    }
+
+    #[test]
+    fn engine_is_usable_from_many_threads() {
+        if !artifacts_available() {
+            return;
+        }
+        let engine = PjrtEngine::start("artifacts").unwrap();
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let engine = engine.clone();
+                s.spawn(move || {
+                    let c = HostTensor::F32(vec![t as f32; 16], vec![4, 4]);
+                    let a = HostTensor::F32(vec![1.0; 16], vec![4, 4]);
+                    let b = HostTensor::F32(vec![1.0; 16], vec![4, 4]);
+                    let out = engine.execute("token_mm_acc_k4", vec![c, a, b]).unwrap();
+                    let v = out.into_f32();
+                    assert!((v[0] - (t as f32 + 4.0)).abs() < 1e-5);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn spmv_i32_inputs_roundtrip() {
+        if !artifacts_available() {
+            return;
+        }
+        let engine = PjrtEngine::start("artifacts").unwrap();
+        // Identity: values all 1 in column j==row, zero elsewhere.
+        let mut vals = vec![0.0f32; 64 * 8];
+        let mut cols = vec![-1i32; 64 * 8];
+        for row in 0..64 {
+            vals[row * 8] = 1.0;
+            cols[row * 8] = row as i32;
+        }
+        let x: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let out = engine
+            .execute(
+                "spmv_ell_r64_nnz8_n64",
+                vec![
+                    HostTensor::F32(vals, vec![64, 8]),
+                    HostTensor::I32(cols, vec![64, 8]),
+                    HostTensor::F32(x.clone(), vec![64]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.into_f32(), x);
+    }
+}

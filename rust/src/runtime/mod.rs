@@ -1,0 +1,31 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) emitted
+//! by `python/compile/aot.py` and execute them from the rust hot path.
+//!
+//! Python is never on the request path: `make artifacts` runs once at
+//! build time; afterwards the `bsps` binary loads HLO **text** (the
+//! interchange format — xla_extension 0.5.1 rejects jax ≥ 0.5 serialized
+//! protos, while the text parser reassigns instruction ids), compiles it
+//! on the PJRT CPU client, and executes with concrete buffers.
+//!
+//! The `xla` crate's handles wrap raw pointers and are not `Send`, so a
+//! dedicated **engine thread** owns the client and the executable cache;
+//! callers talk to it over a channel ([`PjrtEngine`]). Executables are
+//! compiled on first use and cached by entry-point name.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{parse_manifest, DType, Manifest, Signature, TensorSig};
+pub use engine::{HostTensor, PjrtEngine};
+
+use anyhow::Result;
+
+/// Smoke check that the PJRT CPU client comes up.
+pub fn smoke() -> Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(format!(
+        "platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    ))
+}

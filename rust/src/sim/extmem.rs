@@ -1,0 +1,253 @@
+//! Behavioural model of the shared external-memory (DRAM) link.
+//!
+//! Calibrated against the paper's Table 1 (per-core asymptotic speeds in
+//! MB/s for {core, DMA} × {free, contested} × {read, write}) and Fig. 4
+//! (single-core speed vs transfer size in the free state, with three
+//! effects the paper describes):
+//!
+//! 1. *"a small overhead associated with reading or writing to external
+//!    memory"* — a fixed per-transfer setup cost, so small transfers
+//!    are slow;
+//! 2. *"burst mode gets interrupted after a specific number of bytes"*
+//!    — consecutive 8-byte writes hit the fast burst path but pay a
+//!    restart penalty every `burst_window` bytes (the jumps in the blue
+//!    line);
+//! 3. *"non-monotonic behaviour ... due to a buffering effect of the
+//!    Epiphany network mesh"* — plain writes fill a mesh write buffer
+//!    at high speed and then drain at a lower one (the green line).
+
+use crate::sim::CLOCK_HZ;
+
+/// Who performs the transfer (§5: CPU core issuing load/stores, or the
+/// core's DMA engine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Actor {
+    Core,
+    Dma,
+}
+
+/// Transfer direction relative to the core (read = DRAM→core).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    Read,
+    Write,
+}
+
+/// Network state (Table 1): `Free` = a single core is transferring;
+/// `Contested` = all cores transfer simultaneously.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NetState {
+    Free,
+    Contested,
+}
+
+/// The calibrated link model. All speeds in bytes/second **per core**.
+#[derive(Debug, Clone)]
+pub struct ExtMemModel {
+    // Table 1 asymptotic bandwidths.
+    pub core_read_free: f64,
+    pub core_read_contested: f64,
+    pub core_write_free: f64,
+    pub core_write_contested: f64,
+    pub dma_read_free: f64,
+    pub dma_read_contested: f64,
+    pub dma_write_free: f64,
+    pub dma_write_contested: f64,
+    /// Fixed per-transfer setup cost, cycles (core-issued).
+    pub core_overhead_cycles: f64,
+    /// Fixed per-transfer setup cost, cycles (DMA descriptor setup).
+    pub dma_overhead_cycles: f64,
+    /// Burst window: consecutive-write burst is interrupted every this
+    /// many bytes (Fig. 4's jumps).
+    pub burst_window_bytes: u64,
+    /// Penalty per burst restart, cycles.
+    pub burst_restart_cycles: f64,
+    /// Non-burst writes: mesh write-buffer size (bytes) absorbed fast…
+    pub write_buffer_bytes: u64,
+    /// …at this speed (bytes/s)…
+    pub write_buffered_speed: f64,
+    /// …then drained at this speed (bytes/s).
+    pub write_drain_speed: f64,
+}
+
+impl ExtMemModel {
+    /// Constants matching the Parallella measurements (Table 1 / Fig. 4).
+    pub fn epiphany3() -> Self {
+        Self {
+            core_read_free: 8.9e6,
+            core_read_contested: 8.3e6,
+            core_write_free: 270.0e6,
+            core_write_contested: 14.1e6,
+            dma_read_free: 80.0e6,
+            dma_read_contested: 11.0e6,
+            dma_write_free: 230.0e6,
+            dma_write_contested: 12.1e6,
+            core_overhead_cycles: 300.0,
+            dma_overhead_cycles: 600.0,
+            burst_window_bytes: 4096,
+            burst_restart_cycles: 400.0,
+            write_buffer_bytes: 1024,
+            write_buffered_speed: 500.0e6,
+            write_drain_speed: 150.0e6,
+        }
+    }
+
+    /// Table 1 asymptotic bandwidth (bytes/s per core).
+    pub fn bandwidth(&self, actor: Actor, dir: Dir, state: NetState) -> f64 {
+        match (actor, dir, state) {
+            (Actor::Core, Dir::Read, NetState::Free) => self.core_read_free,
+            (Actor::Core, Dir::Read, NetState::Contested) => self.core_read_contested,
+            (Actor::Core, Dir::Write, NetState::Free) => self.core_write_free,
+            (Actor::Core, Dir::Write, NetState::Contested) => self.core_write_contested,
+            (Actor::Dma, Dir::Read, NetState::Free) => self.dma_read_free,
+            (Actor::Dma, Dir::Read, NetState::Contested) => self.dma_read_contested,
+            (Actor::Dma, Dir::Write, NetState::Free) => self.dma_write_free,
+            (Actor::Dma, Dir::Write, NetState::Contested) => self.dma_write_contested,
+        }
+    }
+
+    fn overhead(&self, actor: Actor) -> f64 {
+        match actor {
+            Actor::Core => self.core_overhead_cycles,
+            Actor::Dma => self.dma_overhead_cycles,
+        }
+    }
+
+    /// Cycles for one transfer of `bytes`.
+    ///
+    /// `burst` selects Fig. 4's consecutive-8-byte-write path (only
+    /// meaningful for writes; the asymptotic Table-1 write speeds are
+    /// burst speeds, which is also what DMA block transfers achieve).
+    /// Non-burst free-state writes go through the mesh write buffer and
+    /// show the paper's non-monotonic profile.
+    pub fn transfer_cycles(
+        &self,
+        actor: Actor,
+        dir: Dir,
+        state: NetState,
+        bytes: u64,
+        burst: bool,
+    ) -> f64 {
+        let bw = self.bandwidth(actor, dir, state); // bytes/s
+        let bpc = bw / CLOCK_HZ; // bytes per cycle
+        let mut t = self.overhead(actor);
+        match dir {
+            Dir::Read => {
+                t += bytes as f64 / bpc;
+            }
+            Dir::Write if burst => {
+                // Burst restarts every `burst_window_bytes`.
+                let restarts = bytes / self.burst_window_bytes;
+                t += restarts as f64 * self.burst_restart_cycles;
+                t += bytes as f64 / bpc;
+            }
+            Dir::Write => {
+                if state == NetState::Free {
+                    // Mesh write buffer absorbs the head of the transfer.
+                    let buffered = bytes.min(self.write_buffer_bytes);
+                    let rest = bytes - buffered;
+                    t += buffered as f64 / (self.write_buffered_speed / CLOCK_HZ);
+                    t += rest as f64 / (self.write_drain_speed / CLOCK_HZ);
+                } else {
+                    t += bytes as f64 / bpc;
+                }
+            }
+        }
+        t
+    }
+
+    /// Measured speed (bytes/s) of a single transfer — what Fig. 4 plots.
+    pub fn measured_speed(
+        &self,
+        actor: Actor,
+        dir: Dir,
+        state: NetState,
+        bytes: u64,
+        burst: bool,
+    ) -> f64 {
+        let cycles = self.transfer_cycles(actor, dir, state, bytes, burst);
+        bytes as f64 / (cycles / CLOCK_HZ)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> ExtMemModel {
+        ExtMemModel::epiphany3()
+    }
+
+    #[test]
+    fn table1_bandwidths_wired_correctly() {
+        let m = m();
+        assert_eq!(m.bandwidth(Actor::Core, Dir::Read, NetState::Contested), 8.3e6);
+        assert_eq!(m.bandwidth(Actor::Core, Dir::Read, NetState::Free), 8.9e6);
+        assert_eq!(m.bandwidth(Actor::Core, Dir::Write, NetState::Contested), 14.1e6);
+        assert_eq!(m.bandwidth(Actor::Core, Dir::Write, NetState::Free), 270.0e6);
+        assert_eq!(m.bandwidth(Actor::Dma, Dir::Read, NetState::Contested), 11.0e6);
+        assert_eq!(m.bandwidth(Actor::Dma, Dir::Read, NetState::Free), 80.0e6);
+        assert_eq!(m.bandwidth(Actor::Dma, Dir::Write, NetState::Contested), 12.1e6);
+        assert_eq!(m.bandwidth(Actor::Dma, Dir::Write, NetState::Free), 230.0e6);
+    }
+
+    #[test]
+    fn large_reads_approach_asymptotic_speed() {
+        let m = m();
+        let speed = m.measured_speed(Actor::Dma, Dir::Read, NetState::Contested, 1 << 20, false);
+        assert!((speed - 11.0e6).abs() / 11.0e6 < 0.01, "speed={speed}");
+    }
+
+    #[test]
+    fn small_transfers_dominated_by_overhead() {
+        let m = m();
+        let speed8 = m.measured_speed(Actor::Dma, Dir::Read, NetState::Free, 8, false);
+        let speed64k = m.measured_speed(Actor::Dma, Dir::Read, NetState::Free, 1 << 16, false);
+        assert!(speed8 < speed64k / 10.0, "8B={speed8} 64K={speed64k}");
+    }
+
+    #[test]
+    fn burst_jumps_at_window_boundaries() {
+        let m = m();
+        let w = m.burst_window_bytes;
+        // Just below one window vs just above: the restart penalty causes
+        // a visible speed drop (Fig. 4's sawtooth).
+        let below = m.measured_speed(Actor::Core, Dir::Write, NetState::Free, w - 8, true);
+        let above = m.measured_speed(Actor::Core, Dir::Write, NetState::Free, w + 8, true);
+        assert!(above < below, "below={below} above={above}");
+    }
+
+    #[test]
+    fn nonburst_write_speed_is_non_monotonic() {
+        let m = m();
+        let s = |b: u64| m.measured_speed(Actor::Core, Dir::Write, NetState::Free, b, false);
+        let rising = s(1024) > s(64); // climbs out of overhead
+        let falling = s(64 * 1024) < s(1024); // buffer exhausted, drains
+        assert!(rising && falling, "{} {} {}", s(64), s(1024), s(64 * 1024));
+    }
+
+    #[test]
+    fn burst_beats_nonburst_for_large_writes() {
+        let m = m();
+        let burst = m.measured_speed(Actor::Core, Dir::Write, NetState::Free, 1 << 20, true);
+        let plain = m.measured_speed(Actor::Core, Dir::Write, NetState::Free, 1 << 20, false);
+        assert!(burst > plain, "burst={burst} plain={plain}");
+    }
+
+    #[test]
+    fn contested_much_slower_than_free_for_writes() {
+        let m = m();
+        let free = m.measured_speed(Actor::Dma, Dir::Write, NetState::Free, 1 << 20, true);
+        let cont = m.measured_speed(Actor::Dma, Dir::Write, NetState::Contested, 1 << 20, true);
+        assert!(free / cont > 10.0, "free={free} contested={cont}");
+    }
+
+    #[test]
+    fn e_derivation_uses_contested_dma_read() {
+        // The §5 pipeline: pessimistic contested DMA read -> e ≈ 43.6.
+        let m = m();
+        let bw = m.bandwidth(Actor::Dma, Dir::Read, NetState::Contested);
+        let e = crate::model::calibrate::e_from_bandwidth(120.0e6, bw);
+        assert!((e - 43.64).abs() < 0.1, "e={e}");
+    }
+}

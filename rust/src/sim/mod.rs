@@ -1,0 +1,44 @@
+//! Discrete (virtual-time) simulator of an Epiphany-III-like many-core
+//! chip — the hardware substrate the paper measures in §5–§6, rebuilt in
+//! software (see DESIGN.md "Hardware substitution").
+//!
+//! Time is counted in **core clock cycles** (600 MHz for the Epiphany-III
+//! preset). The pieces:
+//!
+//! * [`time`]   — per-core virtual clocks with barrier (max-combine) sync.
+//! * [`extmem`] — the shared-DRAM link: per-transfer overhead, burst
+//!   writes, write buffering, and free/contested bandwidth states
+//!   (calibrated to Table 1 / Fig. 4).
+//! * [`noc`]    — the 2D mesh network-on-chip with XY routing
+//!   (calibrated so the §5 fit recovers `g ≈ 5.59`, `l ≈ 136`).
+//! * [`dma`]    — per-core DMA engines: serialized queues whose
+//!   transfers overlap with compute (the asynchronous connection that
+//!   makes pseudo-streaming possible).
+//! * [`membench`] — the §5 measurement programs that regenerate Table 1
+//!   and Fig. 4 from the simulated hardware.
+
+pub mod dma;
+pub mod extmem;
+pub mod membench;
+pub mod noc;
+pub mod time;
+
+pub use extmem::{Actor, Dir, ExtMemModel, NetState};
+pub use time::CoreClocks;
+
+/// Default core clock in Hz (Epiphany-III: 600 MHz).
+pub const CLOCK_HZ: f64 = 600.0e6;
+
+/// Cycles per FLOP for representative compiled code (§5: "one FLOP per
+/// 5 clock cycles ... compiled using GCC 4.8.2").
+pub const CYCLES_PER_FLOP: f64 = 5.0;
+
+/// Convert cycles to seconds at the default clock.
+pub fn cycles_to_seconds(cycles: f64) -> f64 {
+    cycles / CLOCK_HZ
+}
+
+/// Convert a FLOP count to cycles.
+pub fn flops_to_cycles(flops: f64) -> f64 {
+    flops * CYCLES_PER_FLOP
+}

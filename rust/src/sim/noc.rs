@@ -1,0 +1,145 @@
+//! The 2D mesh network-on-chip (Epiphany eMesh analog).
+//!
+//! Cores sit on an `N×N` grid; core-to-core transfers use dimension-
+//! ordered (XY) routing. The paper's measurements show that this path
+//! has *"very low latency (in the order of nanoseconds) and zero
+//! start-up costs"*, does not suffer free/contested discrepancies, and
+//! fits a linear model whose slope is `g ≈ 5.59 FLOP/float` with `l`
+//! almost entirely due to the synchronization mechanism.
+//!
+//! Calibration: `g = 5.59 FLOP/word = 27.95 cycles/word` at 5
+//! cycles/FLOP; the barrier costs `l ≈ 136 FLOP = 680 cycles`.
+
+use crate::sim::CYCLES_PER_FLOP;
+
+/// A 2D mesh of `n × n` cores.
+#[derive(Debug, Clone)]
+pub struct Noc {
+    /// Grid side length `N`.
+    pub n: usize,
+    /// Per-word occupancy of a write, cycles (the slope that the §5 fit
+    /// sees as `g`).
+    pub cycles_per_word: f64,
+    /// Per-hop latency, cycles (sub-FLOP: "startup cost ... less than
+    /// one FLOP").
+    pub hop_cycles: f64,
+    /// Cost of the bulk-synchronization barrier, cycles (the `l` fit).
+    pub barrier_cycles: f64,
+}
+
+impl Noc {
+    /// Epiphany-III calibration for an `n×n` grid.
+    pub fn epiphany3(n: usize) -> Self {
+        Self {
+            n,
+            cycles_per_word: 5.59 * CYCLES_PER_FLOP, // 27.95
+            hop_cycles: 1.5,
+            barrier_cycles: 136.0 * CYCLES_PER_FLOP, // 680
+        }
+    }
+
+    /// Total cores.
+    pub fn p(&self) -> usize {
+        self.n * self.n
+    }
+
+    /// Grid coordinates of core `s` (row-major).
+    pub fn coords(&self, s: usize) -> (usize, usize) {
+        assert!(s < self.p(), "core {s} out of range");
+        (s / self.n, s % self.n)
+    }
+
+    /// Core index at `(row, col)`.
+    pub fn core_at(&self, row: usize, col: usize) -> usize {
+        assert!(row < self.n && col < self.n);
+        row * self.n + col
+    }
+
+    /// Manhattan hop count of the XY route from `src` to `dst`.
+    pub fn hops(&self, src: usize, dst: usize) -> usize {
+        let (r1, c1) = self.coords(src);
+        let (r2, c2) = self.coords(dst);
+        r1.abs_diff(r2) + c1.abs_diff(c2)
+    }
+
+    /// Cycles for a core-to-core write of `words` words. Writes are
+    /// pipelined: the route is paid once, then one word per
+    /// `cycles_per_word`.
+    pub fn write_cycles(&self, src: usize, dst: usize, words: u64) -> f64 {
+        self.hops(src, dst) as f64 * self.hop_cycles
+            + words as f64 * self.cycles_per_word
+    }
+
+    /// Right neighbour with wraparound (Cannon's A shift).
+    pub fn right_of(&self, s: usize) -> usize {
+        let (r, c) = self.coords(s);
+        self.core_at(r, (c + 1) % self.n)
+    }
+
+    /// Down neighbour with wraparound (Cannon's B shift).
+    pub fn down_of(&self, s: usize) -> usize {
+        let (r, c) = self.coords(s);
+        self.core_at((r + 1) % self.n, c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noc() -> Noc {
+        Noc::epiphany3(4)
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let n = noc();
+        for s in 0..16 {
+            let (r, c) = n.coords(s);
+            assert_eq!(n.core_at(r, c), s);
+        }
+    }
+
+    #[test]
+    fn xy_hops() {
+        let n = noc();
+        assert_eq!(n.hops(0, 0), 0);
+        assert_eq!(n.hops(0, 3), 3); // same row
+        assert_eq!(n.hops(0, 15), 6); // corner to corner on 4×4
+    }
+
+    #[test]
+    fn write_time_slope_recovers_g() {
+        // Fit time-vs-words over neighbour writes: slope/5 must be ≈ g.
+        let n = noc();
+        let xs: Vec<f64> = (1..=64).map(|w| w as f64).collect();
+        let ys: Vec<f64> = (1..=64)
+            .map(|w| n.write_cycles(0, 1, w) / CYCLES_PER_FLOP)
+            .collect();
+        let fit = crate::util::fit::linear_fit(&xs, &ys);
+        assert!((fit.slope - 5.59).abs() < 1e-9, "slope={}", fit.slope);
+        // startup < 1 FLOP, as the paper states
+        assert!(fit.intercept < 1.0, "intercept={}", fit.intercept);
+    }
+
+    #[test]
+    fn barrier_is_136_flops() {
+        let n = noc();
+        assert_eq!(n.barrier_cycles / CYCLES_PER_FLOP, 136.0);
+    }
+
+    #[test]
+    fn cannon_neighbours_wrap() {
+        let n = noc();
+        assert_eq!(n.right_of(3), 0); // row 0: 3 -> 0
+        assert_eq!(n.right_of(0), 1);
+        assert_eq!(n.down_of(12), 0); // col 0: row 3 -> row 0
+        assert_eq!(n.down_of(0), 4);
+    }
+
+    #[test]
+    fn zero_word_write_costs_only_route() {
+        let n = noc();
+        assert_eq!(n.write_cycles(0, 1, 0), 1.5);
+    }
+}

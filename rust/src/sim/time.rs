@@ -1,0 +1,121 @@
+//! Per-core virtual clocks.
+//!
+//! Each simulated core owns a cycle counter. Computation and blocking
+//! communication advance a core's own clock; a **barrier** (the bulk
+//! synchronization) sets every clock to the maximum and adds the
+//! synchronization cost — which is exactly how the BSP cost's
+//! `max_s w_i^(s) … + l` arises mechanically.
+
+/// Virtual clocks for `p` cores, in cycles (f64 so sub-cycle rates from
+/// bandwidth models don't accumulate rounding).
+#[derive(Debug, Clone)]
+pub struct CoreClocks {
+    cycles: Vec<f64>,
+}
+
+impl CoreClocks {
+    pub fn new(p: usize) -> Self {
+        assert!(p > 0);
+        Self { cycles: vec![0.0; p] }
+    }
+
+    pub fn p(&self) -> usize {
+        self.cycles.len()
+    }
+
+    /// Current time of core `s`.
+    pub fn now(&self, s: usize) -> f64 {
+        self.cycles[s]
+    }
+
+    /// Advance core `s` by `cycles`.
+    pub fn advance(&mut self, s: usize, cycles: f64) {
+        assert!(cycles >= 0.0, "negative time");
+        self.cycles[s] += cycles;
+    }
+
+    /// Block core `s` until at least `t` (no-op if already past).
+    pub fn wait_until(&mut self, s: usize, t: f64) {
+        if self.cycles[s] < t {
+            self.cycles[s] = t;
+        }
+    }
+
+    /// Bulk synchronization: all cores jump to the global maximum plus
+    /// `barrier_cycles`. Returns the post-barrier time.
+    pub fn barrier(&mut self, barrier_cycles: f64) -> f64 {
+        let max = self.cycles.iter().cloned().fold(0.0, f64::max);
+        let t = max + barrier_cycles;
+        for c in &mut self.cycles {
+            *c = t;
+        }
+        t
+    }
+
+    /// Global maximum (the program's makespan so far).
+    pub fn makespan(&self) -> f64 {
+        self.cycles.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero() {
+        let c = CoreClocks::new(4);
+        assert_eq!(c.makespan(), 0.0);
+        assert_eq!(c.p(), 4);
+    }
+
+    #[test]
+    fn advance_is_per_core() {
+        let mut c = CoreClocks::new(2);
+        c.advance(0, 100.0);
+        assert_eq!(c.now(0), 100.0);
+        assert_eq!(c.now(1), 0.0);
+    }
+
+    #[test]
+    fn barrier_max_combines_and_adds_latency() {
+        let mut c = CoreClocks::new(3);
+        c.advance(0, 10.0);
+        c.advance(1, 50.0);
+        c.advance(2, 30.0);
+        let t = c.barrier(680.0);
+        assert_eq!(t, 730.0);
+        for s in 0..3 {
+            assert_eq!(c.now(s), 730.0);
+        }
+    }
+
+    #[test]
+    fn wait_until_never_rewinds() {
+        let mut c = CoreClocks::new(1);
+        c.advance(0, 100.0);
+        c.wait_until(0, 50.0);
+        assert_eq!(c.now(0), 100.0);
+        c.wait_until(0, 150.0);
+        assert_eq!(c.now(0), 150.0);
+    }
+
+    #[test]
+    fn bsp_cost_emerges_from_barriers() {
+        // Two supersteps with uneven work: total = max(w0) + l + max(w1) + l
+        let mut c = CoreClocks::new(2);
+        c.advance(0, 100.0);
+        c.advance(1, 300.0);
+        c.barrier(680.0);
+        c.advance(0, 500.0);
+        c.advance(1, 200.0);
+        c.barrier(680.0);
+        assert_eq!(c.makespan(), 300.0 + 680.0 + 500.0 + 680.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_advance_panics() {
+        CoreClocks::new(1).advance(0, -1.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! The BSPS streaming extension (paper §4): streams of tokens living in
+//! the shared external memory pool, plus the kernel-side primitives
+//! `open / close / move_down / move_up / seek`.
+//!
+//! Semantics follow the proposed BSPlib extension exactly:
+//!
+//! * the **host** creates streams (total size, token size, initial
+//!   data); streams get ids in creation order from 0;
+//! * streams are **shared but exclusively opened**: a stream can only be
+//!   opened if no other core holds it; after closing, any core may open
+//!   it again;
+//! * a **cursor** per stream points at the next token to be read or
+//!   written; `seek` moves it by a relative number of tokens, giving
+//!   random access *within* the stream (the "pseudo" in
+//!   pseudo-streaming);
+//! * `move_down` reads the cursor's token (optionally prefetching —
+//!   see the cost treatment in `coordinator`); `move_up` writes a token
+//!   back, making streams mutable.
+
+pub mod registry;
+
+pub use registry::{StreamError, StreamHandle, StreamRegistry};

@@ -1,0 +1,383 @@
+//! Stream storage and the `bsp_stream_*` primitive implementations.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Mutex;
+
+use thiserror::Error;
+
+use crate::model::params::{AcceleratorParams, WORD_BYTES};
+
+/// Errors from stream primitives (mirroring the C API's error returns).
+#[derive(Debug, Error, PartialEq)]
+pub enum StreamError {
+    #[error("stream {0} does not exist")]
+    NoSuchStream(usize),
+    #[error("stream {0} is already open (by core {1})")]
+    AlreadyOpen(usize, i64),
+    #[error("stream {0} is not open by core {1}")]
+    NotOpenByCaller(usize, usize),
+    #[error("cursor out of range on stream {0}: token {1}, stream has {2}")]
+    CursorOutOfRange(usize, i64, usize),
+    #[error("token size mismatch on stream {0}: got {1} words, token is {2}")]
+    TokenSizeMismatch(usize, usize, usize),
+    #[error("external memory exhausted: {0} + {1} words exceeds E = {2}")]
+    ExtMemExhausted(usize, usize, usize),
+    #[error("stream total size {0} not a multiple of token size {1}")]
+    RaggedStream(usize, usize),
+}
+
+/// One stream in external memory.
+struct StreamState {
+    token_words: usize,
+    /// Backing store (simulated external DRAM).
+    data: Mutex<Vec<f32>>,
+    /// Core currently holding the stream, or -1.
+    opened_by: AtomicI64,
+    /// Next-token cursor (only touched by the opener).
+    cursor: Mutex<usize>,
+}
+
+/// Host-side registry of all streams (the external memory pool).
+pub struct StreamRegistry {
+    streams: Vec<StreamState>,
+    capacity_words: usize,
+    used_words: usize,
+}
+
+/// An open stream handle (returned by `open`, consumed by ops).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamHandle {
+    pub stream_id: usize,
+    /// Max token size in bytes (the C API's open return value).
+    pub token_bytes: usize,
+}
+
+impl StreamRegistry {
+    /// A registry whose capacity is the machine's external memory `E`.
+    pub fn new(machine: &AcceleratorParams) -> Self {
+        Self {
+            streams: Vec::new(),
+            capacity_words: machine.ext_mem_words(),
+            used_words: 0,
+        }
+    }
+
+    /// Unbounded registry (for tests and non-simulated use).
+    pub fn unbounded() -> Self {
+        Self { streams: Vec::new(), capacity_words: usize::MAX, used_words: 0 }
+    }
+
+    /// Host primitive: create a stream of `total_words` in tokens of
+    /// `token_words`. `init`, if given, seeds the stream (shorter init
+    /// data is zero-extended). Returns the stream id.
+    pub fn create(
+        &mut self,
+        total_words: usize,
+        token_words: usize,
+        init: Option<&[f32]>,
+    ) -> Result<usize, StreamError> {
+        if token_words == 0 || total_words % token_words != 0 {
+            return Err(StreamError::RaggedStream(total_words, token_words));
+        }
+        if self.used_words + total_words > self.capacity_words {
+            return Err(StreamError::ExtMemExhausted(
+                self.used_words,
+                total_words,
+                self.capacity_words,
+            ));
+        }
+        let mut data = vec![0.0f32; total_words];
+        if let Some(init) = init {
+            let n = init.len().min(total_words);
+            data[..n].copy_from_slice(&init[..n]);
+        }
+        self.used_words += total_words;
+        self.streams.push(StreamState {
+            token_words,
+            data: Mutex::new(data),
+            opened_by: AtomicI64::new(-1),
+            cursor: Mutex::new(0),
+        });
+        Ok(self.streams.len() - 1)
+    }
+
+    /// Number of streams created.
+    pub fn len(&self) -> usize {
+        self.streams.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.streams.is_empty()
+    }
+
+    /// Words used of the external pool.
+    pub fn used_words(&self) -> usize {
+        self.used_words
+    }
+
+    fn state(&self, id: usize) -> Result<&StreamState, StreamError> {
+        self.streams.get(id).ok_or(StreamError::NoSuchStream(id))
+    }
+
+    /// Tokens in stream `id`.
+    pub fn token_count(&self, id: usize) -> Result<usize, StreamError> {
+        let st = self.state(id)?;
+        Ok(st.data.lock().unwrap().len() / st.token_words)
+    }
+
+    /// `bsp_stream_open`: exclusive open by `core`.
+    pub fn open(&self, id: usize, core: usize) -> Result<StreamHandle, StreamError> {
+        let st = self.state(id)?;
+        match st.opened_by.compare_exchange(
+            -1,
+            core as i64,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => {
+                *st.cursor.lock().unwrap() = 0;
+                Ok(StreamHandle { stream_id: id, token_bytes: st.token_words * WORD_BYTES })
+            }
+            Err(holder) => Err(StreamError::AlreadyOpen(id, holder)),
+        }
+    }
+
+    /// `bsp_stream_close`.
+    pub fn close(&self, h: StreamHandle, core: usize) -> Result<(), StreamError> {
+        let st = self.state(h.stream_id)?;
+        st.opened_by
+            .compare_exchange(core as i64, -1, Ordering::AcqRel, Ordering::Acquire)
+            .map_err(|_| StreamError::NotOpenByCaller(h.stream_id, core))?;
+        Ok(())
+    }
+
+    fn check_open(&self, h: StreamHandle, core: usize) -> Result<&StreamState, StreamError> {
+        let st = self.state(h.stream_id)?;
+        if st.opened_by.load(Ordering::Acquire) != core as i64 {
+            return Err(StreamError::NotOpenByCaller(h.stream_id, core));
+        }
+        Ok(st)
+    }
+
+    /// `bsp_stream_move_down`: copy the cursor's token into `buf`
+    /// (sized to the token) and advance the cursor. Returns the token's
+    /// size in words.
+    pub fn move_down(
+        &self,
+        h: StreamHandle,
+        core: usize,
+        buf: &mut Vec<f32>,
+    ) -> Result<usize, StreamError> {
+        let st = self.check_open(h, core)?;
+        let mut cursor = st.cursor.lock().unwrap();
+        let data = st.data.lock().unwrap();
+        let ntokens = data.len() / st.token_words;
+        if *cursor >= ntokens {
+            return Err(StreamError::CursorOutOfRange(h.stream_id, *cursor as i64, ntokens));
+        }
+        let start = *cursor * st.token_words;
+        buf.clear();
+        buf.extend_from_slice(&data[start..start + st.token_words]);
+        *cursor += 1;
+        Ok(st.token_words)
+    }
+
+    /// `bsp_stream_move_up`: write `token` at the cursor and advance.
+    pub fn move_up(
+        &self,
+        h: StreamHandle,
+        core: usize,
+        token: &[f32],
+    ) -> Result<(), StreamError> {
+        let st = self.check_open(h, core)?;
+        if token.len() != st.token_words {
+            return Err(StreamError::TokenSizeMismatch(
+                h.stream_id,
+                token.len(),
+                st.token_words,
+            ));
+        }
+        let mut cursor = st.cursor.lock().unwrap();
+        let mut data = st.data.lock().unwrap();
+        let ntokens = data.len() / st.token_words;
+        if *cursor >= ntokens {
+            return Err(StreamError::CursorOutOfRange(h.stream_id, *cursor as i64, ntokens));
+        }
+        let start = *cursor * st.token_words;
+        data[start..start + st.token_words].copy_from_slice(token);
+        *cursor += 1;
+        Ok(())
+    }
+
+    /// `bsp_stream_seek`: move the cursor by `delta_tokens` (may be
+    /// negative). The resulting cursor must stay within `0..=ntokens`
+    /// (one past the end is allowed, as after reading the last token).
+    pub fn seek(
+        &self,
+        h: StreamHandle,
+        core: usize,
+        delta_tokens: i64,
+    ) -> Result<(), StreamError> {
+        let st = self.check_open(h, core)?;
+        let mut cursor = st.cursor.lock().unwrap();
+        let ntokens = (st.data.lock().unwrap().len() / st.token_words) as i64;
+        let target = *cursor as i64 + delta_tokens;
+        if target < 0 || target > ntokens {
+            return Err(StreamError::CursorOutOfRange(h.stream_id, target, ntokens as usize));
+        }
+        *cursor = target as usize;
+        Ok(())
+    }
+
+    /// Host primitive: read a whole stream back (e.g. to collect Σ^C).
+    pub fn snapshot(&self, id: usize) -> Result<Vec<f32>, StreamError> {
+        Ok(self.state(id)?.data.lock().unwrap().clone())
+    }
+
+    /// Token size in words of stream `id`.
+    pub fn token_words(&self, id: usize) -> Result<usize, StreamError> {
+        Ok(self.state(id)?.token_words)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> StreamRegistry {
+        StreamRegistry::unbounded()
+    }
+
+    #[test]
+    fn ids_assigned_in_creation_order() {
+        let mut r = reg();
+        assert_eq!(r.create(8, 4, None).unwrap(), 0);
+        assert_eq!(r.create(8, 2, None).unwrap(), 1);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn exclusive_open_and_reopen_after_close() {
+        let mut r = reg();
+        let id = r.create(8, 4, None).unwrap();
+        let h = r.open(id, 0).unwrap();
+        assert_eq!(h.token_bytes, 16);
+        assert_eq!(r.open(id, 1), Err(StreamError::AlreadyOpen(id, 0)));
+        r.close(h, 0).unwrap();
+        assert!(r.open(id, 1).is_ok(), "any core can reopen after close");
+    }
+
+    #[test]
+    fn close_by_non_holder_rejected() {
+        let mut r = reg();
+        let id = r.create(8, 4, None).unwrap();
+        let h = r.open(id, 0).unwrap();
+        assert_eq!(r.close(h, 1), Err(StreamError::NotOpenByCaller(id, 1)));
+    }
+
+    #[test]
+    fn move_down_walks_tokens_in_order() {
+        let mut r = reg();
+        let init: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let id = r.create(8, 2, Some(&init)).unwrap();
+        let h = r.open(id, 0).unwrap();
+        let mut buf = Vec::new();
+        for t in 0..4 {
+            r.move_down(h, 0, &mut buf).unwrap();
+            assert_eq!(buf, vec![(2 * t) as f32, (2 * t + 1) as f32]);
+        }
+        assert!(matches!(
+            r.move_down(h, 0, &mut buf),
+            Err(StreamError::CursorOutOfRange(..))
+        ));
+    }
+
+    #[test]
+    fn move_up_mutates_stream() {
+        let mut r = reg();
+        let id = r.create(4, 2, None).unwrap();
+        let h = r.open(id, 0).unwrap();
+        r.move_up(h, 0, &[1.0, 2.0]).unwrap();
+        r.move_up(h, 0, &[3.0, 4.0]).unwrap();
+        assert_eq!(r.snapshot(id).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn seek_gives_random_access() {
+        let mut r = reg();
+        let init: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let id = r.create(8, 2, Some(&init)).unwrap();
+        let h = r.open(id, 0).unwrap();
+        let mut buf = Vec::new();
+        r.move_down(h, 0, &mut buf).unwrap(); // cursor 0 -> 1
+        r.seek(h, 0, 2).unwrap(); // skip to token 3
+        r.move_down(h, 0, &mut buf).unwrap();
+        assert_eq!(buf, vec![6.0, 7.0]);
+        r.seek(h, 0, -4).unwrap(); // back to 0 (paper: MOVE(Σ, -M))
+        r.move_down(h, 0, &mut buf).unwrap();
+        assert_eq!(buf, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn seek_out_of_range_rejected() {
+        let mut r = reg();
+        let id = r.create(8, 2, None).unwrap();
+        let h = r.open(id, 0).unwrap();
+        assert!(r.seek(h, 0, -1).is_err());
+        assert!(r.seek(h, 0, 5).is_err());
+        assert!(r.seek(h, 0, 4).is_ok(), "one past the end is allowed");
+    }
+
+    #[test]
+    fn ops_on_unopened_stream_rejected() {
+        let mut r = reg();
+        let id = r.create(4, 2, None).unwrap();
+        let fake = StreamHandle { stream_id: id, token_bytes: 8 };
+        let mut buf = Vec::new();
+        assert!(r.move_down(fake, 0, &mut buf).is_err());
+        assert!(r.move_up(fake, 0, &[0.0, 0.0]).is_err());
+        assert!(r.seek(fake, 0, 1).is_err());
+    }
+
+    #[test]
+    fn token_size_mismatch_on_move_up() {
+        let mut r = reg();
+        let id = r.create(4, 2, None).unwrap();
+        let h = r.open(id, 0).unwrap();
+        assert_eq!(
+            r.move_up(h, 0, &[1.0]),
+            Err(StreamError::TokenSizeMismatch(id, 1, 2))
+        );
+    }
+
+    #[test]
+    fn ragged_stream_rejected() {
+        let mut r = reg();
+        assert_eq!(r.create(7, 2, None), Err(StreamError::RaggedStream(7, 2)));
+        assert!(matches!(r.create(4, 0, None), Err(StreamError::RaggedStream(..))));
+    }
+
+    #[test]
+    fn ext_mem_budget_enforced() {
+        let machine = AcceleratorParams::epiphany3(); // E = 8M words
+        let mut r = StreamRegistry::new(&machine);
+        let cap = machine.ext_mem_words();
+        assert!(r.create(cap - 4, 4, None).is_ok());
+        assert!(matches!(r.create(8, 4, None), Err(StreamError::ExtMemExhausted(..))));
+        assert!(r.create(4, 4, None).is_ok(), "exactly full is fine");
+    }
+
+    #[test]
+    fn reopen_resets_cursor() {
+        let mut r = reg();
+        let init: Vec<f32> = (0..4).map(|i| i as f32).collect();
+        let id = r.create(4, 2, Some(&init)).unwrap();
+        let h = r.open(id, 0).unwrap();
+        let mut buf = Vec::new();
+        r.move_down(h, 0, &mut buf).unwrap();
+        r.close(h, 0).unwrap();
+        let h2 = r.open(id, 1).unwrap();
+        r.move_down(h2, 1, &mut buf).unwrap();
+        assert_eq!(buf, vec![0.0, 1.0], "cursor reset on reopen");
+    }
+}

@@ -1,0 +1,128 @@
+//! A criterion-flavoured micro-bench runner (criterion itself is not in
+//! the offline crate set).
+//!
+//! Every `rust/benches/*.rs` target is `harness = false` and drives this
+//! runner: warmup, N timed samples, mean ± 95% CI, optional throughput.
+//! Output is stable, grep-able rows so EXPERIMENTS.md can quote them.
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+/// Configuration for a bench run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub samples: u32,
+    /// Iterations averaged inside one sample (for sub-µs bodies).
+    pub iters_per_sample: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup_iters: 3, samples: 10, iters_per_sample: 1 }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time summary, seconds.
+    pub time: Summary,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<f64>,
+}
+
+impl BenchResult {
+    /// Elements per second, if `elements` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e / self.time.mean)
+    }
+
+    /// Render one stable report row.
+    pub fn row(&self) -> String {
+        let mut s = format!(
+            "bench {:<40} mean {:>12} ±{:>10} (n={})",
+            self.name,
+            crate::util::humanfmt::seconds(self.time.mean),
+            crate::util::humanfmt::seconds(self.time.ci95),
+            self.time.n,
+        );
+        if let Some(tp) = self.throughput() {
+            s.push_str(&format!("  {:>12.3e} elem/s", tp));
+        }
+        s
+    }
+}
+
+/// Run a benchmark body and return its timing summary.
+///
+/// The body receives the iteration index; its return value is
+/// black-boxed so the optimizer cannot elide the work.
+pub fn bench<T, F: FnMut(u32) -> T>(
+    name: &str,
+    cfg: BenchConfig,
+    mut body: F,
+) -> BenchResult {
+    for i in 0..cfg.warmup_iters {
+        std::hint::black_box(body(i));
+    }
+    let mut samples = Vec::with_capacity(cfg.samples as usize);
+    for s in 0..cfg.samples {
+        let start = Instant::now();
+        for i in 0..cfg.iters_per_sample {
+            std::hint::black_box(body(s * cfg.iters_per_sample + i));
+        }
+        samples.push(start.elapsed().as_secs_f64() / cfg.iters_per_sample as f64);
+    }
+    BenchResult { name: name.to_string(), time: summarize(&samples), elements: None }
+}
+
+/// Like [`bench`], with a throughput denominator (elements per iter).
+pub fn bench_throughput<T, F: FnMut(u32) -> T>(
+    name: &str,
+    cfg: BenchConfig,
+    elements: f64,
+    body: F,
+) -> BenchResult {
+    let mut r = bench(name, cfg, body);
+    r.elements = Some(elements);
+    r
+}
+
+/// Print a section header for a bench group.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_samples() {
+        let cfg = BenchConfig { warmup_iters: 1, samples: 5, iters_per_sample: 2 };
+        let r = bench("noop", cfg, |_| 1 + 1);
+        assert_eq!(r.time.n, 5);
+        assert!(r.time.mean >= 0.0);
+        assert!(r.throughput().is_none());
+    }
+
+    #[test]
+    fn throughput_is_elements_over_mean() {
+        let cfg = BenchConfig { warmup_iters: 0, samples: 3, iters_per_sample: 1 };
+        let r = bench_throughput("tp", cfg, 1000.0, |_| {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        let tp = r.throughput().unwrap();
+        assert!(tp > 0.0 && tp < 1000.0 / 50e-6, "tp={tp}");
+    }
+
+    #[test]
+    fn row_contains_name() {
+        let cfg = BenchConfig::default();
+        let r = bench("my_bench", cfg, |i| i * 2);
+        assert!(r.row().contains("my_bench"));
+    }
+}

@@ -1,0 +1,78 @@
+//! Ordinary least-squares line fit.
+//!
+//! The paper (§5) fits a linear function `time(bytes) = l + g·words`
+//! against raw core-to-core write measurements to extract the BSP
+//! parameters `g` (slope) and `l` (intercept). [`linear_fit`] is that
+//! fit; `model::calibrate` applies it to simulator measurements.
+
+/// Result of a least-squares line fit `y ≈ intercept + slope · x`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LineFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination (1 = perfect fit).
+    pub r2: f64,
+}
+
+/// Least-squares fit of `y ≈ a + b·x`. Panics if fewer than two points
+/// or if all `x` are identical.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> LineFit {
+    assert_eq!(xs.len(), ys.len(), "linear_fit: length mismatch");
+    assert!(xs.len() >= 2, "linear_fit: need at least two points");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    assert!(sxx > 0.0, "linear_fit: degenerate x values");
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (intercept + slope * x);
+            e * e
+        })
+        .sum();
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    LineFit { slope, intercept, r2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let f = linear_fit(&xs, &ys);
+        assert!((f.slope - 2.0).abs() < 1e-12);
+        assert!((f.intercept - 3.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_line_recovers_params() {
+        use crate::util::prng::SplitMix64;
+        let mut g = SplitMix64::new(11);
+        let xs: Vec<f64> = (1..200).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 136.0 + 5.59 * x + (g.next_f64() - 0.5) * 4.0)
+            .collect();
+        let f = linear_fit(&xs, &ys);
+        assert!((f.slope - 5.59).abs() < 0.05, "slope={}", f.slope);
+        assert!((f.intercept - 136.0).abs() < 5.0, "intercept={}", f.intercept);
+        assert!(f.r2 > 0.999);
+    }
+
+    #[test]
+    #[should_panic]
+    fn degenerate_x_panics() {
+        linear_fit(&[1.0, 1.0], &[2.0, 3.0]);
+    }
+}

@@ -1,0 +1,79 @@
+//! Human-readable formatting for report output.
+
+/// Format a byte count: `1.5 KB`, `32 MB`, ...
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format seconds: `1.23 s`, `4.56 ms`, `7.89 µs`, `123 ns`.
+pub fn seconds(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Format a rate in MB/s (the unit Table 1 uses).
+pub fn mbps(bytes_per_sec: f64) -> String {
+    format!("{:.1} MB/s", bytes_per_sec / 1e6)
+}
+
+/// Format FLOP counts: `2.0 GFLOP`, `1.5 MFLOP`, ...
+pub fn flops(f: f64) -> String {
+    if f >= 1e9 {
+        format!("{:.2} GFLOP", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.2} MFLOP", f / 1e6)
+    } else if f >= 1e3 {
+        format!("{:.2} kFLOP", f / 1e3)
+    } else {
+        format!("{f:.0} FLOP")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(1536), "1.5 KB");
+        assert_eq!(bytes(32 * 1024 * 1024), "32.0 MB");
+    }
+
+    #[test]
+    fn seconds_units() {
+        assert_eq!(seconds(1.5), "1.500 s");
+        assert_eq!(seconds(0.0025), "2.500 ms");
+        assert_eq!(seconds(3.2e-6), "3.200 µs");
+        assert_eq!(seconds(5e-8), "50 ns");
+    }
+
+    #[test]
+    fn mbps_matches_table1_style() {
+        assert_eq!(mbps(11.0e6), "11.0 MB/s");
+    }
+
+    #[test]
+    fn flops_units() {
+        assert_eq!(flops(136.0), "136 FLOP");
+        assert_eq!(flops(2.0e9), "2.00 GFLOP");
+    }
+}

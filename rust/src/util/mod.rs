@@ -1,0 +1,24 @@
+//! Small self-contained substrates.
+//!
+//! The offline crate set available to this build lacks several staples
+//! (`rand`, `proptest`, `criterion`, `serde`, `clap`, `tokio`), so this
+//! module provides the minimal equivalents the rest of the crate needs:
+//!
+//! * [`prng`] — SplitMix64, a tiny, high-quality, seedable PRNG.
+//! * [`stats`] — mean / stddev / confidence intervals for bench output.
+//! * [`fit`] — ordinary least-squares line fit (used to fit `g`, `l`
+//!   from simulated core-to-core write timings, exactly like §5).
+//! * [`prop`] — a miniature property-testing harness (random cases with
+//!   shrink-by-halving on failure).
+//! * [`benchtool`] — a criterion-flavoured bench runner (warmup, timed
+//!   samples, mean ± CI, throughput rows).
+//! * [`pool`] — a fixed worker pool used for the SPMD core threads.
+//! * [`humanfmt`] — human-readable sizes/times for reports.
+
+pub mod benchtool;
+pub mod fit;
+pub mod humanfmt;
+pub mod pool;
+pub mod prng;
+pub mod prop;
+pub mod stats;

@@ -1,0 +1,155 @@
+//! Thread helpers: scoped SPMD launch + a reusable worker pool.
+//!
+//! (tokio is not in the offline crate set; the BSP runtime needs only
+//! fork-join SPMD semantics plus a small pool for background work such
+//! as batched PJRT dispatch, so std threads suffice.)
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Run `f(pid)` on `p` scoped threads (one per simulated core) and wait
+/// for all of them. Panics from any core are propagated.
+pub fn scoped_spmd<F>(p: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    assert!(p > 0, "scoped_spmd: p == 0");
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..p)
+            .map(|pid| {
+                let f = &f;
+                s.spawn(move || f(pid))
+            })
+            .collect();
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for h in handles {
+            if let Err(e) = h.join() {
+                panic.get_or_insert(e);
+            }
+        }
+        if let Some(e) = panic {
+            std::panic::resume_unwind(e);
+        }
+    });
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size worker pool executing boxed jobs.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `n` workers.
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "WorkerPool: n == 0");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    let job = rx.lock().unwrap().recv();
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // channel closed: shut down
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    /// Submit a job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker pool channel closed");
+    }
+
+    /// Run `f(i)` for `i in 0..n` across the pool and collect results in
+    /// order.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.submit(move || {
+                let _ = tx.send((i, f(i)));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            out[i] = Some(v);
+        }
+        out.into_iter()
+            .map(|v| v.expect("worker died before completing job"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn spmd_runs_every_pid_once() {
+        let counts: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        scoped_spmd(8, |pid| {
+            counts[pid].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "core 3 died")]
+    fn spmd_propagates_panic() {
+        scoped_spmd(4, |pid| {
+            if pid == 3 {
+                panic!("core 3 died");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_map_preserves_order() {
+        let pool = WorkerPool::new(4);
+        let out = pool.map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_runs_submitted_jobs() {
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join workers
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+}

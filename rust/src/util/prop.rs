@@ -1,0 +1,122 @@
+//! A miniature property-testing harness (proptest is not in the offline
+//! crate set).
+//!
+//! [`check`] runs a property over `n` SplitMix64-seeded random cases and,
+//! on failure, re-runs with progressively "smaller" cases by handing the
+//! generator a shrink level (generators are expected to produce smaller
+//! structures at higher levels). The failing seed is printed so a case
+//! can be replayed deterministically.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath; the same
+//! // example runs for real in this module's unit tests.)
+//! use bsps::util::prop::{check, Gen};
+//! check("sum is commutative", 100, |g: &mut Gen| {
+//!     let a = g.rng.next_below(1000) as i64;
+//!     let b = g.rng.next_below(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::prng::SplitMix64;
+
+/// Case generator handed to properties: a seeded PRNG plus a shrink
+/// level (0 = full size; higher = generate smaller structures).
+pub struct Gen {
+    pub rng: SplitMix64,
+    pub shrink_level: u32,
+}
+
+impl Gen {
+    /// A size bounded by `max`, scaled down by the shrink level.
+    pub fn size(&mut self, max: usize) -> usize {
+        let max = max.max(1);
+        let scaled = max >> self.shrink_level;
+        self.rng.next_range(1, scaled.max(1) + 1)
+    }
+
+    /// A vector of f32s with property-scaled length.
+    pub fn f32_vec(&mut self, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.size(max_len);
+        self.rng.f32_vec(n, lo, hi)
+    }
+}
+
+/// Run `prop` on `cases` random inputs. Panics (with the failing seed)
+/// if any case fails; failing cases are retried at increasing shrink
+/// levels to report the smallest reproduction found.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    let base_seed = 0xB5B5_0000u64;
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E37_79B9));
+        let run = |shrink_level: u32| {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut g = Gen { rng: SplitMix64::new(seed), shrink_level };
+                prop(&mut g);
+            }))
+        };
+        if run(0).is_err() {
+            // Shrink: try smaller structure sizes with the same seed.
+            let mut smallest_fail = 0;
+            for level in 1..=6 {
+                if run(level).is_err() {
+                    smallest_fail = level;
+                }
+            }
+            // Re-raise at the most-shrunk failing level for the report.
+            let mut g = Gen {
+                rng: SplitMix64::new(seed),
+                shrink_level: smallest_fail,
+            };
+            eprintln!(
+                "property '{name}' failed: case {case}, seed {seed:#x}, \
+                 shrink_level {smallest_fail}"
+            );
+            prop(&mut g); // panics, surfacing the original assertion
+            unreachable!("property failed under catch_unwind but not replay");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("reverse twice is identity", 50, |g| {
+            let v = g.f32_vec(64, -10.0, 10.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check("always fails", 5, |_g| {
+            panic!("nope");
+        });
+    }
+
+    #[test]
+    fn gen_size_respects_shrink_level() {
+        let mut g = Gen { rng: SplitMix64::new(1), shrink_level: 4 };
+        for _ in 0..100 {
+            assert!(g.size(64) <= 4 + 1);
+        }
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        // The same (seed, level) must generate the same data.
+        let mut a = Gen { rng: SplitMix64::new(42), shrink_level: 0 };
+        let mut b = Gen { rng: SplitMix64::new(42), shrink_level: 0 };
+        assert_eq!(a.f32_vec(32, 0.0, 1.0), b.f32_vec(32, 0.0, 1.0));
+    }
+}

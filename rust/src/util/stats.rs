@@ -1,0 +1,84 @@
+//! Summary statistics for benchmark samples.
+
+/// Summary of a sample set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Half-width of a ~95% confidence interval on the mean
+    /// (1.96 · stddev / √n; normal approximation).
+    pub ci95: f64,
+}
+
+/// Compute a [`Summary`] of `xs`. Panics on an empty slice.
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize: empty sample");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let stddev = var.sqrt();
+    let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in xs {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    Summary { n, mean, stddev, min, max, ci95: 1.96 * stddev / (n as f64).sqrt() }
+}
+
+/// Median of a sample (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "median: empty sample");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mid = v.len() / 2;
+    if v.len() % 2 == 0 { (v[mid - 1] + v[mid]) / 2.0 } else { v[mid] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_sample() {
+        let s = summarize(&[3.0, 3.0, 3.0]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.ci95, 0.0);
+        assert_eq!((s.min, s.max), (3.0, 3.0));
+    }
+
+    #[test]
+    fn known_values() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        // sample stddev of 1..4 = sqrt(5/3)
+        assert!((s.stddev - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!((s.min, s.max), (1.0, 4.0));
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = summarize(&[7.5]);
+        assert_eq!(s.mean, 7.5);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn median_even_odd() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        summarize(&[]);
+    }
+}

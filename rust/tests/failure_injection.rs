@@ -1,0 +1,175 @@
+//! Failure-injection tests: the runtime must fail *loudly and cleanly* —
+//! no hangs, no silent corruption — when cores panic, streams are
+//! misused, or budgets are violated mid-run.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use bsps::bsp::run_gang;
+use bsps::model::params::AcceleratorParams;
+use bsps::stream::StreamRegistry;
+
+fn machine(p: usize) -> AcceleratorParams {
+    let mut m = AcceleratorParams::epiphany3();
+    m.p = p;
+    m
+}
+
+#[test]
+fn panic_before_first_sync_unwinds_gang() {
+    let r = std::panic::catch_unwind(|| {
+        run_gang(&machine(8), None, false, |ctx| {
+            if ctx.pid() == 0 {
+                panic!("early death");
+            }
+            ctx.sync(); // 7 cores blocked here must unwind, not hang
+        });
+    });
+    assert!(r.is_err());
+}
+
+#[test]
+fn panic_mid_hyperstep_unwinds_gang() {
+    let m = machine(4);
+    let mut reg = StreamRegistry::new(&m);
+    for _ in 0..4 {
+        reg.create(32, 8, None).unwrap();
+    }
+    let reg = Arc::new(reg);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_gang(&m, Some(reg), true, |ctx| {
+            let h = ctx.stream_open(ctx.pid()).unwrap();
+            let mut buf = Vec::new();
+            for i in 0..4 {
+                ctx.stream_move_down(h, &mut buf, true).unwrap();
+                if ctx.pid() == 2 && i == 1 {
+                    panic!("core 2 died in hyperstep 1");
+                }
+                ctx.hyperstep_sync();
+            }
+        });
+    }));
+    assert!(r.is_err());
+}
+
+#[test]
+fn panic_inside_leader_work_unwinds_gang() {
+    // The leader runs superstep bookkeeping inside the barrier; a panic
+    // there (e.g. a put that overflows its target var) must poison and
+    // unwind everyone.
+    let r = std::panic::catch_unwind(|| {
+        run_gang(&machine(4), None, false, |ctx| {
+            ctx.register("x", 2).unwrap();
+            ctx.sync();
+            if ctx.pid() == 1 {
+                ctx.put(0, "x", 1, &[1.0, 2.0, 3.0]); // overflows len 2
+            }
+            ctx.sync(); // leader's apply panics here
+            ctx.sync();
+        });
+    });
+    assert!(r.is_err());
+}
+
+#[test]
+fn double_open_is_an_error_not_a_crash() {
+    let m = machine(2);
+    let mut reg = StreamRegistry::new(&m);
+    reg.create(16, 4, None).unwrap();
+    let reg = Arc::new(reg);
+    let errors = Arc::new(AtomicUsize::new(0));
+    let errors2 = Arc::clone(&errors);
+    run_gang(&m, Some(reg), true, move |ctx| {
+        // Both cores race for stream 0; exactly one must win.
+        match ctx.stream_open(0) {
+            Ok(h) => {
+                ctx.sync();
+                ctx.stream_close(h).unwrap();
+            }
+            Err(_) => {
+                errors2.fetch_add(1, Ordering::SeqCst);
+                ctx.sync();
+            }
+        }
+    });
+    assert_eq!(errors.load(Ordering::SeqCst), 1);
+}
+
+#[test]
+fn cursor_overrun_is_an_error_not_a_crash() {
+    let m = machine(1);
+    let mut reg = StreamRegistry::new(&m);
+    reg.create(8, 4, None).unwrap();
+    run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+        let h = ctx.stream_open(0).unwrap();
+        let mut buf = Vec::new();
+        ctx.stream_move_down(h, &mut buf, true).unwrap();
+        ctx.stream_move_down(h, &mut buf, true).unwrap();
+        // Third read: past the end.
+        assert!(ctx.stream_move_down(h, &mut buf, true).is_err());
+        // Seek back makes it valid again (pseudo-streaming!).
+        ctx.stream_seek(h, -2).unwrap();
+        assert!(ctx.stream_move_down(h, &mut buf, true).is_ok());
+        ctx.stream_close(h).unwrap();
+    });
+}
+
+#[test]
+fn unregistered_var_put_panics_cleanly() {
+    let r = std::panic::catch_unwind(|| {
+        run_gang(&machine(2), None, false, |ctx| {
+            if ctx.pid() == 0 {
+                ctx.put(1, "never_registered", 0, &[1.0]);
+            }
+            ctx.sync();
+        });
+    });
+    assert!(r.is_err());
+}
+
+#[test]
+fn gang_reuse_after_failure_is_fresh() {
+    // A failed run must not poison *subsequent* gangs (each run_gang
+    // builds fresh shared state).
+    let _ = std::panic::catch_unwind(|| {
+        run_gang(&machine(4), None, false, |ctx| {
+            if ctx.pid() == 3 {
+                panic!("boom");
+            }
+            ctx.sync();
+        });
+    });
+    // Fresh gang works fine.
+    let out = run_gang(&machine(4), None, false, |ctx| {
+        ctx.sync();
+    });
+    assert_eq!(out.cost.len(), 1);
+}
+
+#[test]
+fn pjrt_engine_survives_bad_requests() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        return;
+    }
+    use bsps::runtime::{HostTensor, PjrtEngine};
+    let engine = PjrtEngine::start("artifacts").unwrap();
+    // Bad entry name.
+    assert!(engine.execute("nope", vec![]).is_err());
+    // Wrong arity.
+    assert!(engine.execute("token_mm_acc_k4", vec![]).is_err());
+    // Wrong shape.
+    let bad = vec![
+        HostTensor::F32(vec![0.0; 9], vec![3, 3]),
+        HostTensor::F32(vec![0.0; 9], vec![3, 3]),
+        HostTensor::F32(vec![0.0; 9], vec![3, 3]),
+    ];
+    assert!(engine.execute("token_mm_acc_k4", bad).is_err());
+    // And a good request still works afterwards.
+    let good = vec![
+        HostTensor::F32(vec![1.0; 16], vec![4, 4]),
+        HostTensor::F32(vec![1.0; 16], vec![4, 4]),
+        HostTensor::F32(vec![1.0; 16], vec![4, 4]),
+    ];
+    let out = engine.execute("token_mm_acc_k4", good).unwrap();
+    assert!((out.into_f32()[0] - 5.0).abs() < 1e-5);
+}
