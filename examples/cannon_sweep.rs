@@ -22,7 +22,7 @@ use bsps::model::predict;
 use bsps::util::humanfmt::seconds;
 use bsps::util::prng::SplitMix64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bsps::util::error::Result<()> {
     let machine = AcceleratorParams::epiphany3();
     let grid_n = machine.grid_n();
     let verify = std::env::args().any(|a| a == "--verify-cost");

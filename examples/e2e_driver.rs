@@ -23,7 +23,7 @@ use bsps::model::params::AcceleratorParams;
 use bsps::util::humanfmt::seconds;
 use bsps::util::prng::SplitMix64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bsps::util::error::Result<()> {
     let machine = AcceleratorParams::epiphany3();
     let env = BspsEnv::pjrt(machine.clone(), "artifacts")?;
     println!("backend: {} (artifacts loaded)", env.backend.name());

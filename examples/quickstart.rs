@@ -14,7 +14,7 @@ use bsps::coordinator::BspsEnv;
 use bsps::model::params::AcceleratorParams;
 use bsps::util::prng::SplitMix64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bsps::util::error::Result<()> {
     // A machine: 16 cores, 32 KB scratchpads, e = 43.4 FLOP/float.
     let machine = AcceleratorParams::epiphany3();
     println!("machine: {} (p={}, e={})", machine.name, machine.p, machine.e);

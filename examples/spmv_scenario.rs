@@ -37,7 +37,7 @@ fn laplacian(side: usize) -> EllMatrix {
     EllMatrix::from_triplets(n, 5, &triplets).expect("stencil fits nnz=5")
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bsps::util::error::Result<()> {
     let machine = AcceleratorParams::epiphany3();
     let env = BspsEnv::native(machine.clone());
     let side = 64; // n = 4096

@@ -17,7 +17,7 @@ use bsps::coordinator::BspsEnv;
 use bsps::model::params::AcceleratorParams;
 use bsps::util::prng::SplitMix64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bsps::util::error::Result<()> {
     let mut rng = SplitMix64::new(99);
     let frames = 32;
     let pixels = 16 * 1024; // 128×128 grayscale

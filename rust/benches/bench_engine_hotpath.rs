@@ -54,7 +54,7 @@ fn main() {
             let h = ctx.stream_open(ctx.pid()).unwrap();
             let mut tok = Vec::new();
             for _ in 0..64 {
-                ctx.stream_move_down(h, &mut tok, true).unwrap();
+                ctx.stream_move_down(h, &mut tok).unwrap();
                 ctx.hyperstep_sync();
             }
             ctx.stream_close(h).unwrap();

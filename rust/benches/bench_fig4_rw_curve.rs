@@ -2,10 +2,23 @@
 //! transfer size, free network) and assert the paper's qualitative
 //! features: overhead-dominated small transfers, burst jumps, and the
 //! non-monotonic plain-write curve.
+//!
+//! Plus the overlap acceptance check for the double-buffered prefetch
+//! runtime: on a streaming read/compute workload the *measured*
+//! hyperstep timeline (virtual clocks + DMA engines + background
+//! fills) must track Eq. 1's `max(compute, fetch)` within 20% of the
+//! `model::bsps` prediction, and beat the serial (no-prefetch) run of
+//! the same workload outright.
 
+use std::sync::Arc;
+
+use bsps::bsp::{run_gang, Ctx, RunOutcome};
+use bsps::model::params::AcceleratorParams;
 use bsps::sim::extmem::ExtMemModel;
 use bsps::sim::membench;
+use bsps::stream::StreamRegistry;
 use bsps::util::benchtool::{bench, section, BenchConfig};
+use bsps::util::humanfmt::seconds;
 
 fn main() {
     section("Figure 4: speed vs transfer size (single core, free network)");
@@ -43,4 +56,73 @@ fn main() {
     section("curve-generation timing");
     let r = bench("membench::fig4", BenchConfig::default(), |_| membench::fig4(&mem));
     println!("{}", r.row());
+
+    section("prefetch overlap: measured hyperstep timeline vs Eq. 1");
+    overlap_acceptance();
+}
+
+/// Streaming read workload on one core: `tokens` C-word tokens, with
+/// per-token compute swept through bandwidth-heavy, balanced, and
+/// compute-heavy regimes.
+fn stream_workload(
+    m: &AcceleratorParams,
+    tokens: usize,
+    c: usize,
+    flops_per_token: f64,
+    prefetch: bool,
+) -> RunOutcome {
+    let mut reg = StreamRegistry::new(m);
+    reg.create(tokens * c, c, None).unwrap();
+    let kernel = move |ctx: &mut Ctx| {
+        let h = ctx.stream_open(0).unwrap();
+        let mut tok = Vec::new();
+        for _ in 0..tokens {
+            ctx.stream_move_down(h, &mut tok).unwrap();
+            ctx.charge_flops(flops_per_token);
+            ctx.hyperstep_sync();
+        }
+        ctx.stream_close(h).unwrap();
+    };
+    run_gang(m, Some(Arc::new(reg)), prefetch, kernel)
+}
+
+fn overlap_acceptance() {
+    let m = AcceleratorParams::epiphany3();
+    let mut single = m.clone();
+    single.p = 1;
+    let (tokens, c) = (32usize, 256usize);
+    let fetch_flops = single.e * c as f64;
+    println!(
+        "{:>16} {:>12} {:>12} {:>8} {:>12} {:>9}",
+        "regime", "Eq.1 model", "measured", "rel", "serial", "speedup"
+    );
+    for (label, work) in [
+        ("bandwidth-heavy", 0.1 * fetch_flops),
+        ("balanced", 1.0 * fetch_flops),
+        ("compute-heavy", 4.0 * fetch_flops),
+    ] {
+        let on = stream_workload(&single, tokens, c, work, true);
+        let off = stream_workload(&single, tokens, c, work, false);
+        let model = on.ledger.total_flops(&single); // Σ max(T_h, e·C)
+        let measured = on.timeline.makespan_flops(&single);
+        let serial = off.timeline.makespan_flops(&single);
+        let rel = (measured - model).abs() / model;
+        println!(
+            "{:>16} {:>12} {:>12} {:>7.1}% {:>12} {:>8.2}×",
+            label,
+            seconds(single.flops_to_seconds(model)),
+            seconds(single.flops_to_seconds(measured)),
+            100.0 * rel,
+            seconds(single.flops_to_seconds(serial)),
+            serial / measured,
+        );
+        // Acceptance: measured tracks max(compute, fetch) within 20% …
+        assert!(rel < 0.2, "{label}: measured {measured} vs Eq.1 {model}");
+        // … and strictly beats the non-prefetch run of the same workload.
+        assert!(
+            measured < serial,
+            "{label}: overlap {measured} must beat serial {serial}"
+        );
+    }
+    println!("overlap ✓: hyperstep wall time tracks max(compute, fetch); prefetch wins");
 }

@@ -63,5 +63,20 @@ fn main() {
             seconds(wall)
         );
         assert!(rel < 1e-6);
+
+        // Measured overlapped timeline vs the Eq. 1 ledger. Cannon's
+        // `seek` revisits cold the double buffer at every outer-block
+        // boundary (a real pipeline-warmup cost Eq. 2 explicitly
+        // ignores), so the measured run sits a bounded factor above the
+        // idealized model rather than within the streaming-read 20%.
+        let ratio = run.report.overlap_ratio();
+        println!(
+            "            measured {} = {ratio:.3}× the Eq.1 model (seek warm-ups)",
+            seconds(run.report.measured_seconds)
+        );
+        assert!(
+            (0.95..1.5).contains(&ratio),
+            "n={n} M={m}: overlap ratio {ratio} out of band"
+        );
     }
 }

@@ -16,7 +16,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{ensure, Result};
+use crate::util::error::{ensure, Result};
 
 use crate::algos::cannon::cannon_inner;
 use crate::coordinator::{run_bsps, BspsEnv, Report};
@@ -31,10 +31,13 @@ use crate::stream::StreamRegistry;
 pub struct CannonRun {
     /// The computed `n×n` product, row-major.
     pub c: Vec<f32>,
+    /// Cost report of the run.
     pub report: Report,
+    /// Eq. 2 closed-form prediction for the same parameters.
     pub predicted: CannonPrediction,
     /// Stream geometry of the run.
     pub k: usize,
+    /// Outer blocks per dimension `M`.
     pub m: usize,
 }
 
@@ -58,7 +61,6 @@ fn run_gang_ml(
     cs: &CannonStreams,
 ) -> (Report, crate::bsp::RunOutcome) {
     let (m, k) = (cs.m, cs.k);
-    let prefetch = env.prefetch;
     let (a_ids, b_ids, c_ids) = (cs.a_ids.clone(), cs.b_ids.clone(), cs.c_ids.clone());
     run_bsps(env, reg, move |ctx, backend| {
         let pid = ctx.pid();
@@ -74,8 +76,8 @@ fn run_gang_ml(
             for j in 0..m {
                 let mut tc = vec![0.0f32; k * k];
                 for _kk in 0..m {
-                    ctx.stream_move_down(ha, &mut ta, prefetch).unwrap();
-                    ctx.stream_move_down(hb, &mut tb, prefetch).unwrap();
+                    ctx.stream_move_down(ha, &mut ta).unwrap();
+                    ctx.stream_move_down(hb, &mut tb).unwrap();
                     cannon_inner(ctx, backend, ta.clone(), tb.clone(), &mut tc, k);
                     ctx.hyperstep_sync();
                 }

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{ensure, Result};
+use crate::util::error::{ensure, Result};
 
 use crate::coordinator::{run_bsps, BspsEnv, Report};
 use crate::host::cyclic::cyclic_streams;
@@ -35,7 +35,6 @@ pub fn run(env: &BspsEnv, u: &[f32], v: &[f32], token_words: usize) -> Result<In
     let u_ids = cyclic_streams(&mut reg, u, p, token_words)?;
     let v_ids = cyclic_streams(&mut reg, v, p, token_words)?;
     let n_hypersteps = u.len() / (p * token_words);
-    let prefetch = env.prefetch;
     // Per-core answer, communicated back to the host after the run (the
     // paper: "this value can then be communicated back to the host").
     let answers = std::sync::Mutex::new(vec![0.0f32; p]);
@@ -50,8 +49,8 @@ pub fn run(env: &BspsEnv, u: &[f32], v: &[f32], token_words: usize) -> Result<In
         let mut alpha_s = 0.0f32;
         let (mut tu, mut tv) = (Vec::new(), Vec::new());
         for _ in 0..n_hypersteps {
-            ctx.stream_move_down(hu, &mut tu, prefetch).unwrap();
-            ctx.stream_move_down(hv, &mut tv, prefetch).unwrap();
+            ctx.stream_move_down(hu, &mut tu).unwrap();
+            ctx.stream_move_down(hv, &mut tv).unwrap();
             let (next, flops) = backend.inprod_partial(alpha_s, &tu, &tv).unwrap();
             alpha_s = next;
             ctx.charge_flops(flops);

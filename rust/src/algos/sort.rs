@@ -20,7 +20,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{ensure, Result};
+use crate::util::error::{ensure, Result};
 
 use crate::coordinator::{run_bsps, BspsEnv, Report};
 use crate::model::params::WORD_BYTES;
@@ -29,7 +29,9 @@ use crate::stream::StreamRegistry;
 /// Result of the streaming sample sort.
 #[derive(Debug, Clone)]
 pub struct SortRun {
+    /// The sorted output.
     pub sorted: Vec<f32>,
+    /// Cost report of the run.
     pub report: Report,
     /// Bucket sizes after distribution (diagnostics / balance checks).
     pub bucket_sizes: Vec<usize>,
@@ -72,7 +74,6 @@ pub fn run(env: &BspsEnv, data: &[f32], token_words: usize) -> Result<SortRun> {
     }
 
     let reg = Arc::new(reg);
-    let prefetch = env.prefetch;
 
     let (report, _) = run_bsps(env, Arc::clone(&reg), |ctx, _backend| {
         let s = ctx.pid();
@@ -84,7 +85,7 @@ pub fn run(env: &BspsEnv, data: &[f32], token_words: usize) -> Result<SortRun> {
         let mut tok = Vec::new();
         let mut mine = Vec::with_capacity(per_core);
         for _ in 0..tokens_per_core {
-            ctx.stream_move_down(h_in, &mut tok, prefetch).unwrap();
+            ctx.stream_move_down(h_in, &mut tok).unwrap();
             ctx.charge_flops(tok.len() as f64); // sampling scan
             mine.extend_from_slice(&tok);
             ctx.hyperstep_sync();
@@ -109,7 +110,7 @@ pub fn run(env: &BspsEnv, data: &[f32], token_words: usize) -> Result<SortRun> {
         ctx.stream_seek(h_in, -(tokens_per_core as i64)).unwrap();
         let mut buckets: Vec<Vec<f32>> = vec![Vec::new(); p];
         for _ in 0..tokens_per_core {
-            ctx.stream_move_down(h_in, &mut tok, prefetch).unwrap();
+            ctx.stream_move_down(h_in, &mut tok).unwrap();
             for &x in &tok {
                 let t = splitters.partition_point(|&sp| sp <= x);
                 buckets[t].push(x);
@@ -138,7 +139,7 @@ pub fn run(env: &BspsEnv, data: &[f32], token_words: usize) -> Result<SortRun> {
         let hx = ctx.stream_open(ex_ids[s]).unwrap();
         let mut bucket = Vec::new();
         for _src in 0..p {
-            ctx.stream_move_down(hx, &mut tok, prefetch).unwrap();
+            ctx.stream_move_down(hx, &mut tok).unwrap();
             let count = tok[0] as usize;
             bucket.extend_from_slice(&tok[1..1 + count]);
             ctx.hyperstep_sync();

@@ -15,7 +15,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use anyhow::{ensure, Result};
+use crate::util::error::{ensure, Result};
 
 use crate::coordinator::{run_bsps, BspsEnv, Report};
 use crate::model::params::WORD_BYTES;
@@ -24,7 +24,9 @@ use crate::stream::StreamRegistry;
 /// An ELLPACK matrix.
 #[derive(Debug, Clone)]
 pub struct EllMatrix {
+    /// Matrix dimension (the matrix is n x n).
     pub n: usize,
+    /// ELLPACK slots per row.
     pub nnz: usize,
     /// `n × nnz` values, row-major; padding slots are 0.
     pub values: Vec<f32>,
@@ -71,7 +73,9 @@ impl EllMatrix {
 /// Result of a streaming SpMV run.
 #[derive(Debug, Clone)]
 pub struct SpmvRun {
+    /// The computed product `y = A.x`.
     pub y: Vec<f32>,
+    /// Cost report of the run.
     pub report: Report,
 }
 
@@ -108,7 +112,6 @@ pub fn run(env: &BspsEnv, a: &EllMatrix, x: &[f32], rows_per_token: usize) -> Re
         y_ids.push(reg.create(blocks_per_core * rows_per_token, rows_per_token, None)?);
     }
     let reg = Arc::new(reg);
-    let prefetch = env.prefetch;
     let x_shared = x.to_vec();
     let err: Mutex<Option<String>> = Mutex::new(None);
 
@@ -124,8 +127,8 @@ pub fn run(env: &BspsEnv, a: &EllMatrix, x: &[f32], rows_per_token: usize) -> Re
         let hy = ctx.stream_open(y_ids[s]).unwrap();
         let (mut tv, mut tc) = (Vec::new(), Vec::new());
         for _ in 0..blocks_per_core {
-            ctx.stream_move_down(hv, &mut tv, prefetch).unwrap();
-            ctx.stream_move_down(hc, &mut tc, prefetch).unwrap();
+            ctx.stream_move_down(hv, &mut tv).unwrap();
+            ctx.stream_move_down(hc, &mut tc).unwrap();
             let cols_i32: Vec<i32> = tc.iter().map(|&c| c as i32).collect();
             let (y_tok, flops) = backend
                 .spmv_ell(&tv, &cols_i32, &x_shared, rows_per_token, nnz)
@@ -220,7 +223,6 @@ pub fn run_windowed(
         y_ids.push(reg.create(blocks_per_core * rows_per_token, rows_per_token, None)?);
     }
     let reg = Arc::new(reg);
-    let prefetch = env.prefetch;
 
     let (report, _) = run_bsps(env, Arc::clone(&reg), |ctx, backend| {
         let s = ctx.pid();
@@ -232,9 +234,9 @@ pub fn run_windowed(
         for j in 0..blocks_per_core {
             let mut y_rows = vec![0.0f32; rows_per_token];
             for _w in 0..windows {
-                ctx.stream_move_down(hv, &mut tv, prefetch).unwrap();
-                ctx.stream_move_down(hc, &mut tc, prefetch).unwrap();
-                ctx.stream_move_down(hx, &mut tx, prefetch).unwrap();
+                ctx.stream_move_down(hv, &mut tv).unwrap();
+                ctx.stream_move_down(hc, &mut tc).unwrap();
+                ctx.stream_move_down(hx, &mut tx).unwrap();
                 let cols_i32: Vec<i32> = tc.iter().map(|&c| c as i32).collect();
                 let (part, flops) = backend
                     .spmv_ell(&tv, &cols_i32, &tx, rows_per_token, nnz)

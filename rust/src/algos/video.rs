@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{ensure, Result};
+use crate::util::error::{ensure, Result};
 
 use crate::coordinator::{run_bsps, BspsEnv, Report};
 use crate::model::bsps::HeavySide;
@@ -25,6 +25,7 @@ use crate::stream::StreamRegistry;
 pub struct VideoRun {
     /// Filtered frames, same layout as the input.
     pub output: Vec<Vec<f32>>,
+    /// Cost report of the run.
     pub report: Report,
     /// Simulated frames per second.
     pub fps: f64,
@@ -57,7 +58,6 @@ pub fn run(env: &BspsEnv, frames: &[Vec<f32>], alpha: f32) -> Result<VideoRun> {
         out_ids.push(reg.create(nframes * band, band, None)?);
     }
     let reg = Arc::new(reg);
-    let prefetch = env.prefetch;
 
     let (report, outcome) = run_bsps(env, Arc::clone(&reg), |ctx, backend| {
         let s = ctx.pid();
@@ -66,7 +66,7 @@ pub fn run(env: &BspsEnv, frames: &[Vec<f32>], alpha: f32) -> Result<VideoRun> {
         let mut tok = Vec::new();
         let mut prev = vec![0.0f32; band];
         for _ in 0..nframes {
-            ctx.stream_move_down(hi, &mut tok, prefetch).unwrap();
+            ctx.stream_move_down(hi, &mut tok).unwrap();
             // out = prev + alpha·(in − prev) == alpha·in + (1−alpha)·prev
             let diff: Vec<f32> = tok.iter().zip(&prev).map(|(i, o)| i - o).collect();
             ctx.charge_flops(band as f64); // the subtraction

@@ -36,10 +36,12 @@ pub struct Barrier {
 /// core per generation (used to elect the superstep finalizer).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WaitResult {
+    /// True for exactly one core per generation.
     pub is_leader: bool,
 }
 
 impl Barrier {
+    /// A barrier for `p` cores.
     pub fn new(p: usize) -> Self {
         assert!(p > 0);
         let host_cores = std::thread::available_parallelism()
@@ -120,6 +122,7 @@ impl Barrier {
         self.cv.notify_all();
     }
 
+    /// Whether the barrier has been poisoned.
     pub fn is_poisoned(&self) -> bool {
         self.poisoned.load(Ordering::Acquire)
     }

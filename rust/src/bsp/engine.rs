@@ -13,21 +13,51 @@
 //! both verify results against oracles and reproduce the paper's timing
 //! claims (DESIGN.md "Hardware substitution").
 //!
-//! Streaming (`stream_*`) and hyperstep methods live on the same `Ctx`
-//! and are documented in `coordinator`; they are no-ops for plain BSP
-//! programs that never touch streams.
+//! # Double-buffered prefetch
+//!
+//! When a gang runs with `prefetch = true`, every open stream gets a
+//! second (staging) token buffer, and the engine becomes a real
+//! overlapped prefetch executor rather than a bookkeeping flag:
+//!
+//! * consuming token `t` via [`Ctx::stream_move_down`] swaps the staged
+//!   buffer in and immediately issues the fill of token `t+1` — on a
+//!   **background host thread** (so the copy out of simulated external
+//!   memory genuinely overlaps the caller's compute in wall-clock time)
+//!   and on the core's [`crate::sim::dma::DmaEngine`] (so it occupies
+//!   the simulated DMA timeline);
+//! * the core's virtual clock advances as FLOPs are charged, and stalls
+//!   only if it consumes a token whose DMA transfer has not completed —
+//!   mechanically yielding Eq. 1's `max(T_h, e·ΣC_i)` per hyperstep on
+//!   the measured [`Timeline`], including the pipeline-warmup stalls
+//!   and DMA queueing the closed-form model idealizes away;
+//! * [`Ctx::stream_seek`] invalidates the staged token (the cursor
+//!   moved under it), so the next `move_down` pays a cold, blocking
+//!   fetch and then re-primes the pipeline;
+//! * [`Ctx::stream_move_up`] writes through immediately but charges the
+//!   DMA write asynchronously — writes ride the same per-core engine
+//!   queue and surface as later fill stalls or as drain time at the end
+//!   of the run.
+//!
+//! With `prefetch = false` every `move_down` is a blocking fetch charged
+//! on the compute side (`e·words`), which is the paper's `preload = 0`
+//! ablation: the ledger then records `compute + fetch` per hyperstep
+//! instead of the overlapped `max`.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex, RwLock};
-
-use anyhow::{anyhow, Result};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use crate::bsp::barrier::{Barrier, PoisonOnPanic};
+use crate::bsp::timeline::{HyperstepSpan, Timeline};
 use crate::model::bsps::{HyperstepCost, Ledger};
 use crate::model::cost::{BspCost, CoreStepUsage, SuperstepCost};
 use crate::model::params::{AcceleratorParams, WORD_BYTES};
+use crate::sim::dma::DmaEngine;
+use crate::sim::extmem::{Dir, ExtMemModel, NetState};
+use crate::sim::time::CoreClocks;
+use crate::sim::CLOCK_HZ;
 use crate::stream::{StreamHandle, StreamRegistry};
-use crate::util::pool::scoped_spmd;
+use crate::util::error::{anyhow, Result};
+use crate::util::pool::{scoped_spmd, WorkerPool};
 
 /// A buffered put, applied at the next sync.
 struct PutOp {
@@ -51,9 +81,105 @@ struct GetOp {
 /// A delivered message (BSPlib BSMP flavour, f32 payloads).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Message {
+    /// Sender's pid.
     pub src_pid: usize,
+    /// Caller-defined tag.
     pub tag: u32,
+    /// Message body.
     pub payload: Vec<f32>,
+}
+
+/// State of one staging (back) buffer fill.
+enum FillState {
+    /// No fill in flight and nothing staged.
+    Empty,
+    /// A background fill is running.
+    Filling,
+    /// The staged token, ready to swap in.
+    Ready(Vec<f32>),
+}
+
+/// The staging buffer shared between a core and the fill pool. A
+/// generation counter guards against a stale fill (superseded by a
+/// `seek` or a newer fill) landing after the slot moved on.
+struct FillCell {
+    state: Mutex<(u64, FillState)>,
+    cv: Condvar,
+}
+
+impl FillCell {
+    fn new() -> Self {
+        Self { state: Mutex::new((0, FillState::Empty)), cv: Condvar::new() }
+    }
+
+    /// Open a new fill generation; the returned token must be passed to
+    /// `finish`/`abort`.
+    fn begin(&self) -> u64 {
+        let mut g = self.state.lock().unwrap();
+        g.0 += 1;
+        g.1 = FillState::Filling;
+        g.0
+    }
+
+    /// Complete a fill, unless a newer generation superseded it.
+    fn finish(&self, gen: u64, data: Vec<f32>) {
+        let mut g = self.state.lock().unwrap();
+        if g.0 == gen {
+            g.1 = FillState::Ready(data);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Fail a fill (out-of-range read), unless superseded.
+    fn abort(&self, gen: u64) {
+        let mut g = self.state.lock().unwrap();
+        if g.0 == gen {
+            g.1 = FillState::Empty;
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until generation `gen`'s fill lands; `None` if it aborted
+    /// or was superseded.
+    fn wait_ready(&self, gen: u64) -> Option<Vec<f32>> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if g.0 != gen {
+                return None;
+            }
+            match std::mem::replace(&mut g.1, FillState::Empty) {
+                FillState::Ready(data) => return Some(data),
+                FillState::Empty => return None,
+                FillState::Filling => {
+                    g.1 = FillState::Filling;
+                    g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+    }
+}
+
+/// Per-(core, open stream) prefetch bookkeeping.
+struct StreamSlot {
+    cell: Arc<FillCell>,
+    /// Generation of the in-flight/staged fill.
+    gen: u64,
+    /// Token index the in-flight/staged fill targets.
+    pending_idx: Option<usize>,
+    /// Virtual completion time of that fill on the DMA timeline, cycles.
+    virtual_done: f64,
+}
+
+impl StreamSlot {
+    fn new() -> Self {
+        Self { cell: Arc::new(FillCell::new()), gen: 0, pending_idx: None, virtual_done: 0.0 }
+    }
+}
+
+/// Timeline under construction (leader-only writes at barrier cuts).
+struct TimelineBuild {
+    spans: Vec<HyperstepSpan>,
+    hyper_start_cycles: f64,
 }
 
 /// State shared by the whole gang.
@@ -82,8 +208,22 @@ pub(crate) struct Shared {
     hyper_start: Mutex<usize>,
     /// Per-core local-memory (scratchpad) usage in bytes.
     local_used: Vec<Mutex<usize>>,
-    /// Whether prefetch double-buffering is charged on stream opens.
+    /// Whether the gang runs the double-buffered prefetch executor.
     pub prefetch: bool,
+    /// Per-core virtual clocks (cycles at `sim::CLOCK_HZ`).
+    clocks: Mutex<CoreClocks>,
+    /// Per-core DMA engines carrying the prefetch timeline.
+    dma: Vec<Mutex<DmaEngine>>,
+    /// Link model the DMA timeline is charged with (calibrated to `e`).
+    extmem: ExtMemModel,
+    /// Cycles per FLOP on this machine (`CLOCK_HZ / r`).
+    cycles_per_flop: f64,
+    /// Background threads performing the actual (wall-clock) fills.
+    fill_pool: Option<WorkerPool>,
+    /// Per-core prefetch slots, keyed by stream id.
+    slots: Vec<Mutex<BTreeMap<usize, StreamSlot>>>,
+    /// Measured hyperstep spans.
+    timeline: Mutex<TimelineBuild>,
 }
 
 impl Shared {
@@ -93,8 +233,14 @@ impl Shared {
         prefetch: bool,
     ) -> Self {
         let p = machine.p;
+        let extmem = ExtMemModel::calibrated(&machine);
+        let cycles_per_flop = CLOCK_HZ / machine.r;
+        let fill_pool = if prefetch && streams.is_some() {
+            Some(WorkerPool::new(p.clamp(1, 8)))
+        } else {
+            None
+        };
         Self {
-            machine,
             barrier: Barrier::new(p),
             vars: RwLock::new(BTreeMap::new()),
             puts: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
@@ -109,7 +255,19 @@ impl Shared {
             hyper_start: Mutex::new(0),
             local_used: (0..p).map(|_| Mutex::new(0)).collect(),
             prefetch,
+            clocks: Mutex::new(CoreClocks::new(p)),
+            dma: (0..p).map(|_| Mutex::new(DmaEngine::new())).collect(),
+            extmem,
+            cycles_per_flop,
+            fill_pool,
+            slots: (0..p).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            timeline: Mutex::new(TimelineBuild { spans: Vec::new(), hyper_start_cycles: 0.0 }),
+            machine,
         }
+    }
+
+    fn flops_to_cycles(&self, flops: f64) -> f64 {
+        flops * self.cycles_per_flop
     }
 }
 
@@ -306,9 +464,13 @@ impl Ctx {
         });
     }
 
-    /// Charge `flops` of local work to this superstep.
+    /// Charge `flops` of local work to this superstep. Advances this
+    /// core's virtual clock by the same amount, so charged compute
+    /// overlaps in-flight DMA prefetches on the measured timeline.
     pub fn charge_flops(&self, flops: f64) {
         self.shared.usage[self.pid].lock().unwrap().flops += flops;
+        let cycles = self.shared.flops_to_cycles(flops);
+        self.shared.clocks.lock().unwrap().advance(self.pid, cycles);
     }
 
     // ------------------------------------------------ superstep sync
@@ -318,13 +480,35 @@ impl Ctx {
     /// closed. One barrier crossing: the last arrival applies the queued
     /// operations while the gang is held (§Perf: this halves the
     /// synchronization rounds per superstep).
+    ///
+    /// ```
+    /// use bsps::bsp::run_gang;
+    /// use bsps::model::params::AcceleratorParams;
+    ///
+    /// let mut m = AcceleratorParams::epiphany3();
+    /// m.p = 2;
+    /// let out = run_gang(&m, None, false, |ctx| {
+    ///     ctx.register("x", 1).unwrap();
+    ///     ctx.sync();
+    ///     if ctx.pid() == 0 {
+    ///         ctx.put(1, "x", 0, &[42.0]);
+    ///     }
+    ///     ctx.sync(); // put lands here
+    ///     if ctx.pid() == 1 {
+    ///         assert_eq!(ctx.var("x")[0], 42.0);
+    ///     }
+    /// });
+    /// assert_eq!(out.cost.len(), 2);
+    /// ```
     pub fn sync(&self) {
         let _guard = PoisonOnPanic(&self.shared.barrier);
         self.shared.barrier.wait_leader(|| self.apply_superstep());
     }
 
-    /// Leader-only: apply puts/gets/messages deterministically and close
-    /// the cost record.
+    /// Leader-only: apply puts/gets/messages deterministically, close
+    /// the cost record, and advance every virtual clock through the
+    /// barrier (`max`-combine plus `g·h + l` — the BSP cost arising
+    /// mechanically).
     fn apply_superstep(&self) {
         let sh = &self.shared;
         let vars = sh.vars.read().unwrap();
@@ -378,21 +562,27 @@ impl Ctx {
             .iter()
             .map(|u| std::mem::take(&mut *u.lock().unwrap()))
             .collect();
-        sh.cost.lock().unwrap().push(SuperstepCost::from_cores(&usages));
+        let step = SuperstepCost::from_cores(&usages);
+        sh.cost.lock().unwrap().push(step);
+
+        // Advance the measured timeline through the barrier: all clocks
+        // jump to the maximum plus the communication phase `g·h + l`.
+        let comm_cycles = sh.flops_to_cycles(sh.machine.g * step.h as f64 + sh.machine.l);
+        sh.clocks.lock().unwrap().barrier(comm_cycles);
     }
 
     // ------------------------------------------------ streams
 
-    fn streams(&self) -> &StreamRegistry {
+    fn streams(&self) -> &Arc<StreamRegistry> {
         self.shared
             .streams
-            .as_deref()
+            .as_ref()
             .expect("this gang was started without a stream registry")
     }
 
     /// `bsp_stream_open`. Charges local memory for the token buffer —
-    /// doubled when the gang runs with prefetching, since the buffer
-    /// holding the next token halves the usable space (§2).
+    /// doubled when the gang runs with prefetching, since the staging
+    /// buffer holding the next token halves the usable space (§2).
     pub fn stream_open(&self, stream_id: usize) -> Result<StreamHandle> {
         let h = self.streams().open(stream_id, self.pid)?;
         let factor = if self.shared.prefetch { 2 } else { 1 };
@@ -400,60 +590,254 @@ impl Ctx {
             let _ = self.streams().close(h, self.pid);
             return Err(e);
         }
+        if self.shared.prefetch {
+            self.shared.slots[self.pid]
+                .lock()
+                .unwrap()
+                .insert(h.stream_id, StreamSlot::new());
+        }
         Ok(h)
     }
 
-    /// `bsp_stream_close`; releases the token buffer(s).
+    /// `bsp_stream_close`; releases the token buffer(s) and discards any
+    /// staged prefetch.
     pub fn stream_close(&self, h: StreamHandle) -> Result<()> {
         self.streams().close(h, self.pid)?;
         let factor = if self.shared.prefetch { 2 } else { 1 };
         self.local_free(h.token_bytes * factor);
+        if self.shared.prefetch {
+            self.shared.slots[self.pid].lock().unwrap().remove(&h.stream_id);
+        }
         Ok(())
     }
 
-    /// `bsp_stream_move_down(preload)`: obtain the next token.
+    /// Queue a DMA read of `bytes` on this core's engine at its current
+    /// virtual time; returns the transfer's virtual completion time.
+    /// The one pricing path for both prefetched and cold fetches.
+    fn issue_dma_read(&self, bytes: u64) -> f64 {
+        let sh = &self.shared;
+        let now = sh.clocks.lock().unwrap().now(self.pid);
+        sh.dma[self.pid].lock().unwrap().issue(
+            &sh.extmem,
+            now,
+            Dir::Read,
+            NetState::Contested,
+            bytes,
+        )
+    }
+
+    /// Issue the fill of token `idx` into this core's staging buffer:
+    /// charge the core's DMA engine at the current virtual time and
+    /// dispatch the actual copy to the background fill pool.
+    fn issue_fill(&self, h: StreamHandle, idx: usize) {
+        let sh = &self.shared;
+        let done = self.issue_dma_read(h.token_bytes as u64);
+        let mut slots = sh.slots[self.pid].lock().unwrap();
+        let slot = slots.get_mut(&h.stream_id).expect("open stream has a slot");
+        slot.gen = slot.cell.begin();
+        slot.pending_idx = Some(idx);
+        slot.virtual_done = done;
+        let cell = Arc::clone(&slot.cell);
+        let gen = slot.gen;
+        drop(slots);
+        let reg = Arc::clone(self.streams());
+        let stream_id = h.stream_id;
+        sh.fill_pool
+            .as_ref()
+            .expect("prefetch gang has a fill pool")
+            .submit(move || {
+                let mut staged = Vec::new();
+                match reg.read_token_at(stream_id, idx, &mut staged) {
+                    Ok(_) => cell.finish(gen, staged),
+                    Err(_) => cell.abort(gen),
+                }
+            });
+    }
+
+    /// `bsp_stream_move_down`: obtain the next token into `buf` and
+    /// advance the cursor. Returns the token size in words.
     ///
-    /// Cost model: with `preload = true` the fetch is asynchronous (DMA)
-    /// and its words count toward the hyperstep's overlapped-fetch side
-    /// of Eq. 1; with `preload = false` the core stalls for the fetch,
-    /// which is charged as `e·words` on the compute side (this is what
-    /// the prefetch on/off ablation measures).
-    pub fn stream_move_down(
-        &self,
-        h: StreamHandle,
-        buf: &mut Vec<f32>,
-        preload: bool,
-    ) -> Result<usize> {
-        let words = self.streams().move_down(h, self.pid, buf)?;
-        if preload {
-            *self.shared.fetch_words[self.pid].lock().unwrap() += words as u64;
-        } else {
-            let mut u = self.shared.usage[self.pid].lock().unwrap();
-            u.flops += self.shared.machine.e * words as f64;
+    /// In a prefetch gang this swaps the double buffer: if the token was
+    /// staged by the in-flight fill, the core takes it (stalling only
+    /// until the simulated DMA completes) and immediately issues the
+    /// fill of the following token; a cold read (first token after
+    /// `open` or `seek`) blocks for the full transfer. Consumed words
+    /// are charged to the hyperstep's overlapped-fetch side of Eq. 1.
+    /// Without prefetch the core always blocks and the fetch is charged
+    /// on the compute side as `e·words` — the ablation the paper's
+    /// `preload` flag describes.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use bsps::bsp::run_gang;
+    /// use bsps::model::params::AcceleratorParams;
+    /// use bsps::stream::StreamRegistry;
+    ///
+    /// let mut m = AcceleratorParams::epiphany3();
+    /// m.p = 1;
+    /// let mut reg = StreamRegistry::new(&m);
+    /// let init: Vec<f32> = (0..16).map(|i| i as f32).collect();
+    /// reg.create(16, 4, Some(&init)).unwrap(); // 4 tokens of 4 words
+    /// let out = run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+    ///     let h = ctx.stream_open(0).unwrap();
+    ///     let mut token = Vec::new();
+    ///     let mut sum = 0.0;
+    ///     for _ in 0..4 {
+    ///         ctx.stream_move_down(h, &mut token).unwrap();
+    ///         sum += token.iter().sum::<f32>();
+    ///         ctx.charge_flops(token.len() as f64);
+    ///         ctx.hyperstep_sync();
+    ///     }
+    ///     assert_eq!(sum, 120.0); // 0 + 1 + … + 15
+    ///     ctx.stream_close(h).unwrap();
+    /// });
+    /// assert_eq!(out.ledger.hypersteps.len(), 4);
+    /// assert!(out.timeline.makespan_cycles > 0.0);
+    /// ```
+    pub fn stream_move_down(&self, h: StreamHandle, buf: &mut Vec<f32>) -> Result<usize> {
+        let sh = &self.shared;
+        if !sh.prefetch {
+            // Blocking fetch, charged on the compute side (preload = 0).
+            let words = self.streams().move_down(h, self.pid, buf)?;
+            let stall_flops = sh.machine.e * words as f64;
+            sh.usage[self.pid].lock().unwrap().flops += stall_flops;
+            let cycles = sh.flops_to_cycles(stall_flops);
+            sh.clocks.lock().unwrap().advance(self.pid, cycles);
+            return Ok(words);
+        }
+
+        let reg = self.streams();
+        let cursor = reg.cursor(h, self.pid)?;
+        // Take the staged token if the in-flight fill targets the cursor.
+        let staged = {
+            let mut slots = sh.slots[self.pid].lock().unwrap();
+            let slot = slots.get_mut(&h.stream_id).expect("open stream has a slot");
+            if slot.pending_idx == Some(cursor) {
+                slot.pending_idx = None;
+                Some((Arc::clone(&slot.cell), slot.gen, slot.virtual_done))
+            } else {
+                None
+            }
+        };
+        let words = match staged {
+            Some((cell, gen, virtual_done)) => {
+                // Wall-clock: wait for the background copy (usually done —
+                // it ran while this core computed the previous token).
+                match cell.wait_ready(gen) {
+                    Some(data) => {
+                        *buf = data;
+                        // The swap consumed the cursor's token; advance.
+                        reg.seek(h, self.pid, 1)?;
+                    }
+                    // The fill aborted (should not happen for a validated
+                    // index); fall back to a direct read.
+                    None => {
+                        reg.move_down(h, self.pid, buf)?;
+                    }
+                }
+                // Virtual time: stall only if the DMA is still in flight.
+                sh.clocks.lock().unwrap().wait_until(self.pid, virtual_done);
+                h.token_bytes / WORD_BYTES
+            }
+            None => {
+                // Cold read (post-open or post-seek): block for the full
+                // transfer on the DMA timeline.
+                let words = reg.move_down(h, self.pid, buf)?;
+                let done = self.issue_dma_read((words * WORD_BYTES) as u64);
+                sh.clocks.lock().unwrap().wait_until(self.pid, done);
+                words
+            }
+        };
+        // Either way the words count toward the hyperstep's fetch side.
+        *sh.fetch_words[self.pid].lock().unwrap() += words as u64;
+        // Prime the double buffer with the next token.
+        let next = cursor + 1;
+        if next < reg.token_count(h.stream_id)? {
+            self.issue_fill(h, next);
         }
         Ok(words)
     }
 
-    /// `bsp_stream_move_up`: write a result token back. The DMA write
-    /// overlaps like a prefetch, so its words join the fetch side.
+    /// `bsp_stream_move_up`: write a result token back at the cursor and
+    /// advance. The write is applied immediately (so later readers see
+    /// it) but its DMA transfer is charged asynchronously — the words
+    /// join the hyperstep's overlapped-fetch side, and the transfer
+    /// occupies the core's DMA queue where it delays subsequent
+    /// prefetches and the end-of-run drain.
     pub fn stream_move_up(&self, h: StreamHandle, token: &[f32]) -> Result<()> {
+        let sh = &self.shared;
         self.streams().move_up(h, self.pid, token)?;
-        *self.shared.fetch_words[self.pid].lock().unwrap() += token.len() as u64;
+        if sh.prefetch {
+            // The cursor moved; a staged fill for the old cursor is stale.
+            if let Some(slot) =
+                sh.slots[self.pid].lock().unwrap().get_mut(&h.stream_id)
+            {
+                slot.pending_idx = None;
+            }
+        }
+        *sh.fetch_words[self.pid].lock().unwrap() += token.len() as u64;
+        let now = sh.clocks.lock().unwrap().now(self.pid);
+        sh.dma[self.pid].lock().unwrap().issue(
+            &sh.extmem,
+            now,
+            Dir::Write,
+            NetState::Contested,
+            (token.len() * WORD_BYTES) as u64,
+        );
         Ok(())
     }
 
-    /// `bsp_stream_seek`: cursor update; free (a descriptor write).
+    /// `bsp_stream_seek`: move the cursor by `delta_tokens` (free — a
+    /// descriptor write). Any staged prefetch is invalidated: the next
+    /// `move_down` pays a cold fetch and re-primes the double buffer.
     pub fn stream_seek(&self, h: StreamHandle, delta_tokens: i64) -> Result<()> {
         self.streams().seek(h, self.pid, delta_tokens)?;
+        if self.shared.prefetch {
+            if let Some(slot) =
+                self.shared.slots[self.pid].lock().unwrap().get_mut(&h.stream_id)
+            {
+                slot.pending_idx = None;
+            }
+        }
         Ok(())
     }
 
     // ------------------------------------------------ hypersteps
 
     /// End the current hyperstep (paper §2): a bulk synchronization that
-    /// also closes the hyperstep's ledger row —
-    /// `T_h` = the BSP cost of the supersteps since the last cut, and
-    /// the fetch side = `max_s` (words core `s` prefetched).
+    /// also closes the hyperstep's ledger row — `T_h` = the BSP cost of
+    /// the supersteps since the last cut, the fetch side = `max_s`
+    /// (words core `s` moved through the DMA engines) — and records the
+    /// hyperstep's span on the measured [`Timeline`].
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use bsps::bsp::run_gang;
+    /// use bsps::model::params::AcceleratorParams;
+    /// use bsps::stream::StreamRegistry;
+    ///
+    /// let mut m = AcceleratorParams::epiphany3();
+    /// m.p = 2;
+    /// let mut reg = StreamRegistry::new(&m);
+    /// for _ in 0..2 {
+    ///     reg.create(32, 8, None).unwrap(); // 4 tokens of 8 words per core
+    /// }
+    /// let out = run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+    ///     let h = ctx.stream_open(ctx.pid()).unwrap();
+    ///     let mut token = Vec::new();
+    ///     for _ in 0..4 {
+    ///         ctx.stream_move_down(h, &mut token).unwrap();
+    ///         ctx.charge_flops(2.0 * token.len() as f64);
+    ///         ctx.hyperstep_sync();
+    ///     }
+    ///     ctx.stream_close(h).unwrap();
+    /// });
+    /// // One ledger row and one timeline span per hyperstep.
+    /// assert_eq!(out.ledger.hypersteps.len(), 4);
+    /// assert_eq!(out.timeline.spans.len(), 4);
+    /// // Each hyperstep fetched one 8-word token per core.
+    /// assert!(out.ledger.hypersteps.iter().all(|h| h.fetch_words == 8));
+    /// ```
     pub fn hyperstep_sync(&self) {
         // A single crossing: the leader closes the in-flight superstep
         // *and* cuts the hyperstep ledger while the gang is held.
@@ -478,6 +862,12 @@ impl Ctx {
                 .lock()
                 .unwrap()
                 .push(HyperstepCost { compute_flops: compute, fetch_words: fetch });
+            // Cut the measured timeline (clocks are equal post-barrier).
+            let end = sh.clocks.lock().unwrap().makespan();
+            let mut tl = sh.timeline.lock().unwrap();
+            let span = HyperstepSpan { start_cycles: tl.hyper_start_cycles, end_cycles: end };
+            tl.spans.push(span);
+            tl.hyper_start_cycles = end;
         });
     }
 }
@@ -489,6 +879,8 @@ pub struct RunOutcome {
     pub cost: BspCost,
     /// Hyperstep ledger (empty for plain BSP programs).
     pub ledger: Ledger,
+    /// Measured virtual timeline (per-hyperstep spans + makespan).
+    pub timeline: Timeline,
     /// Host wall-clock of the gang execution.
     pub wall_seconds: f64,
 }
@@ -496,7 +888,23 @@ pub struct RunOutcome {
 /// Run `kernel` in SPMD over the machine's `p` cores.
 ///
 /// `streams`, if given, enables the `stream_*` primitives; `prefetch`
-/// selects the double-buffered cost treatment (see [`Ctx::stream_open`]).
+/// selects the double-buffered overlapped executor (see
+/// [`Ctx::stream_move_down`]).
+///
+/// ```
+/// use bsps::bsp::run_gang;
+/// use bsps::model::params::AcceleratorParams;
+///
+/// let mut m = AcceleratorParams::epiphany3();
+/// m.p = 4;
+/// let out = run_gang(&m, None, false, |ctx| {
+///     ctx.charge_flops(100.0);
+///     ctx.sync();
+/// });
+/// assert_eq!(out.cost.len(), 1);
+/// // 100 FLOPs + l on the virtual timeline, at 5 cycles per FLOP.
+/// assert!((out.timeline.makespan_cycles - (100.0 + m.l) * 5.0).abs() < 1e-6);
+/// ```
 pub fn run_gang<F>(
     machine: &AcceleratorParams,
     streams: Option<Arc<StreamRegistry>>,
@@ -522,9 +930,18 @@ where
     let wall_seconds = start.elapsed().as_secs_f64();
     let shared = Arc::try_unwrap(shared)
         .unwrap_or_else(|_| panic!("gang threads leaked a Ctx"));
+    let clocks_end = shared.clocks.into_inner().unwrap().makespan();
+    let drain = shared
+        .dma
+        .iter()
+        .map(|d| d.lock().unwrap().free_at())
+        .fold(0.0, f64::max);
+    let tl = shared.timeline.into_inner().unwrap();
+    let timeline = Timeline { spans: tl.spans, makespan_cycles: clocks_end.max(drain) };
     RunOutcome {
         cost: shared.cost.into_inner().unwrap(),
         ledger: shared.ledger.into_inner().unwrap(),
+        timeline,
         wall_seconds,
     }
 }
@@ -546,6 +963,7 @@ mod tests {
             assert_eq!(ctx.nprocs(), 4);
         });
         assert!(out.cost.is_empty());
+        assert!(out.timeline.spans.is_empty());
     }
 
     #[test]
@@ -634,6 +1052,28 @@ mod tests {
     }
 
     #[test]
+    fn virtual_clock_tracks_bsp_cost_for_plain_programs() {
+        // With no streams, the measured timeline must equal the BSP cost
+        // exactly: max-combined work plus g·h + l per superstep.
+        let m = machine(2);
+        let out = run_gang(&m, None, false, |ctx| {
+            ctx.register("x", 8).unwrap();
+            ctx.sync();
+            if ctx.pid() == 0 {
+                ctx.put(1, "x", 0, &[0.0; 5]);
+                ctx.charge_flops(100.0);
+            }
+            ctx.sync();
+        });
+        let want_flops = out.cost.total_flops(&m);
+        let got_flops = out.timeline.makespan_flops(&m);
+        assert!(
+            (want_flops - got_flops).abs() < 1e-6,
+            "timeline {got_flops} vs BSP cost {want_flops}"
+        );
+    }
+
+    #[test]
     fn local_memory_budget_enforced() {
         let mut m = machine(1);
         m.local_mem = 64; // 16 words
@@ -672,8 +1112,11 @@ mod tests {
         let out = run_gang(&m, Some(Arc::clone(&reg)), true, |ctx| {
             let h = ctx.stream_open(ctx.pid()).unwrap();
             let mut buf = Vec::new();
-            for _ in 0..4 {
-                ctx.stream_move_down(h, &mut buf, true).unwrap();
+            for t in 0..4 {
+                ctx.stream_move_down(h, &mut buf).unwrap();
+                // The double buffer must deliver the right token.
+                let base = (ctx.pid() * 100 + t * 8) as f32;
+                assert_eq!(buf[0], base, "token {t} content");
                 ctx.charge_flops(2.0 * 8.0); // pretend: 2C flops on the token
                 ctx.hyperstep_sync();
             }
@@ -688,23 +1131,114 @@ mod tests {
         // e=43.4 -> fetch = 347.2 > compute -> all bandwidth heavy
         let s = out.ledger.summarize(&m);
         assert_eq!(s.bandwidth_heavy, 4);
+        // Timeline: one span per hyperstep, monotone and contiguous.
+        assert_eq!(out.timeline.spans.len(), 4);
+        for w in out.timeline.spans.windows(2) {
+            assert_eq!(w[0].end_cycles, w[1].start_cycles);
+        }
     }
 
     #[test]
-    fn non_preload_charges_compute_side() {
+    fn prefetch_timeline_overlaps_to_max_of_compute_and_fetch() {
+        // Bandwidth-heavy stream: tiny compute, e = 43.4 per word. With
+        // double buffering the measured makespan must approach the Eq. 1
+        // (max) total — far below compute + fetch — while the same
+        // workload without prefetch must pay the serial sum.
+        let m = machine(1);
+        let tokens = 16usize;
+        let c = 64usize;
+        let mk_reg = || {
+            let mut reg = StreamRegistry::new(&m);
+            reg.create(tokens * c, c, None).unwrap();
+            Arc::new(reg)
+        };
+        let kernel = |ctx: &mut Ctx| {
+            let h = ctx.stream_open(0).unwrap();
+            let mut buf = Vec::new();
+            for _ in 0..tokens {
+                ctx.stream_move_down(h, &mut buf).unwrap();
+                ctx.charge_flops(2.0 * c as f64);
+                ctx.hyperstep_sync();
+            }
+            ctx.stream_close(h).unwrap();
+        };
+        let on = run_gang(&m, Some(mk_reg()), true, kernel);
+        let off = run_gang(&m, Some(mk_reg()), false, kernel);
+
+        let model_on = on.ledger.total_flops(&m); // Σ max(T_h, e·C_h)
+        let measured_on = on.timeline.makespan_flops(&m);
+        let rel = (measured_on - model_on).abs() / model_on;
+        assert!(rel < 0.2, "measured {measured_on} vs Eq.1 {model_on} (rel {rel})");
+
+        let measured_off = off.timeline.makespan_flops(&m);
+        assert!(
+            measured_off > measured_on,
+            "serial {measured_off} must exceed overlapped {measured_on}"
+        );
+        // And the off-run must track its own (sum-form) ledger.
+        let model_off = off.ledger.total_flops(&m);
+        let rel_off = (measured_off - model_off).abs() / model_off;
+        assert!(rel_off < 0.2, "off: measured {measured_off} vs {model_off}");
+    }
+
+    #[test]
+    fn non_prefetch_charges_compute_side() {
         let m = machine(1);
         let mut reg = StreamRegistry::new(&m);
         reg.create(8, 8, None).unwrap();
         let out = run_gang(&m, Some(Arc::new(reg)), false, |ctx| {
             let h = ctx.stream_open(0).unwrap();
             let mut buf = Vec::new();
-            ctx.stream_move_down(h, &mut buf, false).unwrap();
+            ctx.stream_move_down(h, &mut buf).unwrap();
             ctx.hyperstep_sync();
         });
         let h = &out.ledger.hypersteps[0];
         assert_eq!(h.fetch_words, 0, "no overlapped fetch");
         // compute side carries e·8 = 347.2 plus the sync latency
         assert!(h.compute_flops >= 43.4 * 8.0);
+    }
+
+    #[test]
+    fn seek_invalidates_staged_prefetch() {
+        // Re-reading tokens via seek must deliver correct data even
+        // though a prefetch for the *sequential* next token is staged.
+        let m = machine(1);
+        let mut reg = StreamRegistry::new(&m);
+        let init: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        reg.create(32, 8, Some(&init)).unwrap();
+        let out = run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+            let h = ctx.stream_open(0).unwrap();
+            let mut buf = Vec::new();
+            ctx.stream_move_down(h, &mut buf).unwrap();
+            assert_eq!(buf[0], 0.0);
+            ctx.stream_move_down(h, &mut buf).unwrap();
+            assert_eq!(buf[0], 8.0);
+            ctx.stream_seek(h, -2).unwrap(); // rewind: staged token 2 is stale
+            ctx.stream_move_down(h, &mut buf).unwrap();
+            assert_eq!(buf[0], 0.0, "post-seek read must not see the staged token");
+            ctx.stream_move_down(h, &mut buf).unwrap();
+            assert_eq!(buf[0], 8.0);
+            ctx.hyperstep_sync();
+            ctx.stream_close(h).unwrap();
+        });
+        assert_eq!(out.ledger.hypersteps[0].fetch_words, 4 * 8);
+    }
+
+    #[test]
+    fn move_up_then_move_down_sees_written_token() {
+        // Writes go through immediately; interleaved reads stay correct.
+        let m = machine(1);
+        let mut reg = StreamRegistry::new(&m);
+        reg.create(16, 4, None).unwrap();
+        run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+            let h = ctx.stream_open(0).unwrap();
+            ctx.stream_move_up(h, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+            ctx.stream_seek(h, -1).unwrap();
+            let mut buf = Vec::new();
+            ctx.stream_move_down(h, &mut buf).unwrap();
+            assert_eq!(buf, vec![1.0, 2.0, 3.0, 4.0]);
+            ctx.stream_close(h).unwrap();
+        });
     }
 
     #[test]

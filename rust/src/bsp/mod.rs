@@ -6,9 +6,14 @@
 //! * [`engine`]  — the superstep engine: registered variables, buffered
 //!   `put`/`get`, BSMP-style messages, `sync`, per-superstep cost
 //!   records, scratchpad budgeting, and the `stream_*`/`hyperstep_sync`
-//!   primitives used by BSPS programs.
+//!   primitives used by BSPS programs — including the double-buffered
+//!   prefetch executor that overlaps token fills with compute.
+//! * [`timeline`] — the measured virtual timeline those overlapped runs
+//!   produce (per-hyperstep spans, makespan incl. DMA drain).
 
 pub mod barrier;
 pub mod engine;
+pub mod timeline;
 
 pub use engine::{run_gang, Ctx, Message, RunOutcome};
+pub use timeline::{HyperstepSpan, Timeline};

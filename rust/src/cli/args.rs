@@ -2,7 +2,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -46,14 +46,17 @@ impl Args {
         self.positional.first().map(|s| s.as_str())
     }
 
+    /// Whether bare `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Parse `--name` as an integer, with a default.
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.options.get(name) {
             None => Ok(default),
@@ -63,6 +66,7 @@ impl Args {
         }
     }
 
+    /// Parse `--name` as a number, with a default.
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.options.get(name) {
             None => Ok(default),

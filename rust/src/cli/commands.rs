@@ -1,6 +1,6 @@
 //! Subcommand implementations for the `bsps` binary.
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
 use crate::cli::args::Args;
 use crate::coordinator::BspsEnv;

@@ -9,7 +9,7 @@
 //! local_mem = 65536
 //! ```
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 
 use crate::config::toml::{parse, Document};
 use crate::model::params::AcceleratorParams;
@@ -17,6 +17,7 @@ use crate::model::params::AcceleratorParams;
 /// Parsed machine configuration.
 #[derive(Debug, Clone)]
 pub struct MachineConfig {
+    /// The resolved machine parameters.
     pub params: AcceleratorParams,
 }
 

@@ -6,20 +6,25 @@
 //! multi-line strings and inline tables are out of scope.
 
 use std::collections::BTreeMap;
-
-use thiserror::Error;
+use std::fmt;
 
 /// A parsed scalar or flat array value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// A boolean.
     Bool(bool),
+    /// A flat array.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// String accessor.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -27,6 +32,7 @@ impl Value {
         }
     }
 
+    /// Integer accessor.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -43,6 +49,7 @@ impl Value {
         }
     }
 
+    /// Boolean accessor.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -50,6 +57,7 @@ impl Value {
         }
     }
 
+    /// Array accessor.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -62,19 +70,33 @@ impl Value {
 pub type Document = BTreeMap<String, BTreeMap<String, Value>>;
 
 /// Parse errors with line numbers.
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum TomlError {
-    #[error("line {0}: expected `key = value`")]
+    /// A line that is neither a section header nor `key = value`.
     BadPair(usize),
-    #[error("line {0}: unterminated string")]
+    /// A string literal with no closing quote.
     UnterminatedString(usize),
-    #[error("line {0}: bad value `{1}`")]
+    /// A value that parses as none of the supported types.
     BadValue(usize, String),
-    #[error("line {0}: bad section header")]
+    /// A malformed `[section]` header.
     BadSection(usize),
-    #[error("line {0}: duplicate key `{1}`")]
+    /// The same key appearing twice in one table.
     DuplicateKey(usize, String),
 }
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TomlError::BadPair(l) => write!(f, "line {l}: expected `key = value`"),
+            TomlError::UnterminatedString(l) => write!(f, "line {l}: unterminated string"),
+            TomlError::BadValue(l, v) => write!(f, "line {l}: bad value `{v}`"),
+            TomlError::BadSection(l) => write!(f, "line {l}: bad section header"),
+            TomlError::DuplicateKey(l, k) => write!(f, "line {l}: duplicate key `{k}`"),
+        }
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 fn strip_comment(line: &str) -> &str {
     // A `#` outside a string starts a comment.

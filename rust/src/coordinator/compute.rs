@@ -14,7 +14,7 @@
 //! caller can charge it to the BSP cost (`2k³` for a `k×k` block
 //! product, `2C` per token pair for the inner product, …).
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 use crate::runtime::{HostTensor, PjrtEngine};
 

@@ -9,15 +9,20 @@ use crate::coordinator::compute::ComputeBackend;
 use crate::coordinator::report::Report;
 use crate::model::params::AcceleratorParams;
 use crate::stream::StreamRegistry;
+use crate::util::error::Result;
 
 /// Execution environment: the machine model, the token-compute backend,
 /// and the prefetch policy.
 #[derive(Clone)]
 pub struct BspsEnv {
+    /// The machine model runs are costed on.
     pub machine: AcceleratorParams,
+    /// The per-token compute backend (native loops or PJRT artifacts).
     pub backend: Arc<ComputeBackend>,
-    /// Whether `move_down(preload=true)` overlap is enabled; also
-    /// doubles the scratchpad charge per open stream (§2).
+    /// Whether the gang runs the double-buffered prefetch executor
+    /// (token fills overlap compute); also doubles the scratchpad
+    /// charge per open stream (§2). Off = the paper's `preload = 0`
+    /// ablation: every fetch blocks and lands on the compute side.
     pub prefetch: bool,
 }
 
@@ -28,7 +33,7 @@ impl BspsEnv {
     }
 
     /// PJRT-backend environment (loads `artifacts/`).
-    pub fn pjrt(machine: AcceleratorParams, artifact_dir: &str) -> anyhow::Result<Self> {
+    pub fn pjrt(machine: AcceleratorParams, artifact_dir: &str) -> Result<Self> {
         Ok(Self {
             machine,
             backend: Arc::new(ComputeBackend::pjrt(artifact_dir)?),
@@ -83,7 +88,7 @@ mod tests {
             let mut tok = Vec::new();
             let mut acc = 0.0f32;
             for _ in 0..4 {
-                ctx.stream_move_down(h, &mut tok, true).unwrap();
+                ctx.stream_move_down(h, &mut tok).unwrap();
                 let (next, flops) = backend.inprod_partial(acc, &tok, &tok).unwrap();
                 acc = next;
                 ctx.charge_flops(flops);
@@ -115,7 +120,7 @@ mod tests {
             let h = ctx.stream_open(0).unwrap();
             let mut tok = Vec::new();
             for _ in 0..8 {
-                ctx.stream_move_down(h, &mut tok, true).unwrap();
+                ctx.stream_move_down(h, &mut tok).unwrap();
                 let (_, flops) = backend.inprod_partial(0.0, &tok, &tok).unwrap();
                 ctx.charge_flops(flops);
                 ctx.hyperstep_sync();
@@ -129,7 +134,7 @@ mod tests {
             let h = ctx.stream_open(0).unwrap();
             let mut tok = Vec::new();
             for _ in 0..8 {
-                ctx.stream_move_down(h, &mut tok, false).unwrap();
+                ctx.stream_move_down(h, &mut tok).unwrap();
                 let (_, flops) = backend.inprod_partial(0.0, &tok, &tok).unwrap();
                 ctx.charge_flops(flops);
                 ctx.hyperstep_sync();

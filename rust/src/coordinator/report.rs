@@ -19,10 +19,15 @@ pub struct Report {
     pub bsps_flops: f64,
     /// Eq. 1 BSPS cost in simulated seconds (via `r`).
     pub sim_seconds: f64,
+    /// Measured makespan of the overlapped-prefetch timeline, simulated
+    /// seconds (virtual clocks + DMA engines; see `bsp::timeline`).
+    pub measured_seconds: f64,
     /// Ledger aggregate (hypersteps, heavy-side counts, …).
     pub ledger: LedgerSummary,
     /// The full per-hyperstep ledger (for traces and deep analysis).
     pub rows: crate::model::bsps::Ledger,
+    /// The measured per-hyperstep timeline.
+    pub timeline: crate::bsp::Timeline,
     /// Host wall-clock spent executing the gang.
     pub wall_seconds: f64,
 }
@@ -37,9 +42,22 @@ impl Report {
             bsp_flops: out.cost.total_flops(m),
             bsps_flops: ledger.total_flops,
             sim_seconds: ledger.total_seconds,
+            measured_seconds: out.timeline.makespan_seconds(),
             ledger,
             rows: out.ledger.clone(),
+            timeline: out.timeline.clone(),
             wall_seconds: out.wall_seconds,
+        }
+    }
+
+    /// Measured-over-model ratio: how closely the overlapped timeline
+    /// tracked the Eq. 1 prediction (1.0 = exact; slightly above 1 is
+    /// normal — pipeline warm-up stalls the model ignores).
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.sim_seconds > 0.0 {
+            self.measured_seconds / self.sim_seconds
+        } else {
+            1.0
         }
     }
 
@@ -47,12 +65,13 @@ impl Report {
     pub fn render(&self) -> String {
         format!(
             "machine={} hypersteps={} supersteps={} \
-             bsps_cost={} sim_time={} bw_heavy={} comp_heavy={} wall={}",
+             bsps_cost={} sim_time={} measured={} bw_heavy={} comp_heavy={} wall={}",
             self.machine_name,
             self.ledger.hypersteps,
             self.supersteps,
             humanfmt::flops(self.bsps_flops),
             humanfmt::seconds(self.sim_seconds),
+            humanfmt::seconds(self.measured_seconds),
             self.ledger.bandwidth_heavy,
             self.ledger.computation_heavy,
             humanfmt::seconds(self.wall_seconds),
@@ -73,14 +92,20 @@ mod tests {
         cost.push(SuperstepCost { w_max: 1000.0, h: 0 });
         let mut ledger = Ledger::new();
         ledger.push(HyperstepCost { compute_flops: 1136.0, fetch_words: 10 });
-        let out = RunOutcome { cost, ledger, wall_seconds: 0.5 };
+        let timeline = crate::bsp::Timeline {
+            spans: Vec::new(),
+            makespan_cycles: 1136.0 * 5.0,
+        };
+        let out = RunOutcome { cost, ledger, timeline, wall_seconds: 0.5 };
         let r = Report::from_outcome(&m, &out);
         assert_eq!(r.supersteps, 1);
         assert!((r.bsp_flops - 1136.0).abs() < 1e-9);
         assert!((r.bsps_flops - 1136.0).abs() < 1e-9); // compute heavy
         assert_eq!(r.ledger.computation_heavy, 1);
+        assert!((r.overlap_ratio() - 1.0).abs() < 1e-9);
         let s = r.render();
         assert!(s.contains("machine=epiphany3"));
         assert!(s.contains("hypersteps=1"));
+        assert!(s.contains("measured="));
     }
 }

@@ -8,7 +8,7 @@
 
 use std::io::Write;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::model::bsps::{HeavySide, Ledger};
 use crate::model::params::AcceleratorParams;
@@ -16,12 +16,17 @@ use crate::model::params::AcceleratorParams;
 /// One row of the hyperstep timeline.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TraceRow {
+    /// Hyperstep index.
     pub hyperstep: usize,
     /// Virtual start/end of the hyperstep, seconds.
     pub start_s: f64,
+    /// Virtual end of the hyperstep, seconds.
     pub end_s: f64,
+    /// Compute side `T_h`, FLOPs.
     pub compute_flops: f64,
+    /// Overlapped fetch words.
     pub fetch_words: u64,
+    /// Which side of Eq. 1's max bound the hyperstep.
     pub side: HeavySide,
     /// Time the non-binding side idles, seconds (overlap slack).
     pub slack_s: f64,

@@ -14,15 +14,18 @@
 //!   B_12 …`; the whole stream is looped `M` times via `seek`.
 //! * `Σ^C_{st}` — an output stream of `M²` tokens written row-major.
 
-use anyhow::{ensure, Result};
+use crate::util::error::{ensure, Result};
 
 use crate::stream::StreamRegistry;
 
 /// Stream ids of a Cannon run, per core (indexed by `pid = s·N + t`).
 #[derive(Debug, Clone)]
 pub struct CannonStreams {
+    /// Per-core `A` stream ids, indexed by pid.
     pub a_ids: Vec<usize>,
+    /// Per-core `B` stream ids, indexed by pid.
     pub b_ids: Vec<usize>,
+    /// Per-core `C` (output) stream ids, indexed by pid.
     pub c_ids: Vec<usize>,
     /// Matrix size `n`.
     pub n: usize,

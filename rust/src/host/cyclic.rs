@@ -3,7 +3,7 @@
 //! Component `v_i` is assigned to core `s = i mod p`; each core's
 //! components are then cut into tokens of `C` words.
 
-use anyhow::{ensure, Result};
+use crate::util::error::{ensure, Result};
 
 use crate::stream::StreamRegistry;
 

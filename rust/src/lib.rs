@@ -20,8 +20,10 @@
 //! Python never runs on the request path: the Rust binary loads
 //! `artifacts/*.hlo.txt` through PJRT (`runtime`) and is self-contained.
 //!
-//! See `DESIGN.md` for the full system inventory and the per-experiment
-//! index mapping every paper table/figure to a module and bench target.
+//! See `docs/ARCHITECTURE.md` for the paper-section → module map and
+//! the per-experiment index mapping tables/figures to bench targets.
+
+#![warn(missing_docs)]
 
 pub mod algos;
 pub mod bsp;

@@ -65,16 +65,22 @@ impl HyperstepCost {
 /// Ledger of a whole BSPS program: one row per hyperstep.
 #[derive(Debug, Clone, Default)]
 pub struct Ledger {
+    /// One cost row per hyperstep, in order.
     pub hypersteps: Vec<HyperstepCost>,
 }
 
 /// Aggregate view of a [`Ledger`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LedgerSummary {
+    /// Number of hypersteps.
     pub hypersteps: usize,
+    /// Eq. 1 total, FLOPs.
     pub total_flops: f64,
+    /// Eq. 1 total in seconds via `r`.
     pub total_seconds: f64,
+    /// Hypersteps whose fetch side bound the max.
     pub bandwidth_heavy: usize,
+    /// Hypersteps whose compute side bound the max.
     pub computation_heavy: usize,
     /// Total compute FLOPs across hypersteps (Σ T_h).
     pub compute_flops: f64,
@@ -83,10 +89,12 @@ pub struct LedgerSummary {
 }
 
 impl Ledger {
+    /// An empty ledger.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one hyperstep's cost row.
     pub fn push(&mut self, h: HyperstepCost) {
         self.hypersteps.push(h);
     }

@@ -15,16 +15,22 @@ use crate::util::fit::{linear_fit, LineFit};
 /// One core-to-core write measurement: message size and wall time.
 #[derive(Debug, Clone, Copy)]
 pub struct CommSample {
+    /// Words transferred.
     pub words: u64,
+    /// Measured transfer time, seconds.
     pub seconds: f64,
 }
 
 /// The calibrated parameters plus fit diagnostics.
 #[derive(Debug, Clone, Copy)]
 pub struct Calibration {
+    /// Fitted external-memory inverse bandwidth, FLOP/word.
     pub e: f64,
+    /// Fitted NoC inverse bandwidth, FLOP/word.
     pub g: f64,
+    /// Fitted synchronization latency, FLOP.
     pub l: f64,
+    /// The underlying line fit (exposes r-squared).
     pub fit: LineFit,
 }
 

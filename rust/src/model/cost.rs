@@ -45,10 +45,12 @@ impl SuperstepCost {
 /// Accumulated BSP cost of a whole program.
 #[derive(Debug, Clone, Default)]
 pub struct BspCost {
+    /// Closed superstep records, in order.
     pub supersteps: Vec<SuperstepCost>,
 }
 
 impl BspCost {
+    /// An empty cost record.
     pub fn new() -> Self {
         Self::default()
     }
@@ -73,6 +75,7 @@ impl BspCost {
         self.supersteps.len()
     }
 
+    /// Whether no superstep has closed yet.
     pub fn is_empty(&self) -> bool {
         self.supersteps.is_empty()
     }

@@ -13,19 +13,23 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 
 /// Element type of a tensor (the two the entry points use).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// Single-precision float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
 /// Shape + dtype of one tensor.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSig {
+    /// Element type.
     pub dtype: DType,
+    /// Dimensions (empty = scalar).
     pub dims: Vec<usize>,
 }
 
@@ -62,14 +66,18 @@ impl TensorSig {
 /// Signature of one entry point.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Signature {
+    /// Input tensor signatures, in order.
     pub inputs: Vec<TensorSig>,
+    /// Output tensor signatures.
     pub outputs: Vec<TensorSig>,
 }
 
 /// Parsed manifest: entry-point name → signature, plus artifact paths.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the artifacts live in.
     pub dir: PathBuf,
+    /// Entry-point name to signature.
     pub entries: BTreeMap<String, Signature>,
 }
 

@@ -8,24 +8,28 @@
 //! dispatch so a bad call fails with a readable error instead of an XLA
 //! abort.
 
+#[cfg(feature = "xla")]
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 
 use crate::runtime::artifact::{DType, Manifest, TensorSig};
 
 /// A host-side tensor crossing the engine channel.
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostTensor {
+    /// f32 data + dims, row-major.
     F32(Vec<f32>, Vec<usize>),
+    /// i32 data + dims, row-major.
     I32(Vec<i32>, Vec<usize>),
 }
 
 impl HostTensor {
+    /// This tensor's shape + dtype signature.
     pub fn sig(&self) -> TensorSig {
         match self {
             HostTensor::F32(_, dims) => TensorSig { dtype: DType::F32, dims: dims.clone() },
@@ -33,6 +37,7 @@ impl HostTensor {
         }
     }
 
+    /// Total element count.
     pub fn elems(&self) -> usize {
         match self {
             HostTensor::F32(v, _) => v.len(),
@@ -49,6 +54,7 @@ impl HostTensor {
         }
     }
 
+    #[cfg(feature = "xla")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let lit = match self {
             HostTensor::F32(v, dims) => {
@@ -63,6 +69,7 @@ impl HostTensor {
         Ok(lit)
     }
 
+    #[cfg(feature = "xla")]
     fn from_literal(lit: &xla::Literal, sig: &TensorSig) -> Result<Self> {
         Ok(match sig.dtype {
             DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?, sig.dims.clone()),
@@ -149,6 +156,23 @@ impl PjrtEngine {
     }
 }
 
+/// Without the `xla` feature (the default in this offline build) the
+/// engine thread still runs, but every request fails with a readable
+/// error telling the caller to use the native backend. The manifest
+/// parsing, shape validation, and threading model stay fully exercised.
+#[cfg(not(feature = "xla"))]
+fn engine_loop(rx: mpsc::Receiver<Request>, _manifest: Arc<Manifest>) {
+    for req in rx {
+        let _ = req.reply.send(Err(anyhow!(
+            "`{}`: this build has no XLA/PJRT runtime (crate feature `xla` \
+             is off — the offline toolchain ships no third-party crates); \
+             use ComputeBackend::Native",
+            req.name
+        )));
+    }
+}
+
+#[cfg(feature = "xla")]
 fn engine_loop(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
@@ -168,6 +192,7 @@ fn engine_loop(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>) {
     }
 }
 
+#[cfg(feature = "xla")]
 fn serve(
     client: &xla::PjRtClient,
     cache: &mut BTreeMap<String, xla::PjRtLoadedExecutable>,

@@ -18,14 +18,25 @@ pub mod engine;
 pub use artifact::{parse_manifest, DType, Manifest, Signature, TensorSig};
 pub use engine::{HostTensor, PjrtEngine};
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Smoke check that the PJRT CPU client comes up.
+#[cfg(feature = "xla")]
 pub fn smoke() -> Result<String> {
     let client = xla::PjRtClient::cpu()?;
     Ok(format!(
         "platform={} devices={}",
         client.platform_name(),
         client.device_count()
+    ))
+}
+
+/// Smoke check stub: this build carries no XLA/PJRT runtime (the
+/// offline toolchain ships no third-party crates; enable the `xla`
+/// feature after vendoring the crate to get the real client).
+#[cfg(not(feature = "xla"))]
+pub fn smoke() -> Result<String> {
+    Err(crate::anyhow!(
+        "no XLA/PJRT runtime in this build (crate feature `xla` is off)"
     ))
 }

@@ -20,7 +20,9 @@ pub struct Transfer {
     pub issued_at: f64,
     /// Virtual time it completes, cycles.
     pub completes_at: f64,
+    /// Transfer size, bytes.
     pub bytes: u64,
+    /// Transfer direction.
     pub dir: Dir,
 }
 
@@ -40,6 +42,7 @@ impl Default for DmaEngine {
 }
 
 impl DmaEngine {
+    /// An idle engine at virtual time 0.
     pub fn new() -> Self {
         Self { busy_until: 0.0, log: Vec::new() }
     }

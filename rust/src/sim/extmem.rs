@@ -22,14 +22,18 @@ use crate::sim::CLOCK_HZ;
 /// core's DMA engine).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Actor {
+    /// The CPU core itself (load/store loop).
     Core,
+    /// The core's DMA engine (block transfer).
     Dma,
 }
 
 /// Transfer direction relative to the core (read = DRAM→core).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dir {
+    /// DRAM to core.
     Read,
+    /// Core to DRAM.
     Write,
 }
 
@@ -37,7 +41,9 @@ pub enum Dir {
 /// `Contested` = all cores transfer simultaneously.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum NetState {
+    /// A single core is transferring.
     Free,
+    /// All cores transfer simultaneously.
     Contested,
 }
 
@@ -45,13 +51,21 @@ pub enum NetState {
 #[derive(Debug, Clone)]
 pub struct ExtMemModel {
     // Table 1 asymptotic bandwidths.
+    /// Core-issued read, free network (bytes/s).
     pub core_read_free: f64,
+    /// Core-issued read, contested network (bytes/s).
     pub core_read_contested: f64,
+    /// Core-issued write, free network (bytes/s).
     pub core_write_free: f64,
+    /// Core-issued write, contested network (bytes/s).
     pub core_write_contested: f64,
+    /// DMA read, free network (bytes/s).
     pub dma_read_free: f64,
+    /// DMA read, contested network (bytes/s).
     pub dma_read_contested: f64,
+    /// DMA write, free network (bytes/s).
     pub dma_write_free: f64,
+    /// DMA write, contested network (bytes/s).
     pub dma_write_contested: f64,
     /// Fixed per-transfer setup cost, cycles (core-issued).
     pub core_overhead_cycles: f64,
@@ -89,6 +103,28 @@ impl ExtMemModel {
             write_buffer_bytes: 1024,
             write_buffered_speed: 500.0e6,
             write_drain_speed: 150.0e6,
+        }
+    }
+
+    /// A link model consistent with a machine's calibrated `e`: the
+    /// contested DMA read/write bandwidths are set so that a `W`-word
+    /// DMA transfer costs exactly `e·W` FLOPs of core time (the paper's
+    /// §5 derivation run backwards, `bw = r·WORD_BYTES/e`), and the
+    /// per-transfer descriptor overhead is zeroed — Eq. 1 folds it into
+    /// `l`. This is the model the gang engine charges its prefetch
+    /// timeline with, so the measured hyperstep spans can be compared
+    /// against `model::bsps` predictions exactly, for *any* machine
+    /// preset (not just the Epiphany-III the Table 1 constants match).
+    pub fn calibrated(machine: &crate::model::params::AcceleratorParams) -> Self {
+        let bw = machine.r * crate::model::params::WORD_BYTES as f64 / machine.e.max(1e-12);
+        Self {
+            dma_read_contested: bw,
+            dma_write_contested: bw,
+            dma_overhead_cycles: 0.0,
+            // DMA block writes take the burst path; zero the restart
+            // penalty too so writes are exactly e·W like reads.
+            burst_restart_cycles: 0.0,
+            ..Self::epiphany3()
         }
     }
 
@@ -240,6 +276,33 @@ mod tests {
         let free = m.measured_speed(Actor::Dma, Dir::Write, NetState::Free, 1 << 20, true);
         let cont = m.measured_speed(Actor::Dma, Dir::Write, NetState::Contested, 1 << 20, true);
         assert!(free / cont > 10.0, "free={free} contested={cont}");
+    }
+
+    #[test]
+    fn calibrated_model_charges_exactly_e_per_word() {
+        use crate::model::params::{AcceleratorParams, WORD_BYTES};
+        for machine in [AcceleratorParams::epiphany3(), AcceleratorParams::epiphany5()] {
+            let mem = ExtMemModel::calibrated(&machine);
+            // Large enough to cross burst windows: the write path must
+            // still be exactly e·W (no restart surcharge).
+            let words = 4096u64;
+            // e·W FLOPs at r FLOP/s on a CLOCK_HZ clock.
+            let want = machine.e * words as f64 * (CLOCK_HZ / machine.r);
+            for (dir, burst) in [(Dir::Read, false), (Dir::Write, true)] {
+                let cycles = mem.transfer_cycles(
+                    Actor::Dma,
+                    dir,
+                    NetState::Contested,
+                    words * WORD_BYTES as u64,
+                    burst,
+                );
+                assert!(
+                    (cycles - want).abs() / want < 1e-12,
+                    "{} {dir:?}: {cycles} vs {want}",
+                    machine.name
+                );
+            }
+        }
     }
 
     #[test]

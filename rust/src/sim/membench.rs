@@ -17,9 +17,13 @@ use crate::sim::{cycles_to_seconds, CLOCK_HZ};
 /// One row of Table 1 (speeds in bytes/s per core).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Table1Row {
+    /// Who performs the transfer.
     pub actor: Actor,
+    /// Network state of the row.
     pub state: NetState,
+    /// Measured read speed, bytes/s.
     pub read_bps: f64,
+    /// Measured write speed, bytes/s.
     pub write_bps: f64,
 }
 
@@ -57,9 +61,13 @@ pub fn table1(mem: &ExtMemModel) -> Vec<Table1Row> {
 /// One point of Fig. 4: speed of a single transfer of `bytes` bytes.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Fig4Point {
+    /// Transfer size, bytes.
     pub bytes: u64,
+    /// Measured read speed, bytes/s.
     pub read_bps: f64,
+    /// Measured plain-write speed, bytes/s.
     pub write_bps: f64,
+    /// Measured burst-path write speed, bytes/s.
     pub write_burst_bps: f64,
 }
 

@@ -14,11 +14,13 @@ pub struct CoreClocks {
 }
 
 impl CoreClocks {
+    /// `p` clocks at time 0.
     pub fn new(p: usize) -> Self {
         assert!(p > 0);
         Self { cycles: vec![0.0; p] }
     }
 
+    /// Number of cores.
     pub fn p(&self) -> usize {
         self.cycles.len()
     }

@@ -1,30 +1,78 @@
 //! Stream storage and the `bsp_stream_*` primitive implementations.
+//!
+//! The registry is the host-side view of the external memory pool `E`:
+//! streams are created here, then opened and walked token by token from
+//! inside a gang (usually through the [`crate::bsp::Ctx`] wrappers,
+//! which add cost accounting and double-buffered prefetching on top).
+//!
+//! ```
+//! use bsps::stream::StreamRegistry;
+//!
+//! let mut reg = StreamRegistry::unbounded();
+//! // 4 tokens of 2 words each.
+//! let id = reg.create(8, 2, Some(&[1.0, 2.0, 3.0, 4.0])).unwrap();
+//! let h = reg.open(id, 0).unwrap();
+//! let mut token = Vec::new();
+//! reg.move_down(h, 0, &mut token).unwrap();
+//! assert_eq!(token, vec![1.0, 2.0]);
+//! reg.seek(h, 0, 1).unwrap(); // skip a token
+//! reg.move_down(h, 0, &mut token).unwrap();
+//! assert_eq!(token, vec![0.0, 0.0]); // zero-extended past the init data
+//! reg.close(h, 0).unwrap();
+//! ```
 
+use std::fmt;
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Mutex;
-
-use thiserror::Error;
 
 use crate::model::params::{AcceleratorParams, WORD_BYTES};
 
 /// Errors from stream primitives (mirroring the C API's error returns).
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum StreamError {
-    #[error("stream {0} does not exist")]
+    /// The stream id was never created.
     NoSuchStream(usize),
-    #[error("stream {0} is already open (by core {1})")]
+    /// `open` on a stream already held by the given core.
     AlreadyOpen(usize, i64),
-    #[error("stream {0} is not open by core {1}")]
+    /// An operation by a core that does not hold the stream.
     NotOpenByCaller(usize, usize),
-    #[error("cursor out of range on stream {0}: token {1}, stream has {2}")]
+    /// The cursor would leave `0..=ntokens` (stream id, target, ntokens).
     CursorOutOfRange(usize, i64, usize),
-    #[error("token size mismatch on stream {0}: got {1} words, token is {2}")]
+    /// `move_up` with a token of the wrong size (stream id, got, want).
     TokenSizeMismatch(usize, usize, usize),
-    #[error("external memory exhausted: {0} + {1} words exceeds E = {2}")]
+    /// `create` would exceed the pool capacity (used, requested, E).
     ExtMemExhausted(usize, usize, usize),
-    #[error("stream total size {0} not a multiple of token size {1}")]
+    /// `create` with a total size not divisible by the token size.
     RaggedStream(usize, usize),
 }
+
+impl fmt::Display for StreamError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StreamError::NoSuchStream(id) => write!(f, "stream {id} does not exist"),
+            StreamError::AlreadyOpen(id, core) => {
+                write!(f, "stream {id} is already open (by core {core})")
+            }
+            StreamError::NotOpenByCaller(id, core) => {
+                write!(f, "stream {id} is not open by core {core}")
+            }
+            StreamError::CursorOutOfRange(id, tok, n) => {
+                write!(f, "cursor out of range on stream {id}: token {tok}, stream has {n}")
+            }
+            StreamError::TokenSizeMismatch(id, got, want) => {
+                write!(f, "token size mismatch on stream {id}: got {got} words, token is {want}")
+            }
+            StreamError::ExtMemExhausted(used, req, cap) => {
+                write!(f, "external memory exhausted: {used} + {req} words exceeds E = {cap}")
+            }
+            StreamError::RaggedStream(total, tok) => {
+                write!(f, "stream total size {total} not a multiple of token size {tok}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
 
 /// One stream in external memory.
 struct StreamState {
@@ -37,6 +85,28 @@ struct StreamState {
     cursor: Mutex<usize>,
 }
 
+impl StreamState {
+    /// Copy token `idx` into `buf` (the one token-read path, shared by
+    /// the blocking `move_down` and the prefetcher's `read_token_at`).
+    /// Returns the token size in words.
+    fn copy_token(
+        &self,
+        id: usize,
+        idx: usize,
+        buf: &mut Vec<f32>,
+    ) -> Result<usize, StreamError> {
+        let data = self.data.lock().unwrap();
+        let ntokens = data.len() / self.token_words;
+        if idx >= ntokens {
+            return Err(StreamError::CursorOutOfRange(id, idx as i64, ntokens));
+        }
+        let start = idx * self.token_words;
+        buf.clear();
+        buf.extend_from_slice(&data[start..start + self.token_words]);
+        Ok(self.token_words)
+    }
+}
+
 /// Host-side registry of all streams (the external memory pool).
 pub struct StreamRegistry {
     streams: Vec<StreamState>,
@@ -47,6 +117,7 @@ pub struct StreamRegistry {
 /// An open stream handle (returned by `open`, consumed by ops).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct StreamHandle {
+    /// Id of the opened stream.
     pub stream_id: usize,
     /// Max token size in bytes (the C API's open return value).
     pub token_bytes: usize,
@@ -106,6 +177,7 @@ impl StreamRegistry {
         self.streams.len()
     }
 
+    /// Whether no stream has been created.
     pub fn is_empty(&self) -> bool {
         self.streams.is_empty()
     }
@@ -170,16 +242,9 @@ impl StreamRegistry {
     ) -> Result<usize, StreamError> {
         let st = self.check_open(h, core)?;
         let mut cursor = st.cursor.lock().unwrap();
-        let data = st.data.lock().unwrap();
-        let ntokens = data.len() / st.token_words;
-        if *cursor >= ntokens {
-            return Err(StreamError::CursorOutOfRange(h.stream_id, *cursor as i64, ntokens));
-        }
-        let start = *cursor * st.token_words;
-        buf.clear();
-        buf.extend_from_slice(&data[start..start + st.token_words]);
+        let words = st.copy_token(h.stream_id, *cursor, buf)?;
         *cursor += 1;
-        Ok(st.token_words)
+        Ok(words)
     }
 
     /// `bsp_stream_move_up`: write `token` at the cursor and advance.
@@ -227,6 +292,28 @@ impl StreamRegistry {
         }
         *cursor = target as usize;
         Ok(())
+    }
+
+    /// Current cursor (next-token index) of an open stream — the token
+    /// the next `move_down`/`move_up` will touch. Used by the prefetch
+    /// engine to decide which token to stage next.
+    pub fn cursor(&self, h: StreamHandle, core: usize) -> Result<usize, StreamError> {
+        let st = self.check_open(h, core)?;
+        Ok(*st.cursor.lock().unwrap())
+    }
+
+    /// Read token `idx` of stream `id` **without** touching the cursor
+    /// or requiring an open handle — this is the DMA-engine path: the
+    /// background prefetcher stages tokens on behalf of the core that
+    /// holds the stream, and exclusivity is already guaranteed by the
+    /// open. Returns the token size in words.
+    pub fn read_token_at(
+        &self,
+        id: usize,
+        idx: usize,
+        buf: &mut Vec<f32>,
+    ) -> Result<usize, StreamError> {
+        self.state(id)?.copy_token(id, idx, buf)
     }
 
     /// Host primitive: read a whole stream back (e.g. to collect Σ^C).
@@ -355,6 +442,28 @@ mod tests {
         let mut r = reg();
         assert_eq!(r.create(7, 2, None), Err(StreamError::RaggedStream(7, 2)));
         assert!(matches!(r.create(4, 0, None), Err(StreamError::RaggedStream(..))));
+    }
+
+    #[test]
+    fn cursor_and_read_token_at() {
+        let mut r = reg();
+        let init: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let id = r.create(8, 2, Some(&init)).unwrap();
+        let h = r.open(id, 0).unwrap();
+        assert_eq!(r.cursor(h, 0).unwrap(), 0);
+        let mut buf = Vec::new();
+        r.move_down(h, 0, &mut buf).unwrap();
+        assert_eq!(r.cursor(h, 0).unwrap(), 1);
+        // Peeking does not move the cursor.
+        assert_eq!(r.read_token_at(id, 3, &mut buf).unwrap(), 2);
+        assert_eq!(buf, vec![6.0, 7.0]);
+        assert_eq!(r.cursor(h, 0).unwrap(), 1);
+        assert!(matches!(
+            r.read_token_at(id, 4, &mut buf),
+            Err(StreamError::CursorOutOfRange(..))
+        ));
+        // cursor() requires the open handle.
+        assert_eq!(r.cursor(h, 1), Err(StreamError::NotOpenByCaller(id, 1)));
     }
 
     #[test]

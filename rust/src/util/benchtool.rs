@@ -12,7 +12,9 @@ use crate::util::stats::{summarize, Summary};
 /// Configuration for a bench run.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchConfig {
+    /// Untimed warmup iterations.
     pub warmup_iters: u32,
+    /// Timed samples.
     pub samples: u32,
     /// Iterations averaged inside one sample (for sub-µs bodies).
     pub iters_per_sample: u32,
@@ -27,6 +29,7 @@ impl Default for BenchConfig {
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
     /// Per-iteration wall time summary, seconds.
     pub time: Summary,

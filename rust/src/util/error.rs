@@ -1,0 +1,194 @@
+//! A minimal `anyhow`-flavoured error type.
+//!
+//! The offline crate set available to this build has no third-party
+//! crates at all, so this module provides the tiny subset of `anyhow`
+//! the rest of the crate uses: an opaque [`Error`] holding a message
+//! and a context chain, the [`Result`] alias, the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros, and the [`Context`] extension
+//! trait for `Result`/`Option`.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that keeps the blanket `From<E: std::error::Error>`
+//! conversion (which is what makes `?` work on `io::Error`,
+//! [`crate::stream::StreamError`], …) coherent.
+//!
+//! ```
+//! use bsps::util::error::{anyhow, bail, ensure, Context, Result};
+//!
+//! fn positive(x: i32) -> Result<i32> {
+//!     ensure!(x != 0, "x must not be zero");
+//!     if x < 0 {
+//!         bail!("x = {x} is negative");
+//!     }
+//!     Ok(x)
+//! }
+//!
+//! assert_eq!(positive(3).unwrap(), 3);
+//! let err = positive(-1).unwrap_err();
+//! assert!(err.to_string().contains("negative"));
+//! let err = "nan".parse::<i32>().context("parsing the config").unwrap_err();
+//! assert!(format!("{err:#}").starts_with("parsing the config: "));
+//! ```
+
+use std::fmt;
+
+/// An opaque error: a root message plus outer context layers.
+pub struct Error {
+    /// Context layers, outermost first; the last entry is the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap the error in one more layer of context.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Self {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The root cause (the innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    /// Renders the full context chain, outermost first, `": "`-joined
+    /// (matching `anyhow`'s `{:#}` format in both plain and alternate
+    /// mode — callers here always want the chain).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` specialized to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an ad-hoc [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an ad-hoc [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an ad-hoc [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+pub use crate::{anyhow, bail, ensure};
+
+/// Extension trait adding context to fallible values, like
+/// `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+
+    /// Wrap the error (or `None`) with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn context_chain_renders_outermost_first() {
+        let e = io_fail().context("loading artifacts").unwrap_err();
+        assert_eq!(e.to_string(), "loading artifacts: gone");
+        assert_eq!(format!("{e:#}"), "loading artifacts: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<i32, std::io::Error> = Ok(7);
+        let v = ok.with_context(|| panic!("must not run")).unwrap();
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<i32> = None;
+        assert_eq!(none.context("missing value").unwrap_err().to_string(), "missing value");
+        assert_eq!(Some(1).context("unused").unwrap(), 1);
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Err(anyhow!("fell through with {}", x))
+        }
+        assert_eq!(f(11).unwrap_err().to_string(), "x too big: 11");
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(f(1).unwrap_err().to_string(), "fell through with 1");
+    }
+}

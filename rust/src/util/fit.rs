@@ -8,7 +8,9 @@
 /// Result of a least-squares line fit `y ≈ intercept + slope · x`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LineFit {
+    /// Fitted slope.
     pub slope: f64,
+    /// Fitted intercept.
     pub intercept: f64,
     /// Coefficient of determination (1 = perfect fit).
     pub r2: f64,

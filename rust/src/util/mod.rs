@@ -1,9 +1,12 @@
 //! Small self-contained substrates.
 //!
 //! The offline crate set available to this build lacks several staples
-//! (`rand`, `proptest`, `criterion`, `serde`, `clap`, `tokio`), so this
-//! module provides the minimal equivalents the rest of the crate needs:
+//! (`anyhow`, `rand`, `proptest`, `criterion`, `serde`, `clap`,
+//! `tokio`), so this module provides the minimal equivalents the rest
+//! of the crate needs:
 //!
+//! * [`error`] — an `anyhow`-flavoured opaque error with context
+//!   chaining and the `anyhow!`/`bail!`/`ensure!` macros.
 //! * [`prng`] — SplitMix64, a tiny, high-quality, seedable PRNG.
 //! * [`stats`] — mean / stddev / confidence intervals for bench output.
 //! * [`fit`] — ordinary least-squares line fit (used to fit `g`, `l`
@@ -16,6 +19,7 @@
 //! * [`humanfmt`] — human-readable sizes/times for reports.
 
 pub mod benchtool;
+pub mod error;
 pub mod fit;
 pub mod humanfmt;
 pub mod pool;

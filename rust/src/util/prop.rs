@@ -23,7 +23,9 @@ use crate::util::prng::SplitMix64;
 /// Case generator handed to properties: a seeded PRNG plus a shrink
 /// level (0 = full size; higher = generate smaller structures).
 pub struct Gen {
+    /// The case generator's PRNG.
     pub rng: SplitMix64,
+    /// Current shrink level (0 = full size).
     pub shrink_level: u32,
 }
 

@@ -3,10 +3,15 @@
 /// Summary of a sample set.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Sample mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub stddev: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
     /// Half-width of a ~95% confidence interval on the mean
     /// (1.96 · stddev / √n; normal approximation).

@@ -41,12 +41,41 @@ fn panic_mid_hyperstep_unwinds_gang() {
             let h = ctx.stream_open(ctx.pid()).unwrap();
             let mut buf = Vec::new();
             for i in 0..4 {
-                ctx.stream_move_down(h, &mut buf, true).unwrap();
+                ctx.stream_move_down(h, &mut buf).unwrap();
                 if ctx.pid() == 2 && i == 1 {
                     panic!("core 2 died in hyperstep 1");
                 }
                 ctx.hyperstep_sync();
             }
+        });
+    }));
+    assert!(r.is_err());
+}
+
+#[test]
+fn panic_with_prefetch_in_flight_unwinds_gang() {
+    // A core dies while background fills are staged/in flight on the
+    // double-buffer path; the rest of the gang is parked at the
+    // poisonable barrier and must unwind, and the fill pool must not
+    // keep the process alive or deadlock the join.
+    let m = machine(4);
+    let mut reg = StreamRegistry::new(&m);
+    for _ in 0..4 {
+        reg.create(64, 8, None).unwrap(); // 8 tokens: fills stay in flight
+    }
+    let reg = Arc::new(reg);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_gang(&m, Some(reg), true, |ctx| {
+            let h = ctx.stream_open(ctx.pid()).unwrap();
+            let mut buf = Vec::new();
+            for i in 0..8 {
+                ctx.stream_move_down(h, &mut buf).unwrap();
+                if ctx.pid() == 1 && i == 2 {
+                    panic!("core 1 died with a staged prefetch");
+                }
+                ctx.hyperstep_sync();
+            }
+            ctx.stream_close(h).unwrap();
         });
     }));
     assert!(r.is_err());
@@ -103,13 +132,13 @@ fn cursor_overrun_is_an_error_not_a_crash() {
     run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
         let h = ctx.stream_open(0).unwrap();
         let mut buf = Vec::new();
-        ctx.stream_move_down(h, &mut buf, true).unwrap();
-        ctx.stream_move_down(h, &mut buf, true).unwrap();
+        ctx.stream_move_down(h, &mut buf).unwrap();
+        ctx.stream_move_down(h, &mut buf).unwrap();
         // Third read: past the end.
-        assert!(ctx.stream_move_down(h, &mut buf, true).is_err());
+        assert!(ctx.stream_move_down(h, &mut buf).is_err());
         // Seek back makes it valid again (pseudo-streaming!).
         ctx.stream_seek(h, -2).unwrap();
-        assert!(ctx.stream_move_down(h, &mut buf, true).is_ok());
+        assert!(ctx.stream_move_down(h, &mut buf).is_ok());
         ctx.stream_close(h).unwrap();
     });
 }
