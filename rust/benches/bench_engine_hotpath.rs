@@ -1,9 +1,16 @@
 //! Bench: the L3 engine hot paths (the §Perf targets in DESIGN.md).
 //!
-//! * gang spawn + teardown (fixed cost per algorithm run)
+//! * gang spawn + teardown (fixed cost per algorithm run — now a
+//!   persistent-pool checkout, not `p` thread spawns)
 //! * superstep barrier round-trip
-//! * hyperstep with stream move_down (the steady-state token loop)
+//! * hyperstep with stream move_down (the steady-state token loop —
+//!   allocation-free after warm-up: interned var handles, pooled token
+//!   buffers, sharded clocks; see `rust/tests/zero_alloc.rs`)
 //! * native vs PJRT token-compute dispatch latency
+//!
+//! Results are also written to `BENCH_hotpath.json` (via
+//! `util::benchtool::BenchRecorder`) so the perf trajectory is recorded
+//! run over run.
 
 use std::sync::Arc;
 
@@ -11,7 +18,7 @@ use bsps::bsp::run_gang;
 use bsps::coordinator::ComputeBackend;
 use bsps::model::params::AcceleratorParams;
 use bsps::stream::StreamRegistry;
-use bsps::util::benchtool::{bench, bench_throughput, section, BenchConfig};
+use bsps::util::benchtool::{bench, bench_throughput, section, BenchConfig, BenchRecorder};
 
 fn machine(p: usize) -> AcceleratorParams {
     let mut m = AcceleratorParams::epiphany3();
@@ -21,14 +28,19 @@ fn machine(p: usize) -> AcceleratorParams {
 
 fn main() {
     let cfg = BenchConfig { warmup_iters: 2, samples: 8, iters_per_sample: 1 };
+    let mut rec = BenchRecorder::new("engine_hotpath");
+    rec.meta("machine", "epiphany3");
+    rec.meta("steady_state_p", 16);
+    rec.meta("steady_state_c", 64);
 
-    section("gang lifecycle");
+    section("gang lifecycle (persistent pool checkout)");
     for p in [1usize, 4, 16] {
         let m = machine(p);
         let r = bench(&format!("run_gang(p={p}) empty"), cfg, |_| {
             run_gang(&m, None, false, |_| {})
         });
         println!("{}", r.row());
+        rec.push(&r);
     }
 
     section("superstep barrier round-trips (p=16, 100 syncs)");
@@ -41,6 +53,7 @@ fn main() {
         })
     });
     println!("{}", r.row());
+    rec.push(&r);
 
     section("steady-state token loop (p=16, 64 hypersteps, C=64)");
     let m = machine(16);
@@ -61,6 +74,24 @@ fn main() {
         })
     });
     println!("{}", r.row());
+    rec.push(&r);
+
+    section("var put/get round-trip (p=16, 64 supersteps, handle API)");
+    let m = machine(16);
+    let r = bench_throughput("put+sync ×64", cfg, 64.0, |_| {
+        run_gang(&m, None, false, |ctx| {
+            let x = ctx.register("x", 64).unwrap();
+            ctx.sync();
+            let data = [1.0f32; 64];
+            let next = (ctx.pid() + 1) % ctx.nprocs();
+            for _ in 0..64 {
+                ctx.put(next, x, 0, &data);
+                ctx.sync();
+            }
+        })
+    });
+    println!("{}", r.row());
+    rec.push(&r);
 
     section("token-compute dispatch (k=8 block mm_acc)");
     let native = ComputeBackend::Native;
@@ -71,6 +102,7 @@ fn main() {
         native.mm_acc(&mut c, &a, &b, 8).unwrap()
     });
     println!("{}", r.row());
+    rec.push(&r);
 
     if std::path::Path::new("artifacts/manifest.txt").exists() {
         let pjrt = ComputeBackend::pjrt("artifacts").unwrap();
@@ -79,8 +111,12 @@ fn main() {
             pjrt.mm_acc(&mut c, &a, &b, 8).unwrap()
         });
         println!("{}", r.row());
+        rec.push(&r);
         println!("(PJRT dispatch latency is the per-token overhead the coordinator amortizes)");
     } else {
         println!("pjrt: skipped (run `make artifacts`)");
     }
+
+    rec.write("BENCH_hotpath.json").expect("write BENCH_hotpath.json");
+    println!("\nwrote BENCH_hotpath.json");
 }

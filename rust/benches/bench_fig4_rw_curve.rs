@@ -6,9 +6,14 @@
 //! Plus the overlap acceptance check for the double-buffered prefetch
 //! runtime: on a streaming read/compute workload the *measured*
 //! hyperstep timeline (virtual clocks + DMA engines + background
-//! fills) must track Eq. 1's `max(compute, fetch)` within 20% of the
-//! `model::bsps` prediction, and beat the serial (no-prefetch) run of
-//! the same workload outright.
+//! fills) must track Eq. 1's `max(compute, fetch)` within **10%** of
+//! the `model::bsps` prediction (tightened from 20% now that the
+//! engine's steady state is allocation-free and shard-local — the
+//! residual is the cold first fetch plus DMA warm-up, ~1/tokens), and
+//! beat the serial (no-prefetch) run of the same workload outright.
+//!
+//! Results are also written to `BENCH_fig4.json` so the curve and the
+//! overlap errors are recorded as a perf trajectory.
 
 use std::sync::Arc;
 
@@ -17,10 +22,12 @@ use bsps::model::params::AcceleratorParams;
 use bsps::sim::extmem::ExtMemModel;
 use bsps::sim::membench;
 use bsps::stream::StreamRegistry;
-use bsps::util::benchtool::{bench, section, BenchConfig};
+use bsps::util::benchtool::{bench, section, BenchConfig, BenchRecorder};
 use bsps::util::humanfmt::seconds;
 
 fn main() {
+    let mut rec = BenchRecorder::new("fig4_rw_curve");
+    rec.meta("machine", "epiphany3");
     section("Figure 4: speed vs transfer size (single core, free network)");
     let mem = ExtMemModel::epiphany3();
     let pts = membench::fig4(&mem);
@@ -33,6 +40,9 @@ fn main() {
             p.write_bps / 1e6,
             p.write_burst_bps / 1e6
         );
+        rec.scalar(&format!("read_bps_{}", p.bytes), p.read_bps);
+        rec.scalar(&format!("write_bps_{}", p.bytes), p.write_bps);
+        rec.scalar(&format!("write_burst_bps_{}", p.bytes), p.write_burst_bps);
     }
 
     // Qualitative checks the paper's figure shows.
@@ -56,9 +66,13 @@ fn main() {
     section("curve-generation timing");
     let r = bench("membench::fig4", BenchConfig::default(), |_| membench::fig4(&mem));
     println!("{}", r.row());
+    rec.push(&r);
 
     section("prefetch overlap: measured hyperstep timeline vs Eq. 1");
-    overlap_acceptance();
+    overlap_acceptance(&mut rec);
+
+    rec.write("BENCH_fig4.json").expect("write BENCH_fig4.json");
+    println!("\nwrote BENCH_fig4.json");
 }
 
 /// Streaming read workload on one core: `tokens` C-word tokens, with
@@ -86,7 +100,7 @@ fn stream_workload(
     run_gang(m, Some(Arc::new(reg)), prefetch, kernel)
 }
 
-fn overlap_acceptance() {
+fn overlap_acceptance(rec: &mut BenchRecorder) {
     let m = AcceleratorParams::epiphany3();
     let mut single = m.clone();
     single.p = 1;
@@ -116,8 +130,12 @@ fn overlap_acceptance() {
             seconds(single.flops_to_seconds(serial)),
             serial / measured,
         );
-        // Acceptance: measured tracks max(compute, fetch) within 20% …
-        assert!(rel < 0.2, "{label}: measured {measured} vs Eq.1 {model}");
+        rec.scalar(&format!("overlap_rel_{label}"), rel);
+        rec.scalar(&format!("overlap_speedup_{label}"), serial / measured);
+        // Acceptance: measured tracks max(compute, fetch) within 10%
+        // (the engine's own constants are out of the way; what remains
+        // is the cold first fetch and DMA warm-up, ≈ 1/tokens) …
+        assert!(rel < 0.1, "{label}: measured {measured} vs Eq.1 {model} (rel {rel})");
         // … and strictly beats the non-prefetch run of the same workload.
         assert!(
             measured < serial,

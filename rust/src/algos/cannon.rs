@@ -11,13 +11,34 @@
 //! Each superstep a core sends and receives `2k²` words (one `k×k`
 //! block of each matrix), giving the `2k²g` term of Eq. 2.
 
-use crate::bsp::Ctx;
+use crate::bsp::{Ctx, VarHandle};
 use crate::coordinator::ComputeBackend;
+use crate::util::error::Result;
+
+/// The gang-registered shift variables the Cannon loop communicates
+/// through, interned once per gang via [`CannonVars::register`].
+#[derive(Debug, Clone, Copy)]
+pub struct CannonVars {
+    /// Incoming `A` block (`a_nx`, length `k²`).
+    pub a_nx: VarHandle,
+    /// Incoming `B` block (`b_nx`, length `k²`).
+    pub b_nx: VarHandle,
+}
+
+impl CannonVars {
+    /// Collectively register the shift variables (every core must call
+    /// this with the same `k` before the first [`cannon_inner`]).
+    pub fn register(ctx: &Ctx, k: usize) -> Result<Self> {
+        Ok(Self {
+            a_nx: ctx.register("a_nx", k * k)?,
+            b_nx: ctx.register("b_nx", k * k)?,
+        })
+    }
+}
 
 /// Run the `N`-superstep Cannon loop *inside* a gang. `a`/`b` are this
-/// core's pre-skewed blocks (consumed), `c` is the running accumulator.
-/// Uses the gang-registered variables `a_nx`/`b_nx` (length `k²`) which
-/// must have been registered by every core before the first call.
+/// core's pre-skewed blocks (consumed), `c` is the running accumulator,
+/// `vars` the interned shift variables from [`CannonVars::register`].
 ///
 /// Returns the blocks as they ended up (useful when callers reuse them).
 pub fn cannon_inner(
@@ -27,6 +48,7 @@ pub fn cannon_inner(
     mut b: Vec<f32>,
     c: &mut Vec<f32>,
     k: usize,
+    vars: CannonVars,
 ) -> (Vec<f32>, Vec<f32>) {
     let grid_n = (ctx.nprocs() as f64).sqrt() as usize;
     debug_assert_eq!(grid_n * grid_n, ctx.nprocs());
@@ -39,11 +61,13 @@ pub fn cannon_inner(
         ctx.charge_flops(flops);
         if step + 1 < grid_n {
             // Shift: a -> left neighbour, b -> up neighbour.
-            ctx.put(left, "a_nx", 0, &a);
-            ctx.put(up, "b_nx", 0, &b);
+            ctx.put(left, vars.a_nx, 0, &a);
+            ctx.put(up, vars.b_nx, 0, &b);
             ctx.sync();
-            a.copy_from_slice(&ctx.var("a_nx"));
-            b.copy_from_slice(&ctx.var("b_nx"));
+            // Copy in place through the handle — no clone of the
+            // registered buffers on the shift path.
+            ctx.with_var(vars.a_nx, |v| a.copy_from_slice(v));
+            ctx.with_var(vars.b_nx, |v| b.copy_from_slice(v));
         }
         // The final multiply's superstep is closed by the caller's next
         // sync — in Algorithm 2 that is the hyperstep's own bulk
@@ -89,10 +113,9 @@ mod tests {
             let my_a = block(a, s, skew);
             let my_b = block(b, skew, t);
             let mut my_c = vec![0.0f32; k * k];
-            ctx.register("a_nx", k * k).unwrap();
-            ctx.register("b_nx", k * k).unwrap();
+            let vars = CannonVars::register(ctx, k).unwrap();
             ctx.sync();
-            cannon_inner(ctx, &backend, my_a, my_b, &mut my_c, k);
+            cannon_inner(ctx, &backend, my_a, my_b, &mut my_c, k, vars);
             ctx.sync(); // close the final multiply's superstep
             let mut res = result.lock().unwrap();
             for r in 0..k {
@@ -157,13 +180,12 @@ mod tests {
         m.p = 4;
         let backend = ComputeBackend::Native;
         let out = run_gang(&m, None, false, |ctx| {
-            ctx.register("a_nx", k * k).unwrap();
-            ctx.register("b_nx", k * k).unwrap();
+            let vars = CannonVars::register(ctx, k).unwrap();
             ctx.sync();
             let a = vec![1.0f32; k * k];
             let b = vec![1.0f32; k * k];
             let mut c = vec![0.0f32; k * k];
-            cannon_inner(ctx, &backend, a, b, &mut c, k);
+            cannon_inner(ctx, &backend, a, b, &mut c, k, vars);
             ctx.sync(); // close the final multiply's superstep
         });
         // Supersteps: 1 registration + grid_n Cannon steps.

@@ -18,7 +18,7 @@ use std::sync::Arc;
 
 use crate::util::error::{ensure, Result};
 
-use crate::algos::cannon::cannon_inner;
+use crate::algos::cannon::{cannon_inner, CannonVars};
 use crate::coordinator::{run_bsps, BspsEnv, Report};
 use crate::host::cannon::{build_cannon_streams, gather_c, CannonStreams};
 use crate::model::bsps::{HyperstepCost, Ledger};
@@ -67,8 +67,7 @@ fn run_gang_ml(
         let ha = ctx.stream_open(a_ids[pid]).unwrap();
         let hb = ctx.stream_open(b_ids[pid]).unwrap();
         let hc = ctx.stream_open(c_ids[pid]).unwrap();
-        ctx.register("a_nx", k * k).unwrap();
-        ctx.register("b_nx", k * k).unwrap();
+        let vars = CannonVars::register(ctx, k).unwrap();
         ctx.sync();
 
         let (mut ta, mut tb) = (Vec::new(), Vec::new());
@@ -78,7 +77,7 @@ fn run_gang_ml(
                 for _kk in 0..m {
                     ctx.stream_move_down(ha, &mut ta).unwrap();
                     ctx.stream_move_down(hb, &mut tb).unwrap();
-                    cannon_inner(ctx, backend, ta.clone(), tb.clone(), &mut tc, k);
+                    cannon_inner(ctx, backend, ta.clone(), tb.clone(), &mut tc, k, vars);
                     ctx.hyperstep_sync();
                 }
                 ctx.stream_move_up(hc, &tc).unwrap();

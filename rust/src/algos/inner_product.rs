@@ -43,7 +43,7 @@ pub fn run(env: &BspsEnv, u: &[f32], v: &[f32], token_words: usize) -> Result<In
         let s = ctx.pid();
         let hu = ctx.stream_open(u_ids[s]).unwrap();
         let hv = ctx.stream_open(v_ids[s]).unwrap();
-        ctx.register("alphas", p).unwrap();
+        let alphas = ctx.register("alphas", p).unwrap();
         ctx.sync(); // registration superstep
 
         let mut alpha_s = 0.0f32;
@@ -60,10 +60,10 @@ pub fn run(env: &BspsEnv, u: &[f32], v: &[f32], token_words: usize) -> Result<In
         ctx.stream_close(hv).unwrap();
 
         // Final ordinary superstep: BROADCAST(α_s); SYNC; α = Σ_t α_t.
-        ctx.broadcast("alphas", &[alpha_s]);
+        ctx.broadcast(alphas, &[alpha_s]);
         ctx.charge_flops(p as f64); // the p-term of the paper's cost
         ctx.sync();
-        let alpha: f32 = ctx.var("alphas").iter().sum();
+        let alpha: f32 = ctx.with_var(alphas, |v| v.iter().sum());
         answers.lock().unwrap()[s] = alpha;
     });
     let answers = answers.into_inner().unwrap();

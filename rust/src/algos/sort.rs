@@ -77,7 +77,7 @@ pub fn run(env: &BspsEnv, data: &[f32], token_words: usize) -> Result<SortRun> {
 
     let (report, _) = run_bsps(env, Arc::clone(&reg), |ctx, _backend| {
         let s = ctx.pid();
-        ctx.register("samples", p * sample_per_core).unwrap();
+        let samples = ctx.register("samples", p * sample_per_core).unwrap();
         ctx.sync();
 
         // ---- Phase 1: sample my partition.
@@ -94,11 +94,11 @@ pub fn run(env: &BspsEnv, data: &[f32], token_words: usize) -> Result<SortRun> {
         let mut sample: Vec<f32> = mine.iter().step_by(stride).cloned().collect();
         sample.truncate(sample_per_core);
         sample.resize(sample_per_core, f32::INFINITY); // pad (tiny inputs)
-        ctx.broadcast("samples", &sample);
+        ctx.broadcast(samples, &sample);
         ctx.sync();
 
         // Identical splitters on every core.
-        let mut all = ctx.var("samples");
+        let mut all = ctx.var(samples);
         all.retain(|x| x.is_finite());
         all.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let splitters: Vec<f32> = (1..p)

@@ -1,17 +1,42 @@
 //! The SPMD superstep engine — a BSPlib-style runtime in Rust.
 //!
-//! `p` OS threads play the accelerator cores and run the same kernel on
+//! `p` threads (checked out of a persistent [`GangPool`], not spawned
+//! per run) play the accelerator cores and run the same kernel on
 //! different data (SPMD). Within a superstep a core computes on its own
 //! registered variables and *queues* communication (buffered `put`s,
 //! `get`s, messages). At [`Ctx::sync`] the gang meets at a poisonable
 //! barrier; one leader applies all queued operations in a deterministic
-//! order, closes the superstep's cost record (`max_s w`, the h-relation),
-//! and the next superstep begins.
+//! order, closes the superstep's cost record (`max_s w`, the
+//! h-relation), and the next superstep begins.
 //!
 //! The engine executes the **real numerics** while charging **virtual
 //! time** according to the machine model — the combination lets one run
 //! both verify results against oracles and reproduce the paper's timing
 //! claims (DESIGN.md "Hardware substitution").
+//!
+//! # Hot-path memory discipline
+//!
+//! The paper's premise — hyperstep cost `max(T_h, e·ΣC_i)` — only shows
+//! up on a measured timeline if the runtime's own constants stay out of
+//! the way, so the steady-state loop is **allocation-free and
+//! shard-local**:
+//!
+//! * registered variables are interned once at [`Ctx::register`] into a
+//!   [`VarHandle`] — `put`/`get`/`with_var` are index lookups, with no
+//!   `String` hashing, cloning, or map walks per operation;
+//! * queued put payloads are bump-allocated into a per-core arena that
+//!   is drained (capacity kept) at sync, so a `put` never allocates
+//!   after warm-up; messages travel **by move** from `send` to
+//!   [`Ctx::move_messages`];
+//! * token buffers circulate through a [`BufferPool`]: a consumed
+//!   staged token is `mem::swap`ped into the caller's buffer and the
+//!   old buffer goes back to the pool for the next fill;
+//! * per-core virtual clocks are sharded atomic cells
+//!   ([`ShardedClocks`]) — a core advancing its clock never bounces a
+//!   cache line or a mutex against its neighbours; the barrier leader
+//!   merges the cells while the gang is held;
+//! * gang threads and the background fill workers are persistent,
+//!   process-wide pools.
 //!
 //! # Double-buffered prefetch
 //!
@@ -44,7 +69,8 @@
 //! instead of the overlapped `max`.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 
 use crate::bsp::barrier::{Barrier, PoisonOnPanic};
 use crate::bsp::timeline::{HyperstepSpan, Timeline};
@@ -53,27 +79,90 @@ use crate::model::cost::{BspCost, CoreStepUsage, SuperstepCost};
 use crate::model::params::{AcceleratorParams, WORD_BYTES};
 use crate::sim::dma::DmaEngine;
 use crate::sim::extmem::{Dir, ExtMemModel, NetState};
-use crate::sim::time::CoreClocks;
+use crate::sim::time::ShardedClocks;
 use crate::sim::CLOCK_HZ;
 use crate::stream::{StreamHandle, StreamRegistry};
 use crate::util::error::{anyhow, Result};
-use crate::util::pool::{scoped_spmd, WorkerPool};
+use crate::util::pool::{BufferPool, GangPool, TaskPool};
 
-/// A buffered put, applied at the next sync.
+/// Entries pre-reserved in the per-run record vectors (superstep costs,
+/// ledger rows, timeline spans, DMA logs) so pushing a record in the
+/// steady state does not grow a `Vec`. Runs longer than this fall back
+/// to amortized growth.
+const STEADY_RESERVE: usize = 1024;
+
+/// An interned registered-variable handle.
+///
+/// Returned by [`Ctx::register`]; all subsequent variable operations
+/// (`put`/`get`/`with_var`/…) take the handle and resolve it with a
+/// plain index lookup — the string name is only touched at
+/// registration. Handles are gang-global: every core registering the
+/// same name receives the same handle, so handles can be passed in
+/// puts targeting any core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct VarHandle(u32);
+
+impl VarHandle {
+    /// The raw interned id (index into the gang's variable table).
+    pub fn raw(self) -> u32 {
+        self.0
+    }
+
+    /// Rebuild a handle from a raw id (host-side tooling and tests).
+    /// Using an id that was never interned panics at the operation (or
+    /// at the sync that applies it), exactly like an unregistered name.
+    pub fn from_raw(id: u32) -> Self {
+        Self(id)
+    }
+}
+
+/// One registered variable: a buffer per core.
+struct VarSlot {
+    bufs: Vec<Mutex<Vec<f32>>>,
+}
+
+/// The gang's variable table: a registration-time intern map plus the
+/// handle-indexed slots. Only `register` touches `names` or takes the
+/// `slots` write lock; every hot-path access is a read-lock + index.
+struct VarStore {
+    names: Mutex<BTreeMap<String, u32>>,
+    slots: RwLock<Vec<VarSlot>>,
+}
+
+impl VarStore {
+    fn new() -> Self {
+        Self { names: Mutex::new(BTreeMap::new()), slots: RwLock::new(Vec::new()) }
+    }
+
+    /// Reverse-lookup a handle's name for diagnostics (cold path).
+    fn name_of(&self, id: u32) -> String {
+        self.names
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .find(|(_, &v)| v == id)
+            .map(|(k, _)| k.clone())
+            .unwrap_or_else(|| format!("#{id}"))
+    }
+}
+
+/// A buffered put, applied at the next sync. The payload lives in the
+/// queue's bump arena (`arena[arena_start..arena_start + len]`).
 struct PutOp {
     dst_pid: usize,
-    var: String,
+    var: VarHandle,
     offset: usize,
-    data: Vec<f32>,
+    arena_start: usize,
+    len: usize,
 }
 
 /// A get request, resolved at the next sync (BSPlib semantics: the value
 /// read is the source's value at sync time).
 struct GetOp {
     src_pid: usize,
-    src_var: String,
+    src_var: VarHandle,
     src_offset: usize,
-    dst_var: String,
+    dst_var: VarHandle,
     dst_offset: usize,
     len: usize,
 }
@@ -85,8 +174,23 @@ pub struct Message {
     pub src_pid: usize,
     /// Caller-defined tag.
     pub tag: u32,
-    /// Message body.
+    /// Message body. Moved, never copied, from the sender's
+    /// [`Ctx::send`] through the sync to the receiver's
+    /// [`Ctx::move_messages`].
     pub payload: Vec<f32>,
+}
+
+/// Communication queued by one core this superstep. All vectors are
+/// drained with capacity kept, so a steady-state superstep re-uses the
+/// same allocations forever.
+#[derive(Default)]
+struct CommQueue {
+    puts: Vec<PutOp>,
+    gets: Vec<GetOp>,
+    /// Bump arena backing the queued puts' payloads.
+    arena: Vec<f32>,
+    /// Outgoing messages as `(dst_pid, message)`.
+    msgs: Vec<(usize, Message)>,
 }
 
 /// State of one staging (back) buffer fill.
@@ -112,27 +216,40 @@ impl FillCell {
         Self { state: Mutex::new((0, FillState::Empty)), cv: Condvar::new() }
     }
 
-    /// Open a new fill generation; the returned token must be passed to
-    /// `finish`/`abort`.
-    fn begin(&self) -> u64 {
-        let mut g = self.state.lock().unwrap();
-        g.0 += 1;
-        g.1 = FillState::Filling;
-        g.0
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, (u64, FillState)> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Complete a fill, unless a newer generation superseded it.
-    fn finish(&self, gen: u64, data: Vec<f32>) {
-        let mut g = self.state.lock().unwrap();
+    /// Open a new fill generation; the returned token must be passed to
+    /// `finish`/`abort`. A buffer staged by a superseded fill is handed
+    /// back for recycling.
+    fn begin(&self) -> (u64, Option<Vec<f32>>) {
+        let mut g = self.lock_state();
+        g.0 += 1;
+        let prev = std::mem::replace(&mut g.1, FillState::Filling);
+        let reclaimed = match prev {
+            FillState::Ready(buf) => Some(buf),
+            _ => None,
+        };
+        (g.0, reclaimed)
+    }
+
+    /// Complete a fill. If a newer generation superseded it, the buffer
+    /// is handed back for recycling instead of being staged.
+    fn finish(&self, gen: u64, data: Vec<f32>) -> Option<Vec<f32>> {
+        let mut g = self.lock_state();
         if g.0 == gen {
             g.1 = FillState::Ready(data);
             self.cv.notify_all();
+            None
+        } else {
+            Some(data)
         }
     }
 
     /// Fail a fill (out-of-range read), unless superseded.
     fn abort(&self, gen: u64) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.lock_state();
         if g.0 == gen {
             g.1 = FillState::Empty;
             self.cv.notify_all();
@@ -142,7 +259,7 @@ impl FillCell {
     /// Block until generation `gen`'s fill lands; `None` if it aborted
     /// or was superseded.
     fn wait_ready(&self, gen: u64) -> Option<Vec<f32>> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.lock_state();
         loop {
             if g.0 != gen {
                 return None;
@@ -176,6 +293,44 @@ impl StreamSlot {
     }
 }
 
+/// A token-fill request for the process-wide fill pool. Everything a
+/// worker needs rides in the request (`Arc` clones — no allocation),
+/// so submitting a fill is a queue push.
+struct FillReq {
+    reg: Arc<StreamRegistry>,
+    cell: Arc<FillCell>,
+    pool: Arc<BufferPool>,
+    stream_id: usize,
+    token_idx: usize,
+    gen: u64,
+}
+
+/// The process-wide fill pool: persistent workers performing the actual
+/// (wall-clock) token copies for every prefetching gang.
+fn fill_pool() -> &'static TaskPool<FillReq> {
+    static POOL: OnceLock<TaskPool<FillReq>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(2, 8);
+        TaskPool::new(workers, |req: FillReq| {
+            let mut buf = req.pool.take();
+            match req.reg.read_token_at(req.stream_id, req.token_idx, &mut buf) {
+                Ok(_) => {
+                    if let Some(rejected) = req.cell.finish(req.gen, buf) {
+                        req.pool.give(rejected);
+                    }
+                }
+                Err(_) => {
+                    req.cell.abort(req.gen);
+                    req.pool.give(buf);
+                }
+            }
+        })
+    })
+}
+
 /// Timeline under construction (leader-only writes at barrier cuts).
 struct TimelineBuild {
     spans: Vec<HyperstepSpan>,
@@ -186,22 +341,28 @@ struct TimelineBuild {
 pub(crate) struct Shared {
     pub machine: AcceleratorParams,
     barrier: Barrier,
-    /// Registered variables: name → one buffer per core.
-    vars: RwLock<BTreeMap<String, Vec<Mutex<Vec<f32>>>>>,
-    /// Communication queued this superstep, indexed by source pid.
-    puts: Vec<Mutex<Vec<PutOp>>>,
-    gets: Vec<Mutex<Vec<GetOp>>>,
-    outbox: Vec<Mutex<Vec<(usize, Message)>>>,
+    /// Registered variables: interned handle → one buffer per core.
+    vars: VarStore,
+    /// Communication queued this superstep, one queue per source pid.
+    comm: Vec<Mutex<CommQueue>>,
     /// Messages readable this superstep, per core.
     inbox: Vec<Mutex<Vec<Message>>>,
-    /// Per-core usage of the current superstep.
+    /// Per-core usage of the current superstep (own-core writes only;
+    /// traffic is tallied by the leader at sync, so `put`/`get`/`send`
+    /// never lock another core's cell).
     usage: Vec<Mutex<CoreStepUsage>>,
+    /// Leader scratch: per-core `(sent, received)` words of the
+    /// superstep being closed (reused, leader-only).
+    traffic: Mutex<Vec<(u64, u64)>>,
+    /// Leader scratch for staging get payloads (source and destination
+    /// may alias the same buffer).
+    get_scratch: Mutex<Vec<f32>>,
     /// Closed supersteps.
     pub cost: Mutex<BspCost>,
     /// Streams (None for plain BSP programs).
     pub streams: Option<Arc<StreamRegistry>>,
     /// Per-core words prefetched (overlapped) this hyperstep.
-    fetch_words: Vec<Mutex<u64>>,
+    fetch_words: Vec<AtomicU64>,
     /// Hyperstep ledger (cut at `hyperstep_sync`).
     pub ledger: Mutex<Ledger>,
     /// Index into `cost.supersteps` where the current hyperstep began.
@@ -210,16 +371,17 @@ pub(crate) struct Shared {
     local_used: Vec<Mutex<usize>>,
     /// Whether the gang runs the double-buffered prefetch executor.
     pub prefetch: bool,
-    /// Per-core virtual clocks (cycles at `sim::CLOCK_HZ`).
-    clocks: Mutex<CoreClocks>,
+    /// Per-core virtual clocks (cycles at `sim::CLOCK_HZ`), sharded
+    /// into per-core atomic cells.
+    clocks: ShardedClocks,
     /// Per-core DMA engines carrying the prefetch timeline.
     dma: Vec<Mutex<DmaEngine>>,
     /// Link model the DMA timeline is charged with (calibrated to `e`).
     extmem: ExtMemModel,
     /// Cycles per FLOP on this machine (`CLOCK_HZ / r`).
     cycles_per_flop: f64,
-    /// Background threads performing the actual (wall-clock) fills.
-    fill_pool: Option<WorkerPool>,
+    /// Recycled token buffers for this gang's fills.
+    buf_pool: Arc<BufferPool>,
     /// Per-core prefetch slots, keyed by stream id.
     slots: Vec<Mutex<BTreeMap<usize, StreamSlot>>>,
     /// Measured hyperstep spans.
@@ -235,33 +397,41 @@ impl Shared {
         let p = machine.p;
         let extmem = ExtMemModel::calibrated(&machine);
         let cycles_per_flop = CLOCK_HZ / machine.r;
-        let fill_pool = if prefetch && streams.is_some() {
-            Some(WorkerPool::new(p.clamp(1, 8)))
-        } else {
-            None
-        };
+        let mut cost = BspCost::new();
+        cost.supersteps.reserve(STEADY_RESERVE);
+        let mut ledger = Ledger::new();
+        ledger.hypersteps.reserve(STEADY_RESERVE);
         Self {
             barrier: Barrier::new(p),
-            vars: RwLock::new(BTreeMap::new()),
-            puts: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
-            gets: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
-            outbox: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+            vars: VarStore::new(),
+            comm: (0..p).map(|_| Mutex::new(CommQueue::default())).collect(),
             inbox: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
             usage: (0..p).map(|_| Mutex::new(CoreStepUsage::default())).collect(),
-            cost: Mutex::new(BspCost::new()),
+            traffic: Mutex::new(vec![(0, 0); p]),
+            get_scratch: Mutex::new(Vec::new()),
+            cost: Mutex::new(cost),
             streams,
-            fetch_words: (0..p).map(|_| Mutex::new(0)).collect(),
-            ledger: Mutex::new(Ledger::new()),
+            fetch_words: (0..p).map(|_| AtomicU64::new(0)).collect(),
+            ledger: Mutex::new(ledger),
             hyper_start: Mutex::new(0),
             local_used: (0..p).map(|_| Mutex::new(0)).collect(),
             prefetch,
-            clocks: Mutex::new(CoreClocks::new(p)),
-            dma: (0..p).map(|_| Mutex::new(DmaEngine::new())).collect(),
+            clocks: ShardedClocks::new(p),
+            dma: (0..p)
+                .map(|_| {
+                    let mut d = DmaEngine::new();
+                    d.log.reserve(STEADY_RESERVE);
+                    Mutex::new(d)
+                })
+                .collect(),
             extmem,
             cycles_per_flop,
-            fill_pool,
+            buf_pool: Arc::new(BufferPool::new()),
             slots: (0..p).map(|_| Mutex::new(BTreeMap::new())).collect(),
-            timeline: Mutex::new(TimelineBuild { spans: Vec::new(), hyper_start_cycles: 0.0 }),
+            timeline: Mutex::new(TimelineBuild {
+                spans: Vec::with_capacity(STEADY_RESERVE),
+                hyper_start_cycles: 0.0,
+            }),
             machine,
         }
     }
@@ -326,72 +496,101 @@ impl Ctx {
 
     /// Collective registration (`bsp_push_reg`): every core calls this
     /// with the same name and length; each core gets its own buffer of
-    /// `len` f32 words, charged against its scratchpad.
-    pub fn register(&self, name: &str, len: usize) -> Result<()> {
-        self.local_alloc(len * WORD_BYTES)?;
-        {
-            let vars = self.shared.vars.read().unwrap();
-            if let Some(bufs) = vars.get(name) {
-                let mut buf = bufs[self.pid].lock().unwrap();
-                if buf.len() != len {
-                    buf.resize(len, 0.0);
-                }
-                return Ok(());
+    /// `len` f32 words, charged against its scratchpad. Returns the
+    /// interned [`VarHandle`] — identical on every core — that all
+    /// subsequent variable operations take. Re-registering an existing
+    /// name is free (it just returns the handle); only growth in this
+    /// core's buffer is charged against `L`, and shrinking refunds.
+    ///
+    /// ```
+    /// use bsps::bsp::run_gang;
+    /// use bsps::model::params::AcceleratorParams;
+    ///
+    /// let mut m = AcceleratorParams::epiphany3();
+    /// m.p = 2;
+    /// run_gang(&m, None, false, |ctx| {
+    ///     let x = ctx.register("x", 4).unwrap();
+    ///     // Same name → same handle on every core, and re-registering
+    ///     // just hands the handle back (no double scratchpad charge).
+    ///     assert_eq!(x.raw(), 0);
+    ///     assert_eq!(ctx.register("x", 4).unwrap(), x);
+    ///     ctx.sync();
+    ///     ctx.with_var_mut(x, |v| v[0] = ctx.pid() as f32);
+    /// });
+    /// ```
+    pub fn register(&self, name: &str, len: usize) -> Result<VarHandle> {
+        let sh = &self.shared;
+        let id = {
+            let mut names = sh.vars.names.lock().unwrap();
+            if let Some(&id) = names.get(name) {
+                id
+            } else {
+                let mut slots = sh.vars.slots.write().unwrap();
+                let id = slots.len() as u32;
+                let p = self.nprocs();
+                slots.push(VarSlot {
+                    bufs: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+                });
+                names.insert(name.to_string(), id);
+                id
             }
+        };
+        let slots = sh.vars.slots.read().unwrap();
+        let mut buf = slots[id as usize].bufs[self.pid].lock().unwrap();
+        // Charge only the delta, so re-registration does not double-bill
+        // the scratchpad (the budget is charged before the buffer grows,
+        // and a failed charge leaves the buffer untouched).
+        let (old_bytes, new_bytes) = (buf.len() * WORD_BYTES, len * WORD_BYTES);
+        if new_bytes > old_bytes {
+            self.local_alloc(new_bytes - old_bytes)?;
+        } else {
+            self.local_free(old_bytes - new_bytes);
         }
-        let mut vars = self.shared.vars.write().unwrap();
-        let p = self.nprocs();
-        let bufs = vars
-            .entry(name.to_string())
-            .or_insert_with(|| (0..p).map(|_| Mutex::new(Vec::new())).collect());
-        let mut buf = bufs[self.pid].lock().unwrap();
         if buf.len() != len {
             buf.resize(len, 0.0);
         }
-        Ok(())
+        Ok(VarHandle(id))
     }
 
-    /// Read this core's buffer of `name` through `f`.
-    pub fn with_var<R>(&self, name: &str, f: impl FnOnce(&[f32]) -> R) -> R {
-        let vars = self.shared.vars.read().unwrap();
-        let bufs = vars.get(name).unwrap_or_else(|| panic!("unregistered var `{name}`"));
-        let buf = bufs[self.pid].lock().unwrap();
+    /// Read this core's buffer of `h` through `f`.
+    pub fn with_var<R>(&self, h: VarHandle, f: impl FnOnce(&[f32]) -> R) -> R {
+        let slots = self.shared.vars.slots.read().unwrap();
+        let slot = slots
+            .get(h.0 as usize)
+            .unwrap_or_else(|| panic!("unregistered var handle {}", h.0));
+        let buf = slot.bufs[self.pid].lock().unwrap();
         f(&buf)
     }
 
-    /// Mutate this core's buffer of `name` through `f`.
-    pub fn with_var_mut<R>(&self, name: &str, f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
-        let vars = self.shared.vars.read().unwrap();
-        let bufs = vars.get(name).unwrap_or_else(|| panic!("unregistered var `{name}`"));
-        let mut buf = bufs[self.pid].lock().unwrap();
+    /// Mutate this core's buffer of `h` through `f`.
+    pub fn with_var_mut<R>(&self, h: VarHandle, f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+        let slots = self.shared.vars.slots.read().unwrap();
+        let slot = slots
+            .get(h.0 as usize)
+            .unwrap_or_else(|| panic!("unregistered var handle {}", h.0));
+        let mut buf = slot.bufs[self.pid].lock().unwrap();
         f(&mut buf)
     }
 
-    /// Clone this core's buffer of `name`.
-    pub fn var(&self, name: &str) -> Vec<f32> {
-        self.with_var(name, |v| v.to_vec())
+    /// Clone this core's buffer of `h` (allocates — prefer
+    /// [`Ctx::with_var`] on hot paths).
+    pub fn var(&self, h: VarHandle) -> Vec<f32> {
+        self.with_var(h, |v| v.to_vec())
     }
 
     // ------------------------------------------------ communication
 
     /// Buffered put (`bsp_put`): copy `data` into `dst_pid`'s buffer of
-    /// `name` at `offset`, visible after the next sync.
-    pub fn put(&self, dst_pid: usize, name: &str, offset: usize, data: &[f32]) {
+    /// `var` at `offset`, visible after the next sync. The payload is
+    /// staged in this core's bump arena (drained at sync, capacity
+    /// kept) — no allocation in the steady state, and no lock on any
+    /// other core's state.
+    pub fn put(&self, dst_pid: usize, var: VarHandle, offset: usize, data: &[f32]) {
         assert!(dst_pid < self.nprocs(), "put: bad pid {dst_pid}");
-        {
-            let mut u = self.shared.usage[self.pid].lock().unwrap();
-            u.sent += data.len() as u64;
-        }
-        {
-            let mut u = self.shared.usage[dst_pid].lock().unwrap();
-            u.received += data.len() as u64;
-        }
-        self.shared.puts[self.pid].lock().unwrap().push(PutOp {
-            dst_pid,
-            var: name.to_string(),
-            offset,
-            data: data.to_vec(),
-        });
+        let mut q = self.shared.comm[self.pid].lock().unwrap();
+        let arena_start = q.arena.len();
+        q.arena.extend_from_slice(data);
+        q.puts.push(PutOp { dst_pid, var, offset, arena_start, len: data.len() });
     }
 
     /// Get (`bsp_hpget` semantics at sync): copy `len` words from
@@ -400,66 +599,62 @@ impl Ctx {
     pub fn get(
         &self,
         src_pid: usize,
-        src_var: &str,
+        src_var: VarHandle,
         src_offset: usize,
-        dst_var: &str,
+        dst_var: VarHandle,
         dst_offset: usize,
         len: usize,
     ) {
         assert!(src_pid < self.nprocs(), "get: bad pid {src_pid}");
-        {
-            let mut u = self.shared.usage[self.pid].lock().unwrap();
-            u.received += len as u64;
-        }
-        {
-            let mut u = self.shared.usage[src_pid].lock().unwrap();
-            u.sent += len as u64;
-        }
-        self.shared.gets[self.pid].lock().unwrap().push(GetOp {
+        self.shared.comm[self.pid].lock().unwrap().gets.push(GetOp {
             src_pid,
-            src_var: src_var.to_string(),
+            src_var,
             src_offset,
-            dst_var: dst_var.to_string(),
+            dst_var,
             dst_offset,
             len,
         });
     }
 
     /// Send a tagged message (`bsp_send`), readable by `dst` after the
-    /// next sync via [`Ctx::move_messages`].
+    /// next sync via [`Ctx::move_messages`]. The payload is moved, not
+    /// copied: the exact allocation handed in here is the one the
+    /// receiver drains.
     pub fn send(&self, dst_pid: usize, tag: u32, payload: Vec<f32>) {
         assert!(dst_pid < self.nprocs(), "send: bad pid {dst_pid}");
-        let words = payload.len() as u64;
-        {
-            let mut u = self.shared.usage[self.pid].lock().unwrap();
-            u.sent += words;
-        }
-        {
-            let mut u = self.shared.usage[dst_pid].lock().unwrap();
-            u.received += words;
-        }
-        self.shared.outbox[self.pid]
+        self.shared.comm[self.pid]
             .lock()
             .unwrap()
+            .msgs
             .push((dst_pid, Message { src_pid: self.pid, tag, payload }));
     }
 
-    /// Drain this core's inbox (`bsp_move`).
+    /// Drain this core's inbox (`bsp_move`). Returns the messages by
+    /// move; the inbox keeps its capacity.
     pub fn move_messages(&self) -> Vec<Message> {
-        std::mem::take(&mut self.shared.inbox[self.pid].lock().unwrap())
+        std::mem::take(&mut *self.shared.inbox[self.pid].lock().unwrap())
+    }
+
+    /// Drain this core's inbox into `out` (cleared first), reusing
+    /// `out`'s capacity — the allocation-free counterpart of
+    /// [`Ctx::move_messages`] for steady-state message loops.
+    pub fn move_messages_into(&self, out: &mut Vec<Message>) {
+        out.clear();
+        let mut inbox = self.shared.inbox[self.pid].lock().unwrap();
+        out.append(&mut inbox);
     }
 
     /// BROADCAST(a) from the paper's pseudocode: send `values` to every
-    /// other core's `name` buffer at `offset = pid·len` (gather layout),
+    /// other core's `var` buffer at `offset = pid·len` (gather layout),
     /// and deposit our own slice locally.
-    pub fn broadcast(&self, name: &str, values: &[f32]) {
+    pub fn broadcast(&self, var: VarHandle, values: &[f32]) {
         let len = values.len();
         for t in 0..self.nprocs() {
             if t != self.pid {
-                self.put(t, name, self.pid * len, values);
+                self.put(t, var, self.pid * len, values);
             }
         }
-        self.with_var_mut(name, |buf| {
+        self.with_var_mut(var, |buf| {
             buf[self.pid * len..(self.pid + 1) * len].copy_from_slice(values);
         });
     }
@@ -470,7 +665,7 @@ impl Ctx {
     pub fn charge_flops(&self, flops: f64) {
         self.shared.usage[self.pid].lock().unwrap().flops += flops;
         let cycles = self.shared.flops_to_cycles(flops);
-        self.shared.clocks.lock().unwrap().advance(self.pid, cycles);
+        self.shared.clocks.advance(self.pid, cycles);
     }
 
     // ------------------------------------------------ superstep sync
@@ -488,14 +683,14 @@ impl Ctx {
     /// let mut m = AcceleratorParams::epiphany3();
     /// m.p = 2;
     /// let out = run_gang(&m, None, false, |ctx| {
-    ///     ctx.register("x", 1).unwrap();
+    ///     let x = ctx.register("x", 1).unwrap();
     ///     ctx.sync();
     ///     if ctx.pid() == 0 {
-    ///         ctx.put(1, "x", 0, &[42.0]);
+    ///         ctx.put(1, x, 0, &[42.0]);
     ///     }
     ///     ctx.sync(); // put lands here
     ///     if ctx.pid() == 1 {
-    ///         assert_eq!(ctx.var("x")[0], 42.0);
+    ///         assert_eq!(ctx.var(x)[0], 42.0);
     ///     }
     /// });
     /// assert_eq!(out.cost.len(), 2);
@@ -508,67 +703,95 @@ impl Ctx {
     /// Leader-only: apply puts/gets/messages deterministically, close
     /// the cost record, and advance every virtual clock through the
     /// barrier (`max`-combine plus `g·h + l` — the BSP cost arising
-    /// mechanically).
+    /// mechanically). Traffic (`sent`/`received`) is tallied here from
+    /// the queues, so the enqueue paths never touch another core's
+    /// usage cell.
     fn apply_superstep(&self) {
         let sh = &self.shared;
-        let vars = sh.vars.read().unwrap();
+        let p = self.nprocs();
+        let slots = sh.vars.slots.read().unwrap();
+        let mut traffic = sh.traffic.lock().unwrap();
+        for t in traffic.iter_mut() {
+            *t = (0, 0);
+        }
 
         // Gets first (BSPlib: gets read the source values of *this*
-        // superstep, i.e. before any put of the same sync lands).
-        for pid in 0..self.nprocs() {
-            for op in sh.gets[pid].lock().unwrap().drain(..) {
-                let src_bufs = vars
-                    .get(&op.src_var)
-                    .unwrap_or_else(|| panic!("get: unregistered var `{}`", op.src_var));
-                let data: Vec<f32> = {
-                    let src = src_bufs[op.src_pid].lock().unwrap();
-                    src[op.src_offset..op.src_offset + op.len].to_vec()
-                };
-                let dst_bufs = vars
-                    .get(&op.dst_var)
-                    .unwrap_or_else(|| panic!("get: unregistered var `{}`", op.dst_var));
-                let mut dst = dst_bufs[pid].lock().unwrap();
-                dst[op.dst_offset..op.dst_offset + op.len].copy_from_slice(&data);
+        // superstep, i.e. before any put of the same sync lands). The
+        // source may alias the destination buffer, so stage through the
+        // reusable leader scratch.
+        let mut scratch = sh.get_scratch.lock().unwrap();
+        for pid in 0..p {
+            let q = sh.comm[pid].lock().unwrap();
+            for op in &q.gets {
+                let src_slot = slots.get(op.src_var.0 as usize).unwrap_or_else(|| {
+                    panic!("get: unregistered var `{}`", sh.vars.name_of(op.src_var.0))
+                });
+                scratch.clear();
+                {
+                    let src = src_slot.bufs[op.src_pid].lock().unwrap();
+                    scratch.extend_from_slice(&src[op.src_offset..op.src_offset + op.len]);
+                }
+                let dst_slot = slots.get(op.dst_var.0 as usize).unwrap_or_else(|| {
+                    panic!("get: unregistered var `{}`", sh.vars.name_of(op.dst_var.0))
+                });
+                let mut dst = dst_slot.bufs[pid].lock().unwrap();
+                dst[op.dst_offset..op.dst_offset + op.len].copy_from_slice(&scratch);
+                traffic[pid].1 += op.len as u64;
+                traffic[op.src_pid].0 += op.len as u64;
             }
         }
+        drop(scratch);
 
-        // Puts in source-pid order (deterministic overwrite semantics).
-        for pid in 0..self.nprocs() {
-            for op in sh.puts[pid].lock().unwrap().drain(..) {
-                let bufs = vars
-                    .get(&op.var)
-                    .unwrap_or_else(|| panic!("put: unregistered var `{}`", op.var));
-                let mut dst = bufs[op.dst_pid].lock().unwrap();
+        // Puts in source-pid order (deterministic overwrite semantics),
+        // then messages — delivered by move into the inboxes.
+        for pid in 0..p {
+            let mut q = sh.comm[pid].lock().unwrap();
+            let q = &mut *q;
+            for op in &q.puts {
+                let slot = slots.get(op.var.0 as usize).unwrap_or_else(|| {
+                    panic!("put: unregistered var `{}`", sh.vars.name_of(op.var.0))
+                });
+                let mut dst = slot.bufs[op.dst_pid].lock().unwrap();
+                let data = &q.arena[op.arena_start..op.arena_start + op.len];
                 assert!(
-                    op.offset + op.data.len() <= dst.len(),
+                    op.offset + op.len <= dst.len(),
                     "put overflows var `{}` on core {}",
-                    op.var,
+                    sh.vars.name_of(op.var.0),
                     op.dst_pid
                 );
-                dst[op.offset..op.offset + op.data.len()].copy_from_slice(&op.data);
+                dst[op.offset..op.offset + op.len].copy_from_slice(data);
+                traffic[pid].0 += op.len as u64;
+                traffic[op.dst_pid].1 += op.len as u64;
             }
-        }
-
-        // Messages become readable next superstep.
-        for pid in 0..self.nprocs() {
-            for (dst, msg) in sh.outbox[pid].lock().unwrap().drain(..) {
+            q.puts.clear();
+            q.gets.clear();
+            q.arena.clear();
+            for (dst, msg) in q.msgs.drain(..) {
+                let words = msg.payload.len() as u64;
+                traffic[pid].0 += words;
+                traffic[dst].1 += words;
                 sh.inbox[dst].lock().unwrap().push(msg);
             }
         }
 
-        // Close the cost record.
-        let usages: Vec<CoreStepUsage> = sh
-            .usage
-            .iter()
-            .map(|u| std::mem::take(&mut *u.lock().unwrap()))
-            .collect();
-        let step = SuperstepCost::from_cores(&usages);
+        // Close the cost record (folded, no per-core collection vec).
+        let mut w_max = 0.0f64;
+        let mut h = 0u64;
+        for pid in 0..p {
+            let mut u = sh.usage[pid].lock().unwrap();
+            u.sent += traffic[pid].0;
+            u.received += traffic[pid].1;
+            let u = std::mem::take(&mut *u);
+            w_max = w_max.max(u.flops);
+            h = h.max(u.sent.max(u.received));
+        }
+        let step = SuperstepCost { w_max, h };
         sh.cost.lock().unwrap().push(step);
 
         // Advance the measured timeline through the barrier: all clocks
         // jump to the maximum plus the communication phase `g·h + l`.
         let comm_cycles = sh.flops_to_cycles(sh.machine.g * step.h as f64 + sh.machine.l);
-        sh.clocks.lock().unwrap().barrier(comm_cycles);
+        sh.clocks.barrier(comm_cycles);
     }
 
     // ------------------------------------------------ streams
@@ -600,13 +823,20 @@ impl Ctx {
     }
 
     /// `bsp_stream_close`; releases the token buffer(s) and discards any
-    /// staged prefetch.
+    /// staged prefetch (its buffer goes back to the pool).
     pub fn stream_close(&self, h: StreamHandle) -> Result<()> {
         self.streams().close(h, self.pid)?;
         let factor = if self.shared.prefetch { 2 } else { 1 };
         self.local_free(h.token_bytes * factor);
         if self.shared.prefetch {
-            self.shared.slots[self.pid].lock().unwrap().remove(&h.stream_id);
+            let slot = self.shared.slots[self.pid].lock().unwrap().remove(&h.stream_id);
+            if let Some(slot) = slot {
+                // Supersede any in-flight fill and recycle a staged token.
+                let (_, reclaimed) = slot.cell.begin();
+                if let Some(buf) = reclaimed {
+                    self.shared.buf_pool.give(buf);
+                }
+            }
         }
         Ok(())
     }
@@ -616,7 +846,7 @@ impl Ctx {
     /// The one pricing path for both prefetched and cold fetches.
     fn issue_dma_read(&self, bytes: u64) -> f64 {
         let sh = &self.shared;
-        let now = sh.clocks.lock().unwrap().now(self.pid);
+        let now = sh.clocks.now(self.pid);
         sh.dma[self.pid].lock().unwrap().issue(
             &sh.extmem,
             now,
@@ -628,44 +858,44 @@ impl Ctx {
 
     /// Issue the fill of token `idx` into this core's staging buffer:
     /// charge the core's DMA engine at the current virtual time and
-    /// dispatch the actual copy to the background fill pool.
+    /// queue the actual copy on the process-wide fill pool (a plain
+    /// queue push — no boxing, no allocation).
     fn issue_fill(&self, h: StreamHandle, idx: usize) {
         let sh = &self.shared;
         let done = self.issue_dma_read(h.token_bytes as u64);
         let mut slots = sh.slots[self.pid].lock().unwrap();
         let slot = slots.get_mut(&h.stream_id).expect("open stream has a slot");
-        slot.gen = slot.cell.begin();
+        let (gen, reclaimed) = slot.cell.begin();
+        slot.gen = gen;
         slot.pending_idx = Some(idx);
         slot.virtual_done = done;
-        let cell = Arc::clone(&slot.cell);
-        let gen = slot.gen;
+        let req = FillReq {
+            reg: Arc::clone(self.streams()),
+            cell: Arc::clone(&slot.cell),
+            pool: Arc::clone(&sh.buf_pool),
+            stream_id: h.stream_id,
+            token_idx: idx,
+            gen,
+        };
         drop(slots);
-        let reg = Arc::clone(self.streams());
-        let stream_id = h.stream_id;
-        sh.fill_pool
-            .as_ref()
-            .expect("prefetch gang has a fill pool")
-            .submit(move || {
-                let mut staged = Vec::new();
-                match reg.read_token_at(stream_id, idx, &mut staged) {
-                    Ok(_) => cell.finish(gen, staged),
-                    Err(_) => cell.abort(gen),
-                }
-            });
+        if let Some(buf) = reclaimed {
+            sh.buf_pool.give(buf);
+        }
+        fill_pool().submit(req);
     }
 
     /// `bsp_stream_move_down`: obtain the next token into `buf` and
     /// advance the cursor. Returns the token size in words.
     ///
     /// In a prefetch gang this swaps the double buffer: if the token was
-    /// staged by the in-flight fill, the core takes it (stalling only
-    /// until the simulated DMA completes) and immediately issues the
-    /// fill of the following token; a cold read (first token after
-    /// `open` or `seek`) blocks for the full transfer. Consumed words
-    /// are charged to the hyperstep's overlapped-fetch side of Eq. 1.
-    /// Without prefetch the core always blocks and the fetch is charged
-    /// on the compute side as `e·words` — the ablation the paper's
-    /// `preload` flag describes.
+    /// staged by the in-flight fill, the core takes it by `mem::swap`
+    /// (stalling only until the simulated DMA completes), hands its old
+    /// buffer back to the pool, and immediately issues the fill of the
+    /// following token; a cold read (first token after `open` or `seek`)
+    /// blocks for the full transfer. Consumed words are charged to the
+    /// hyperstep's overlapped-fetch side of Eq. 1. Without prefetch the
+    /// core always blocks and the fetch is charged on the compute side
+    /// as `e·words` — the ablation the paper's `preload` flag describes.
     ///
     /// ```
     /// use std::sync::Arc;
@@ -702,7 +932,7 @@ impl Ctx {
             let stall_flops = sh.machine.e * words as f64;
             sh.usage[self.pid].lock().unwrap().flops += stall_flops;
             let cycles = sh.flops_to_cycles(stall_flops);
-            sh.clocks.lock().unwrap().advance(self.pid, cycles);
+            sh.clocks.advance(self.pid, cycles);
             return Ok(words);
         }
 
@@ -724,8 +954,12 @@ impl Ctx {
                 // Wall-clock: wait for the background copy (usually done —
                 // it ran while this core computed the previous token).
                 match cell.wait_ready(gen) {
-                    Some(data) => {
-                        *buf = data;
+                    Some(mut data) => {
+                        // Hand the buffers off by swap: the staged token
+                        // becomes the caller's, the caller's old buffer
+                        // feeds the next fill.
+                        std::mem::swap(buf, &mut data);
+                        sh.buf_pool.give(data);
                         // The swap consumed the cursor's token; advance.
                         reg.seek(h, self.pid, 1)?;
                     }
@@ -736,7 +970,7 @@ impl Ctx {
                     }
                 }
                 // Virtual time: stall only if the DMA is still in flight.
-                sh.clocks.lock().unwrap().wait_until(self.pid, virtual_done);
+                sh.clocks.wait_until(self.pid, virtual_done);
                 h.token_bytes / WORD_BYTES
             }
             None => {
@@ -744,12 +978,12 @@ impl Ctx {
                 // transfer on the DMA timeline.
                 let words = reg.move_down(h, self.pid, buf)?;
                 let done = self.issue_dma_read((words * WORD_BYTES) as u64);
-                sh.clocks.lock().unwrap().wait_until(self.pid, done);
+                sh.clocks.wait_until(self.pid, done);
                 words
             }
         };
         // Either way the words count toward the hyperstep's fetch side.
-        *sh.fetch_words[self.pid].lock().unwrap() += words as u64;
+        sh.fetch_words[self.pid].fetch_add(words as u64, Ordering::Relaxed);
         // Prime the double buffer with the next token.
         let next = cursor + 1;
         if next < reg.token_count(h.stream_id)? {
@@ -775,8 +1009,8 @@ impl Ctx {
                 slot.pending_idx = None;
             }
         }
-        *sh.fetch_words[self.pid].lock().unwrap() += token.len() as u64;
-        let now = sh.clocks.lock().unwrap().now(self.pid);
+        sh.fetch_words[self.pid].fetch_add(token.len() as u64, Ordering::Relaxed);
+        let now = sh.clocks.now(self.pid);
         sh.dma[self.pid].lock().unwrap().issue(
             &sh.extmem,
             now,
@@ -845,17 +1079,20 @@ impl Ctx {
         self.shared.barrier.wait_leader(|| {
             self.apply_superstep();
             let sh = &self.shared;
-            let cost = sh.cost.lock().unwrap();
-            let mut start = sh.hyper_start.lock().unwrap();
-            let compute: f64 = cost.supersteps[*start..]
-                .iter()
-                .map(|s| s.flops(&sh.machine))
-                .sum();
-            *start = cost.supersteps.len();
+            let compute: f64 = {
+                let cost = sh.cost.lock().unwrap();
+                let mut start = sh.hyper_start.lock().unwrap();
+                let compute = cost.supersteps[*start..]
+                    .iter()
+                    .map(|s| s.flops(&sh.machine))
+                    .sum();
+                *start = cost.supersteps.len();
+                compute
+            };
             let fetch = sh
                 .fetch_words
                 .iter()
-                .map(|w| std::mem::take(&mut *w.lock().unwrap()))
+                .map(|w| w.swap(0, Ordering::Relaxed))
                 .max()
                 .unwrap_or(0);
             sh.ledger
@@ -863,7 +1100,7 @@ impl Ctx {
                 .unwrap()
                 .push(HyperstepCost { compute_flops: compute, fetch_words: fetch });
             // Cut the measured timeline (clocks are equal post-barrier).
-            let end = sh.clocks.lock().unwrap().makespan();
+            let end = sh.clocks.makespan();
             let mut tl = sh.timeline.lock().unwrap();
             let span = HyperstepSpan { start_cycles: tl.hyper_start_cycles, end_cycles: end };
             tl.spans.push(span);
@@ -887,6 +1124,8 @@ pub struct RunOutcome {
 
 /// Run `kernel` in SPMD over the machine's `p` cores.
 ///
+/// The cores run on the process-wide persistent [`GangPool`] (pid 0 on
+/// the calling thread), so repeated runs do not pay `p` thread spawns.
 /// `streams`, if given, enables the `stream_*` primitives; `prefetch`
 /// selects the double-buffered overlapped executor (see
 /// [`Ctx::stream_move_down`]).
@@ -919,7 +1158,7 @@ where
     {
         let shared = &shared;
         let kernel = &kernel;
-        scoped_spmd(machine.p, move |pid| {
+        GangPool::global().run(machine.p, move |pid| {
             // Poison the gang barrier if this core panics anywhere in the
             // kernel, so cores blocked in sync() unwind instead of hanging.
             let _guard = PoisonOnPanic(&shared.barrier);
@@ -930,7 +1169,7 @@ where
     let wall_seconds = start.elapsed().as_secs_f64();
     let shared = Arc::try_unwrap(shared)
         .unwrap_or_else(|_| panic!("gang threads leaked a Ctx"));
-    let clocks_end = shared.clocks.into_inner().unwrap().makespan();
+    let clocks_end = shared.clocks.makespan();
     let drain = shared
         .dma
         .iter()
@@ -969,42 +1208,85 @@ mod tests {
     #[test]
     fn put_visible_after_sync_not_before() {
         run_gang(&machine(2), None, false, |ctx| {
-            ctx.register("x", 1).unwrap();
-            ctx.with_var_mut("x", |v| v[0] = -1.0);
+            let x = ctx.register("x", 1).unwrap();
+            ctx.with_var_mut(x, |v| v[0] = -1.0);
             ctx.sync();
             if ctx.pid() == 0 {
-                ctx.put(1, "x", 0, &[42.0]);
+                ctx.put(1, x, 0, &[42.0]);
             }
             // Not yet visible.
             if ctx.pid() == 1 {
-                assert_eq!(ctx.var("x")[0], -1.0);
+                assert_eq!(ctx.var(x)[0], -1.0);
             }
             ctx.sync();
             if ctx.pid() == 1 {
-                assert_eq!(ctx.var("x")[0], 42.0);
+                assert_eq!(ctx.var(x)[0], 42.0);
             }
+        });
+    }
+
+    #[test]
+    fn handles_are_interned_consistently() {
+        // Same name → same handle on every core; distinct names →
+        // distinct handles; re-registering returns the original handle.
+        run_gang(&machine(4), None, false, |ctx| {
+            let a = ctx.register("a", 2).unwrap();
+            let b = ctx.register("b", 2).unwrap();
+            assert_ne!(a, b);
+            let a2 = ctx.register("a", 2).unwrap();
+            assert_eq!(a, a2);
+            ctx.sync();
+            // Cross-core agreement: write through a put using the handle.
+            let next = (ctx.pid() + 1) % 4;
+            ctx.put(next, a, 0, &[ctx.pid() as f32]);
+            ctx.sync();
+            let prev = (ctx.pid() + 3) % 4;
+            assert_eq!(ctx.var(a)[0], prev as f32);
         });
     }
 
     #[test]
     fn get_reads_pre_put_values() {
         run_gang(&machine(2), None, false, |ctx| {
-            ctx.register("src", 1).unwrap();
-            ctx.register("dst", 1).unwrap();
-            ctx.with_var_mut("src", |v| v[0] = 10.0 + ctx.pid() as f32);
+            let src = ctx.register("src", 1).unwrap();
+            let dst = ctx.register("dst", 1).unwrap();
+            ctx.with_var_mut(src, |v| v[0] = 10.0 + ctx.pid() as f32);
             ctx.sync();
             if ctx.pid() == 0 {
                 // Queue a put AND a get in the same superstep: the get
                 // must see the old value (gets resolve first).
-                ctx.put(1, "src", 0, &[99.0]);
-                ctx.get(1, "src", 0, "dst", 0, 1);
+                ctx.put(1, src, 0, &[99.0]);
+                ctx.get(1, src, 0, dst, 0, 1);
             }
             ctx.sync();
             if ctx.pid() == 0 {
-                assert_eq!(ctx.var("dst")[0], 11.0);
+                assert_eq!(ctx.var(dst)[0], 11.0);
             }
             if ctx.pid() == 1 {
-                assert_eq!(ctx.var("src")[0], 99.0);
+                assert_eq!(ctx.var(src)[0], 99.0);
+            }
+        });
+    }
+
+    #[test]
+    fn get_with_aliasing_src_and_dst_buffer() {
+        // src and dst are the same (var, core) buffer — the leader must
+        // stage through scratch instead of deadlocking on the mutex.
+        run_gang(&machine(2), None, false, |ctx| {
+            let v = ctx.register("v", 4).unwrap();
+            ctx.with_var_mut(v, |b| {
+                for (i, x) in b.iter_mut().enumerate() {
+                    *x = (ctx.pid() * 10 + i) as f32;
+                }
+            });
+            ctx.sync();
+            if ctx.pid() == 0 {
+                // Copy my own words 0..2 into my words 2..4.
+                ctx.get(0, v, 0, v, 2, 2);
+            }
+            ctx.sync();
+            if ctx.pid() == 0 {
+                assert_eq!(ctx.var(v), vec![0.0, 1.0, 0.0, 1.0]);
             }
         });
     }
@@ -1024,23 +1306,67 @@ mod tests {
     }
 
     #[test]
+    fn message_payload_is_delivered_by_move() {
+        // Pointer identity: the allocation the sender hands to send()
+        // is the very one the receiver drains — enqueue, sync delivery,
+        // and inbox drain never copy the payload.
+        use std::sync::atomic::AtomicUsize;
+        let sent_ptr = AtomicUsize::new(0);
+        run_gang(&machine(2), None, false, |ctx| {
+            if ctx.pid() == 0 {
+                let payload = vec![1.0f32, 2.0, 3.0];
+                sent_ptr.store(payload.as_ptr() as usize, Ordering::SeqCst);
+                ctx.send(1, 0, payload);
+            }
+            ctx.sync();
+            if ctx.pid() == 1 {
+                let mut msgs = Vec::new();
+                ctx.move_messages_into(&mut msgs);
+                assert_eq!(msgs.len(), 1);
+                assert_eq!(
+                    msgs[0].payload.as_ptr() as usize,
+                    sent_ptr.load(Ordering::SeqCst),
+                    "payload was copied somewhere between send and drain"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn move_messages_into_reuses_capacity() {
+        run_gang(&machine(2), None, false, |ctx| {
+            let mut msgs: Vec<Message> = Vec::with_capacity(8);
+            let cap_ptr = msgs.as_ptr() as usize;
+            for round in 0..3 {
+                ctx.send(1 - ctx.pid(), round, vec![round as f32]);
+                ctx.sync();
+                ctx.move_messages_into(&mut msgs);
+                assert_eq!(msgs.len(), 1);
+                assert_eq!(msgs[0].tag, round);
+            }
+            // The drain target was never re-allocated.
+            assert_eq!(msgs.as_ptr() as usize, cap_ptr);
+        });
+    }
+
+    #[test]
     fn broadcast_gathers_all_values() {
         run_gang(&machine(4), None, false, |ctx| {
-            ctx.register("all", 4).unwrap();
+            let all = ctx.register("all", 4).unwrap();
             ctx.sync();
-            ctx.broadcast("all", &[ctx.pid() as f32 * 2.0]);
+            ctx.broadcast(all, &[ctx.pid() as f32 * 2.0]);
             ctx.sync();
-            assert_eq!(ctx.var("all"), vec![0.0, 2.0, 4.0, 6.0]);
+            assert_eq!(ctx.var(all), vec![0.0, 2.0, 4.0, 6.0]);
         });
     }
 
     #[test]
     fn cost_records_h_relation_and_work() {
         let out = run_gang(&machine(2), None, false, |ctx| {
-            ctx.register("x", 8).unwrap();
+            let x = ctx.register("x", 8).unwrap();
             ctx.sync(); // superstep 0: registration only
             if ctx.pid() == 0 {
-                ctx.put(1, "x", 0, &[0.0; 5]);
+                ctx.put(1, x, 0, &[0.0; 5]);
                 ctx.charge_flops(100.0);
             }
             ctx.sync(); // superstep 1
@@ -1057,10 +1383,10 @@ mod tests {
         // exactly: max-combined work plus g·h + l per superstep.
         let m = machine(2);
         let out = run_gang(&m, None, false, |ctx| {
-            ctx.register("x", 8).unwrap();
+            let x = ctx.register("x", 8).unwrap();
             ctx.sync();
             if ctx.pid() == 0 {
-                ctx.put(1, "x", 0, &[0.0; 5]);
+                ctx.put(1, x, 0, &[0.0; 5]);
                 ctx.charge_flops(100.0);
             }
             ctx.sync();
@@ -1260,5 +1586,20 @@ mod tests {
             }
         });
         assert_eq!(out.cost.len(), 3);
+    }
+
+    #[test]
+    fn repeated_gangs_reuse_the_persistent_pool() {
+        // Back-to-back gangs must produce identical cost records (the
+        // pool hands out clean state every run) — the perf win itself is
+        // asserted in bench_engine_hotpath and the pool unit tests.
+        for _ in 0..5 {
+            let out = run_gang(&machine(4), None, false, |ctx| {
+                ctx.charge_flops(10.0);
+                ctx.sync();
+            });
+            assert_eq!(out.cost.len(), 1);
+            assert_eq!(out.cost.supersteps[0].w_max, 10.0);
+        }
     }
 }

@@ -15,5 +15,5 @@ pub mod barrier;
 pub mod engine;
 pub mod timeline;
 
-pub use engine::{run_gang, Ctx, Message, RunOutcome};
+pub use engine::{run_gang, Ctx, Message, RunOutcome, VarHandle};
 pub use timeline::{HyperstepSpan, Timeline};

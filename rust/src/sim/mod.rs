@@ -24,7 +24,7 @@ pub mod noc;
 pub mod time;
 
 pub use extmem::{Actor, Dir, ExtMemModel, NetState};
-pub use time::CoreClocks;
+pub use time::{CoreClocks, ShardedClocks};
 
 /// Default core clock in Hz (Epiphany-III: 600 MHz).
 pub const CLOCK_HZ: f64 = 600.0e6;

@@ -5,6 +5,18 @@
 //! synchronization) sets every clock to the maximum and adds the
 //! synchronization cost — which is exactly how the BSP cost's
 //! `max_s w_i^(s) … + l` arises mechanically.
+//!
+//! Two implementations:
+//!
+//! * [`CoreClocks`] — a plain `Vec<f64>` behind whatever lock the
+//!   caller provides; simple, for single-threaded cost walks.
+//! * [`ShardedClocks`] — one cache-line-isolated atomic cell per core,
+//!   `&self` throughout, for the SPMD engine: each gang thread touches
+//!   only its own cell on the hot path (no global clock mutex, no
+//!   cross-core cache-line bouncing), and the barrier leader merges all
+//!   cells while the gang is held.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Virtual clocks for `p` cores, in cycles (f64 so sub-cycle rates from
 /// bandwidth models don't accumulate rounding).
@@ -57,6 +69,79 @@ impl CoreClocks {
     /// Global maximum (the program's makespan so far).
     pub fn makespan(&self) -> f64 {
         self.cycles.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// One core's clock on its own cache line (prevents false sharing
+/// between adjacent cores' counters — the whole point of sharding).
+#[repr(align(64))]
+#[derive(Debug)]
+struct PaddedCycles(AtomicU64);
+
+/// Per-core virtual clocks in cache-line-isolated atomic cells.
+///
+/// The cells store `f64` cycle counts as bit patterns in `AtomicU64`s.
+/// **Single-writer discipline**: on the hot path only core `s` writes
+/// cell `s`; [`ShardedClocks::barrier`] and [`ShardedClocks::makespan`]
+/// are called by the barrier leader while the rest of the gang is held,
+/// so the load/store pairs in `advance`/`wait_until` never race.
+#[derive(Debug)]
+pub struct ShardedClocks {
+    cells: Vec<PaddedCycles>,
+}
+
+impl ShardedClocks {
+    /// `p` clocks at time 0.
+    pub fn new(p: usize) -> Self {
+        assert!(p > 0);
+        Self { cells: (0..p).map(|_| PaddedCycles(AtomicU64::new(0))).collect() }
+    }
+
+    /// Number of cores.
+    pub fn p(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Current time of core `s`.
+    pub fn now(&self, s: usize) -> f64 {
+        f64::from_bits(self.cells[s].0.load(Ordering::Acquire))
+    }
+
+    fn set(&self, s: usize, t: f64) {
+        self.cells[s].0.store(t.to_bits(), Ordering::Release);
+    }
+
+    /// Advance core `s` by `cycles` (called by core `s` only).
+    pub fn advance(&self, s: usize, cycles: f64) {
+        assert!(cycles >= 0.0, "negative time");
+        self.set(s, self.now(s) + cycles);
+    }
+
+    /// Block core `s` until at least `t` (no-op if already past;
+    /// called by core `s` only).
+    pub fn wait_until(&self, s: usize, t: f64) {
+        if self.now(s) < t {
+            self.set(s, t);
+        }
+    }
+
+    /// Bulk synchronization: all cores jump to the global maximum plus
+    /// `barrier_cycles`. Leader-only, while the gang is held. Returns
+    /// the post-barrier time.
+    pub fn barrier(&self, barrier_cycles: f64) -> f64 {
+        let t = self.makespan() + barrier_cycles;
+        for cell in &self.cells {
+            cell.0.store(t.to_bits(), Ordering::Release);
+        }
+        t
+    }
+
+    /// Global maximum (the program's makespan so far).
+    pub fn makespan(&self) -> f64 {
+        self.cells
+            .iter()
+            .map(|c| f64::from_bits(c.0.load(Ordering::Acquire)))
+            .fold(0.0, f64::max)
     }
 }
 
@@ -119,5 +204,52 @@ mod tests {
     #[should_panic]
     fn negative_advance_panics() {
         CoreClocks::new(1).advance(0, -1.0);
+    }
+
+    #[test]
+    fn sharded_matches_plain_semantics() {
+        let c = ShardedClocks::new(3);
+        assert_eq!(c.p(), 3);
+        assert_eq!(c.makespan(), 0.0);
+        c.advance(0, 10.0);
+        c.advance(1, 50.0);
+        c.advance(2, 30.0);
+        assert_eq!(c.now(0), 10.0);
+        let t = c.barrier(680.0);
+        assert_eq!(t, 730.0);
+        for s in 0..3 {
+            assert_eq!(c.now(s), 730.0);
+        }
+        c.wait_until(0, 100.0); // never rewinds
+        assert_eq!(c.now(0), 730.0);
+        c.wait_until(0, 1000.0);
+        assert_eq!(c.now(0), 1000.0);
+        assert_eq!(c.makespan(), 1000.0);
+    }
+
+    #[test]
+    fn sharded_single_writer_per_core_is_race_free() {
+        // Each of 8 threads advances only its own cell; the total must
+        // come out exact (no lost updates, no tearing).
+        let c = ShardedClocks::new(8);
+        std::thread::scope(|s| {
+            for pid in 0..8 {
+                let c = &c;
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.advance(pid, 0.5);
+                    }
+                });
+            }
+        });
+        for pid in 0..8 {
+            assert_eq!(c.now(pid), 5_000.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn sharded_negative_advance_panics() {
+        ShardedClocks::new(1).advance(0, -1.0);
     }
 }

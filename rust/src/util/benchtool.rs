@@ -3,7 +3,11 @@
 //!
 //! Every `rust/benches/*.rs` target is `harness = false` and drives this
 //! runner: warmup, N timed samples, mean ± 95% CI, optional throughput.
-//! Output is stable, grep-able rows so EXPERIMENTS.md can quote them.
+//! Output is stable, grep-able rows so EXPERIMENTS.md can quote them —
+//! and, through [`BenchRecorder`], machine-readable `BENCH_<suite>.json`
+//! files so the perf trajectory of the repo is recorded run over run
+//! (serde is not in the offline crate set; the JSON writer is
+//! hand-rolled).
 
 use std::time::Instant;
 
@@ -99,6 +103,126 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Collects bench rows, free-form scalars, and metadata, and writes a
+/// machine-readable `BENCH_<suite>.json` so perf results survive the
+/// run as a trajectory file instead of scrollback.
+///
+/// ```
+/// use bsps::util::benchtool::{bench, BenchConfig, BenchRecorder};
+///
+/// let mut rec = BenchRecorder::new("demo");
+/// rec.meta("p", 16);
+/// let r = bench("noop", BenchConfig::default(), |_| 1 + 1);
+/// rec.push(&r);
+/// rec.scalar("rel_error", 0.05);
+/// let json = rec.to_json();
+/// assert!(json.contains("\"suite\": \"demo\""));
+/// assert!(json.contains("\"noop\""));
+/// ```
+#[derive(Debug)]
+pub struct BenchRecorder {
+    suite: String,
+    meta: Vec<(String, String)>,
+    rows: Vec<BenchResult>,
+    scalars: Vec<(String, f64)>,
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A float as a JSON number (JSON has no NaN/Inf; those become null).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl BenchRecorder {
+    /// A recorder for the named suite.
+    pub fn new(suite: &str) -> Self {
+        Self {
+            suite: suite.to_string(),
+            meta: Vec::new(),
+            rows: Vec::new(),
+            scalars: Vec::new(),
+        }
+    }
+
+    /// Attach a metadata key/value (machine, parameters, git rev, …).
+    pub fn meta(&mut self, key: &str, value: impl std::fmt::Display) {
+        self.meta.push((key.to_string(), value.to_string()));
+    }
+
+    /// Record a bench row.
+    pub fn push(&mut self, r: &BenchResult) {
+        self.rows.push(r.clone());
+    }
+
+    /// Record a free-form scalar (model errors, speedups, curve points).
+    pub fn scalar(&mut self, name: &str, value: f64) {
+        self.scalars.push((name.to_string(), value));
+    }
+
+    /// Serialize everything as a JSON document.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"suite\": \"{}\",\n", json_escape(&self.suite)));
+        s.push_str("  \"meta\": {");
+        for (i, (k, v)) in self.meta.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\n    \"{}\": \"{}\"", json_escape(k), json_escape(v)));
+        }
+        s.push_str("\n  },\n  \"benches\": [");
+        for (i, r) in self.rows.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"mean_seconds\": {}, \"ci95_seconds\": {}, \
+                 \"samples\": {}, \"throughput_per_second\": {}}}",
+                json_escape(&r.name),
+                json_num(r.time.mean),
+                json_num(r.time.ci95),
+                r.time.n,
+                r.throughput().map_or("null".to_string(), json_num),
+            ));
+        }
+        s.push_str("\n  ],\n  \"scalars\": {");
+        for (i, (k, v)) in self.scalars.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\n    \"{}\": {}", json_escape(k), json_num(*v)));
+        }
+        s.push_str("\n  }\n}\n");
+        s
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,5 +251,37 @@ mod tests {
         let cfg = BenchConfig::default();
         let r = bench("my_bench", cfg, |i| i * 2);
         assert!(r.row().contains("my_bench"));
+    }
+
+    #[test]
+    fn recorder_emits_complete_json() {
+        let cfg = BenchConfig { warmup_iters: 0, samples: 2, iters_per_sample: 1 };
+        let mut rec = BenchRecorder::new("suite \"x\"");
+        rec.meta("p", 16);
+        rec.push(&bench("a", cfg, |_| ()));
+        rec.push(&bench_throughput("b", cfg, 64.0, |_| ()));
+        rec.scalar("rel", 0.03);
+        rec.scalar("bad", f64::NAN);
+        let json = rec.to_json();
+        assert!(json.contains("\"suite \\\"x\\\"\""), "names are escaped");
+        assert!(json.contains("\"p\": \"16\""));
+        assert!(json.contains("\"name\": \"a\""));
+        assert!(json.contains("\"name\": \"b\""));
+        assert!(json.contains("\"rel\": 3e-2"));
+        assert!(json.contains("\"bad\": null"), "non-finite floats become null");
+        // Bench "a" has no throughput denominator.
+        assert!(json.contains("\"throughput_per_second\": null"));
+    }
+
+    #[test]
+    fn recorder_writes_a_file() {
+        let mut rec = BenchRecorder::new("filetest");
+        rec.scalar("x", 1.0);
+        let path = std::env::temp_dir().join("bsps_bench_recorder_test.json");
+        let path = path.to_str().unwrap().to_string();
+        rec.write(&path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, rec.to_json());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -14,8 +14,9 @@
 //! * [`prop`] — a miniature property-testing harness (random cases with
 //!   shrink-by-halving on failure).
 //! * [`benchtool`] — a criterion-flavoured bench runner (warmup, timed
-//!   samples, mean ± CI, throughput rows).
-//! * [`pool`] — a fixed worker pool used for the SPMD core threads.
+//!   samples, mean ± CI, throughput rows, JSON trajectory files).
+//! * [`pool`] — thread/buffer pools: the persistent SPMD gang pool,
+//!   recycled token buffers, and typed background task queues.
 //! * [`humanfmt`] — human-readable sizes/times for reports.
 
 pub mod benchtool;

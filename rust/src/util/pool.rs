@@ -1,15 +1,27 @@
-//! Thread helpers: scoped SPMD launch + a reusable worker pool.
+//! Thread and buffer pools: scoped SPMD launch, a **persistent gang
+//! pool** (the SPMD core threads are spawned once per process and
+//! checked out per run, not re-spawned per `run_gang`), a recycling
+//! [`BufferPool`] for token/message payloads, and a typed [`TaskPool`]
+//! whose submits are plain queue pushes (no per-job boxing) — the
+//! substrates behind the engine's zero-allocation steady state.
 //!
 //! (tokio is not in the offline crate set; the BSP runtime needs only
-//! fork-join SPMD semantics plus a small pool for background work such
-//! as batched PJRT dispatch, so std threads suffice.)
+//! fork-join SPMD semantics plus small pools for background work, so
+//! std threads suffice.)
 
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 /// Run `f(pid)` on `p` scoped threads (one per simulated core) and wait
 /// for all of them. Panics from any core are propagated.
+///
+/// This spawns (and joins) `p` OS threads per call — the safe,
+/// dependency-free reference for fork-join SPMD. The engine itself
+/// uses [`GangPool`], which has the same run semantics but keeps the
+/// threads alive across runs.
 pub fn scoped_spmd<F>(p: usize, f: F)
 where
     F: Fn(usize) + Sync,
@@ -34,77 +46,272 @@ where
     });
 }
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+// ------------------------------------------------------------------
+// BufferPool
 
-/// A fixed-size worker pool executing boxed jobs.
-pub struct WorkerPool {
-    tx: Option<mpsc::Sender<Job>>,
-    workers: Vec<thread::JoinHandle<()>>,
+/// A recycling pool of `f32` buffers.
+///
+/// The engine's steady-state token loop hands every buffer it is done
+/// with back here (cleared, capacity kept) and takes warm buffers out
+/// instead of allocating: after a couple of warm-up hypersteps the
+/// same few allocations circulate forever and the heap is never
+/// touched again. [`BufferPool::take`] on an empty pool returns an
+/// empty `Vec` (itself allocation-free) whose first fill pays the one
+/// warm-up allocation.
+pub struct BufferPool {
+    bufs: Mutex<Vec<Vec<f32>>>,
+    /// Buffers retained beyond this are dropped (bounds pool memory).
+    max_retained: usize,
 }
 
-impl WorkerPool {
-    /// Spawn a pool of `n` workers.
-    pub fn new(n: usize) -> Self {
-        assert!(n > 0, "WorkerPool: n == 0");
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..n)
-            .map(|_| {
-                let rx = Arc::clone(&rx);
-                thread::spawn(move || loop {
-                    let job = rx.lock().unwrap().recv();
-                    match job {
-                        Ok(job) => job(),
-                        Err(_) => break, // channel closed: shut down
-                    }
-                })
+impl BufferPool {
+    /// A pool retaining at most 64 buffers.
+    pub fn new() -> Self {
+        Self::with_capacity(64)
+    }
+
+    /// A pool retaining at most `max_retained` buffers.
+    pub fn with_capacity(max_retained: usize) -> Self {
+        Self { bufs: Mutex::new(Vec::with_capacity(max_retained)), max_retained }
+    }
+
+    /// Take a (cleared) buffer out of the pool, or an empty `Vec` if
+    /// the pool is dry.
+    pub fn take(&self) -> Vec<f32> {
+        self.bufs
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
+            .unwrap_or_default()
+    }
+
+    /// Return a buffer to the pool. Zero-capacity buffers are not
+    /// worth keeping; beyond `max_retained` the buffer is dropped.
+    pub fn give(&self, mut buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        let mut bufs = self.bufs.lock().unwrap_or_else(|e| e.into_inner());
+        if bufs.len() < self.max_retained {
+            bufs.push(buf);
+        }
+    }
+
+    /// Buffers currently parked in the pool (diagnostics/tests).
+    pub fn retained(&self) -> usize {
+        self.bufs.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ------------------------------------------------------------------
+// GangPool
+
+type GangJob = Box<dyn FnOnce() + Send + 'static>;
+
+struct GangWorker {
+    tx: mpsc::Sender<GangJob>,
+}
+
+/// A persistent pool of SPMD gang threads.
+///
+/// `run(p, f)` runs `f(pid)` for `pid in 0..p` concurrently — pid 0 on
+/// the calling thread, pids `1..p` on pooled worker threads that are
+/// **checked out for the whole run** (a gang parks on barriers, so its
+/// cores must occupy distinct threads; a shared job queue could
+/// deadlock two concurrent gangs). Workers are spawned on demand, kept
+/// for the life of the process, and reused by later runs: repeated
+/// `run_gang` calls stop paying `p` thread spawns + joins each.
+///
+/// Panics in any core are caught, the remaining cores are joined (the
+/// engine's poisoned barrier unwinds them), and the first panic is
+/// re-raised on the caller — the same semantics as [`scoped_spmd`].
+pub struct GangPool {
+    idle: Mutex<Vec<GangWorker>>,
+}
+
+impl GangPool {
+    /// An empty pool (no threads until the first `run`).
+    pub const fn new() -> Self {
+        Self { idle: Mutex::new(Vec::new()) }
+    }
+
+    /// The process-wide pool used by the engine.
+    pub fn global() -> &'static GangPool {
+        static POOL: GangPool = GangPool::new();
+        &POOL
+    }
+
+    fn spawn_worker() -> GangWorker {
+        let (tx, rx) = mpsc::channel::<GangJob>();
+        thread::Builder::new()
+            .name("bsps-gang".into())
+            .spawn(move || {
+                // Jobs are fully wrapped in catch_unwind by `run`, so
+                // this loop — and the thread — cannot die early.
+                while let Ok(job) = rx.recv() {
+                    job();
+                }
             })
-            .collect();
-        Self { tx: Some(tx), workers }
+            .expect("spawn gang worker");
+        GangWorker { tx }
     }
 
-    /// Submit a job.
-    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker pool channel closed");
+    /// Worker threads currently parked in the pool (diagnostics/tests).
+    pub fn idle_workers(&self) -> usize {
+        self.idle.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 
-    /// Run `f(i)` for `i in 0..n` across the pool and collect results in
-    /// order.
-    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    /// Run `f(pid)` for `pid in 0..p` concurrently and wait for all of
+    /// them; the first panicking core's payload is re-raised.
+    pub fn run<F>(&self, p: usize, f: F)
     where
-        T: Send + 'static,
-        F: Fn(usize) -> T + Send + Sync + 'static,
+        F: Fn(usize) + Sync,
     {
-        let f = Arc::new(f);
-        let (tx, rx) = mpsc::channel::<(usize, T)>();
-        for i in 0..n {
-            let f = Arc::clone(&f);
-            let tx = tx.clone();
-            self.submit(move || {
-                let _ = tx.send((i, f(i)));
+        assert!(p > 0, "GangPool::run: p == 0");
+        if p == 1 {
+            f(0);
+            return;
+        }
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the borrow of `f` is erased to 'static so it can ride
+        // into the persistent workers' job boxes. Every dispatched job
+        // is joined below (one completion message per job, sent *after*
+        // the job's catch_unwind returns) before this function returns
+        // or unwinds, so no job can touch `f` after it is gone.
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { &*(f_ref as *const (dyn Fn(usize) + Sync)) };
+
+        let helpers = p - 1;
+        let mut workers = {
+            let mut idle = self.idle.lock().unwrap_or_else(|e| e.into_inner());
+            let keep = idle.len() - idle.len().min(helpers);
+            idle.split_off(keep)
+        };
+        while workers.len() < helpers {
+            workers.push(Self::spawn_worker());
+        }
+
+        let (done_tx, done_rx) = mpsc::channel::<thread::Result<()>>();
+        let mut dispatched = 0usize;
+        for (i, w) in workers.iter().enumerate() {
+            let pid = i + 1;
+            let tx = done_tx.clone();
+            let job: GangJob = Box::new(move || {
+                let r = catch_unwind(AssertUnwindSafe(|| f_static(pid)));
+                let _ = tx.send(r);
             });
+            if w.tx.send(job).is_ok() {
+                dispatched += 1;
+            }
         }
-        drop(tx);
-        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        for (i, v) in rx {
-            out[i] = Some(v);
+        drop(done_tx);
+
+        // pid 0 runs on the caller's thread.
+        let mut first_panic = catch_unwind(AssertUnwindSafe(|| f(0))).err();
+        for _ in 0..dispatched {
+            match done_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_panic.get_or_insert(e);
+                }
+                // All senders gone: every job has finished or been
+                // dropped unrun; either way `f` is no longer referenced.
+                Err(_) => break,
+            }
         }
-        out.into_iter()
-            .map(|v| v.expect("worker died before completing job"))
-            .collect()
+        self.idle
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .append(&mut workers);
+        assert!(
+            dispatched == helpers || first_panic.is_some(),
+            "gang worker unavailable"
+        );
+        if let Some(e) = first_panic {
+            resume_unwind(e);
+        }
     }
 }
 
-impl Drop for WorkerPool {
-    fn drop(&mut self) {
-        self.tx.take(); // close channel; workers exit
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+impl Default for GangPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ------------------------------------------------------------------
+// TaskPool
+
+struct TaskQueue<T> {
+    q: Mutex<VecDeque<T>>,
+    cv: Condvar,
+}
+
+/// A persistent pool of workers draining a **typed** job queue through
+/// one fixed handler.
+///
+/// Unlike a boxed-closure job pool, submitting does not allocate: it
+/// pushes a plain value onto a pre-reserved `VecDeque`, so a
+/// steady-state submitter performs **zero heap allocations** per job.
+/// The engine uses one process-wide `TaskPool` for stream token fills.
+///
+/// Workers live for the life of the pool's queue (they hold their own
+/// `Arc`s); the pool is intended to be stored in a `static` and never
+/// dropped. A panicking handler is caught and the worker keeps going.
+pub struct TaskPool<T: Send + 'static> {
+    shared: Arc<TaskQueue<T>>,
+}
+
+impl<T: Send + 'static> TaskPool<T> {
+    /// Spawn `workers` threads, each running `handler` on every item it
+    /// pops off the queue.
+    pub fn new<H>(workers: usize, handler: H) -> Self
+    where
+        H: Fn(T) + Send + Sync + 'static,
+    {
+        assert!(workers > 0, "TaskPool: workers == 0");
+        let shared = Arc::new(TaskQueue {
+            q: Mutex::new(VecDeque::with_capacity(256)),
+            cv: Condvar::new(),
+        });
+        let handler = Arc::new(handler);
+        for _ in 0..workers {
+            let shared = Arc::clone(&shared);
+            let handler = Arc::clone(&handler);
+            thread::Builder::new()
+                .name("bsps-task".into())
+                .spawn(move || loop {
+                    let item = {
+                        let mut q = shared.q.lock().unwrap_or_else(|e| e.into_inner());
+                        loop {
+                            if let Some(item) = q.pop_front() {
+                                break item;
+                            }
+                            q = shared.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+                        }
+                    };
+                    let _ = catch_unwind(AssertUnwindSafe(|| handler(item)));
+                })
+                .expect("spawn task worker");
         }
+        Self { shared }
+    }
+
+    /// Queue an item for the workers (a `VecDeque` push — no boxing).
+    pub fn submit(&self, item: T) {
+        self.shared
+            .q
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push_back(item);
+        self.shared.cv.notify_one();
     }
 }
 
@@ -133,23 +340,125 @@ mod tests {
     }
 
     #[test]
-    fn pool_map_preserves_order() {
-        let pool = WorkerPool::new(4);
-        let out = pool.map(100, |i| i * i);
-        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    fn buffer_pool_recycles_capacity() {
+        let pool = BufferPool::new();
+        let mut b = pool.take();
+        assert_eq!(b.capacity(), 0, "dry pool hands out empty vecs");
+        b.extend_from_slice(&[1.0; 64]);
+        let ptr = b.as_ptr();
+        pool.give(b);
+        assert_eq!(pool.retained(), 1);
+        let b2 = pool.take();
+        assert_eq!(b2.as_ptr(), ptr, "same allocation comes back");
+        assert!(b2.is_empty() && b2.capacity() >= 64);
+        assert_eq!(pool.retained(), 0);
     }
 
     #[test]
-    fn pool_runs_submitted_jobs() {
-        let pool = WorkerPool::new(2);
-        let counter = Arc::new(AtomicUsize::new(0));
-        for _ in 0..50 {
-            let c = Arc::clone(&counter);
-            pool.submit(move || {
-                c.fetch_add(1, Ordering::SeqCst);
-            });
+    fn buffer_pool_bounds_retention() {
+        let pool = BufferPool::with_capacity(2);
+        for _ in 0..5 {
+            pool.give(vec![0.0; 8]);
         }
-        drop(pool); // join workers
-        assert_eq!(counter.load(Ordering::SeqCst), 50);
+        assert_eq!(pool.retained(), 2);
+        pool.give(Vec::new()); // zero-capacity: not retained
+        assert_eq!(pool.retained(), 2);
+    }
+
+    #[test]
+    fn gang_pool_runs_every_pid_and_reuses_workers() {
+        let pool = GangPool::new();
+        let counts: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(8, |pid| {
+            counts[pid].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::SeqCst) == 1));
+        // 7 helpers spawned (pid 0 ran inline); all parked again.
+        assert_eq!(pool.idle_workers(), 7);
+        // A second run must not grow the pool.
+        pool.run(8, |_| {});
+        assert_eq!(pool.idle_workers(), 7);
+        // A smaller gang uses a subset.
+        pool.run(3, |_| {});
+        assert_eq!(pool.idle_workers(), 7);
+    }
+
+    #[test]
+    fn gang_pool_propagates_panic_and_survives() {
+        let pool = GangPool::new();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, |pid| {
+                if pid == 2 {
+                    panic!("core 2 died");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // Workers returned to the pool and still usable.
+        assert_eq!(pool.idle_workers(), 3);
+        let ran = AtomicUsize::new(0);
+        pool.run(4, |_| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn gang_pool_concurrent_gangs_get_disjoint_workers() {
+        // Two gangs of 4 through one pool at once: checkout semantics
+        // must give each gang its own threads (no deadlock), and the
+        // pool ends with at most the peak demand.
+        static POOL: GangPool = GangPool::new();
+        let total = Arc::new(AtomicUsize::new(0));
+        thread::scope(|s| {
+            for _ in 0..2 {
+                let total = Arc::clone(&total);
+                s.spawn(move || {
+                    POOL.run(4, |_| {
+                        total.fetch_add(1, Ordering::SeqCst);
+                        // Hold the worker long enough that the gangs
+                        // genuinely overlap.
+                        thread::sleep(std::time::Duration::from_millis(10));
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 8);
+        assert!(POOL.idle_workers() <= 6, "at most 2×3 helpers spawned");
+    }
+
+    #[test]
+    fn task_pool_handles_items_without_boxing() {
+        let handled = Arc::new(AtomicUsize::new(0));
+        let h2 = Arc::clone(&handled);
+        let pool: TaskPool<usize> = TaskPool::new(2, move |n| {
+            h2.fetch_add(n, Ordering::SeqCst);
+        });
+        for _ in 0..100 {
+            pool.submit(1);
+        }
+        // Drain: the queue is emptied by the workers.
+        while handled.load(Ordering::SeqCst) < 100 {
+            thread::yield_now();
+        }
+        assert_eq!(handled.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn task_pool_survives_panicking_handler() {
+        let handled = Arc::new(AtomicUsize::new(0));
+        let h2 = Arc::clone(&handled);
+        let pool: TaskPool<bool> = TaskPool::new(1, move |explode| {
+            if explode {
+                panic!("handler died");
+            }
+            h2.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.submit(true);
+        pool.submit(false);
+        while handled.load(Ordering::SeqCst) < 1 {
+            thread::yield_now();
+        }
+        assert_eq!(handled.load(Ordering::SeqCst), 1);
     }
 }

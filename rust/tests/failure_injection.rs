@@ -5,7 +5,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use bsps::bsp::run_gang;
+use bsps::bsp::{run_gang, VarHandle};
 use bsps::model::params::AcceleratorParams;
 use bsps::stream::StreamRegistry;
 
@@ -88,10 +88,10 @@ fn panic_inside_leader_work_unwinds_gang() {
     // unwind everyone.
     let r = std::panic::catch_unwind(|| {
         run_gang(&machine(4), None, false, |ctx| {
-            ctx.register("x", 2).unwrap();
+            let x = ctx.register("x", 2).unwrap();
             ctx.sync();
             if ctx.pid() == 1 {
-                ctx.put(0, "x", 1, &[1.0, 2.0, 3.0]); // overflows len 2
+                ctx.put(0, x, 1, &[1.0, 2.0, 3.0]); // overflows len 2
             }
             ctx.sync(); // leader's apply panics here
             ctx.sync();
@@ -145,10 +145,12 @@ fn cursor_overrun_is_an_error_not_a_crash() {
 
 #[test]
 fn unregistered_var_put_panics_cleanly() {
+    // A handle that was never interned (forged via from_raw) must fail
+    // loudly at the sync that applies the put, not corrupt memory.
     let r = std::panic::catch_unwind(|| {
         run_gang(&machine(2), None, false, |ctx| {
             if ctx.pid() == 0 {
-                ctx.put(1, "never_registered", 0, &[1.0]);
+                ctx.put(1, VarHandle::from_raw(7), 0, &[1.0]);
             }
             ctx.sync();
         });

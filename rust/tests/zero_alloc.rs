@@ -1,0 +1,108 @@
+//! Counting-allocator proof of the engine's zero-allocation steady
+//! state: after a short warm-up, a full hyperstep of the streaming
+//! token loop (p = 16, C = 64 — the `bench_engine_hotpath` steady-state
+//! shape) performs **no heap allocations anywhere in the process** —
+//! not on the cores (interned var handles, pooled token buffers,
+//! arena-backed queues), not in the fill workers (recycled buffers,
+//! typed task queue), and not in the leader's superstep bookkeeping
+//! (pre-reserved record vectors, folded cost closing).
+//!
+//! This file is its own test binary with exactly one test, so the
+//! global counting allocator sees no unrelated traffic during the
+//! measurement window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use bsps::bsp::run_gang;
+use bsps::model::params::AcceleratorParams;
+use bsps::stream::StreamRegistry;
+
+/// Counts every allocation (alloc, alloc_zeroed, realloc) in the
+/// process; frees are not counted (returning memory is fine — taking
+/// it on the hot path is what we forbid).
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_token_loop_is_allocation_free() {
+    const P: usize = 16;
+    const C: usize = 64;
+    const TOKENS: usize = 64;
+    // Hypersteps [0, WARM) warm the pools (buffer pool, arenas, queue
+    // and record capacities, fill workers, gang threads); the window
+    // [WARM, END) must be allocation-free. The tail after END absorbs
+    // the measurement stores themselves.
+    const WARM: usize = 24;
+    const END: usize = 56;
+
+    static START_COUNT: AtomicU64 = AtomicU64::new(0);
+    static END_COUNT: AtomicU64 = AtomicU64::new(0);
+
+    let mut m = AcceleratorParams::epiphany3();
+    m.p = P;
+    let mut reg = StreamRegistry::new(&m);
+    for _ in 0..P {
+        reg.create(TOKENS * C, C, None).unwrap();
+    }
+    let reg = Arc::new(reg);
+
+    run_gang(&m, Some(reg), true, |ctx| {
+        let h = ctx.stream_open(ctx.pid()).unwrap();
+        let mut tok = Vec::new();
+        for t in 0..TOKENS {
+            ctx.stream_move_down(h, &mut tok).unwrap();
+            ctx.charge_flops(2.0 * C as f64);
+            ctx.hyperstep_sync();
+            // hyperstep_sync is a full barrier: every core (and, because
+            // fills for token t+1 were issued *before* the barrier, every
+            // in-window fill job) is past hyperstep t when pid 0 reads
+            // the counter here.
+            if ctx.pid() == 0 && t + 1 == WARM {
+                START_COUNT.store(ALLOC_CALLS.load(Ordering::SeqCst), Ordering::SeqCst);
+            }
+            if ctx.pid() == 0 && t + 1 == END {
+                END_COUNT.store(ALLOC_CALLS.load(Ordering::SeqCst), Ordering::SeqCst);
+            }
+        }
+        ctx.stream_close(h).unwrap();
+    });
+
+    let start = START_COUNT.load(Ordering::SeqCst);
+    let end = END_COUNT.load(Ordering::SeqCst);
+    assert!(start > 0, "warm-up must have allocated something");
+    assert_eq!(
+        end - start,
+        0,
+        "steady-state hypersteps {WARM}..{END} performed {} heap allocations \
+         (expected zero: interned handles, pooled buffers, arena queues, \
+         reserved records)",
+        end - start
+    );
+}
