@@ -17,10 +17,11 @@
 
 use std::sync::Arc;
 
-use bsps::bsp::{run_gang, Ctx, RunOutcome};
+use bsps::bsp::{run_gang, run_gang_cfg, Ctx, GangConfig, RunOutcome};
 use bsps::model::params::AcceleratorParams;
 use bsps::sim::extmem::ExtMemModel;
 use bsps::sim::membench;
+use bsps::sim::noc::Noc;
 use bsps::stream::StreamRegistry;
 use bsps::util::benchtool::{bench, section, BenchConfig, BenchRecorder};
 use bsps::util::humanfmt::seconds;
@@ -71,8 +72,55 @@ fn main() {
     section("prefetch overlap: measured hyperstep timeline vs Eq. 1");
     overlap_acceptance(&mut rec);
 
+    section("NoC-on vs flat-g ablation (p=16 corner-to-corner exchange)");
+    noc_ablation(&mut rec);
+
     rec.write("BENCH_fig4.json").expect("write BENCH_fig4.json");
     println!("\nwrote BENCH_fig4.json");
+}
+
+/// The same 16-core exchange priced twice: on the routed mesh
+/// (hop-weighted `h_noc`) and on a free-hop mesh (which must collapse
+/// onto the flat-`g` h-relation). Every core puts a 64-word block to
+/// the index-reversed core (`p-1-pid`): the corner pairs (0↔15, 3↔12)
+/// ride the grid's worst 6-hop diagonal, inner pairs shorter routes —
+/// so the surcharge column shows the distance term the flat model
+/// cannot see.
+fn noc_ablation(rec: &mut BenchRecorder) {
+    let m = AcceleratorParams::epiphany3();
+    let kernel = |ctx: &mut Ctx| {
+        let x = ctx.register("x", 64).unwrap();
+        ctx.sync();
+        let data = [1.0f32; 64];
+        let opposite = ctx.nprocs() - 1 - ctx.pid();
+        for _ in 0..8 {
+            ctx.put(opposite, x, 0, &data);
+            ctx.sync();
+        }
+    };
+    let routed = run_gang(&m, None, false, kernel);
+    let free_cfg =
+        GangConfig { noc: Some(Noc::for_machine(&m).with_free_hops()), ..Default::default() };
+    let free = run_gang_cfg(&m, None, false, free_cfg, kernel);
+
+    let flat = routed.cost.total_flops(&m);
+    let noc_priced = routed.cost.total_flops_noc(&m);
+    let free_noc = free.cost.total_flops_noc(&m);
+    let surcharge = (noc_priced - flat) / flat;
+    println!("{:>24} {:>14} {:>12}", "pricing", "total FLOP", "vs flat");
+    println!("{:>24} {:>14.1} {:>11.3}%", "flat g·h", flat, 0.0);
+    println!("{:>24} {:>14.1} {:>+11.3}%", "NoC-routed g·h_noc", noc_priced, 100.0 * surcharge);
+    println!("{:>24} {:>14.1} {:>11.3}%", "free-hop mesh (ablation)", free_noc, 0.0);
+    rec.scalar("noc_flat_flops", flat);
+    rec.scalar("noc_routed_flops", noc_priced);
+    rec.scalar("noc_surcharge_rel", surcharge);
+
+    // The ablation's invariants: routing prices strictly above flat on
+    // multi-hop traffic, and a free-hop mesh reproduces flat exactly.
+    assert!(noc_priced > flat, "multi-hop puts must carry a route surcharge");
+    assert!((free_noc - flat).abs() < 1e-9, "free hops must reduce to flat g");
+    assert!(surcharge < 0.05, "route term stays a small correction: {surcharge}");
+    println!("noc ablation ✓: hop-weighted h prices the mesh, free hops reduce to flat g");
 }
 
 /// Streaming read workload on one core: `tokens` C-word tokens, with

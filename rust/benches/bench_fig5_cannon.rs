@@ -43,6 +43,8 @@ fn main() {
     println!("shape ✓: run time falls monotonically with k (paper Fig. 5)");
 
     section("executed-vs-simulated agreement (real data, wall-timed)");
+    println!("(NoC ablation column: flat-g BSP cost vs NoC-routed `h_noc` pricing —");
+    println!(" Cannon's shifts are neighbour writes, so the route surcharge is tiny)");
     let mut rng = SplitMix64::new(55);
     for (n, m) in [(64usize, 2usize), (128, 4), (128, 2)] {
         let a = rng.f32_vec(n * n, -1.0, 1.0);
@@ -63,6 +65,22 @@ fn main() {
             seconds(wall)
         );
         assert!(rel < 1e-6);
+
+        // NoC-on vs flat-g ablation: every executed shift carries its
+        // mesh route, so the NoC-priced BSP total must sit strictly
+        // above the flat one — but within 1%, because Cannon only ever
+        // writes to row/column neighbours (distance-1 pricing, with
+        // the N−1-hop wraparound writes on the grid edge).
+        let flat = run.report.bsp_flops;
+        let noc = run.report.bsp_flops_noc;
+        let surcharge = (noc - flat) / flat;
+        println!(
+            "            flat-g {flat:.0} FLOP vs NoC-routed {noc:.0} FLOP \
+             (+{:.3}% route surcharge)",
+            100.0 * surcharge
+        );
+        assert!(noc > flat, "executed shifts must price their routes");
+        assert!(surcharge < 0.01, "neighbour shifts: surcharge {surcharge}");
 
         // Measured overlapped timeline vs the Eq. 1 ledger. Cannon's
         // `seek` revisits cold the double buffer at every outer-block

@@ -196,4 +196,43 @@ mod tests {
         let last = &out.cost.supersteps[grid_n];
         assert_eq!(last.h, 0, "no shift after the final multiply");
     }
+
+    #[test]
+    fn shift_supersteps_price_at_distance_one() {
+        // On a 2×2 grid every Cannon shift is a single mesh hop (left
+        // and up wrap to the adjacent core), so the hop-weighted
+        // h-relation must sit exactly one two-route surcharge above the
+        // flat 2k²: each core sends (and receives) an A and a B block,
+        // each paying one hop.
+        use crate::sim::noc::Noc;
+        let n = 8;
+        let grid_n = 2;
+        let k = n / grid_n;
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = 4;
+        let backend = ComputeBackend::Native;
+        let out = run_gang(&m, None, false, |ctx| {
+            let vars = CannonVars::register(ctx, k).unwrap();
+            ctx.sync();
+            let a = vec![1.0f32; k * k];
+            let b = vec![1.0f32; k * k];
+            let mut c = vec![0.0f32; k * k];
+            cannon_inner(ctx, &backend, a, b, &mut c, k, vars);
+            ctx.sync();
+        });
+        let noc = Noc::for_machine(&m);
+        let shifting = &out.cost.supersteps[1];
+        assert_eq!(shifting.h, (2 * k * k) as u64);
+        // Two one-hop routes (A block + B block) per core per shift.
+        let surcharge = 2.0 * noc.hop_cycles / noc.cycles_per_word;
+        assert!(
+            (shifting.h_noc - shifting.h as f64 - surcharge).abs() < 1e-9,
+            "h_noc {} vs {} + {surcharge}",
+            shifting.h_noc,
+            shifting.h
+        );
+        // Distance-1 pricing: the surcharge is a fraction of one word.
+        assert!(shifting.h_noc > shifting.h as f64);
+        assert!(shifting.h_noc - shifting.h as f64 < 1.0);
+    }
 }

@@ -5,12 +5,14 @@
 //! panics before reaching it; this barrier can be *poisoned* (via
 //! [`PoisonOnPanic`]) so the gang unwinds instead of hanging.
 //!
-//! Performance (§Perf in DESIGN.md): a superstep is two barrier
-//! crossings and a hyperstep four, so the barrier *is* the engine hot
-//! path. Arrivals count down on an atomic; the last arrival advances an
-//! atomic generation and wakes any parked waiters. Waiters **spin
-//! briefly** on the generation counter (the common case in a busy gang:
-//! every core arrives within a few µs) before parking on a condvar.
+//! Performance (§Perf in DESIGN.md): a sharded superstep is two barrier
+//! crossings (plan + finish, see [`Barrier::wait_phased`]) with the
+//! gang's parallel apply between them, so the barrier *is* the engine
+//! hot path. Arrivals count down on an atomic; the last arrival
+//! advances an atomic generation and wakes any parked waiters. Waiters
+//! **spin briefly** on the generation counter (the common case in a
+//! busy gang: every core arrives within a few µs) before parking on a
+//! condvar.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -115,6 +117,37 @@ impl Barrier {
         }
     }
 
+    /// The two-phase **plan/apply** protocol behind the sharded
+    /// superstep delivery:
+    ///
+    /// 1. *Plan crossing* — all cores arrive; the last arrival runs
+    ///    `plan` while the gang is held (it may partition gang-shared
+    ///    queues into per-core shards freely).
+    /// 2. *Apply phase* — every core (leader included) runs `apply`
+    ///    concurrently; by construction each core must only write state
+    ///    it owns (its shard), which is what keeps this race-free.
+    /// 3. *Finish crossing* — all cores arrive again; the last arrival
+    ///    runs `finish` (close cost records, merge clocks) and releases
+    ///    the gang into the next superstep.
+    ///
+    /// The two crossings elect leaders independently — `plan` and
+    /// `finish` may run on different cores, so they must communicate
+    /// through gang-shared state, not locals. Returns the finish
+    /// crossing's [`WaitResult`]. Panics (before, during, or after
+    /// `apply`) poison the barrier via the caller's [`PoisonOnPanic`]
+    /// guard, so a fault in any phase unwinds the gang instead of
+    /// hanging the second crossing.
+    pub fn wait_phased<P, A, F>(&self, plan: P, apply: A, finish: F) -> WaitResult
+    where
+        P: FnOnce(),
+        A: FnOnce(),
+        F: FnOnce(),
+    {
+        self.wait_leader(plan);
+        apply();
+        self.wait_leader(finish)
+    }
+
     /// Poison the barrier and wake all blocked cores.
     pub fn poison(&self) {
         self.poisoned.store(true, Ordering::Release);
@@ -208,6 +241,93 @@ mod tests {
         for _ in 0..10 {
             assert!(b.wait().is_leader);
         }
+    }
+
+    #[test]
+    fn phased_plan_precedes_every_apply_and_applies_precede_finish() {
+        // Protocol order under load: plan happens-before all applies,
+        // all applies happen-before finish, for every generation.
+        let p = 4;
+        let b = Arc::new(Barrier::new(p));
+        let planned = Arc::new(AtomicUsize::new(0));
+        let applied = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..p {
+                let b = Arc::clone(&b);
+                let planned = Arc::clone(&planned);
+                let applied = Arc::clone(&applied);
+                s.spawn(move || {
+                    for gen in 0..500 {
+                        b.wait_phased(
+                            || {
+                                // Leader-only: all of last generation's
+                                // applies must have finished.
+                                assert_eq!(applied.load(Ordering::SeqCst), gen * p);
+                                planned.fetch_add(1, Ordering::SeqCst);
+                            },
+                            || {
+                                // The plan for this generation is done.
+                                assert_eq!(planned.load(Ordering::SeqCst), gen + 1);
+                                applied.fetch_add(1, Ordering::SeqCst);
+                            },
+                            || {
+                                // Finish-leader-only: every apply landed.
+                                assert_eq!(applied.load(Ordering::SeqCst), (gen + 1) * p);
+                            },
+                        );
+                    }
+                });
+            }
+        });
+        assert_eq!(planned.load(Ordering::SeqCst), 500);
+        assert_eq!(applied.load(Ordering::SeqCst), 500 * 4);
+    }
+
+    #[test]
+    fn phased_elects_one_finish_leader_per_generation() {
+        let b = Arc::new(Barrier::new(3));
+        let leaders = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let b = Arc::clone(&b);
+                let leaders = Arc::clone(&leaders);
+                s.spawn(move || {
+                    for _ in 0..200 {
+                        if b.wait_phased(|| {}, || {}, || {}).is_leader {
+                            leaders.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(leaders.load(Ordering::SeqCst), 200);
+    }
+
+    #[test]
+    fn phased_apply_panic_poisons_instead_of_hanging() {
+        // One core dies in its apply phase; the other, parked at the
+        // finish crossing, must unwind (via the guard's poison), not
+        // hang forever.
+        let b = Arc::new(Barrier::new(2));
+        let b2 = Arc::clone(&b);
+        let t = std::thread::spawn(move || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _guard = PoisonOnPanic(&b2);
+                b2.wait_phased(|| {}, || panic!("apply fault"), || {});
+            }));
+            r.is_err()
+        });
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = PoisonOnPanic(&b);
+            b.wait_phased(
+                || {},
+                || std::thread::sleep(std::time::Duration::from_millis(50)),
+                || {},
+            );
+        }));
+        assert!(r.is_err(), "survivor must unwind at the finish crossing");
+        assert!(t.join().unwrap(), "faulting core must panic");
+        assert!(b.is_poisoned());
     }
 
     #[test]

@@ -5,9 +5,14 @@
 //! different data (SPMD). Within a superstep a core computes on its own
 //! registered variables and *queues* communication (buffered `put`s,
 //! `get`s, messages). At [`Ctx::sync`] the gang meets at a poisonable
-//! barrier; one leader applies all queued operations in a deterministic
-//! order, closes the superstep's cost record (`max_s w`, the
-//! h-relation), and the next superstep begins.
+//! barrier and runs the **two-phase plan/apply protocol**: the plan
+//! leader partitions all queued operations by destination core —
+//! charging every transfer its NoC route via
+//! [`crate::sim::noc::Noc::write_cycles`] — then the gang applies the
+//! shards in parallel (each core drains only the operations targeting
+//! its own buffers), and the finish leader closes the superstep's cost
+//! record (`max_s w`, the flat h-relation, and the hop-weighted
+//! `h_noc` beside it). The next superstep then begins.
 //!
 //! The engine executes the **real numerics** while charging **virtual
 //! time** according to the machine model — the combination lets one run
@@ -69,7 +74,7 @@
 //! instead of the overlapped `max`.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 
 use crate::bsp::barrier::{Barrier, PoisonOnPanic};
@@ -79,10 +84,11 @@ use crate::model::cost::{BspCost, CoreStepUsage, SuperstepCost};
 use crate::model::params::{AcceleratorParams, WORD_BYTES};
 use crate::sim::dma::DmaEngine;
 use crate::sim::extmem::{Dir, ExtMemModel, NetState};
+use crate::sim::noc::Noc;
 use crate::sim::time::ShardedClocks;
 use crate::sim::CLOCK_HZ;
 use crate::stream::{StreamHandle, StreamRegistry};
-use crate::util::error::{anyhow, Result};
+use crate::util::error::{anyhow, ensure, Result};
 use crate::util::pool::{BufferPool, GangPool, TaskPool};
 
 /// Entries pre-reserved in the per-run record vectors (superstep costs,
@@ -90,6 +96,37 @@ use crate::util::pool::{BufferPool, GangPool, TaskPool};
 /// steady state does not grow a `Vec`. Runs longer than this fall back
 /// to amortized growth.
 const STEADY_RESERVE: usize = 1024;
+
+/// Who moves the bytes at a bulk synchronization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ApplyMode {
+    /// Two-phase plan/apply: the plan leader partitions the queued
+    /// operations by destination core, then the whole gang applies in
+    /// parallel — each core drains only the shard targeting its own
+    /// buffers (single-writer discipline preserved).
+    #[default]
+    Sharded,
+    /// One-crossing reference mode: the barrier leader builds the same
+    /// plan and applies every shard itself while the gang is held.
+    /// Byte-identical to [`ApplyMode::Sharded`] by construction (same
+    /// plan, same per-shard application order); kept for A/B testing
+    /// and as the determinism oracle.
+    LeaderOnly,
+}
+
+/// Per-gang configuration beyond the machine/streams/prefetch triple.
+#[derive(Debug, Clone, Default)]
+pub struct GangConfig {
+    /// How queued communication is applied at sync.
+    pub apply_mode: ApplyMode,
+    /// Mesh override for NoC-routed communication pricing. `None`
+    /// derives a mesh from the machine ([`Noc::for_machine`]): word
+    /// pricing calibrated to `g`, Epiphany per-hop latency. Pass a
+    /// free-hop mesh ([`Noc::with_free_hops`]) for the flat-`g`
+    /// ablation — the hop-weighted h-relation then collapses onto the
+    /// flat one.
+    pub noc: Option<Noc>,
+}
 
 /// An interned registered-variable handle.
 ///
@@ -116,9 +153,17 @@ impl VarHandle {
     }
 }
 
-/// One registered variable: a buffer per core.
+/// One registered variable: a buffer per core, plus the gang-declared
+/// length. Registration is collective (every core registers the same
+/// name with the same length), so `words` — written by whichever cores
+/// have called `register` so far — is the deterministic bound the
+/// enqueue-time checks validate against: a core's own `register` call
+/// set it before the core could obtain the handle, regardless of
+/// whether the *destination* core's registration has run yet.
 struct VarSlot {
     bufs: Vec<Mutex<Vec<f32>>>,
+    /// Declared length in words (updated on re-registration).
+    words: AtomicUsize,
 }
 
 /// The gang's variable table: a registration-time intern map plus the
@@ -191,6 +236,49 @@ struct CommQueue {
     arena: Vec<f32>,
     /// Outgoing messages as `(dst_pid, message)`.
     msgs: Vec<(usize, Message)>,
+}
+
+/// A planned put, ready to apply: the payload was staged into the
+/// destination shard's arena at plan time.
+struct PlannedPut {
+    var: VarHandle,
+    offset: usize,
+    start: usize,
+    len: usize,
+}
+
+/// A planned get: the source words were snapshotted into the issuing
+/// core's shard arena at plan time (BSPlib semantics — gets observe the
+/// source's value *at sync*, before any put of the same sync lands).
+struct PlannedGet {
+    dst_var: VarHandle,
+    dst_offset: usize,
+    start: usize,
+    len: usize,
+}
+
+/// One destination core's slice of the superstep's communication: the
+/// puts targeting its buffers, the gets it issued (whose destinations
+/// are its buffers), and the arena their payloads were staged into.
+/// Built by the plan leader in deterministic (source-pid, queue) order;
+/// drained by the owning core in the apply phase. All vectors keep
+/// their capacity across supersteps.
+#[derive(Default)]
+struct ShardPlan {
+    puts: Vec<PlannedPut>,
+    gets: Vec<PlannedGet>,
+    arena: Vec<f32>,
+}
+
+/// Leader scratch: one core's traffic tallies for the superstep being
+/// closed — words for the flat h-relation, NoC route cycles for the
+/// hop-weighted one.
+#[derive(Debug, Clone, Copy, Default)]
+struct TrafficCell {
+    sent: u64,
+    received: u64,
+    send_cycles: f64,
+    recv_cycles: f64,
 }
 
 /// State of one staging (back) buffer fill.
@@ -351,12 +439,19 @@ pub(crate) struct Shared {
     /// traffic is tallied by the leader at sync, so `put`/`get`/`send`
     /// never lock another core's cell).
     usage: Vec<Mutex<CoreStepUsage>>,
-    /// Leader scratch: per-core `(sent, received)` words of the
-    /// superstep being closed (reused, leader-only).
-    traffic: Mutex<Vec<(u64, u64)>>,
-    /// Leader scratch for staging get payloads (source and destination
-    /// may alias the same buffer).
-    get_scratch: Mutex<Vec<f32>>,
+    /// Leader scratch: per-core traffic tallies of the superstep being
+    /// closed (reused; written by the plan leader, folded by the
+    /// finish leader).
+    traffic: Mutex<Vec<TrafficCell>>,
+    /// Per-destination-core apply shards. The plan leader fills every
+    /// cell while the gang is held; each core drains only its own cell
+    /// in the apply phase, so the per-cell mutexes are uncontended.
+    shards: Vec<Mutex<ShardPlan>>,
+    /// The mesh all queued communication is routed over (hop-weighted
+    /// `write_cycles` pricing).
+    noc: Noc,
+    /// Who applies the plan: the gang in parallel, or the leader alone.
+    apply_mode: ApplyMode,
     /// Closed supersteps.
     pub cost: Mutex<BspCost>,
     /// Streams (None for plain BSP programs).
@@ -393,6 +488,7 @@ impl Shared {
         machine: AcceleratorParams,
         streams: Option<Arc<StreamRegistry>>,
         prefetch: bool,
+        cfg: GangConfig,
     ) -> Self {
         let p = machine.p;
         let extmem = ExtMemModel::calibrated(&machine);
@@ -401,14 +497,23 @@ impl Shared {
         cost.supersteps.reserve(STEADY_RESERVE);
         let mut ledger = Ledger::new();
         ledger.hypersteps.reserve(STEADY_RESERVE);
+        let noc = cfg.noc.unwrap_or_else(|| Noc::for_machine(&machine));
+        assert!(
+            noc.p() >= p,
+            "NoC mesh ({}×{}) too small for a {p}-core gang",
+            noc.n,
+            noc.n
+        );
         Self {
             barrier: Barrier::new(p),
             vars: VarStore::new(),
             comm: (0..p).map(|_| Mutex::new(CommQueue::default())).collect(),
             inbox: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
             usage: (0..p).map(|_| Mutex::new(CoreStepUsage::default())).collect(),
-            traffic: Mutex::new(vec![(0, 0); p]),
-            get_scratch: Mutex::new(Vec::new()),
+            traffic: Mutex::new(vec![TrafficCell::default(); p]),
+            shards: (0..p).map(|_| Mutex::new(ShardPlan::default())).collect(),
+            noc,
+            apply_mode: cfg.apply_mode,
             cost: Mutex::new(cost),
             streams,
             fetch_words: (0..p).map(|_| AtomicU64::new(0)).collect(),
@@ -418,11 +523,7 @@ impl Shared {
             prefetch,
             clocks: ShardedClocks::new(p),
             dma: (0..p)
-                .map(|_| {
-                    let mut d = DmaEngine::new();
-                    d.log.reserve(STEADY_RESERVE);
-                    Mutex::new(d)
-                })
+                .map(|_| Mutex::new(DmaEngine::with_log_capacity(STEADY_RESERVE)))
                 .collect(),
             extmem,
             cycles_per_flop,
@@ -439,6 +540,57 @@ impl Shared {
     fn flops_to_cycles(&self, flops: f64) -> f64 {
         flops * self.cycles_per_flop
     }
+
+    /// Validate that `[offset, offset + len)` fits `var` on `pid` —
+    /// the one bounds check shared by the enqueue paths (so a faulting
+    /// core fails on its *own* thread, pre-barrier, with a message
+    /// naming the var, the pids, the offset, and the length) and the
+    /// plan phase (which re-checks against re-registration races and
+    /// forged handles). Allocation-free unless it fails.
+    ///
+    /// `cap_from` picks the bound: enqueue checks use the var's
+    /// **declared** collective length — the issuing core's own
+    /// `register` call published it before the handle existed, so the
+    /// check is deterministic even when the destination core's
+    /// registration has not run yet this superstep — while the plan
+    /// phase checks the **actual** buffer it is about to touch.
+    #[allow(clippy::too_many_arguments)]
+    fn check_range(
+        &self,
+        slots: &[VarSlot],
+        cap_from: CapFrom,
+        kind: &'static str,
+        issuer: usize,
+        var: VarHandle,
+        pid: usize,
+        offset: usize,
+        len: usize,
+    ) -> Result<()> {
+        let slot = slots.get(var.0 as usize).ok_or_else(|| {
+            anyhow!("{kind} by core {issuer}: unregistered var handle #{}", var.0)
+        })?;
+        let cap = match cap_from {
+            CapFrom::Declared => slot.words.load(Ordering::Acquire),
+            CapFrom::Buffer => slot.bufs[pid].lock().unwrap().len(),
+        };
+        if offset > cap || len > cap - offset {
+            return Err(anyhow!(
+                "{kind} by core {issuer} out of range on var `{}` of core {pid}: \
+                 offset {offset} + len {len} > {cap} words",
+                self.vars.name_of(var.0)
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Which capacity a [`Shared::check_range`] call bounds against.
+#[derive(Clone, Copy)]
+enum CapFrom {
+    /// The var's declared collective length (deterministic at enqueue).
+    Declared,
+    /// The per-core buffer actually being read/written (plan phase).
+    Buffer,
 }
 
 /// Per-core execution context handed to the SPMD kernel.
@@ -530,6 +682,7 @@ impl Ctx {
                 let p = self.nprocs();
                 slots.push(VarSlot {
                     bufs: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+                    words: AtomicUsize::new(len),
                 });
                 names.insert(name.to_string(), id);
                 id
@@ -549,6 +702,9 @@ impl Ctx {
         if buf.len() != len {
             buf.resize(len, 0.0);
         }
+        // Re-registration may change the collective length; publish it
+        // so enqueue-time checks bound against the newest declaration.
+        slots[id as usize].words.store(len, Ordering::Release);
         Ok(VarHandle(id))
     }
 
@@ -585,17 +741,64 @@ impl Ctx {
     /// staged in this core's bump arena (drained at sync, capacity
     /// kept) — no allocation in the steady state, and no lock on any
     /// other core's state.
+    ///
+    /// Bounds are validated **here, on the issuing core**, against the
+    /// var's declared collective length (deterministic even when the
+    /// destination core's `register` call has not run yet this
+    /// superstep) — a put that would overflow the destination var
+    /// panics the caller's thread pre-barrier (poisoning the gang
+    /// barrier so everyone unwinds), instead of detonating inside the
+    /// sync leader's apply and deadlocking the cores already parked at
+    /// the barrier. Use [`Ctx::try_put`] to handle the fault as an
+    /// error instead.
     pub fn put(&self, dst_pid: usize, var: VarHandle, offset: usize, data: &[f32]) {
-        assert!(dst_pid < self.nprocs(), "put: bad pid {dst_pid}");
-        let mut q = self.shared.comm[self.pid].lock().unwrap();
+        self.try_put(dst_pid, var, offset, data).unwrap_or_else(|e| panic!("{e}"));
+    }
+
+    /// Fallible [`Ctx::put`]: a bad destination pid, unregistered
+    /// handle, or overflowing range is returned as an error (naming the
+    /// var, pids, offset, and length) and nothing is enqueued — the
+    /// kernel can recover and still reach its next sync.
+    pub fn try_put(
+        &self,
+        dst_pid: usize,
+        var: VarHandle,
+        offset: usize,
+        data: &[f32],
+    ) -> Result<()> {
+        let sh = &self.shared;
+        ensure!(
+            dst_pid < self.nprocs(),
+            "put from core {}: bad destination pid {dst_pid} (p = {})",
+            self.pid,
+            self.nprocs()
+        );
+        {
+            let slots = sh.vars.slots.read().unwrap();
+            sh.check_range(
+                &slots,
+                CapFrom::Declared,
+                "put",
+                self.pid,
+                var,
+                dst_pid,
+                offset,
+                data.len(),
+            )?;
+        }
+        let mut q = sh.comm[self.pid].lock().unwrap();
         let arena_start = q.arena.len();
         q.arena.extend_from_slice(data);
         q.puts.push(PutOp { dst_pid, var, offset, arena_start, len: data.len() });
+        Ok(())
     }
 
     /// Get (`bsp_hpget` semantics at sync): copy `len` words from
     /// `src_pid`'s `src_var` at `src_offset` into this core's `dst_var`
     /// at `dst_offset`, resolved with the source's values at sync time.
+    ///
+    /// Both ranges are validated at enqueue on the issuing core (see
+    /// [`Ctx::put`] for why); [`Ctx::try_get`] is the fallible variant.
     pub fn get(
         &self,
         src_pid: usize,
@@ -605,8 +808,53 @@ impl Ctx {
         dst_offset: usize,
         len: usize,
     ) {
-        assert!(src_pid < self.nprocs(), "get: bad pid {src_pid}");
-        self.shared.comm[self.pid].lock().unwrap().gets.push(GetOp {
+        self.try_get(src_pid, src_var, src_offset, dst_var, dst_offset, len)
+            .unwrap_or_else(|e| panic!("{e}"));
+    }
+
+    /// Fallible [`Ctx::get`]: out-of-range source or destination spans
+    /// are returned as errors naming the var, pids, offset, and length
+    /// instead of dying on a raw slice index inside the sync.
+    pub fn try_get(
+        &self,
+        src_pid: usize,
+        src_var: VarHandle,
+        src_offset: usize,
+        dst_var: VarHandle,
+        dst_offset: usize,
+        len: usize,
+    ) -> Result<()> {
+        let sh = &self.shared;
+        ensure!(
+            src_pid < self.nprocs(),
+            "get from core {}: bad source pid {src_pid} (p = {})",
+            self.pid,
+            self.nprocs()
+        );
+        {
+            let slots = sh.vars.slots.read().unwrap();
+            sh.check_range(
+                &slots,
+                CapFrom::Declared,
+                "get (source)",
+                self.pid,
+                src_var,
+                src_pid,
+                src_offset,
+                len,
+            )?;
+            sh.check_range(
+                &slots,
+                CapFrom::Declared,
+                "get (destination)",
+                self.pid,
+                dst_var,
+                self.pid,
+                dst_offset,
+                len,
+            )?;
+        }
+        sh.comm[self.pid].lock().unwrap().gets.push(GetOp {
             src_pid,
             src_var,
             src_offset,
@@ -614,6 +862,7 @@ impl Ctx {
             dst_offset,
             len,
         });
+        Ok(())
     }
 
     /// Send a tagged message (`bsp_send`), readable by `dst` after the
@@ -672,9 +921,12 @@ impl Ctx {
 
     /// Bulk synchronization (`bsp_sync`): the communication phase ends,
     /// queued operations are applied, and the superstep's cost record is
-    /// closed. One barrier crossing: the last arrival applies the queued
-    /// operations while the gang is held (§Perf: this halves the
-    /// synchronization rounds per superstep).
+    /// closed. Under the default [`ApplyMode::Sharded`] this is the
+    /// two-phase plan/apply protocol: the plan leader partitions the
+    /// queued operations by destination core (charging each transfer
+    /// its NoC route), the gang applies the shards in parallel — each
+    /// core writes only its own buffers — and the finish leader closes
+    /// the cost record.
     ///
     /// ```
     /// use bsps::bsp::run_gang;
@@ -697,100 +949,219 @@ impl Ctx {
     /// ```
     pub fn sync(&self) {
         let _guard = PoisonOnPanic(&self.shared.barrier);
-        self.shared.barrier.wait_leader(|| self.apply_superstep());
+        self.superstep_barrier(|| {});
     }
 
-    /// Leader-only: apply puts/gets/messages deterministically, close
-    /// the cost record, and advance every virtual clock through the
-    /// barrier (`max`-combine plus `g·h + l` — the BSP cost arising
-    /// mechanically). Traffic (`sent`/`received`) is tallied here from
-    /// the queues, so the enqueue paths never touch another core's
-    /// usage cell.
-    fn apply_superstep(&self) {
+    /// One bulk synchronization under the gang's [`ApplyMode`]. `after`
+    /// runs in the finish phase (leader-only, gang held) right after the
+    /// superstep record closes — `hyperstep_sync` hooks its ledger cut
+    /// in here so a hyperstep boundary is still a single protocol run.
+    fn superstep_barrier<F: FnOnce()>(&self, after: F) {
+        let sh = &self.shared;
+        match sh.apply_mode {
+            ApplyMode::Sharded => {
+                sh.barrier.wait_phased(
+                    || self.plan_superstep(),
+                    || self.apply_shard(self.pid),
+                    || {
+                        self.finish_superstep();
+                        after();
+                    },
+                );
+            }
+            ApplyMode::LeaderOnly => {
+                sh.barrier.wait_leader(|| {
+                    self.plan_superstep();
+                    for s in 0..self.nprocs() {
+                        self.apply_shard(s);
+                    }
+                    self.finish_superstep();
+                    after();
+                });
+            }
+        }
+    }
+
+    /// Plan phase (leader-only, gang held): drain every core's queued
+    /// communication into the per-destination shards, deliver messages
+    /// by move, and tally per-core traffic — words for the flat
+    /// h-relation, NoC route cycles ([`Noc::write_cycles`]) for the
+    /// hop-weighted one. Gets are **snapshotted** here into the issuing
+    /// core's shard arena (BSPlib semantics: a get observes the
+    /// source's value at sync, before any put of the same sync lands),
+    /// which is also what makes the apply phase race-free: after
+    /// planning, nothing reads another core's buffers.
+    ///
+    /// Everything is staged in (source-pid, queue) order, so the final
+    /// state is independent of which mode applies the plan.
+    fn plan_superstep(&self) {
         let sh = &self.shared;
         let p = self.nprocs();
         let slots = sh.vars.slots.read().unwrap();
         let mut traffic = sh.traffic.lock().unwrap();
         for t in traffic.iter_mut() {
-            *t = (0, 0);
+            *t = TrafficCell::default();
         }
 
-        // Gets first (BSPlib: gets read the source values of *this*
-        // superstep, i.e. before any put of the same sync lands). The
-        // source may alias the destination buffer, so stage through the
-        // reusable leader scratch.
-        let mut scratch = sh.get_scratch.lock().unwrap();
+        // Gets first: snapshot each source span into the issuing core's
+        // shard (the destination of a get is the issuer's own buffer).
+        // One shard lock per issuing core, not per op — uncontended
+        // anyway (the gang is held), but no need to pump the mutex.
         for pid in 0..p {
             let q = sh.comm[pid].lock().unwrap();
+            if q.gets.is_empty() {
+                continue;
+            }
+            let mut shard = sh.shards[pid].lock().unwrap();
             for op in &q.gets {
-                let src_slot = slots.get(op.src_var.0 as usize).unwrap_or_else(|| {
-                    panic!("get: unregistered var `{}`", sh.vars.name_of(op.src_var.0))
-                });
-                scratch.clear();
+                // Enqueue validated against the declared lengths;
+                // re-check the actual buffers (vars may have been
+                // re-registered smaller since, handles forged).
+                sh.check_range(
+                    &slots,
+                    CapFrom::Buffer,
+                    "get (source)",
+                    pid,
+                    op.src_var,
+                    op.src_pid,
+                    op.src_offset,
+                    op.len,
+                )
+                .unwrap_or_else(|e| panic!("{e}"));
+                sh.check_range(
+                    &slots,
+                    CapFrom::Buffer,
+                    "get (destination)",
+                    pid,
+                    op.dst_var,
+                    pid,
+                    op.dst_offset,
+                    op.len,
+                )
+                .unwrap_or_else(|e| panic!("{e}"));
+                let start = shard.arena.len();
                 {
-                    let src = src_slot.bufs[op.src_pid].lock().unwrap();
-                    scratch.extend_from_slice(&src[op.src_offset..op.src_offset + op.len]);
+                    let src = slots[op.src_var.0 as usize].bufs[op.src_pid].lock().unwrap();
+                    shard.arena.extend_from_slice(&src[op.src_offset..op.src_offset + op.len]);
                 }
-                let dst_slot = slots.get(op.dst_var.0 as usize).unwrap_or_else(|| {
-                    panic!("get: unregistered var `{}`", sh.vars.name_of(op.dst_var.0))
+                shard.gets.push(PlannedGet {
+                    dst_var: op.dst_var,
+                    dst_offset: op.dst_offset,
+                    start,
+                    len: op.len,
                 });
-                let mut dst = dst_slot.bufs[pid].lock().unwrap();
-                dst[op.dst_offset..op.dst_offset + op.len].copy_from_slice(&scratch);
-                traffic[pid].1 += op.len as u64;
-                traffic[op.src_pid].0 += op.len as u64;
+                let cycles = sh.noc.write_cycles(op.src_pid, pid, op.len as u64);
+                traffic[pid].received += op.len as u64;
+                traffic[pid].recv_cycles += cycles;
+                traffic[op.src_pid].sent += op.len as u64;
+                traffic[op.src_pid].send_cycles += cycles;
             }
         }
-        drop(scratch);
 
-        // Puts in source-pid order (deterministic overwrite semantics),
-        // then messages — delivered by move into the inboxes.
+        // Puts in source-pid order (deterministic overwrite semantics):
+        // payloads move from the source arenas into the destination
+        // shards' arenas. Then messages, delivered by move.
         for pid in 0..p {
             let mut q = sh.comm[pid].lock().unwrap();
             let q = &mut *q;
             for op in &q.puts {
-                let slot = slots.get(op.var.0 as usize).unwrap_or_else(|| {
-                    panic!("put: unregistered var `{}`", sh.vars.name_of(op.var.0))
-                });
-                let mut dst = slot.bufs[op.dst_pid].lock().unwrap();
-                let data = &q.arena[op.arena_start..op.arena_start + op.len];
-                assert!(
-                    op.offset + op.len <= dst.len(),
-                    "put overflows var `{}` on core {}",
-                    sh.vars.name_of(op.var.0),
-                    op.dst_pid
-                );
-                dst[op.offset..op.offset + op.len].copy_from_slice(data);
-                traffic[pid].0 += op.len as u64;
-                traffic[op.dst_pid].1 += op.len as u64;
+                sh.check_range(
+                    &slots,
+                    CapFrom::Buffer,
+                    "put",
+                    pid,
+                    op.var,
+                    op.dst_pid,
+                    op.offset,
+                    op.len,
+                )
+                .unwrap_or_else(|e| panic!("{e}"));
+                let mut shard = sh.shards[op.dst_pid].lock().unwrap();
+                let start = shard.arena.len();
+                shard.arena.extend_from_slice(&q.arena[op.arena_start..op.arena_start + op.len]);
+                shard.puts.push(PlannedPut { var: op.var, offset: op.offset, start, len: op.len });
+                let cycles = sh.noc.write_cycles(pid, op.dst_pid, op.len as u64);
+                traffic[pid].sent += op.len as u64;
+                traffic[pid].send_cycles += cycles;
+                traffic[op.dst_pid].received += op.len as u64;
+                traffic[op.dst_pid].recv_cycles += cycles;
             }
             q.puts.clear();
             q.gets.clear();
             q.arena.clear();
             for (dst, msg) in q.msgs.drain(..) {
                 let words = msg.payload.len() as u64;
-                traffic[pid].0 += words;
-                traffic[dst].1 += words;
+                let cycles = sh.noc.write_cycles(pid, dst, words);
+                traffic[pid].sent += words;
+                traffic[pid].send_cycles += cycles;
+                traffic[dst].received += words;
+                traffic[dst].recv_cycles += cycles;
                 sh.inbox[dst].lock().unwrap().push(msg);
             }
         }
+    }
 
-        // Close the cost record (folded, no per-core collection vec).
+    /// Apply phase: drain shard `pid` into core `pid`'s buffers — gets
+    /// first, then puts, both in the plan's deterministic order. In
+    /// sharded mode every core calls this for itself concurrently
+    /// (single-writer: only core `pid` writes core `pid`'s buffers); in
+    /// leader-only mode the leader walks all shards in pid order. The
+    /// shard's vectors are cleared with capacity kept.
+    fn apply_shard(&self, pid: usize) {
+        let sh = &self.shared;
+        let slots = sh.vars.slots.read().unwrap();
+        let mut shard = sh.shards[pid].lock().unwrap();
+        let shard = &mut *shard;
+        for g in &shard.gets {
+            let mut dst = slots[g.dst_var.0 as usize].bufs[pid].lock().unwrap();
+            dst[g.dst_offset..g.dst_offset + g.len]
+                .copy_from_slice(&shard.arena[g.start..g.start + g.len]);
+        }
+        for op in &shard.puts {
+            let mut dst = slots[op.var.0 as usize].bufs[pid].lock().unwrap();
+            dst[op.offset..op.offset + op.len]
+                .copy_from_slice(&shard.arena[op.start..op.start + op.len]);
+        }
+        shard.gets.clear();
+        shard.puts.clear();
+        shard.arena.clear();
+    }
+
+    /// Finish phase (leader-only, gang held): fold the per-core usage
+    /// and traffic into the superstep's cost record — flat `h` and the
+    /// hop-weighted `h_noc` side by side — and advance every virtual
+    /// clock through the barrier: `max`-combine plus the NoC-routed
+    /// communication phase plus `l`, the BSP cost arising mechanically.
+    fn finish_superstep(&self) {
+        let sh = &self.shared;
+        let p = self.nprocs();
+        let traffic = sh.traffic.lock().unwrap();
         let mut w_max = 0.0f64;
         let mut h = 0u64;
+        let mut h_cycles = 0.0f64;
         for pid in 0..p {
             let mut u = sh.usage[pid].lock().unwrap();
-            u.sent += traffic[pid].0;
-            u.received += traffic[pid].1;
+            u.sent += traffic[pid].sent;
+            u.received += traffic[pid].received;
             let u = std::mem::take(&mut *u);
             w_max = w_max.max(u.flops);
             h = h.max(u.sent.max(u.received));
+            h_cycles = h_cycles.max(traffic[pid].send_cycles.max(traffic[pid].recv_cycles));
         }
-        let step = SuperstepCost { w_max, h };
+        // Normalize the cycle tally back to word-equivalents so `h_noc`
+        // is comparable with (and reduces to, on a free-hop mesh) `h`.
+        let h_noc = if sh.noc.cycles_per_word > 0.0 {
+            h_cycles / sh.noc.cycles_per_word
+        } else {
+            h as f64
+        };
+        let step = SuperstepCost { w_max, h, h_noc };
         sh.cost.lock().unwrap().push(step);
 
         // Advance the measured timeline through the barrier: all clocks
-        // jump to the maximum plus the communication phase `g·h + l`.
-        let comm_cycles = sh.flops_to_cycles(sh.machine.g * step.h as f64 + sh.machine.l);
+        // jump to the maximum plus the NoC-routed communication phase
+        // (`h_cycles` = the busiest core's routed traffic) plus `l`.
+        let comm_cycles = h_cycles + sh.flops_to_cycles(sh.machine.l);
         sh.clocks.barrier(comm_cycles);
     }
 
@@ -1073,11 +1444,11 @@ impl Ctx {
     /// assert!(out.ledger.hypersteps.iter().all(|h| h.fetch_words == 8));
     /// ```
     pub fn hyperstep_sync(&self) {
-        // A single crossing: the leader closes the in-flight superstep
-        // *and* cuts the hyperstep ledger while the gang is held.
+        // One protocol run: the finish leader closes the in-flight
+        // superstep *and* cuts the hyperstep ledger while the gang is
+        // held.
         let _guard = PoisonOnPanic(&self.shared.barrier);
-        self.shared.barrier.wait_leader(|| {
-            self.apply_superstep();
+        self.superstep_barrier(|| {
             let sh = &self.shared;
             let compute: f64 = {
                 let cost = sh.cost.lock().unwrap();
@@ -1153,7 +1524,24 @@ pub fn run_gang<F>(
 where
     F: Fn(&mut Ctx) + Sync,
 {
-    let shared = Arc::new(Shared::new(machine.clone(), streams, prefetch));
+    run_gang_cfg(machine, streams, prefetch, GangConfig::default(), kernel)
+}
+
+/// [`run_gang`] with an explicit [`GangConfig`]: choose the sync
+/// [`ApplyMode`] (sharded gang apply vs the leader-only oracle) and
+/// override the [`Noc`] mesh (e.g. [`Noc::with_free_hops`] for the
+/// flat-`g` ablation).
+pub fn run_gang_cfg<F>(
+    machine: &AcceleratorParams,
+    streams: Option<Arc<StreamRegistry>>,
+    prefetch: bool,
+    cfg: GangConfig,
+    kernel: F,
+) -> RunOutcome
+where
+    F: Fn(&mut Ctx) + Sync,
+{
+    let shared = Arc::new(Shared::new(machine.clone(), streams, prefetch, cfg));
     let start = std::time::Instant::now();
     {
         let shared = &shared;
@@ -1378,9 +1766,12 @@ mod tests {
     }
 
     #[test]
-    fn virtual_clock_tracks_bsp_cost_for_plain_programs() {
-        // With no streams, the measured timeline must equal the BSP cost
-        // exactly: max-combined work plus g·h + l per superstep.
+    fn virtual_clock_tracks_noc_priced_bsp_cost_for_plain_programs() {
+        // With no streams, the measured timeline must equal the
+        // NoC-priced BSP cost exactly: max-combined work plus the
+        // routed communication phase (`g·h_noc`) plus `l` per
+        // superstep. The flat-priced total sits just below it (the hop
+        // surcharge on a 1-hop, 5-word put is a fraction of a FLOP).
         let m = machine(2);
         let out = run_gang(&m, None, false, |ctx| {
             let x = ctx.register("x", 8).unwrap();
@@ -1391,12 +1782,167 @@ mod tests {
             }
             ctx.sync();
         });
-        let want_flops = out.cost.total_flops(&m);
+        let want_flops = out.cost.total_flops_noc(&m);
         let got_flops = out.timeline.makespan_flops(&m);
         assert!(
             (want_flops - got_flops).abs() < 1e-6,
-            "timeline {got_flops} vs BSP cost {want_flops}"
+            "timeline {got_flops} vs NoC-priced BSP cost {want_flops}"
         );
+        let flat = out.cost.total_flops(&m);
+        assert!(
+            want_flops > flat && want_flops - flat < 1.0,
+            "hop surcharge out of band: noc {want_flops} vs flat {flat}"
+        );
+    }
+
+    #[test]
+    fn hop_weighted_h_sits_beside_flat_h() {
+        // A 10-word put across the 4×4 grid's diagonal (6 hops): the
+        // flat h stays 10 words; the hop-weighted h adds exactly the
+        // route's word-equivalents. On a free-hop mesh the two
+        // coincide bit-for-bit.
+        let m = machine(16);
+        let kernel = |ctx: &mut Ctx| {
+            let x = ctx.register("x", 16).unwrap();
+            ctx.sync();
+            if ctx.pid() == 0 {
+                ctx.put(15, x, 0, &[1.0; 10]);
+            }
+            ctx.sync();
+        };
+        let routed = run_gang(&m, None, false, kernel);
+        let s = routed.cost.supersteps[1];
+        assert_eq!(s.h, 10);
+        let noc = Noc::for_machine(&m);
+        let want = (noc.write_cycles(0, 15, 10) / noc.cycles_per_word) - 10.0;
+        assert!(
+            (s.h_noc - 10.0 - want).abs() < 1e-9,
+            "h_noc {} vs 10 + {want}",
+            s.h_noc
+        );
+
+        let cfg = GangConfig {
+            noc: Some(Noc::for_machine(&m).with_free_hops()),
+            ..Default::default()
+        };
+        let free = run_gang_cfg(&m, None, false, cfg, kernel);
+        let s = free.cost.supersteps[1];
+        assert_eq!(s.h, 10);
+        assert!(
+            (s.h_noc - 10.0).abs() < 1e-12,
+            "free-hop mesh must reduce h_noc to flat h, got {}",
+            s.h_noc
+        );
+    }
+
+    #[test]
+    fn sharded_and_leader_only_apply_agree() {
+        // The two apply modes run the same plan; their observable
+        // results (var state, message order, cost records) must be
+        // bit-identical. The p=16 randomized stress version lives in
+        // rust/tests/determinism_stress.rs.
+        let run = |mode: ApplyMode| {
+            let state = Mutex::new(Vec::new());
+            let cfg = GangConfig { apply_mode: mode, ..Default::default() };
+            let out = run_gang_cfg(&machine(4), None, false, cfg, |ctx| {
+                let a = ctx.register("a", 8).unwrap();
+                let b = ctx.register("b", 8).unwrap();
+                ctx.with_var_mut(a, |v| v.fill(ctx.pid() as f32));
+                ctx.sync();
+                let next = (ctx.pid() + 1) % 4;
+                ctx.put(next, a, ctx.pid() % 4, &[10.0 + ctx.pid() as f32; 3]);
+                ctx.get(next, a, 2, b, 0, 4);
+                ctx.send(next, 7, vec![ctx.pid() as f32]);
+                ctx.sync();
+                let msgs = ctx.move_messages();
+                let mut digest: Vec<u32> = Vec::new();
+                ctx.with_var(a, |v| digest.extend(v.iter().map(|x| x.to_bits())));
+                ctx.with_var(b, |v| digest.extend(v.iter().map(|x| x.to_bits())));
+                for msg in &msgs {
+                    digest.push(msg.src_pid as u32);
+                    digest.push(msg.tag);
+                    digest.extend(msg.payload.iter().map(|x| x.to_bits()));
+                }
+                state.lock().unwrap().push((ctx.pid(), digest));
+            });
+            let mut v = state.into_inner().unwrap();
+            v.sort();
+            (v, out.cost.supersteps.clone())
+        };
+        let (sharded, cost_s) = run(ApplyMode::Sharded);
+        let (leader, cost_l) = run(ApplyMode::LeaderOnly);
+        assert_eq!(sharded, leader, "apply modes diverged");
+        assert_eq!(cost_s, cost_l, "cost records diverged");
+    }
+
+    #[test]
+    fn put_in_the_registration_superstep_is_deterministically_valid() {
+        // No sync between the collective register and the put: the
+        // enqueue check bounds against the *declared* length (which
+        // the issuer's own register call published), not the
+        // destination core's buffer — that core's register may not
+        // have run yet when the put is issued. Repeat to exercise
+        // scheduling interleavings.
+        for _ in 0..20 {
+            run_gang(&machine(4), None, false, |ctx| {
+                let x = ctx.register("x", 8).unwrap();
+                let next = (ctx.pid() + 1) % 4;
+                ctx.put(next, x, 4, &[ctx.pid() as f32; 4]);
+                ctx.sync();
+                let prev = (ctx.pid() + 3) % 4;
+                assert_eq!(ctx.var(x)[4], prev as f32);
+            });
+        }
+    }
+
+    #[test]
+    fn overflowing_put_panics_on_the_issuing_core_with_context() {
+        // p = 1 so the faulting core is the caller: the panic payload
+        // must be our named diagnostic, not a raw slice-index message.
+        let r = std::panic::catch_unwind(|| {
+            run_gang(&machine(1), None, false, |ctx| {
+                let x = ctx.register("x", 4).unwrap();
+                ctx.sync();
+                ctx.put(0, x, 2, &[0.0; 8]); // 2 + 8 > 4
+                ctx.sync();
+            });
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("panic payload should be the formatted diagnostic");
+        for needle in ["put", "`x`", "core 0", "offset 2", "len 8", "4 words"] {
+            assert!(msg.contains(needle), "diagnostic {msg:?} missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn try_put_and_try_get_faults_are_recoverable_errors() {
+        // A kernel that checks its bounds gets an error naming the var,
+        // pids, offset and length — and the gang still completes.
+        let out = run_gang(&machine(2), None, false, |ctx| {
+            let x = ctx.register("x", 4).unwrap();
+            ctx.sync();
+            if ctx.pid() == 0 {
+                let e = ctx.try_put(1, x, 3, &[0.0; 4]).unwrap_err().to_string();
+                for needle in ["put", "core 0", "`x`", "core 1", "offset 3", "len 4"] {
+                    assert!(e.contains(needle), "put error {e:?} missing {needle:?}");
+                }
+                let e = ctx
+                    .try_get(1, x, 100, x, 0, 2)
+                    .unwrap_err()
+                    .to_string();
+                for needle in ["get", "source", "`x`", "core 1", "offset 100", "len 2"] {
+                    assert!(e.contains(needle), "get error {e:?} missing {needle:?}");
+                }
+                let e = ctx.try_put(5, x, 0, &[0.0]).unwrap_err().to_string();
+                assert!(e.contains("bad destination pid 5"), "{e}");
+            }
+            ctx.sync(); // nothing was enqueued; the gang syncs cleanly
+        });
+        assert_eq!(out.cost.len(), 2);
+        assert_eq!(out.cost.supersteps[1].h, 0);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! extension's kernel-side primitives (paper §4) on the same context.
 //!
 //! * [`barrier`] — a poisonable generation barrier (a panicking core
-//!   unwinds the gang instead of deadlocking it).
+//!   unwinds the gang instead of deadlocking it), with the two-phase
+//!   plan/apply protocol behind the sharded superstep delivery.
 //! * [`engine`]  — the superstep engine: registered variables, buffered
 //!   `put`/`get`, BSMP-style messages, `sync`, per-superstep cost
 //!   records, scratchpad budgeting, and the `stream_*`/`hyperstep_sync`
@@ -15,5 +16,7 @@ pub mod barrier;
 pub mod engine;
 pub mod timeline;
 
-pub use engine::{run_gang, Ctx, Message, RunOutcome, VarHandle};
+pub use engine::{
+    run_gang, run_gang_cfg, ApplyMode, Ctx, GangConfig, Message, RunOutcome, VarHandle,
+};
 pub use timeline::{HyperstepSpan, Timeline};

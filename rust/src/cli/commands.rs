@@ -19,6 +19,7 @@ pub fn dispatch(args: &Args) -> Result<String> {
         Some("calibrate") => calibrate_cmd(args),
         Some("predict") => predict_cmd(args),
         Some("run") => run_cmd(args),
+        Some("benchdiff") => benchdiff_cmd(args),
         Some(other) => bail!("unknown subcommand `{other}` (try `bsps info`)"),
         None => Ok(USAGE.to_string()),
     }
@@ -36,9 +37,12 @@ USAGE:
   bsps run spmv --n <size> --nnz <per-row> --rows <per-token>
   bsps run sort --n <len> --c <token>
   bsps run video --frames <count> --pixels <per-frame>
+  bsps benchdiff <old.json> <new.json> [--max-regress 0.15]
 
 Machine presets: epiphany3 (default), epiphany4, epiphany5, xeonphi_like.
-Paper benches: cargo bench (see rust/benches/, one per table/figure).";
+Paper benches: cargo bench (see rust/benches/, one per table/figure);
+benchdiff compares two BENCH_<suite>.json trajectory files and errors
+on throughput regressions beyond the threshold (the CI perf gate).";
 
 fn machine_from(args: &Args) -> Result<AcceleratorParams> {
     // `--machine-config <file.toml>` (preset + [overrides]) wins over
@@ -142,6 +146,62 @@ fn predict_cmd(args: &Args) -> Result<String> {
         humanfmt::flops(p.flops),
         humanfmt::seconds(p.seconds),
     ))
+}
+
+/// `bsps benchdiff <old.json> <new.json>`: the perf-trajectory gate.
+/// Prints one row per bench present in both files and errors if any
+/// regressed beyond `--max-regress` (default 0.15 = 15%).
+fn benchdiff_cmd(args: &Args) -> Result<String> {
+    let old_path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("benchdiff: missing baseline json path"))?;
+    let new_path = args
+        .positional
+        .get(2)
+        .ok_or_else(|| anyhow!("benchdiff: missing candidate json path"))?;
+    let max_regress = args.get_f64("max-regress", 0.15)?;
+    let load = |path: &str| -> Result<crate::util::benchtool::BenchSnapshot> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {path}: {e}"))?;
+        crate::util::benchtool::BenchSnapshot::parse(&text)
+            .map_err(|e| anyhow!("parsing {path}: {e}"))
+    };
+    let old = load(old_path)?;
+    let new = load(new_path)?;
+    if old.suite != new.suite {
+        bail!(
+            "benchdiff: suite mismatch (`{}` vs `{}`)",
+            old.suite,
+            new.suite
+        );
+    }
+    let rows = crate::util::benchtool::diff_snapshots(&old, &new, max_regress);
+    let mut out = format!(
+        "perf trajectory `{}`: {} vs {} (regression budget {:.0}%)\n",
+        old.suite,
+        old_path,
+        new_path,
+        100.0 * max_regress
+    );
+    let mut regressions = 0usize;
+    for r in &rows {
+        out.push_str(&format!(
+            "{:<44} {:>+7.1}%{}\n",
+            r.name,
+            100.0 * r.speedup,
+            if r.regressed { "  REGRESSED" } else { "" }
+        ));
+        regressions += r.regressed as usize;
+    }
+    if rows.is_empty() {
+        out.push_str("(no benches in common — nothing to gate)\n");
+    }
+    if regressions > 0 {
+        bail!("{out}benchdiff: {regressions} bench(es) regressed beyond the budget");
+    }
+    out.push_str("benchdiff: ok\n");
+    Ok(out)
 }
 
 fn run_cmd(args: &Args) -> Result<String> {
@@ -299,5 +359,57 @@ mod tests {
     fn unknown_subcommand_rejected() {
         assert!(run("frobnicate").is_err());
         assert!(run("run nothing").is_err());
+    }
+
+    fn write_snapshot_for(suite: &str, name: &str, tp: f64) -> String {
+        use crate::util::benchtool::{bench_throughput, BenchConfig, BenchRecorder};
+        let mut rec = BenchRecorder::new(suite);
+        let cfg = BenchConfig { warmup_iters: 0, samples: 1, iters_per_sample: 1 };
+        let mut r = bench_throughput("hot", cfg, 1.0, |_| ());
+        // Pin deterministic numbers: mean = 1 / tp.
+        r.time.mean = 1.0 / tp;
+        r.elements = Some(1.0);
+        rec.push(&r);
+        let path = std::env::temp_dir().join(name);
+        let path = path.to_str().unwrap().to_string();
+        rec.write(&path).unwrap();
+        path
+    }
+
+    fn write_snapshot(name: &str, tp: f64) -> String {
+        write_snapshot_for("gate_test", name, tp)
+    }
+
+    #[test]
+    fn benchdiff_passes_within_budget_and_fails_beyond_it() {
+        let old = write_snapshot("bsps_benchdiff_old.json", 1000.0);
+        let ok = write_snapshot("bsps_benchdiff_ok.json", 950.0); // -5%
+        let bad = write_snapshot("bsps_benchdiff_bad.json", 700.0); // -30%
+        let out = run(&format!("benchdiff {old} {ok}")).unwrap();
+        assert!(out.contains("benchdiff: ok"), "{out}");
+        let err = run(&format!("benchdiff {old} {bad}")).unwrap_err().to_string();
+        assert!(err.contains("REGRESSED"), "{err}");
+        assert!(err.contains("regressed beyond the budget"), "{err}");
+        // A looser budget lets the same pair through.
+        let out = run(&format!("benchdiff {old} {bad} --max-regress 0.5")).unwrap();
+        assert!(out.contains("benchdiff: ok"), "{out}");
+        for p in [&old, &ok, &bad] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn benchdiff_rejects_missing_files_and_suite_mismatch() {
+        assert!(run("benchdiff /nonexistent/a.json /nonexistent/b.json").is_err());
+        assert!(run("benchdiff").is_err());
+        // Comparing trajectories from different suites is a usage
+        // error, not a name-intersection diff over garbage.
+        let a = write_snapshot_for("suite_a", "bsps_benchdiff_sa.json", 100.0);
+        let b = write_snapshot_for("suite_b", "bsps_benchdiff_sb.json", 100.0);
+        let err = run(&format!("benchdiff {a} {b}")).unwrap_err().to_string();
+        assert!(err.contains("suite mismatch"), "{err}");
+        for p in [&a, &b] {
+            let _ = std::fs::remove_file(p);
+        }
     }
 }

@@ -8,6 +8,7 @@
 //! bsps run inprod --n 65536 --c 64       # Algorithm 1
 //! bsps run cannon --n 64 --m 2           # Algorithm 2
 //! bsps run spmv / sort / video           # §7 extensions
+//! bsps benchdiff old.json new.json       # perf-trajectory gate
 //! ```
 
 pub mod args;

@@ -13,8 +13,14 @@ pub struct Report {
     pub machine_name: &'static str,
     /// Number of supersteps executed (across all hypersteps).
     pub supersteps: usize,
-    /// Total classic-BSP cost of all supersteps, FLOPs.
+    /// Total classic-BSP cost of all supersteps, FLOPs (flat `g·h`
+    /// pricing — every word costs `g` regardless of mesh distance).
     pub bsp_flops: f64,
+    /// Total BSP cost with NoC-routed communication pricing (the
+    /// hop-weighted h-relation `h_noc`), FLOPs. Equals `bsp_flops` on a
+    /// free-hop mesh; the difference is the route surcharge the flat
+    /// model cannot see.
+    pub bsp_flops_noc: f64,
     /// Eq. 1 BSPS cost, FLOPs.
     pub bsps_flops: f64,
     /// Eq. 1 BSPS cost in simulated seconds (via `r`).
@@ -40,6 +46,7 @@ impl Report {
             machine_name: m.name,
             supersteps: out.cost.len(),
             bsp_flops: out.cost.total_flops(m),
+            bsp_flops_noc: out.cost.total_flops_noc(m),
             bsps_flops: ledger.total_flops,
             sim_seconds: ledger.total_seconds,
             measured_seconds: out.timeline.makespan_seconds(),
@@ -65,13 +72,15 @@ impl Report {
     pub fn render(&self) -> String {
         format!(
             "machine={} hypersteps={} supersteps={} \
-             bsps_cost={} sim_time={} measured={} bw_heavy={} comp_heavy={} wall={}",
+             bsps_cost={} sim_time={} measured={} noc_surcharge={} \
+             bw_heavy={} comp_heavy={} wall={}",
             self.machine_name,
             self.ledger.hypersteps,
             self.supersteps,
             humanfmt::flops(self.bsps_flops),
             humanfmt::seconds(self.sim_seconds),
             humanfmt::seconds(self.measured_seconds),
+            humanfmt::flops(self.bsp_flops_noc - self.bsp_flops),
             self.ledger.bandwidth_heavy,
             self.ledger.computation_heavy,
             humanfmt::seconds(self.wall_seconds),
@@ -89,7 +98,7 @@ mod tests {
     fn report_aggregates_outcome() {
         let m = AcceleratorParams::epiphany3();
         let mut cost = BspCost::new();
-        cost.push(SuperstepCost { w_max: 1000.0, h: 0 });
+        cost.push(SuperstepCost { w_max: 1000.0, h: 0, h_noc: 0.5 });
         let mut ledger = Ledger::new();
         ledger.push(HyperstepCost { compute_flops: 1136.0, fetch_words: 10 });
         let timeline = crate::bsp::Timeline {
@@ -100,6 +109,8 @@ mod tests {
         let r = Report::from_outcome(&m, &out);
         assert_eq!(r.supersteps, 1);
         assert!((r.bsp_flops - 1136.0).abs() < 1e-9);
+        // h_noc = 0.5 word-equivalents above flat h = 0: g·0.5 extra.
+        assert!((r.bsp_flops_noc - (1136.0 + 5.59 * 0.5)).abs() < 1e-9);
         assert!((r.bsps_flops - 1136.0).abs() < 1e-9); // compute heavy
         assert_eq!(r.ledger.computation_heavy, 1);
         assert!((r.overlap_ratio() - 1.0).abs() < 1e-9);

@@ -23,22 +23,45 @@ pub struct CoreStepUsage {
 pub struct SuperstepCost {
     /// `max_s w_i^(s)` in FLOPs.
     pub w_max: f64,
-    /// The h-relation `h_i` in words.
+    /// The flat h-relation `h_i` in words (every word priced `g`,
+    /// regardless of mesh distance — the paper's Eq. in §1).
     pub h: u64,
+    /// The NoC-routed (hop-weighted) h-relation in word-equivalents:
+    /// `max_s max(sent, received)` where each transfer is priced by
+    /// [`crate::sim::noc::Noc::write_cycles`] (route once, then one
+    /// word per `g`), normalized back to words. Reduces to exactly
+    /// `h as f64` when the mesh's `hop_cycles` is zero. Kept alongside
+    /// the flat `h` so the two pricings can be ablated against each
+    /// other.
+    pub h_noc: f64,
 }
 
 impl SuperstepCost {
-    /// Build a superstep cost from per-core usage records.
+    /// A superstep cost with flat communication pricing (`h_noc = h`) —
+    /// for cost walks with no placement information.
+    pub fn flat(w_max: f64, h: u64) -> Self {
+        Self { w_max, h, h_noc: h as f64 }
+    }
+
+    /// Build a superstep cost from per-core usage records (flat
+    /// pricing: usage records carry no mesh placement).
     pub fn from_cores(cores: &[CoreStepUsage]) -> Self {
         assert!(!cores.is_empty(), "SuperstepCost: no cores");
         let w_max = cores.iter().map(|c| c.flops).fold(0.0, f64::max);
         let h = cores.iter().map(|c| c.sent.max(c.received)).max().unwrap_or(0);
-        Self { w_max, h }
+        Self::flat(w_max, h)
     }
 
-    /// Cost in FLOPs: `w + g·h + l`.
+    /// Cost in FLOPs with flat communication pricing: `w + g·h + l`.
     pub fn flops(&self, m: &AcceleratorParams) -> f64 {
         self.w_max + m.g * self.h as f64 + m.l
+    }
+
+    /// Cost in FLOPs with NoC-routed communication pricing:
+    /// `w + g·h_noc + l`. Equals [`SuperstepCost::flops`] when the
+    /// superstep was recorded on a free-hop mesh.
+    pub fn flops_noc(&self, m: &AcceleratorParams) -> f64 {
+        self.w_max + m.g * self.h_noc + m.l
     }
 }
 
@@ -60,9 +83,15 @@ impl BspCost {
         self.supersteps.push(step);
     }
 
-    /// Total cost in FLOPs (the paper's `T`).
+    /// Total cost in FLOPs (the paper's `T`), flat pricing.
     pub fn total_flops(&self, m: &AcceleratorParams) -> f64 {
         self.supersteps.iter().map(|s| s.flops(m)).sum()
+    }
+
+    /// Total cost in FLOPs with NoC-routed (hop-weighted)
+    /// communication pricing.
+    pub fn total_flops_noc(&self, m: &AcceleratorParams) -> f64 {
+        self.supersteps.iter().map(|s| s.flops_noc(m)).sum()
     }
 
     /// Total cost in seconds via `r`.
@@ -107,9 +136,26 @@ mod tests {
 
     #[test]
     fn superstep_cost_formula() {
-        let s = SuperstepCost { w_max: 100.0, h: 10 };
+        let s = SuperstepCost::flat(100.0, 10);
         let expect = 100.0 + 5.59 * 10.0 + 136.0;
         assert!((s.flops(&m()) - expect).abs() < 1e-9);
+        // Flat construction: NoC pricing coincides with flat pricing.
+        assert!((s.flops_noc(&m()) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noc_pricing_charges_the_hop_weighted_h() {
+        // A recorded hop-weighted h-relation of 10.5 word-equivalents
+        // prices the route surcharge at g per extra word-equivalent.
+        let s = SuperstepCost { w_max: 100.0, h: 10, h_noc: 10.5 };
+        let flat = 100.0 + 5.59 * 10.0 + 136.0;
+        let noc = 100.0 + 5.59 * 10.5 + 136.0;
+        assert!((s.flops(&m()) - flat).abs() < 1e-9);
+        assert!((s.flops_noc(&m()) - noc).abs() < 1e-9);
+        let mut c = BspCost::new();
+        c.push(s);
+        c.push(SuperstepCost::flat(0.0, 0));
+        assert!((c.total_flops_noc(&m()) - c.total_flops(&m()) - 5.59 * 0.5).abs() < 1e-9);
     }
 
     #[test]
@@ -122,8 +168,8 @@ mod tests {
     #[test]
     fn sum_over_supersteps() {
         let mut c = BspCost::new();
-        c.push(SuperstepCost { w_max: 10.0, h: 0 });
-        c.push(SuperstepCost { w_max: 0.0, h: 3 });
+        c.push(SuperstepCost::flat(10.0, 0));
+        c.push(SuperstepCost::flat(0.0, 3));
         let expect = (10.0 + 136.0) + (5.59 * 3.0 + 136.0);
         assert!((c.total_flops(&m()) - expect).abs() < 1e-9);
         assert_eq!(c.len(), 2);
@@ -133,7 +179,7 @@ mod tests {
     #[test]
     fn zero_traffic_still_pays_latency() {
         // A sync with no communication still costs l (the barrier).
-        let s = SuperstepCost { w_max: 0.0, h: 0 };
+        let s = SuperstepCost::flat(0.0, 0);
         assert!((s.flops(&m()) - 136.0).abs() < 1e-9);
     }
 

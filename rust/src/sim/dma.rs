@@ -10,6 +10,12 @@
 //! prefetch at the *start* of a hyperstep and waits on its completion at
 //! the hyperstep boundary — yielding exactly Eq. 1's
 //! `max(T_h, fetch time)` behaviour in virtual time.
+//!
+//! The transfer log is a **fixed-capacity ring** by default, so a
+//! long-running engine holds a bounded window of recent transfers (and
+//! never allocates once the ring fills); enable [`DmaEngine::set_trace`]
+//! for unbounded capture when a test or trace dump needs every
+//! transfer.
 
 use crate::sim::extmem::{Actor, Dir, ExtMemModel, NetState};
 
@@ -26,13 +32,24 @@ pub struct Transfer {
     pub dir: Dir,
 }
 
+/// Transfers retained by the default (non-trace) log ring.
+pub const DEFAULT_LOG_CAPACITY: usize = 1024;
+
 /// One core's DMA engine.
 #[derive(Debug, Clone)]
 pub struct DmaEngine {
     /// The engine is busy until this virtual time.
     busy_until: f64,
-    /// Completed-transfer log (for traces and tests).
-    pub log: Vec<Transfer>,
+    /// Ring storage for the transfer log (chronological via `head`).
+    entries: Vec<Transfer>,
+    /// Ring capacity when not tracing.
+    cap: usize,
+    /// Index of the oldest retained entry once the ring has wrapped.
+    head: usize,
+    /// Transfers ever issued (including ones the ring evicted).
+    total: u64,
+    /// Unbounded capture: keep every transfer instead of a ring window.
+    trace: bool,
 }
 
 impl Default for DmaEngine {
@@ -42,9 +59,31 @@ impl Default for DmaEngine {
 }
 
 impl DmaEngine {
-    /// An idle engine at virtual time 0.
+    /// An idle engine at virtual time 0 with the default log window.
     pub fn new() -> Self {
-        Self { busy_until: 0.0, log: Vec::new() }
+        Self::with_log_capacity(DEFAULT_LOG_CAPACITY)
+    }
+
+    /// An idle engine whose log ring retains at most `cap` transfers.
+    /// The ring is pre-allocated, so logging never touches the heap
+    /// after construction (unless tracing is enabled).
+    pub fn with_log_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            busy_until: 0.0,
+            entries: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            total: 0,
+            trace: false,
+        }
+    }
+
+    /// Toggle unbounded trace capture. While on, every transfer is
+    /// retained (the log can grow without bound — use for tests and
+    /// trace dumps, not long production runs).
+    pub fn set_trace(&mut self, trace: bool) {
+        self.trace = trace;
     }
 
     /// Issue a transfer of `bytes` at virtual time `now`; returns its
@@ -62,8 +101,19 @@ impl DmaEngine {
         let dur = mem.transfer_cycles(Actor::Dma, dir, state, bytes, dir == Dir::Write);
         let done = start + dur;
         self.busy_until = done;
-        self.log.push(Transfer { issued_at: now, completes_at: done, bytes, dir });
+        self.push_log(Transfer { issued_at: now, completes_at: done, bytes, dir });
         done
+    }
+
+    fn push_log(&mut self, t: Transfer) {
+        self.total += 1;
+        if self.trace || self.entries.len() < self.cap {
+            self.entries.push(t);
+        } else {
+            // Ring full: overwrite the oldest entry.
+            self.entries[self.head] = t;
+            self.head = (self.head + 1) % self.cap;
+        }
     }
 
     /// Earliest time a new transfer could start.
@@ -71,9 +121,25 @@ impl DmaEngine {
         self.busy_until
     }
 
-    /// Drop the transfer log (keeps `busy_until`).
+    /// Retained log entries (≤ the ring capacity unless tracing).
+    pub fn log_len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Transfers ever issued, including any the ring evicted.
+    pub fn log_total(&self) -> u64 {
+        self.total
+    }
+
+    /// Retained transfers in chronological (issue) order.
+    pub fn log(&self) -> impl Iterator<Item = &Transfer> {
+        self.entries[self.head..].iter().chain(self.entries[..self.head].iter())
+    }
+
+    /// Drop the retained log (keeps `busy_until` and the total count).
     pub fn clear_log(&mut self) {
-        self.log.clear();
+        self.entries.clear();
+        self.head = 0;
     }
 }
 
@@ -128,6 +194,49 @@ mod tests {
         let first = d.issue(&mem(), 0.0, Dir::Write, NetState::Free, 1 << 20);
         let second = d.issue(&mem(), first + 100.0, Dir::Read, NetState::Free, 8);
         assert!(second > first + 100.0);
-        assert_eq!(d.log.len(), 2);
+        assert_eq!(d.log_len(), 2);
+        assert_eq!(d.log_total(), 2);
+    }
+
+    #[test]
+    fn log_ring_is_bounded_and_keeps_the_newest() {
+        let mut d = DmaEngine::with_log_capacity(4);
+        for i in 0..10 {
+            d.issue(&mem(), i as f64, Dir::Read, NetState::Free, 64);
+        }
+        assert_eq!(d.log_len(), 4, "ring holds exactly its capacity");
+        assert_eq!(d.log_total(), 10, "every issue is counted");
+        // The retained window is the newest four, in issue order.
+        let issued: Vec<f64> = d.log().map(|t| t.issued_at).collect();
+        assert_eq!(issued, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn trace_mode_captures_everything() {
+        let mut d = DmaEngine::with_log_capacity(2);
+        d.set_trace(true);
+        for i in 0..10 {
+            d.issue(&mem(), i as f64, Dir::Write, NetState::Free, 64);
+        }
+        assert_eq!(d.log_len(), 10, "trace mode is unbounded");
+        let issued: Vec<f64> = d.log().map(|t| t.issued_at).collect();
+        assert_eq!(issued, (0..10).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clear_log_keeps_time_and_total() {
+        let mut d = DmaEngine::with_log_capacity(2);
+        for i in 0..5 {
+            d.issue(&mem(), i as f64, Dir::Read, NetState::Free, 64);
+        }
+        let busy = d.free_at();
+        d.clear_log();
+        assert_eq!(d.log_len(), 0);
+        assert_eq!(d.log_total(), 5);
+        assert_eq!(d.free_at(), busy, "clearing the log does not rewind time");
+        // The ring works again after a clear.
+        d.issue(&mem(), 100.0, Dir::Read, NetState::Free, 64);
+        assert_eq!(d.log_len(), 1);
+        assert_eq!(d.log().next().unwrap().issued_at, 100.0);
     }
 }

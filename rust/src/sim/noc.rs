@@ -10,6 +10,7 @@
 //! Calibration: `g = 5.59 FLOP/word = 27.95 cycles/word` at 5
 //! cycles/FLOP; the barrier costs `l ≈ 136 FLOP = 680 cycles`.
 
+use crate::model::params::AcceleratorParams;
 use crate::sim::CYCLES_PER_FLOP;
 
 /// A 2D mesh of `n × n` cores.
@@ -36,6 +37,33 @@ impl Noc {
             hop_cycles: 1.5,
             barrier_cycles: 136.0 * CYCLES_PER_FLOP, // 680
         }
+    }
+
+    /// The smallest square grid holding `p` cores (row-major layout;
+    /// the last row may be partially populated when `p` is not a
+    /// perfect square).
+    pub fn grid_for(p: usize) -> usize {
+        ((p.max(1)) as f64).sqrt().ceil() as usize
+    }
+
+    /// A mesh sized and calibrated for `machine`: `cycles_per_word`
+    /// matches `g` (so a zero-hop route prices exactly like the flat
+    /// model) and `barrier_cycles` matches `l`. The per-hop latency
+    /// keeps the Epiphany-III sub-FLOP measurement.
+    pub fn for_machine(machine: &AcceleratorParams) -> Self {
+        Self {
+            n: Self::grid_for(machine.p),
+            cycles_per_word: machine.g * CYCLES_PER_FLOP,
+            hop_cycles: 1.5,
+            barrier_cycles: machine.l * CYCLES_PER_FLOP,
+        }
+    }
+
+    /// Same mesh with free routes (`hop_cycles = 0`): word pricing
+    /// only, the flat-`g` ablation of the NoC-aware cost.
+    pub fn with_free_hops(mut self) -> Self {
+        self.hop_cycles = 0.0;
+        self
     }
 
     /// Total cores.
@@ -141,5 +169,36 @@ mod tests {
     fn zero_word_write_costs_only_route() {
         let n = noc();
         assert_eq!(n.write_cycles(0, 1, 0), 1.5);
+    }
+
+    #[test]
+    fn grid_for_covers_non_square_gangs() {
+        assert_eq!(Noc::grid_for(1), 1);
+        assert_eq!(Noc::grid_for(2), 2);
+        assert_eq!(Noc::grid_for(3), 2);
+        assert_eq!(Noc::grid_for(16), 4);
+        assert_eq!(Noc::grid_for(17), 5);
+        // Every pid of a p-core gang has coordinates on the grid.
+        for p in 1..=20 {
+            let mut m = AcceleratorParams::epiphany3();
+            m.p = p;
+            let noc = Noc::for_machine(&m);
+            for s in 0..p {
+                let (r, c) = noc.coords(s);
+                assert_eq!(noc.core_at(r, c), s);
+            }
+        }
+    }
+
+    #[test]
+    fn for_machine_matches_flat_g_on_zero_hops() {
+        // The whole point of the calibration: a free-hop mesh prices a
+        // w-word transfer at exactly g·w FLOPs.
+        let m = AcceleratorParams::epiphany3();
+        let noc = Noc::for_machine(&m).with_free_hops();
+        for w in [1u64, 7, 64, 4096] {
+            let flops = noc.write_cycles(0, 15, w) / CYCLES_PER_FLOP;
+            assert!((flops - m.g * w as f64).abs() < 1e-9);
+        }
     }
 }

@@ -223,6 +223,317 @@ impl BenchRecorder {
     }
 }
 
+// ------------------------------------------------------------------
+// Perf-trajectory differ: parse two BENCH_<suite>.json files and fail
+// on throughput regressions (the `bsps benchdiff` subcommand + CI gate).
+
+/// A parsed JSON value (serde is not in the offline crate set; this
+/// recursive-descent parser covers everything [`BenchRecorder`] emits,
+/// which is plain standard JSON).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    /// `null` (also what non-finite floats serialize to).
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number.
+    Num(f64),
+    /// A string (escapes decoded).
+    Str(String),
+    /// An array.
+    Arr(Vec<JsonValue>),
+    /// An object, insertion-ordered.
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Parse a JSON document.
+    pub fn parse(text: &str) -> Result<JsonValue, Error> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        ensure!(pos == bytes.len(), "trailing garbage at byte {pos}");
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(fields) => {
+                fields.iter().find_map(|(k, v)| (k == key).then_some(v))
+            }
+            _ => None,
+        }
+    }
+
+    /// The number in this value, if it is one.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The string in this value, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+}
+
+use crate::util::error::{anyhow, bail, ensure, Error};
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), Error> {
+    skip_ws(b, pos);
+    ensure!(
+        *pos < b.len() && b[*pos] == c,
+        "expected `{}` at byte {pos}",
+        c as char
+    );
+    *pos += 1;
+    Ok(())
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<JsonValue, Error> {
+    skip_ws(b, pos);
+    ensure!(*pos < b.len(), "unexpected end of input");
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(JsonValue::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", JsonValue::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", JsonValue::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", JsonValue::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn parse_lit(
+    b: &[u8],
+    pos: &mut usize,
+    lit: &str,
+    v: JsonValue,
+) -> Result<JsonValue, Error> {
+    ensure!(
+        b[*pos..].starts_with(lit.as_bytes()),
+        "bad literal at byte {pos}"
+    );
+    *pos += lit.len();
+    Ok(v)
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<JsonValue, Error> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos]).expect("ascii");
+    text.parse::<f64>()
+        .map(JsonValue::Num)
+        .map_err(|_| anyhow!("bad number `{text}` at byte {start}"))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, Error> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        ensure!(*pos < b.len(), "unterminated string");
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                ensure!(*pos < b.len(), "unterminated escape");
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        ensure!(*pos + 4 < b.len(), "truncated \\u escape");
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
+                            .map_err(|_| anyhow!("bad \\u escape"))?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .map_err(|_| anyhow!("bad \\u escape `{hex}`"))?;
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    c => bail!("bad escape `\\{}`", c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // Copy one UTF-8 scalar (multi-byte sequences intact).
+                let s = std::str::from_utf8(&b[*pos..])
+                    .map_err(|_| anyhow!("invalid UTF-8 in string"))?;
+                let c = s.chars().next().expect("non-empty");
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<JsonValue, Error> {
+    expect(b, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(JsonValue::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        ensure!(*pos < b.len(), "unterminated array");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(JsonValue::Arr(items));
+            }
+            c => bail!("expected `,` or `]`, got `{}`", c as char),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<JsonValue, Error> {
+    expect(b, pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(JsonValue::Obj(fields));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        expect(b, pos, b':')?;
+        let val = parse_value(b, pos)?;
+        fields.push((key, val));
+        skip_ws(b, pos);
+        ensure!(*pos < b.len(), "unterminated object");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(JsonValue::Obj(fields));
+            }
+            c => bail!("expected `,` or `}}`, got `{}`", c as char),
+        }
+    }
+}
+
+/// One benchmark row loaded back from a `BENCH_<suite>.json` file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotBench {
+    /// Benchmark name.
+    pub name: String,
+    /// Mean per-iteration wall time, seconds.
+    pub mean_seconds: f64,
+    /// Elements per second, if the bench had a throughput denominator.
+    pub throughput: Option<f64>,
+}
+
+/// A perf-trajectory file ([`BenchRecorder`] output) loaded for diffing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchSnapshot {
+    /// Suite name.
+    pub suite: String,
+    /// Bench rows, in file order.
+    pub benches: Vec<SnapshotBench>,
+}
+
+impl BenchSnapshot {
+    /// Parse a `BENCH_<suite>.json` document.
+    pub fn parse(text: &str) -> Result<Self, Error> {
+        let root = JsonValue::parse(text)?;
+        let suite = root
+            .get("suite")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| anyhow!("missing `suite` field"))?
+            .to_string();
+        let rows = match root.get("benches") {
+            Some(JsonValue::Arr(rows)) => rows,
+            _ => bail!("missing `benches` array"),
+        };
+        let mut benches = Vec::with_capacity(rows.len());
+        for row in rows {
+            let name = row
+                .get("name")
+                .and_then(JsonValue::as_str)
+                .ok_or_else(|| anyhow!("bench row without `name`"))?
+                .to_string();
+            let mean_seconds = row
+                .get("mean_seconds")
+                .and_then(JsonValue::as_num)
+                .ok_or_else(|| anyhow!("bench `{name}` without `mean_seconds`"))?;
+            let throughput =
+                row.get("throughput_per_second").and_then(JsonValue::as_num);
+            benches.push(SnapshotBench { name, mean_seconds, throughput });
+        }
+        Ok(Self { suite, benches })
+    }
+}
+
+/// One bench compared across two snapshots.
+#[derive(Debug, Clone)]
+pub struct DiffRow {
+    /// Benchmark name.
+    pub name: String,
+    /// Fractional throughput change, `new/old - 1` (positive = faster).
+    /// Falls back to the inverse mean-time ratio when the bench has no
+    /// throughput denominator.
+    pub speedup: f64,
+    /// Whether the slowdown exceeds the regression threshold.
+    pub regressed: bool,
+}
+
+/// Compare `new` against the `old` baseline. A bench regresses when its
+/// throughput fell (or, lacking a throughput denominator, its mean time
+/// rose) by more than `max_regress` (e.g. `0.15` = 15%). Benches
+/// present in only one snapshot are skipped — renames must not fail CI.
+pub fn diff_snapshots(
+    old: &BenchSnapshot,
+    new: &BenchSnapshot,
+    max_regress: f64,
+) -> Vec<DiffRow> {
+    let mut rows = Vec::new();
+    for n in &new.benches {
+        let Some(o) = old.benches.iter().find(|o| o.name == n.name) else {
+            continue;
+        };
+        let speedup = match (o.throughput, n.throughput) {
+            (Some(old_tp), Some(new_tp)) if old_tp > 0.0 => new_tp / old_tp - 1.0,
+            _ if o.mean_seconds > 0.0 => o.mean_seconds / n.mean_seconds - 1.0,
+            _ => 0.0,
+        };
+        rows.push(DiffRow {
+            name: n.name.clone(),
+            speedup,
+            regressed: speedup < -max_regress,
+        });
+    }
+    rows
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -271,6 +582,95 @@ mod tests {
         assert!(json.contains("\"bad\": null"), "non-finite floats become null");
         // Bench "a" has no throughput denominator.
         assert!(json.contains("\"throughput_per_second\": null"));
+    }
+
+    #[test]
+    fn json_roundtrips_recorder_output() {
+        let cfg = BenchConfig { warmup_iters: 0, samples: 2, iters_per_sample: 1 };
+        let mut rec = BenchRecorder::new("suite \"x\"\nline");
+        rec.meta("p", 16);
+        rec.push(&bench("plain", cfg, |_| ()));
+        rec.push(&bench_throughput("tp", cfg, 64.0, |_| ()));
+        rec.scalar("rel", 0.03);
+        rec.scalar("bad", f64::NAN);
+        let snap = BenchSnapshot::parse(&rec.to_json()).unwrap();
+        assert_eq!(snap.suite, "suite \"x\"\nline", "escapes decode back");
+        assert_eq!(snap.benches.len(), 2);
+        assert_eq!(snap.benches[0].name, "plain");
+        assert!(snap.benches[0].throughput.is_none());
+        let tp = &snap.benches[1];
+        assert_eq!(tp.name, "tp");
+        assert!(tp.throughput.unwrap() > 0.0);
+        assert!(tp.mean_seconds >= 0.0);
+    }
+
+    #[test]
+    fn json_parser_handles_the_grammar() {
+        let v = JsonValue::parse(
+            r#"{"a": [1, -2.5e3, true, false, null, "xA\n"], "b": {}}"#,
+        )
+        .unwrap();
+        let arr = match v.get("a") {
+            Some(JsonValue::Arr(items)) => items,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(arr[0], JsonValue::Num(1.0));
+        assert_eq!(arr[1], JsonValue::Num(-2500.0));
+        assert_eq!(arr[2], JsonValue::Bool(true));
+        assert_eq!(arr[3], JsonValue::Bool(false));
+        assert_eq!(arr[4], JsonValue::Null);
+        assert_eq!(arr[5], JsonValue::Str("xA\n".to_string()));
+        assert_eq!(v.get("b"), Some(&JsonValue::Obj(Vec::new())));
+        assert!(JsonValue::parse("{").is_err());
+        assert!(JsonValue::parse("[1,]").is_err());
+        assert!(JsonValue::parse("{} trailing").is_err());
+    }
+
+    fn snap(rows: &[(&str, f64, Option<f64>)]) -> BenchSnapshot {
+        BenchSnapshot {
+            suite: "s".to_string(),
+            benches: rows
+                .iter()
+                .map(|(name, mean, tp)| SnapshotBench {
+                    name: name.to_string(),
+                    mean_seconds: *mean,
+                    throughput: *tp,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn diff_flags_throughput_regressions_beyond_threshold() {
+        let old = snap(&[
+            ("a", 1.0, Some(1000.0)),
+            ("b", 1.0, Some(1000.0)),
+            ("gone", 1.0, None),
+        ]);
+        let new = snap(&[
+            ("a", 1.0, Some(800.0)),  // -20%: regression at 15%
+            ("b", 1.0, Some(900.0)),  // -10%: within budget
+            ("added", 1.0, Some(1.0)), // no baseline: skipped
+        ]);
+        let rows = diff_snapshots(&old, &new, 0.15);
+        assert_eq!(rows.len(), 2, "unmatched benches are skipped");
+        let a = rows.iter().find(|r| r.name == "a").unwrap();
+        assert!(a.regressed);
+        assert!((a.speedup + 0.2).abs() < 1e-9);
+        let b = rows.iter().find(|r| r.name == "b").unwrap();
+        assert!(!b.regressed);
+    }
+
+    #[test]
+    fn diff_falls_back_to_mean_time_without_throughput() {
+        let old = snap(&[("t", 1.0, None)]);
+        let slower = snap(&[("t", 1.3, None)]); // 30% more time
+        let rows = diff_snapshots(&old, &slower, 0.15);
+        assert!(rows[0].regressed, "slowdown {:.3}", rows[0].speedup);
+        let faster = snap(&[("t", 0.5, None)]);
+        let rows = diff_snapshots(&old, &faster, 0.15);
+        assert!(!rows[0].regressed);
+        assert!(rows[0].speedup > 0.9);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use std::sync::Mutex;
 
-use bsps::bsp::run_gang;
+use bsps::bsp::{run_gang_cfg, ApplyMode, GangConfig};
 use bsps::model::params::AcceleratorParams;
 use bsps::util::prng::SplitMix64;
 
@@ -22,12 +22,13 @@ const SUPERSTEPS: usize = 12;
 /// One full gang run; returns a bit-exact digest of everything
 /// observable: both vars on every core plus the per-core message
 /// stream (source, tag, payload bits) in arrival order.
-fn run_once(seed: u64, run_idx: u64) -> Vec<u32> {
+fn run_once(seed: u64, run_idx: u64, mode: ApplyMode) -> Vec<u32> {
     let mut m = AcceleratorParams::epiphany3();
     m.p = P;
     let digests: Mutex<Vec<Vec<u32>>> = Mutex::new(vec![Vec::new(); P]);
+    let cfg = GangConfig { apply_mode: mode, ..Default::default() };
 
-    run_gang(&m, None, false, |ctx| {
+    run_gang_cfg(&m, None, false, cfg, |ctx| {
         let s = ctx.pid();
         let v1 = ctx.register("v1", VAR_LEN).unwrap();
         let v2 = ctx.register("v2", VAR_LEN).unwrap();
@@ -98,10 +99,10 @@ fn run_once(seed: u64, run_idx: u64) -> Vec<u32> {
 
 #[test]
 fn sync_order_application_is_byte_identical_across_runs() {
-    let reference = run_once(0xB59C_5EED, 0);
+    let reference = run_once(0xB59C_5EED, 0, ApplyMode::Sharded);
     assert!(!reference.is_empty());
     for run_idx in 1..10 {
-        let digest = run_once(0xB59C_5EED, run_idx);
+        let digest = run_once(0xB59C_5EED, run_idx, ApplyMode::Sharded);
         assert_eq!(
             digest, reference,
             "run {run_idx} diverged from run 0 under identical seeds"
@@ -110,9 +111,26 @@ fn sync_order_application_is_byte_identical_across_runs() {
 }
 
 #[test]
+fn sharded_apply_is_byte_identical_to_leader_only_apply() {
+    // The sharded (parallel) delivery must produce exactly the state
+    // the leader-only (serial oracle) delivery produces, under the
+    // same randomized op mixes and jittered physical timing — 10 runs
+    // each, all byte-identical across modes and runs.
+    let reference = run_once(0xD15C_4A11, 0, ApplyMode::LeaderOnly);
+    assert!(!reference.is_empty());
+    for run_idx in 0..10 {
+        let sharded = run_once(0xD15C_4A11, run_idx, ApplyMode::Sharded);
+        assert_eq!(
+            sharded, reference,
+            "sharded run {run_idx} diverged from the leader-only oracle"
+        );
+    }
+}
+
+#[test]
 fn different_seeds_actually_differ() {
     // Guard against the digest being trivially constant.
-    let a = run_once(1, 0);
-    let b = run_once(2, 0);
+    let a = run_once(1, 0, ApplyMode::Sharded);
+    let b = run_once(2, 0, ApplyMode::Sharded);
     assert_ne!(a, b);
 }

@@ -82,18 +82,62 @@ fn panic_with_prefetch_in_flight_unwinds_gang() {
 }
 
 #[test]
-fn panic_inside_leader_work_unwinds_gang() {
-    // The leader runs superstep bookkeeping inside the barrier; a panic
-    // there (e.g. a put that overflows its target var) must poison and
-    // unwind everyone.
+fn overflowing_put_aborts_the_gang_instead_of_hanging_it() {
+    // Regression (ISSUE 4 headline): a put whose `offset + len`
+    // overflows the destination var used to detonate inside the sync
+    // leader's apply — with the comm mutexes held and the rest of the
+    // gang parked at the barrier. Bounds are now validated at enqueue
+    // on the *issuing* core: the faulting core panics pre-barrier, the
+    // poison guard unwinds every parked core, and this test completes
+    // with an error instead of timing out.
     let r = std::panic::catch_unwind(|| {
-        run_gang(&machine(4), None, false, |ctx| {
+        run_gang(&machine(8), None, false, |ctx| {
             let x = ctx.register("x", 2).unwrap();
             ctx.sync();
             if ctx.pid() == 1 {
                 ctx.put(0, x, 1, &[1.0, 2.0, 3.0]); // overflows len 2
             }
-            ctx.sync(); // leader's apply panics here
+            ctx.sync(); // 7 innocent cores parked here must unwind
+            ctx.sync();
+        });
+    });
+    assert!(r.is_err());
+}
+
+#[test]
+fn out_of_range_get_aborts_the_gang_instead_of_hanging_it() {
+    // Same regression for the get path: an out-of-range source offset
+    // used to die on a raw slice index in the leader; it now fails on
+    // the issuing core with a named diagnostic (see the engine unit
+    // tests for the message contents) and the gang unwinds cleanly.
+    let r = std::panic::catch_unwind(|| {
+        run_gang(&machine(8), None, false, |ctx| {
+            let x = ctx.register("x", 4).unwrap();
+            ctx.sync();
+            if ctx.pid() == 3 {
+                ctx.get(2, x, 100, x, 0, 2); // src offset way past len 4
+            }
+            ctx.sync();
+        });
+    });
+    assert!(r.is_err());
+}
+
+#[test]
+fn var_resize_race_is_caught_at_the_plan_phase() {
+    // A put can pass its enqueue-time bounds check and still be stale
+    // by sync time if the destination core re-registers the var
+    // smaller. Whichever side loses the race (enqueue check or the
+    // plan leader's re-check), the gang must abort cleanly.
+    let r = std::panic::catch_unwind(|| {
+        run_gang(&machine(2), None, false, |ctx| {
+            let x = ctx.register("x", 8).unwrap();
+            ctx.sync();
+            if ctx.pid() == 0 {
+                ctx.put(1, x, 0, &[1.0; 8]); // valid against len 8
+            } else {
+                ctx.register("x", 2).unwrap(); // shrink to 2 words
+            }
             ctx.sync();
         });
     });
@@ -146,7 +190,8 @@ fn cursor_overrun_is_an_error_not_a_crash() {
 #[test]
 fn unregistered_var_put_panics_cleanly() {
     // A handle that was never interned (forged via from_raw) must fail
-    // loudly at the sync that applies the put, not corrupt memory.
+    // loudly — at enqueue, on the issuing core's thread — not corrupt
+    // memory or hang the gang.
     let r = std::panic::catch_unwind(|| {
         run_gang(&machine(2), None, false, |ctx| {
             if ctx.pid() == 0 {

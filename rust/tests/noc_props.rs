@@ -1,0 +1,132 @@
+//! Property tests for the mesh NoC and the hop-weighted h-relation.
+//!
+//! The NoC is now on the superstep hot path (every queued put/get/
+//! message is priced by `Noc::write_cycles`), so its geometry gets the
+//! property treatment: `hops` must be a metric (symmetric, triangle-
+//! bounded, zero iff src = dst), `write_cycles` must match the
+//! hand-computed closed form on the paper's 4×4 Epiphany-III grid, and
+//! the engine's hop-weighted `h_noc` must collapse onto the flat `h`
+//! when the mesh routes are free (`hop_cycles == 0`).
+
+use bsps::bsp::{run_gang_cfg, Ctx, GangConfig};
+use bsps::model::params::AcceleratorParams;
+use bsps::sim::noc::Noc;
+use bsps::sim::CYCLES_PER_FLOP;
+use bsps::util::prop::{check, Gen};
+
+fn noc44() -> Noc {
+    Noc::epiphany3(4)
+}
+
+#[test]
+fn hops_is_symmetric() {
+    check("hops(a, b) == hops(b, a)", 200, |g: &mut Gen| {
+        let n = noc44();
+        let a = g.rng.next_range(0, n.p());
+        let b = g.rng.next_range(0, n.p());
+        assert_eq!(n.hops(a, b), n.hops(b, a));
+    });
+}
+
+#[test]
+fn hops_is_zero_iff_same_core() {
+    check("hops(a, b) == 0 iff a == b", 200, |g: &mut Gen| {
+        let n = noc44();
+        let a = g.rng.next_range(0, n.p());
+        let b = g.rng.next_range(0, n.p());
+        assert_eq!(n.hops(a, b) == 0, a == b);
+    });
+}
+
+#[test]
+fn hops_satisfies_the_triangle_inequality() {
+    check("hops(a, c) <= hops(a, b) + hops(b, c)", 300, |g: &mut Gen| {
+        let n = noc44();
+        let a = g.rng.next_range(0, n.p());
+        let b = g.rng.next_range(0, n.p());
+        let c = g.rng.next_range(0, n.p());
+        assert!(n.hops(a, c) <= n.hops(a, b) + n.hops(b, c));
+    });
+}
+
+#[test]
+fn hops_is_bounded_by_the_grid_diameter() {
+    check("hops <= 2(N-1)", 200, |g: &mut Gen| {
+        let n = noc44();
+        let a = g.rng.next_range(0, n.p());
+        let b = g.rng.next_range(0, n.p());
+        assert!(n.hops(a, b) <= 2 * (n.n - 1));
+    });
+}
+
+#[test]
+fn write_cycles_matches_the_closed_form_on_the_4x4_grid() {
+    // Hand-computed: XY routing pays |Δrow| + |Δcol| hops at 1.5
+    // cycles each, then one word per 5.59·5 cycles.
+    check("write_cycles closed form", 200, |g: &mut Gen| {
+        let n = noc44();
+        let src = g.rng.next_range(0, 16);
+        let dst = g.rng.next_range(0, 16);
+        let words = g.rng.next_range(0, 512) as u64;
+        let (r1, c1) = (src / 4, src % 4);
+        let (r2, c2) = (dst / 4, dst % 4);
+        let manhattan = (r1 as i64 - r2 as i64).unsigned_abs()
+            + (c1 as i64 - c2 as i64).unsigned_abs();
+        let want = manhattan as f64 * 1.5 + words as f64 * 5.59 * CYCLES_PER_FLOP;
+        let got = n.write_cycles(src, dst, words);
+        assert!((got - want).abs() < 1e-9, "{src}->{dst} w={words}: {got} vs {want}");
+    });
+}
+
+/// A seeded all-to-neighbour exchange; returns the per-superstep
+/// `(h, h_noc)` pairs.
+fn exchange(noc: Option<Noc>, seed: u64) -> Vec<(u64, f64)> {
+    let mut m = AcceleratorParams::epiphany3();
+    m.p = 16;
+    let cfg = GangConfig { noc, ..Default::default() };
+    let out = run_gang_cfg(&m, None, false, cfg, move |ctx: &mut Ctx| {
+        let x = ctx.register("x", 64).unwrap();
+        ctx.sync();
+        let mut rng = bsps::util::prng::SplitMix64::new(seed ^ ctx.pid() as u64);
+        for _ in 0..6 {
+            let dst = rng.next_range(0, 16);
+            let len = 1 + rng.next_range(0, 16);
+            let off = rng.next_range(0, 64 - len + 1);
+            let data = vec![ctx.pid() as f32; len];
+            ctx.put(dst, x, off, &data);
+            ctx.sync();
+        }
+    });
+    out.cost.supersteps.iter().map(|s| (s.h, s.h_noc)).collect()
+}
+
+#[test]
+fn hop_weighted_h_reduces_to_flat_h_on_a_free_hop_mesh() {
+    let m = {
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = 16;
+        m
+    };
+    let free = exchange(Some(Noc::for_machine(&m).with_free_hops()), 77);
+    assert!(free.iter().any(|&(h, _)| h > 0), "exchange must move words");
+    for (h, h_noc) in &free {
+        // Equality up to float associativity: the engine folds per-op
+        // `len·g` cycle charges before normalizing back to words.
+        assert!(
+            (h_noc - *h as f64).abs() < 1e-9,
+            "free-hop mesh: h_noc {h_noc} must reduce to flat h {h}"
+        );
+    }
+    // And with routing on, the same program prices at or above flat —
+    // strictly above whenever words crossed at least one hop.
+    let routed = exchange(None, 77);
+    assert_eq!(routed.len(), free.len());
+    for ((h, h_noc), (h_free, _)) in routed.iter().zip(&free) {
+        assert_eq!(h, h_free, "flat h must not depend on the mesh");
+        assert!(*h_noc >= *h as f64 - 1e-9, "routing never discounts: {h_noc} vs {h}");
+    }
+    assert!(
+        routed.iter().any(|&(h, h_noc)| h_noc > h as f64),
+        "some transfer must have crossed a hop"
+    );
+}
