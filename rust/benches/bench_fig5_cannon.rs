@@ -4,13 +4,18 @@
 //!
 //! 1. for fixed `n`, larger `M` (smaller `k`) gives a higher run time;
 //! 2. the asymptotic compute/fetch crossover `k_equal ≈ 8`;
-//! 3. the executed gang (real data) agrees with the cost walk.
+//! 3. the executed gang (real data) agrees with the cost walk;
+//! 4. the sweep points run **concurrently** through the multi-gang
+//!    scheduler produce per-gang results byte-identical to serial
+//!    execution, with a makespan strictly below the serial sum —
+//!    recorded to `BENCH_sweep.json` for the CI trajectory gate.
 
 use bsps::algos::cannon_ml;
-use bsps::coordinator::BspsEnv;
+use bsps::bsp::sched::GangScheduler;
+use bsps::coordinator::{BspsEnv, SweepReport};
 use bsps::model::params::AcceleratorParams;
 use bsps::model::predict;
-use bsps::util::benchtool::section;
+use bsps::util::benchtool::{section, BenchRecorder};
 use bsps::util::humanfmt::seconds;
 use bsps::util::prng::SplitMix64;
 
@@ -97,4 +102,92 @@ fn main() {
             "n={n} M={m}: overlap ratio {ratio} out of band"
         );
     }
+
+    scheduled_sweep(&machine);
+}
+
+/// Run the executable Fig. 5 points twice — serially (the old loop) and
+/// concurrently through the multi-gang scheduler under a core budget of
+/// 2× the largest gang — and assert:
+///
+/// * every gang's product and cost record is **byte-identical** across
+///   the two executions (scheduling must not be observable);
+/// * the scheduled makespan is **strictly below the serial sum** (the
+///   budget holds two 16-core gangs, so overlap must show up on the
+///   wall clock);
+/// * the budget's occupancy ratio is sane (`0 < occ ≤ 1`).
+///
+/// The concurrency stats are recorded to `BENCH_sweep.json` so the CI
+/// trajectory gate watches the sweep's makespan/speedup/occupancy run
+/// over run.
+fn scheduled_sweep(machine: &AcceleratorParams) {
+    section("Fig. 5 sweep: serial loop vs multi-gang scheduler");
+    let points = [(64usize, 2usize), (96, 3), (128, 4), (128, 2)];
+    let budget = 2 * machine.p;
+    let (jobs, gangs) = cannon_ml::sweep_jobs(machine, &points, 77).unwrap();
+
+    // Scheduled execution under the 2× budget.
+    let sched = GangScheduler::new(budget);
+    let out = sched.run(jobs);
+    let sweep = SweepReport::from_sched(&out);
+    print!("{}", sweep.render());
+    assert_eq!(sweep.failed(), 0, "every sweep gang must retire cleanly");
+
+    // Serial reference + byte-identity, gang by gang (one checker
+    // shared with `bsps sweep --check`): product, Eq. 1 cost, superstep
+    // count, and measured virtual timeline must match bit for bit.
+    let t0 = std::time::Instant::now();
+    for (i, gang) in gangs.iter().enumerate() {
+        let report = sweep.gangs[i].report.as_ref().unwrap();
+        cannon_ml::verify_scheduled_identity(machine, gang, report)
+            .unwrap_or_else(|e| panic!("{e}"));
+    }
+    let serial_wall = t0.elapsed().as_secs_f64();
+    println!("byte-identity ✓: all {} gangs match serial execution", gangs.len());
+
+    // Concurrency must show on the wall clock: the budget holds two
+    // 16-core gangs, so the scheduled makespan sits strictly below the
+    // serial sum of the same gang runs.
+    let makespan = sweep.stats.makespan_seconds;
+    let serial_sum = sweep.stats.serial_sum_seconds;
+    println!(
+        "serial loop {} (gang-time sum {}), scheduled makespan {} — {:.2}x speedup, \
+         occupancy {:.2}",
+        seconds(serial_wall),
+        seconds(serial_sum),
+        seconds(makespan),
+        sweep.speedup(),
+        sweep.occupancy(),
+    );
+    assert!(
+        makespan < serial_sum,
+        "budget {budget} ≥ 2 gangs: scheduled makespan {makespan}s must sit \
+         strictly below the serial sum {serial_sum}s"
+    );
+    let occ = sweep.occupancy();
+    assert!(occ > 0.0 && occ <= 1.02, "occupancy {occ} out of (0, 1]");
+
+    // Record the sweep trajectory for the CI benchdiff gate.
+    let mut rec = BenchRecorder::new("sweep");
+    rec.meta("machine", machine.name);
+    rec.meta("budget_cores", budget);
+    rec.meta("gangs", points.len());
+    rec.meta(
+        "points",
+        points
+            .iter()
+            .map(|(n, m)| format!("{n}x{m}"))
+            .collect::<Vec<_>>()
+            .join(","),
+    );
+    // (The point list and count are configuration, not measurements —
+    // they live in the meta block above, where a changed sweep shape
+    // can't wedge the scalar gate against a stale baseline.)
+    rec.scalar("sweep_makespan_seconds", makespan);
+    rec.scalar("sweep_serial_sum_seconds", serial_sum);
+    rec.scalar("sweep_speedup", sweep.speedup());
+    rec.scalar("sweep_occupancy", occ);
+    rec.scalar("sweep_max_queue_wait_seconds", sweep.max_queue_wait_seconds());
+    rec.write("BENCH_sweep.json").expect("write BENCH_sweep.json");
+    println!("trajectory written to BENCH_sweep.json");
 }

@@ -19,12 +19,14 @@ use std::sync::Arc;
 use crate::util::error::{ensure, Result};
 
 use crate::algos::cannon::{cannon_inner, CannonVars};
-use crate::coordinator::{run_bsps, BspsEnv, Report};
+use crate::bsp::Ctx;
+use crate::coordinator::{run_bsps, BspsEnv, ComputeBackend, Report};
 use crate::host::cannon::{build_cannon_streams, gather_c, CannonStreams};
 use crate::model::bsps::{HyperstepCost, Ledger};
 use crate::model::params::AcceleratorParams;
 use crate::model::predict::{cannon_cost, CannonPrediction};
 use crate::stream::StreamRegistry;
+use crate::util::prng::SplitMix64;
 
 /// Result of a multi-level Cannon run.
 #[derive(Debug, Clone)]
@@ -44,25 +46,43 @@ pub struct CannonRun {
 /// Execute Algorithm 2: `c = a·b` with `M` outer blocks per dimension.
 /// Requires `N·M | n` and a square grid.
 pub fn run(env: &BspsEnv, a: &[f32], b: &[f32], n: usize, m: usize) -> Result<CannonRun> {
-    let grid_n = env.machine.grid_n();
-    ensure!(m > 0 && n % (grid_n * m) == 0, "N·M must divide n");
-    let mut reg = StreamRegistry::new(&env.machine);
-    let cs = build_cannon_streams(&mut reg, a, b, n, grid_n, m)?;
-    let reg = Arc::new(reg);
+    let (reg, cs) = prepare(&env.machine, a, b, n, m)?;
     let (report, _outcome) = run_gang_ml(env, Arc::clone(&reg), &cs);
     let c = gather_c(&reg, &cs)?;
     let predicted = cannon_cost(&env.machine, n, m);
     Ok(CannonRun { c, report, predicted, k: cs.k, m })
 }
 
-fn run_gang_ml(
-    env: &BspsEnv,
-    reg: Arc<StreamRegistry>,
+/// Build the per-core stream layout for one `(n, M)` Cannon point: the
+/// registry (serialized, pre-skewed `A`/`B` tokens plus the empty `C`
+/// streams) and the geometry handle. Split out of [`run`] so sweep
+/// drivers can queue the same gang as a [`crate::bsp::sched::GangJob`]
+/// and [`gather_c`] the product from the registry after it retires.
+pub fn prepare(
+    machine: &AcceleratorParams,
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+) -> Result<(Arc<StreamRegistry>, CannonStreams)> {
+    let grid_n = machine.grid_n();
+    ensure!(m > 0 && n % (grid_n * m) == 0, "N·M must divide n");
+    let mut reg = StreamRegistry::new(machine);
+    let cs = build_cannon_streams(&mut reg, a, b, n, grid_n, m)?;
+    Ok((Arc::new(reg), cs))
+}
+
+/// The Algorithm 2 SPMD kernel for a prepared stream layout — exactly
+/// what [`run`] executes, exposed as a standalone closure so the
+/// multi-gang scheduler can run many Fig. 5 points concurrently
+/// (`bsps sweep`, `bench_fig5_cannon`).
+pub fn kernel(
+    backend: Arc<ComputeBackend>,
     cs: &CannonStreams,
-) -> (Report, crate::bsp::RunOutcome) {
+) -> impl Fn(&mut Ctx) + Send + Sync + 'static {
     let (m, k) = (cs.m, cs.k);
     let (a_ids, b_ids, c_ids) = (cs.a_ids.clone(), cs.b_ids.clone(), cs.c_ids.clone());
-    run_bsps(env, reg, move |ctx, backend| {
+    move |ctx: &mut Ctx| {
         let pid = ctx.pid();
         let ha = ctx.stream_open(a_ids[pid]).unwrap();
         let hb = ctx.stream_open(b_ids[pid]).unwrap();
@@ -77,7 +97,7 @@ fn run_gang_ml(
                 for _kk in 0..m {
                     ctx.stream_move_down(ha, &mut ta).unwrap();
                     ctx.stream_move_down(hb, &mut tb).unwrap();
-                    cannon_inner(ctx, backend, ta.clone(), tb.clone(), &mut tc, k, vars);
+                    cannon_inner(ctx, &backend, ta.clone(), tb.clone(), &mut tc, k, vars);
                     ctx.hyperstep_sync();
                 }
                 ctx.stream_move_up(hc, &tc).unwrap();
@@ -92,7 +112,106 @@ fn run_gang_ml(
         ctx.stream_close(ha).unwrap();
         ctx.stream_close(hb).unwrap();
         ctx.stream_close(hc).unwrap();
-    })
+    }
+}
+
+fn run_gang_ml(
+    env: &BspsEnv,
+    reg: Arc<StreamRegistry>,
+    cs: &CannonStreams,
+) -> (Report, crate::bsp::RunOutcome) {
+    let kern = kernel(Arc::clone(&env.backend), cs);
+    run_bsps(env, reg, move |ctx, _backend| kern(ctx))
+}
+
+/// One prepared Fig. 5 sweep gang: the inputs (kept so the point can be
+/// re-run serially for identity checks) plus the registry and geometry
+/// the scheduled execution writes its product into.
+pub struct SweepGang {
+    /// Sweep point label (`cannon_n<n>_M<m>`), matching the job name.
+    pub name: String,
+    /// Matrix size.
+    pub n: usize,
+    /// Outer blocks per dimension `M`.
+    pub m: usize,
+    /// Left input, row-major `n×n`.
+    pub a: Vec<f32>,
+    /// Right input, row-major `n×n`.
+    pub b: Vec<f32>,
+    /// The registry the scheduled gang streams through ([`gather_c`]
+    /// reads the product back out of it after the gang retires).
+    pub reg: Arc<StreamRegistry>,
+    /// Stream geometry of the point.
+    pub cs: CannonStreams,
+}
+
+/// Build one scheduler job per `(n, M)` sweep point — seeded random
+/// inputs, prepared streams, the Algorithm 2 kernel — plus the
+/// [`SweepGang`] handles the drivers need afterwards (gathering
+/// products, serial identity checks). Shared by `bsps sweep` and
+/// `bench_fig5_cannon` so the two drivers cannot drift.
+///
+/// Token compute is pinned to [`ComputeBackend::Native`] on purpose:
+/// [`verify_scheduled_identity`]'s serial reference runs Native, and a
+/// bit-for-bit identity check only means "scheduling is unobservable"
+/// when both executions use the same backend.
+pub fn sweep_jobs(
+    machine: &AcceleratorParams,
+    points: &[(usize, usize)],
+    seed: u64,
+) -> Result<(Vec<crate::bsp::sched::GangJob>, Vec<SweepGang>)> {
+    let backend = Arc::new(ComputeBackend::Native);
+    let mut rng = SplitMix64::new(seed);
+    let mut jobs = Vec::new();
+    let mut gangs = Vec::new();
+    for &(n, m) in points {
+        let a = rng.f32_vec(n * n, -1.0, 1.0);
+        let b = rng.f32_vec(n * n, -1.0, 1.0);
+        let (reg, cs) = prepare(machine, &a, &b, n, m)
+            .map_err(|e| e.context(format!("sweep point {n}x{m}")))?;
+        let kern = kernel(Arc::clone(&backend), &cs);
+        let name = format!("cannon_n{n}_M{m}");
+        jobs.push(
+            crate::bsp::sched::GangJob::new(&name, machine.clone(), kern)
+                .with_streams(Arc::clone(&reg), true),
+        );
+        gangs.push(SweepGang { name, n, m, a, b, reg, cs });
+    }
+    Ok((jobs, gangs))
+}
+
+/// Re-run one sweep gang serially and verify the scheduled execution
+/// was **byte-identical**: the gathered product, the Eq. 1 cost, the
+/// superstep count, and the measured virtual timeline must match the
+/// serial run bit for bit (scheduling must not be observable from
+/// inside a gang). Returns the serial run. One checker for both sweep
+/// drivers (`bsps sweep --check`, `bench_fig5_cannon`).
+pub fn verify_scheduled_identity(
+    machine: &AcceleratorParams,
+    gang: &SweepGang,
+    scheduled: &Report,
+) -> Result<CannonRun> {
+    let scheduled_c = gather_c(&gang.reg, &gang.cs)?;
+    let env = BspsEnv::native(machine.clone());
+    let serial = run(&env, &gang.a, &gang.b, gang.n, gang.m)?;
+    ensure!(
+        scheduled_c.len() == serial.c.len()
+            && scheduled_c
+                .iter()
+                .zip(&serial.c)
+                .all(|(x, y)| x.to_bits() == y.to_bits()),
+        "sweep gang {}: scheduled product differs from serial execution",
+        gang.name
+    );
+    ensure!(
+        scheduled.bsps_flops.to_bits() == serial.report.bsps_flops.to_bits()
+            && scheduled.supersteps == serial.report.supersteps
+            && scheduled.measured_seconds.to_bits()
+                == serial.report.measured_seconds.to_bits(),
+        "sweep gang {}: scheduled cost record diverged from serial execution",
+        gang.name
+    );
+    Ok(serial)
 }
 
 /// Pure cost walk of Algorithm 2: build the exact Eq. 1 ledger that

@@ -89,7 +89,7 @@ use crate::sim::time::ShardedClocks;
 use crate::sim::CLOCK_HZ;
 use crate::stream::{StreamHandle, StreamRegistry};
 use crate::util::error::{anyhow, ensure, Result};
-use crate::util::pool::{BufferPool, GangPool, TaskPool};
+use crate::util::pool::{BufferPool, CoreBudget, GangPool, TaskPool};
 
 /// Entries pre-reserved in the per-run record vectors (superstep costs,
 /// ledger rows, timeline spans, DMA logs) so pushing a record in the
@@ -477,6 +477,11 @@ pub(crate) struct Shared {
     cycles_per_flop: f64,
     /// Recycled token buffers for this gang's fills.
     buf_pool: Arc<BufferPool>,
+    /// Recycled message-payload buffers (`take_msg_buf`/`give_msg_buf`),
+    /// so message-heavy programs are allocation-free in the steady state
+    /// too: a drained payload goes back here and the next `send_pooled`
+    /// re-uses its capacity.
+    msg_pool: BufferPool,
     /// Per-core prefetch slots, keyed by stream id.
     slots: Vec<Mutex<BTreeMap<usize, StreamSlot>>>,
     /// Measured hyperstep spans.
@@ -528,6 +533,7 @@ impl Shared {
             extmem,
             cycles_per_flop,
             buf_pool: Arc::new(BufferPool::new()),
+            msg_pool: BufferPool::new(),
             slots: (0..p).map(|_| Mutex::new(BTreeMap::new())).collect(),
             timeline: Mutex::new(TimelineBuild {
                 spans: Vec::with_capacity(STEADY_RESERVE),
@@ -891,6 +897,54 @@ impl Ctx {
         out.clear();
         let mut inbox = self.shared.inbox[self.pid].lock().unwrap();
         out.append(&mut inbox);
+    }
+
+    /// Take a recycled message-payload buffer (empty, capacity kept)
+    /// from the gang's message pool — the allocation-free way to build
+    /// a [`Ctx::send_pooled`] payload. On a dry pool this returns an
+    /// empty `Vec` whose first fill pays the one warm-up allocation;
+    /// after a couple of hypersteps of a take → send → drain →
+    /// [`Ctx::give_msg_buf`] cycle, the same allocations circulate
+    /// forever (`rust/tests/zero_alloc.rs` pins this).
+    ///
+    /// ```
+    /// use bsps::bsp::run_gang;
+    /// use bsps::model::params::AcceleratorParams;
+    ///
+    /// let mut m = AcceleratorParams::epiphany3();
+    /// m.p = 2;
+    /// run_gang(&m, None, false, |ctx| {
+    ///     let mut payload = ctx.take_msg_buf();
+    ///     payload.push(ctx.pid() as f32);
+    ///     ctx.send_pooled(1 - ctx.pid(), 7, payload);
+    ///     ctx.sync();
+    ///     let mut msgs = Vec::new();
+    ///     ctx.move_messages_into(&mut msgs);
+    ///     assert_eq!(msgs[0].payload[0], (1 - ctx.pid()) as f32);
+    ///     for msg in msgs.drain(..) {
+    ///         ctx.give_msg_buf(msg.payload); // recycle for the next round
+    ///     }
+    /// });
+    /// ```
+    pub fn take_msg_buf(&self) -> Vec<f32> {
+        self.shared.msg_pool.take()
+    }
+
+    /// Return a drained message payload to the gang's message pool
+    /// (cleared, capacity kept) so a later [`Ctx::take_msg_buf`] —
+    /// on any core — re-uses the allocation.
+    pub fn give_msg_buf(&self, buf: Vec<f32>) {
+        self.shared.msg_pool.give(buf);
+    }
+
+    /// [`Ctx::send`] with a payload taken from [`Ctx::take_msg_buf`]:
+    /// the pooled half of the take/give message API. Delivery semantics
+    /// are identical to `send` (the payload still travels by move); the
+    /// distinct name marks the pooled discipline — the receiver is
+    /// expected to hand the drained payload back via
+    /// [`Ctx::give_msg_buf`] to close the recycling loop.
+    pub fn send_pooled(&self, dst_pid: usize, tag: u32, payload: Vec<f32>) {
+        self.send(dst_pid, tag, payload);
     }
 
     /// BROADCAST(a) from the paper's pseudocode: send `values` to every
@@ -1573,6 +1627,48 @@ where
     }
 }
 
+/// [`run_gang_cfg`] mediated by a global [`CoreBudget`]: the gang's `p`
+/// cores are checked out of `budget` (blocking on its FIFO waitlist
+/// until they are free) before any thread starts, and returned when the
+/// run retires — the scheduler-aware entry point concurrent callers use
+/// so the *sum* of live gangs never exceeds the budget. The multi-gang
+/// scheduler ([`crate::bsp::sched::GangScheduler`]) layers queueing and
+/// backfill on top of the same checkout.
+///
+/// Panics if `machine.p` exceeds the budget's capacity (the request
+/// could never be satisfied).
+///
+/// ```
+/// use bsps::bsp::run_gang_budgeted;
+/// use bsps::bsp::engine::GangConfig;
+/// use bsps::model::params::AcceleratorParams;
+/// use bsps::util::pool::CoreBudget;
+///
+/// let mut m = AcceleratorParams::epiphany3();
+/// m.p = 2;
+/// let budget = CoreBudget::new(4);
+/// let out = run_gang_budgeted(&budget, &m, None, false, GangConfig::default(), |ctx| {
+///     ctx.charge_flops(10.0);
+///     ctx.sync();
+/// });
+/// assert_eq!(out.cost.len(), 1);
+/// assert_eq!(budget.available(), 4); // lease returned at retirement
+/// ```
+pub fn run_gang_budgeted<F>(
+    budget: &CoreBudget,
+    machine: &AcceleratorParams,
+    streams: Option<Arc<StreamRegistry>>,
+    prefetch: bool,
+    cfg: GangConfig,
+    kernel: F,
+) -> RunOutcome
+where
+    F: Fn(&mut Ctx) + Sync,
+{
+    let _lease = budget.acquire(machine.p);
+    run_gang_cfg(machine, streams, prefetch, cfg, kernel)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2132,6 +2228,84 @@ mod tests {
             }
         });
         assert_eq!(out.cost.len(), 3);
+    }
+
+    #[test]
+    fn pooled_messages_recycle_payload_buffers() {
+        // take → send_pooled → drain → give: later takes must hand back
+        // allocations earlier gives returned (pointer identity through
+        // the pool). The pool is gang-global, so a buffer given by one
+        // core may legitimately come back out of the other core's take
+        // — track given pointers gang-globally.
+        use std::sync::atomic::AtomicUsize;
+        let recycled = AtomicUsize::new(0);
+        let given = Mutex::new(Vec::<usize>::new());
+        run_gang(&machine(2), None, false, |ctx| {
+            let peer = 1 - ctx.pid();
+            let mut msgs: Vec<Message> = Vec::new();
+            for round in 0..3u32 {
+                let mut payload = ctx.take_msg_buf();
+                assert!(payload.is_empty(), "pooled buffers come back cleared");
+                if given.lock().unwrap().contains(&(payload.as_ptr() as usize)) {
+                    recycled.fetch_add(1, Ordering::SeqCst);
+                }
+                payload.extend_from_slice(&[round as f32; 8]);
+                ctx.send_pooled(peer, round, payload);
+                ctx.sync();
+                ctx.move_messages_into(&mut msgs);
+                assert_eq!(msgs.len(), 1);
+                assert_eq!(msgs[0].payload, vec![round as f32; 8]);
+                for msg in msgs.drain(..) {
+                    given.lock().unwrap().push(msg.payload.as_ptr() as usize);
+                    ctx.give_msg_buf(msg.payload);
+                }
+            }
+        });
+        assert!(
+            recycled.load(Ordering::SeqCst) > 0,
+            "later takes must re-use buffers earlier gives returned"
+        );
+    }
+
+    #[test]
+    fn budgeted_runs_bound_concurrent_gangs() {
+        // Two 2-core gangs against a 2-core budget: they must serialize
+        // (never more than one gang live at once), and both complete.
+        use std::sync::atomic::AtomicUsize;
+        let budget = CoreBudget::new(2);
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let budget = &budget;
+                let live = &live;
+                let peak = &peak;
+                s.spawn(move || {
+                    let out = run_gang_budgeted(
+                        budget,
+                        &machine(2),
+                        None,
+                        false,
+                        GangConfig::default(),
+                        |ctx| {
+                            if ctx.pid() == 0 {
+                                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                                peak.fetch_max(now, Ordering::SeqCst);
+                            }
+                            ctx.sync();
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            ctx.sync();
+                            if ctx.pid() == 0 {
+                                live.fetch_sub(1, Ordering::SeqCst);
+                            }
+                        },
+                    );
+                    assert_eq!(out.cost.len(), 2);
+                });
+            }
+        });
+        assert_eq!(peak.load(Ordering::SeqCst), 1, "budget 2 serializes 2-core gangs");
+        assert_eq!(budget.available(), 2);
     }
 
     #[test]

@@ -11,12 +11,18 @@
 //!   prefetch executor that overlaps token fills with compute.
 //! * [`timeline`] — the measured virtual timeline those overlapped runs
 //!   produce (per-hyperstep spans, makespan incl. DMA drain).
+//! * [`sched`]    — the multi-gang scheduler: a queue of gangs admitted
+//!   concurrently under a global core budget, with backfill as gangs
+//!   retire (the Fig. 5 sweep's execution layer).
 
 pub mod barrier;
 pub mod engine;
+pub mod sched;
 pub mod timeline;
 
 pub use engine::{
-    run_gang, run_gang_cfg, ApplyMode, Ctx, GangConfig, Message, RunOutcome, VarHandle,
+    run_gang, run_gang_budgeted, run_gang_cfg, ApplyMode, Ctx, GangConfig, Message,
+    RunOutcome, VarHandle,
 };
+pub use sched::{GangJob, GangScheduler, JobResult, SchedOutcome, SchedStats};
 pub use timeline::{HyperstepSpan, Timeline};

@@ -1,0 +1,509 @@
+//! Multi-gang scheduler: run a queue of SPMD gangs concurrently under a
+//! global core budget.
+//!
+//! The paper's experiments (the Fig. 5 sweep, §6) run many gang
+//! configurations `(p, C, n)` back-to-back on one fixed pool of
+//! Epiphany cores. The engine executes one gang at a time; this module
+//! adds the missing layer: a [`GangScheduler`] that admits as many
+//! queued [`GangJob`]s as fit a global [`CoreBudget`] (`--cores N`,
+//! default = host parallelism), runs them concurrently on the
+//! process-wide [`crate::util::pool::GangPool`], and **backfills** from
+//! the queue as gangs retire.
+//!
+//! Safety under concurrency: every gang's state (`Shared`, its
+//! `ShardedClocks`, barrier, variable table, comm queues) is created
+//! per run and never shared between gangs; the only process-wide
+//! resources — the gang thread pool and the stream-fill workers — are
+//! checkout- respectively request-scoped, so concurrent gangs cannot
+//! observe each other. Per-gang results are therefore **byte-identical**
+//! to serial execution (`rust/tests/sched_stress.rs` and
+//! `bench_fig5_cannon` pin this).
+//!
+//! Admission order and fairness: the queue is scanned front to back on
+//! every retirement and each job that fits the *remaining* budget is
+//! admitted — a small job may overtake a large one that is waiting for
+//! a bigger hole (HPC-style backfill). A steady stream of small jobs
+//! can therefore delay a large one indefinitely; the sweep workloads
+//! this scheduler serves are finite queues, where every job eventually
+//! runs because admission strictly drains the queue. See
+//! `docs/ARCHITECTURE.md` ("Multi-gang scheduling") for the caveats.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use crate::bsp::engine::{run_gang_cfg, Ctx, GangConfig, RunOutcome};
+use crate::model::params::AcceleratorParams;
+use crate::stream::StreamRegistry;
+use crate::util::pool::CoreBudget;
+
+/// One queued gang: a machine (whose `p` is the core request), the
+/// gang-level configuration, and the SPMD kernel to run.
+pub struct GangJob {
+    /// Display name (sweep point label, e.g. `cannon_n128_M4`).
+    pub name: String,
+    /// Machine the gang runs on; `machine.p` is the requested core
+    /// count the scheduler admits against.
+    pub machine: AcceleratorParams,
+    /// Stream registry for `stream_*` programs (`None` for plain BSP).
+    pub streams: Option<Arc<StreamRegistry>>,
+    /// Whether the gang runs the double-buffered prefetch executor.
+    pub prefetch: bool,
+    /// Apply-mode / NoC configuration.
+    pub cfg: GangConfig,
+    /// The SPMD kernel, boxed so heterogeneous jobs share one queue.
+    pub kernel: Box<dyn Fn(&mut Ctx) + Send + Sync>,
+}
+
+impl GangJob {
+    /// A plain-BSP job with default config and prefetch off.
+    pub fn new<F>(name: &str, machine: AcceleratorParams, kernel: F) -> Self
+    where
+        F: Fn(&mut Ctx) + Send + Sync + 'static,
+    {
+        Self {
+            name: name.to_string(),
+            machine,
+            streams: None,
+            prefetch: false,
+            cfg: GangConfig::default(),
+            kernel: Box::new(kernel),
+        }
+    }
+
+    /// Attach a stream registry and enable the prefetch executor.
+    pub fn with_streams(mut self, streams: Arc<StreamRegistry>, prefetch: bool) -> Self {
+        self.streams = Some(streams);
+        self.prefetch = prefetch;
+        self
+    }
+
+    /// Override the gang configuration (apply mode, NoC mesh).
+    pub fn with_cfg(mut self, cfg: GangConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Cores this job requests from the budget.
+    pub fn cores(&self) -> usize {
+        self.machine.p
+    }
+}
+
+impl std::fmt::Debug for GangJob {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GangJob")
+            .field("name", &self.name)
+            .field("cores", &self.cores())
+            .field("prefetch", &self.prefetch)
+            .finish()
+    }
+}
+
+/// One job's result: scheduling timings plus the gang outcome (or the
+/// panic/rejection diagnostic for jobs that did not finish cleanly).
+#[derive(Debug)]
+pub struct JobResult {
+    /// Job name (copied from the [`GangJob`]).
+    pub name: String,
+    /// Cores the job requested.
+    pub cores: usize,
+    /// Machine the job ran on (for building per-gang reports).
+    pub machine: AcceleratorParams,
+    /// Submit → admission wall-clock wait, seconds.
+    pub queue_wait_seconds: f64,
+    /// Admission → retirement wall-clock, seconds (0 for rejected jobs).
+    pub run_seconds: f64,
+    /// The gang outcome, or a diagnostic: the panic payload of a gang
+    /// that died, or the rejection reason for a job whose core request
+    /// exceeds the whole budget.
+    pub outcome: Result<RunOutcome, String>,
+}
+
+/// Concurrency statistics of one [`GangScheduler::run`] call.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedStats {
+    /// The global core budget the queue ran under.
+    pub budget_cores: usize,
+    /// Wall-clock from first admission scan to last retirement, seconds.
+    pub makespan_seconds: f64,
+    /// Σ per-job `run_seconds` — what a serial loop would have paid in
+    /// gang time (excluding its own between-runs overhead).
+    pub serial_sum_seconds: f64,
+    /// Σ `cores · run_seconds` over completed jobs (core-seconds of
+    /// budget actually occupied).
+    pub core_seconds: f64,
+    /// Peak concurrently-admitted cores.
+    pub peak_cores: usize,
+}
+
+impl SchedStats {
+    /// Fraction of the budget's core-time the queue kept busy:
+    /// `core_seconds / (budget · makespan)`, in `(0, 1]`.
+    pub fn occupancy(&self) -> f64 {
+        let denom = self.budget_cores as f64 * self.makespan_seconds;
+        if denom > 0.0 {
+            self.core_seconds / denom
+        } else {
+            0.0
+        }
+    }
+
+    /// Serial-sum over makespan: >1 once any two gangs overlapped.
+    pub fn speedup(&self) -> f64 {
+        if self.makespan_seconds > 0.0 {
+            self.serial_sum_seconds / self.makespan_seconds
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Everything a scheduled queue produced: per-job results in submission
+/// order plus the aggregate concurrency stats.
+#[derive(Debug)]
+pub struct SchedOutcome {
+    /// Per-job results, in the order the jobs were submitted.
+    pub jobs: Vec<JobResult>,
+    /// Aggregate concurrency statistics.
+    pub stats: SchedStats,
+}
+
+/// Runs a queue of [`GangJob`]s concurrently under a global core
+/// budget, backfilling from the queue as gangs retire.
+///
+/// ```
+/// use bsps::bsp::sched::{GangJob, GangScheduler};
+/// use bsps::model::params::AcceleratorParams;
+///
+/// let mut m = AcceleratorParams::epiphany3();
+/// m.p = 2;
+/// let jobs: Vec<GangJob> = (0..3)
+///     .map(|i| {
+///         GangJob::new(&format!("job{i}"), m.clone(), |ctx| {
+///             ctx.charge_flops(10.0);
+///             ctx.sync();
+///         })
+///     })
+///     .collect();
+/// // Budget 4 ⇒ two 2-core gangs in flight at once, one backfilled.
+/// let out = GangScheduler::new(4).run(jobs);
+/// assert_eq!(out.jobs.len(), 3);
+/// assert!(out.jobs.iter().all(|j| j.outcome.is_ok()));
+/// assert!(out.stats.peak_cores <= 4);
+/// ```
+pub struct GangScheduler {
+    budget: CoreBudget,
+}
+
+/// Render a caught panic payload (`String`/`&str` panics keep their
+/// message, anything else gets a generic marker).
+fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "gang panicked (non-string payload)".to_string()
+    }
+}
+
+impl GangScheduler {
+    /// A scheduler over a budget of `cores` simulated cores.
+    pub fn new(cores: usize) -> Self {
+        Self { budget: CoreBudget::new(cores) }
+    }
+
+    /// A scheduler budgeted to the host's parallelism (the `--cores`
+    /// default).
+    pub fn host() -> Self {
+        Self { budget: CoreBudget::host() }
+    }
+
+    /// The global core budget.
+    pub fn budget_cores(&self) -> usize {
+        self.budget.capacity()
+    }
+
+    /// Run the queue to completion and return per-job results (in
+    /// submission order) plus concurrency stats.
+    ///
+    /// * Jobs whose core request exceeds the whole budget are rejected
+    ///   up front (running them could never be admitted — waiting would
+    ///   wedge the queue) with an `Err` naming the budget.
+    /// * A gang that **panics** is caught, recorded as `Err` with the
+    ///   panic message, and its cores are returned to the budget — the
+    ///   rest of the queue keeps draining.
+    pub fn run(&self, jobs: Vec<GangJob>) -> SchedOutcome {
+        let n = jobs.len();
+        let mut results: Vec<Option<JobResult>> = Vec::new();
+        results.resize_with(n, || None);
+        let t0 = Instant::now();
+        let mut pending: VecDeque<(usize, GangJob)> = jobs.into_iter().enumerate().collect();
+        let (done_tx, done_rx) = mpsc::channel::<(usize, JobResult)>();
+
+        let mut in_flight = 0usize;
+        let mut peak_cores = 0usize;
+        let mut core_seconds = 0.0f64;
+        let mut serial_sum = 0.0f64;
+
+        thread::scope(|s| {
+            loop {
+                // Admission pass: walk the queue front to back and
+                // launch every job the remaining budget can hold
+                // (backfill — later small jobs may pass a waiting
+                // large one).
+                let mut i = 0;
+                while i < pending.len() {
+                    let cores = pending[i].1.cores();
+                    if cores > self.budget.capacity() {
+                        let (idx, job) = pending.remove(i).expect("index in range");
+                        results[idx] = Some(JobResult {
+                            name: job.name,
+                            cores,
+                            machine: job.machine,
+                            queue_wait_seconds: t0.elapsed().as_secs_f64(),
+                            run_seconds: 0.0,
+                            outcome: Err(format!(
+                                "job requests {cores} cores but the budget is {} — \
+                                 it can never be admitted",
+                                self.budget.capacity()
+                            )),
+                        });
+                        continue;
+                    }
+                    let Some(lease) = self.budget.try_acquire(cores) else {
+                        i += 1;
+                        continue;
+                    };
+                    let (idx, job) = pending.remove(i).expect("index in range");
+                    in_flight += 1;
+                    // Read usage off the budget itself (runners drop
+                    // their leases *before* reporting, so a local tally
+                    // could double-count a retiring gang's cores and
+                    // report a peak above the budget).
+                    peak_cores =
+                        peak_cores.max(self.budget.capacity() - self.budget.available());
+                    let queue_wait_seconds = t0.elapsed().as_secs_f64();
+                    let tx = done_tx.clone();
+                    s.spawn(move || {
+                        let start = Instant::now();
+                        let r = catch_unwind(AssertUnwindSafe(|| {
+                            run_gang_cfg(
+                                &job.machine,
+                                job.streams.clone(),
+                                job.prefetch,
+                                job.cfg.clone(),
+                                |ctx| (job.kernel)(ctx),
+                            )
+                        }));
+                        let run_seconds = start.elapsed().as_secs_f64();
+                        // Return the cores *before* reporting, so the
+                        // admission pass that our completion wakes is
+                        // guaranteed to see them free.
+                        drop(lease);
+                        let _ = tx.send((
+                            idx,
+                            JobResult {
+                                name: job.name,
+                                cores,
+                                machine: job.machine,
+                                queue_wait_seconds,
+                                run_seconds,
+                                outcome: r.map_err(panic_message),
+                            },
+                        ));
+                    });
+                }
+
+                if in_flight == 0 {
+                    assert!(
+                        pending.is_empty(),
+                        "scheduler wedged: {} jobs pending with the whole budget free",
+                        pending.len()
+                    );
+                    break;
+                }
+
+                // Block until a gang retires, then account and re-scan.
+                let (idx, res) = done_rx
+                    .recv()
+                    .expect("a gang runner died without reporting");
+                in_flight -= 1;
+                core_seconds += res.cores as f64 * res.run_seconds;
+                serial_sum += res.run_seconds;
+                results[idx] = Some(res);
+            }
+        });
+
+        let makespan_seconds = t0.elapsed().as_secs_f64();
+        SchedOutcome {
+            jobs: results
+                .into_iter()
+                .map(|r| r.expect("every job produced a result"))
+                .collect(),
+            stats: SchedStats {
+                budget_cores: self.budget.capacity(),
+                makespan_seconds,
+                serial_sum_seconds: serial_sum,
+                core_seconds,
+                peak_cores,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    fn machine(p: usize) -> AcceleratorParams {
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = p;
+        m
+    }
+
+    #[test]
+    fn runs_all_jobs_and_reports_in_submission_order() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<GangJob> = (0..5)
+            .map(|i| {
+                let hits = Arc::clone(&hits);
+                GangJob::new(&format!("j{i}"), machine(2), move |ctx| {
+                    if ctx.pid() == 0 {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }
+                    ctx.charge_flops(1.0);
+                    ctx.sync();
+                })
+            })
+            .collect();
+        let out = GangScheduler::new(4).run(jobs);
+        assert_eq!(hits.load(Ordering::SeqCst), 5);
+        assert_eq!(out.jobs.len(), 5);
+        for (i, j) in out.jobs.iter().enumerate() {
+            assert_eq!(j.name, format!("j{i}"), "submission order preserved");
+            let outcome = j.outcome.as_ref().expect("job ran");
+            assert_eq!(outcome.cost.len(), 1);
+        }
+        assert!(out.stats.peak_cores <= 4);
+        assert!(out.stats.makespan_seconds > 0.0);
+    }
+
+    #[test]
+    fn concurrency_is_bounded_by_the_budget() {
+        // 6 gangs of 2 cores under a 4-core budget: at most 2 gangs in
+        // flight at any instant.
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<GangJob> = (0..6)
+            .map(|i| {
+                let live = Arc::clone(&live);
+                let peak = Arc::clone(&peak);
+                GangJob::new(&format!("j{i}"), machine(2), move |ctx| {
+                    if ctx.pid() == 0 {
+                        let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                        peak.fetch_max(now, Ordering::SeqCst);
+                    }
+                    ctx.sync();
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    ctx.sync();
+                    if ctx.pid() == 0 {
+                        live.fetch_sub(1, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        let out = GangScheduler::new(4).run(jobs);
+        assert!(out.jobs.iter().all(|j| j.outcome.is_ok()));
+        assert!(
+            peak.load(Ordering::SeqCst) <= 2,
+            "budget 4 admits at most two 2-core gangs, saw {}",
+            peak.load(Ordering::SeqCst)
+        );
+        assert!(out.stats.peak_cores <= 4);
+        assert!(out.stats.occupancy() > 0.0 && out.stats.occupancy() <= 1.02);
+    }
+
+    #[test]
+    fn oversized_job_is_rejected_and_queue_drains() {
+        let jobs = vec![
+            GangJob::new("fits", machine(2), |ctx| ctx.sync()),
+            GangJob::new("too_big", machine(8), |ctx| ctx.sync()),
+            GangJob::new("fits_too", machine(2), |ctx| ctx.sync()),
+        ];
+        let out = GangScheduler::new(4).run(jobs);
+        assert!(out.jobs[0].outcome.is_ok());
+        let err = out.jobs[1].outcome.as_ref().unwrap_err();
+        assert!(err.contains("8 cores"), "{err}");
+        assert!(err.contains("budget is 4"), "{err}");
+        assert!(out.jobs[2].outcome.is_ok());
+    }
+
+    #[test]
+    fn panicking_gang_retires_without_wedging_the_queue() {
+        let jobs = vec![
+            GangJob::new("ok_before", machine(2), |ctx| ctx.sync()),
+            GangJob::new("bomb", machine(2), |ctx| {
+                if ctx.pid() == 1 {
+                    panic!("core 1 exploded");
+                }
+                ctx.sync();
+            }),
+            GangJob::new("ok_after", machine(2), |ctx| ctx.sync()),
+        ];
+        let out = GangScheduler::new(2).run(jobs); // strictly serial budget
+        assert!(out.jobs[0].outcome.is_ok());
+        let err = out.jobs[1].outcome.as_ref().unwrap_err();
+        assert!(err.contains("core 1 exploded"), "{err}");
+        assert!(out.jobs[2].outcome.is_ok(), "queue drained past the panic");
+    }
+
+    #[test]
+    fn backfill_admits_small_jobs_past_a_waiting_large_one() {
+        // Budget 4; a running 3-core gang blocks the queued 4-core job,
+        // but the 1-core job behind it must backfill into the hole.
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mk = |name: &str, p: usize, order: &Arc<Mutex<Vec<String>>>| {
+            let order = Arc::clone(order);
+            let name_owned = name.to_string();
+            GangJob::new(name, machine(p), move |ctx| {
+                if ctx.pid() == 0 {
+                    order.lock().unwrap().push(name_owned.clone());
+                }
+                ctx.sync();
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                ctx.sync();
+            })
+        };
+        let jobs = vec![
+            mk("wide3", 3, &order),
+            mk("wide4", 4, &order),
+            mk("narrow1", 1, &order),
+        ];
+        let out = GangScheduler::new(4).run(jobs);
+        assert!(out.jobs.iter().all(|j| j.outcome.is_ok()));
+        let started = order.lock().unwrap().clone();
+        let pos = |n: &str| started.iter().position(|s| s == n).unwrap();
+        assert!(
+            pos("narrow1") < pos("wide4"),
+            "narrow1 must backfill ahead of wide4: {started:?}"
+        );
+        // wide4 still eventually ran, and waited for the full budget.
+        let wide4 = out.jobs.iter().find(|j| j.name == "wide4").unwrap();
+        assert!(wide4.queue_wait_seconds > 0.0);
+    }
+
+    #[test]
+    fn empty_queue_is_a_no_op() {
+        let out = GangScheduler::new(2).run(Vec::new());
+        assert!(out.jobs.is_empty());
+        assert_eq!(out.stats.serial_sum_seconds, 0.0);
+        assert_eq!(out.stats.peak_cores, 0);
+    }
+}

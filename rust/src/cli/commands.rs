@@ -1,9 +1,10 @@
 //! Subcommand implementations for the `bsps` binary.
 
-use crate::util::error::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, ensure, Result};
 
+use crate::bsp::sched::GangScheduler;
 use crate::cli::args::Args;
-use crate::coordinator::BspsEnv;
+use crate::coordinator::{BspsEnv, SweepReport};
 use crate::model::params::AcceleratorParams;
 use crate::model::{calibrate, predict};
 use crate::sim::extmem::{Actor, Dir, ExtMemModel, NetState};
@@ -19,6 +20,7 @@ pub fn dispatch(args: &Args) -> Result<String> {
         Some("calibrate") => calibrate_cmd(args),
         Some("predict") => predict_cmd(args),
         Some("run") => run_cmd(args),
+        Some("sweep") => sweep_cmd(args),
         Some("benchdiff") => benchdiff_cmd(args),
         Some(other) => bail!("unknown subcommand `{other}` (try `bsps info`)"),
         None => Ok(USAGE.to_string()),
@@ -37,12 +39,19 @@ USAGE:
   bsps run spmv --n <size> --nnz <per-row> --rows <per-token>
   bsps run sort --n <len> --c <token>
   bsps run video --frames <count> --pixels <per-frame>
+  bsps sweep [--cores <budget>] [--jobs <n>x<M>,<n>x<M>,…] [--check]
   bsps benchdiff <old.json> <new.json> [--max-regress 0.15]
+                 [--max-scalar-rel 0.15]
 
 Machine presets: epiphany3 (default), epiphany4, epiphany5, xeonphi_like.
+sweep runs the Fig. 5 Cannon points concurrently through the multi-gang
+scheduler under a global core budget (default: host parallelism, raised
+to the largest gang); --check re-runs each point serially and verifies
+the scheduled products are byte-identical.
 Paper benches: cargo bench (see rust/benches/, one per table/figure);
 benchdiff compares two BENCH_<suite>.json trajectory files and errors
-on throughput regressions beyond the threshold (the CI perf gate).";
+on throughput regressions beyond the threshold and on trajectory
+scalars drifting out of their tolerance bands (the CI perf gate).";
 
 fn machine_from(args: &Args) -> Result<AcceleratorParams> {
     // `--machine-config <file.toml>` (preset + [overrides]) wins over
@@ -148,9 +157,81 @@ fn predict_cmd(args: &Args) -> Result<String> {
     ))
 }
 
+/// Parse a `--jobs` spec: comma-separated `<n>x<M>` sweep points.
+fn parse_sweep_points(spec: &str) -> Result<Vec<(usize, usize)>> {
+    let mut points = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        let (n, m) = part
+            .split_once('x')
+            .ok_or_else(|| anyhow!("--jobs: `{part}` is not of the form <n>x<M>"))?;
+        let n: usize = n
+            .parse()
+            .map_err(|_| anyhow!("--jobs: bad matrix size in `{part}`"))?;
+        let m: usize = m
+            .parse()
+            .map_err(|_| anyhow!("--jobs: bad outer-block count in `{part}`"))?;
+        points.push((n, m));
+    }
+    ensure!(!points.is_empty(), "--jobs: empty spec");
+    Ok(points)
+}
+
+/// `bsps sweep`: run the Fig. 5 multi-level-Cannon points concurrently
+/// through the multi-gang scheduler under a global core budget, and
+/// report the per-gang costs plus the concurrency stats (makespan vs
+/// serial sum, occupancy, queue waits). With `--check`, each point is
+/// re-run serially and the scheduled product is verified byte-identical.
+fn sweep_cmd(args: &Args) -> Result<String> {
+    let machine = machine_from(args)?;
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    // Default budget = host parallelism, raised to the largest gang so
+    // the no-flags invocation is runnable on small hosts (a gang wider
+    // than the whole budget could never be admitted).
+    let cores = args.get_usize("cores", host.max(machine.p))?;
+    ensure!(
+        cores >= machine.p,
+        "--cores {cores} is smaller than one {}-core gang — no sweep point \
+         could ever be admitted",
+        machine.p
+    );
+    let points = parse_sweep_points(args.get("jobs").unwrap_or("64x2,128x4,128x2"))?;
+    let (jobs, gangs) = crate::algos::cannon_ml::sweep_jobs(
+        &machine,
+        &points,
+        args.get_usize("seed", 42)? as u64,
+    )?;
+
+    let sched = GangScheduler::new(cores);
+    let out = sched.run(jobs);
+    let sweep = SweepReport::from_sched(&out);
+    let mut text = sweep.render();
+
+    if args.flag("check") {
+        for (i, gang) in gangs.iter().enumerate() {
+            // Failed gangs are already reported as FAILED above.
+            let Some(report) = sweep.gangs[i].report.as_ref() else {
+                continue;
+            };
+            crate::algos::cannon_ml::verify_scheduled_identity(&machine, gang, report)?;
+            text.push_str(&format!(
+                "  check {}: byte-identical to serial ✓\n",
+                gang.name
+            ));
+        }
+    }
+    if sweep.failed() > 0 {
+        bail!("{text}sweep: {} gang(s) failed", sweep.failed());
+    }
+    Ok(text)
+}
+
 /// `bsps benchdiff <old.json> <new.json>`: the perf-trajectory gate.
 /// Prints one row per bench present in both files and errors if any
-/// regressed beyond `--max-regress` (default 0.15 = 15%).
+/// regressed beyond `--max-regress` (default 0.15 = 15%), and one row
+/// per trajectory scalar present in both, erroring on drift outside the
+/// scalar's tolerance band (`util::benchtool::scalar_band_for`,
+/// default-band slack via `--max-scalar-rel`).
 fn benchdiff_cmd(args: &Args) -> Result<String> {
     let old_path = args
         .positional
@@ -161,6 +242,7 @@ fn benchdiff_cmd(args: &Args) -> Result<String> {
         .get(2)
         .ok_or_else(|| anyhow!("benchdiff: missing candidate json path"))?;
     let max_regress = args.get_f64("max-regress", 0.15)?;
+    let max_scalar_rel = args.get_f64("max-scalar-rel", 0.15)?;
     let load = |path: &str| -> Result<crate::util::benchtool::BenchSnapshot> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("reading {path}: {e}"))?;
@@ -194,11 +276,25 @@ fn benchdiff_cmd(args: &Args) -> Result<String> {
         ));
         regressions += r.regressed as usize;
     }
-    if rows.is_empty() {
-        out.push_str("(no benches in common — nothing to gate)\n");
+    let scalar_rows = crate::util::benchtool::diff_scalars(&old, &new, max_scalar_rel);
+    for r in &scalar_rows {
+        out.push_str(&format!(
+            "scalar {:<37} {:>11.4e} -> {:>11.4e}{}\n",
+            r.name,
+            r.old,
+            r.new,
+            if r.out_of_band { "  OUT OF BAND" } else { "" }
+        ));
+        regressions += r.out_of_band as usize;
+    }
+    if rows.is_empty() && scalar_rows.is_empty() {
+        out.push_str("(no benches or scalars in common — nothing to gate)\n");
     }
     if regressions > 0 {
-        bail!("{out}benchdiff: {regressions} bench(es) regressed beyond the budget");
+        bail!(
+            "{out}benchdiff: {regressions} bench(es)/scalar(s) regressed beyond \
+             the budget"
+        );
     }
     out.push_str("benchdiff: ok\n");
     Ok(out)
@@ -359,6 +455,74 @@ mod tests {
     fn unknown_subcommand_rejected() {
         assert!(run("frobnicate").is_err());
         assert!(run("run nothing").is_err());
+    }
+
+    #[test]
+    fn sweep_runs_points_through_the_scheduler_and_checks_serial_identity() {
+        let out = run("sweep --cores 32 --jobs 16x2,32x2 --check").unwrap();
+        assert!(out.contains("sweep budget=32"), "{out}");
+        assert!(out.contains("gang cannon_n16_M2"), "{out}");
+        assert!(out.contains("gang cannon_n32_M2"), "{out}");
+        assert!(out.contains("failed=0"), "{out}");
+        assert!(out.contains("occupancy="), "{out}");
+        assert!(
+            out.contains("check cannon_n16_M2: byte-identical to serial"),
+            "{out}"
+        );
+        assert!(
+            out.contains("check cannon_n32_M2: byte-identical to serial"),
+            "{out}"
+        );
+    }
+
+    #[test]
+    fn sweep_rejects_bad_specs_and_tiny_budgets() {
+        let err = run("sweep --jobs banana").unwrap_err().to_string();
+        assert!(err.contains("not of the form"), "{err}");
+        // 15 is not divisible by grid·M = 8: the point is rejected
+        // before scheduling.
+        let err = run("sweep --jobs 15x2").unwrap_err().to_string();
+        assert!(err.contains("sweep point 15x2"), "{err}");
+        // A budget smaller than one gang can never admit anything.
+        let err = run("sweep --cores 4 --jobs 16x2").unwrap_err().to_string();
+        assert!(err.contains("smaller than one 16-core gang"), "{err}");
+    }
+
+    fn write_scalar_snapshot(name: &str, scalars: &[(&str, f64)]) -> String {
+        use crate::util::benchtool::BenchRecorder;
+        let mut rec = BenchRecorder::new("scalar_gate");
+        for (k, v) in scalars {
+            rec.scalar(k, *v);
+        }
+        let path = std::env::temp_dir().join(name);
+        let path = path.to_str().unwrap().to_string();
+        rec.write(&path).unwrap();
+        path
+    }
+
+    #[test]
+    fn benchdiff_gates_trajectory_scalars_with_bands() {
+        let old = write_scalar_snapshot(
+            "bsps_scalar_old.json",
+            &[("overlap_rel_a", 0.03), ("sweep_speedup", 2.0)],
+        );
+        let ok = write_scalar_snapshot(
+            "bsps_scalar_ok.json",
+            &[("overlap_rel_a", 0.035), ("sweep_speedup", 2.4)],
+        );
+        let bad = write_scalar_snapshot(
+            "bsps_scalar_bad.json",
+            &[("overlap_rel_a", 0.40), ("sweep_speedup", 2.0)],
+        );
+        let out = run(&format!("benchdiff {old} {ok}")).unwrap();
+        assert!(out.contains("scalar overlap_rel_a"), "{out}");
+        assert!(out.contains("benchdiff: ok"), "{out}");
+        let err = run(&format!("benchdiff {old} {bad}")).unwrap_err().to_string();
+        assert!(err.contains("OUT OF BAND"), "{err}");
+        assert!(err.contains("regressed beyond"), "{err}");
+        for p in [&old, &ok, &bad] {
+            let _ = std::fs::remove_file(p);
+        }
     }
 
     fn write_snapshot_for(suite: &str, name: &str, tp: f64) -> String {

@@ -10,7 +10,8 @@
 //!   and returns a [`report::Report`] combining real results with the
 //!   Eq. 1 ledger.
 //! * [`report`]  — per-run reporting: BSP cost, BSPS cost, hyperstep
-//!   classification, simulated seconds, host wall time.
+//!   classification, simulated seconds, host wall time — and the
+//!   [`SweepReport`] aggregate a scheduled multi-gang sweep produces.
 
 pub mod compute;
 pub mod env;
@@ -19,4 +20,4 @@ pub mod report;
 
 pub use compute::ComputeBackend;
 pub use env::{run_bsps, BspsEnv};
-pub use report::Report;
+pub use report::{Report, SweepReport};

@@ -1,5 +1,9 @@
-//! Per-run reporting: the numbers the paper's evaluation plots.
+//! Per-run reporting: the numbers the paper's evaluation plots — plus
+//! [`SweepReport`], the aggregate a scheduled multi-gang sweep produces
+//! (per-gang [`Report`]s with wall-clock concurrency stats: makespan,
+//! core-occupancy ratio, queue wait).
 
+use crate::bsp::sched::{SchedOutcome, SchedStats};
 use crate::bsp::RunOutcome;
 use crate::model::bsps::LedgerSummary;
 use crate::model::params::AcceleratorParams;
@@ -88,6 +92,123 @@ impl Report {
     }
 }
 
+/// One gang's slice of a [`SweepReport`]: scheduling timings plus the
+/// per-gang [`Report`] (or the failure diagnostic).
+#[derive(Debug, Clone)]
+pub struct GangRunReport {
+    /// Job name (sweep point label).
+    pub name: String,
+    /// Cores the gang requested from the budget.
+    pub cores: usize,
+    /// Submit → admission wall-clock wait, seconds.
+    pub queue_wait_seconds: f64,
+    /// Admission → retirement wall-clock, seconds.
+    pub run_seconds: f64,
+    /// The gang's cost report (`None` for failed/rejected jobs).
+    pub report: Option<Report>,
+    /// The failure diagnostic (panic message or rejection reason).
+    pub error: Option<String>,
+}
+
+/// Aggregate of a scheduled sweep: per-gang [`Report`]s plus the
+/// wall-clock concurrency story (makespan vs serial sum, occupancy of
+/// the core budget, queue waits).
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    /// The scheduler's concurrency statistics (budget, makespan, serial
+    /// sum, core-seconds, peak cores — see [`SchedStats`]).
+    pub stats: SchedStats,
+    /// Per-gang rows, in submission order.
+    pub gangs: Vec<GangRunReport>,
+}
+
+impl SweepReport {
+    /// Build from a finished scheduler run: each job's [`RunOutcome`]
+    /// becomes a per-gang [`Report`] costed on that job's machine.
+    pub fn from_sched(out: &SchedOutcome) -> Self {
+        let gangs = out
+            .jobs
+            .iter()
+            .map(|j| {
+                let (report, error) = match &j.outcome {
+                    Ok(o) => (Some(Report::from_outcome(&j.machine, o)), None),
+                    Err(e) => (None, Some(e.clone())),
+                };
+                GangRunReport {
+                    name: j.name.clone(),
+                    cores: j.cores,
+                    queue_wait_seconds: j.queue_wait_seconds,
+                    run_seconds: j.run_seconds,
+                    report,
+                    error,
+                }
+            })
+            .collect();
+        Self { stats: out.stats, gangs }
+    }
+
+    /// Fraction of the budget's core-time the sweep kept busy, `(0, 1]`
+    /// ([`SchedStats::occupancy`]).
+    pub fn occupancy(&self) -> f64 {
+        self.stats.occupancy()
+    }
+
+    /// Serial-sum over makespan: >1 once any two gangs overlapped
+    /// ([`SchedStats::speedup`]).
+    pub fn speedup(&self) -> f64 {
+        self.stats.speedup()
+    }
+
+    /// Longest submit → admission wait across the queue, seconds.
+    pub fn max_queue_wait_seconds(&self) -> f64 {
+        self.gangs
+            .iter()
+            .map(|g| g.queue_wait_seconds)
+            .fold(0.0, f64::max)
+    }
+
+    /// Gangs that did not produce a report (panicked or rejected).
+    pub fn failed(&self) -> usize {
+        self.gangs.iter().filter(|g| g.error.is_some()).count()
+    }
+
+    /// Stable, grep-able sweep summary: one header row with the
+    /// concurrency stats, then one row per gang.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "sweep budget={} gangs={} failed={} makespan={} serial_sum={} \
+             speedup={:.2}x occupancy={:.2} peak_cores={} max_wait={}\n",
+            self.stats.budget_cores,
+            self.gangs.len(),
+            self.failed(),
+            humanfmt::seconds(self.stats.makespan_seconds),
+            humanfmt::seconds(self.stats.serial_sum_seconds),
+            self.speedup(),
+            self.occupancy(),
+            self.stats.peak_cores,
+            humanfmt::seconds(self.max_queue_wait_seconds()),
+        );
+        for g in &self.gangs {
+            match (&g.report, &g.error) {
+                (Some(r), _) => out.push_str(&format!(
+                    "  gang {:<20} cores={:<3} wait={} run={} {}\n",
+                    g.name,
+                    g.cores,
+                    humanfmt::seconds(g.queue_wait_seconds),
+                    humanfmt::seconds(g.run_seconds),
+                    r.render(),
+                )),
+                (None, Some(e)) => out.push_str(&format!(
+                    "  gang {:<20} cores={:<3} FAILED: {e}\n",
+                    g.name, g.cores,
+                )),
+                (None, None) => unreachable!("gang with neither report nor error"),
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +239,44 @@ mod tests {
         assert!(s.contains("machine=epiphany3"));
         assert!(s.contains("hypersteps=1"));
         assert!(s.contains("measured="));
+    }
+
+    #[test]
+    fn sweep_report_aggregates_scheduled_gangs() {
+        use crate::bsp::sched::{GangJob, GangScheduler};
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = 2;
+        let mut jobs: Vec<GangJob> = (0..3)
+            .map(|i| {
+                GangJob::new(&format!("g{i}"), m.clone(), |ctx| {
+                    ctx.charge_flops(50.0);
+                    ctx.sync();
+                })
+            })
+            .collect();
+        jobs.push(GangJob::new("bomb", m.clone(), |ctx| {
+            if ctx.pid() == 0 {
+                panic!("injected fault");
+            }
+            ctx.sync();
+        }));
+        let out = GangScheduler::new(4).run(jobs);
+        let sweep = SweepReport::from_sched(&out);
+        assert_eq!(sweep.gangs.len(), 4);
+        assert_eq!(sweep.failed(), 1);
+        for g in &sweep.gangs[..3] {
+            let r = g.report.as_ref().expect("clean gang has a report");
+            assert_eq!(r.supersteps, 1);
+            assert!((r.bsp_flops - 50.0).abs() < 1e-9);
+        }
+        assert!(sweep.gangs[3].error.as_ref().unwrap().contains("injected fault"));
+        assert!(sweep.stats.makespan_seconds > 0.0);
+        assert!(sweep.occupancy() > 0.0 && sweep.occupancy() <= 1.02);
+        assert!(sweep.stats.peak_cores <= 4);
+        let s = sweep.render();
+        assert!(s.contains("sweep budget=4"), "{s}");
+        assert!(s.contains("failed=1"), "{s}");
+        assert!(s.contains("gang g0"), "{s}");
+        assert!(s.contains("FAILED: injected fault"), "{s}");
     }
 }

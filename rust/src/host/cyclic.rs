@@ -9,7 +9,9 @@ use crate::stream::StreamRegistry;
 
 /// Split `v` cyclically over `p` cores: `out[s][j] = v[j·p + s]`.
 pub fn cyclic_split(v: &[f32], p: usize) -> Vec<Vec<f32>> {
-    let mut parts = vec![Vec::with_capacity(v.len().div_ceil(p)); p];
+    // Capacity hint only; usize::div_ceil needs 1.73 and the crate's
+    // MSRV (CI-gated) is 1.70.
+    let mut parts = vec![Vec::with_capacity(v.len() / p + 1); p];
     for (i, &x) in v.iter().enumerate() {
         parts[i % p].push(x);
     }

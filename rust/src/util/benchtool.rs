@@ -459,6 +459,10 @@ pub struct BenchSnapshot {
     pub suite: String,
     /// Bench rows, in file order.
     pub benches: Vec<SnapshotBench>,
+    /// Trajectory scalars (model rel-errors, NoC surcharge, sweep
+    /// makespan/occupancy, …), in file order. Non-finite scalars
+    /// (serialized as `null`) are dropped at parse.
+    pub scalars: Vec<(String, f64)>,
 }
 
 impl BenchSnapshot {
@@ -489,7 +493,16 @@ impl BenchSnapshot {
                 row.get("throughput_per_second").and_then(JsonValue::as_num);
             benches.push(SnapshotBench { name, mean_seconds, throughput });
         }
-        Ok(Self { suite, benches })
+        // `scalars` is optional (older trajectory files predate it).
+        let mut scalars = Vec::new();
+        if let Some(JsonValue::Obj(fields)) = root.get("scalars") {
+            for (name, v) in fields {
+                if let Some(x) = v.as_num() {
+                    scalars.push((name.clone(), x));
+                }
+            }
+        }
+        Ok(Self { suite, benches, scalars })
     }
 }
 
@@ -529,6 +542,118 @@ pub fn diff_snapshots(
             name: n.name.clone(),
             speedup,
             regressed: speedup < -max_regress,
+        });
+    }
+    rows
+}
+
+// ------------------------------------------------------------------
+// Trajectory scalars: per-scalar tolerance bands.
+
+/// Which direction of drift a trajectory scalar regresses in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BandDir {
+    /// Growing is bad (model rel-errors, route surcharge, makespan).
+    HigherIsWorse,
+    /// Shrinking is bad (speedups, occupancy).
+    LowerIsWorse,
+    /// Any drift beyond the band is bad (calibration curve points).
+    TwoSided,
+}
+
+/// Tolerance band for one trajectory scalar: the new value is in band
+/// when its drift (in the scalar's bad direction) stays within
+/// `abs + rel·|old|`.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalarBand {
+    /// Relative slack, as a fraction of the baseline's magnitude.
+    pub rel: f64,
+    /// Absolute slack (keeps near-zero baselines from pinning the band
+    /// shut).
+    pub abs: f64,
+    /// Which drift direction counts as a regression.
+    pub dir: BandDir,
+}
+
+/// The built-in band table, keyed by scalar-name substrings (checked in
+/// order; first hit wins; `default_rel` parameterizes the fallback):
+///
+/// * `rel_err` / `_rel` — model-agreement errors: small absolute slack,
+///   generous relative slack (they sit near zero and jitter), growth is
+///   the regression;
+/// * `surcharge` — NoC route surcharge: same shape;
+/// * `speedup` — bigger is better; shrinking beyond the band regresses;
+/// * `occupancy` — a `(0, 1]` ratio: absolute band, shrinking is bad;
+/// * `wait` — queue waits are millisecond-scale scheduler noise with no
+///   work-derived lower bound, so they get a wide absolute floor on top
+///   of the loose relative band;
+/// * `seconds` / `makespan` — **wall-clock** scalars: loose relative
+///   band plus an absolute floor (shared CI runners are noisy, and a
+///   one-off fast baseline must not ratchet the band shut), growth is
+///   bad;
+/// * everything else — two-sided `default_rel` drift check (covers the
+///   deterministic simulated-bandwidth curve points).
+pub fn scalar_band_for(name: &str, default_rel: f64) -> ScalarBand {
+    if name.contains("rel_err") || name.contains("_rel") {
+        ScalarBand { rel: 0.5, abs: 0.02, dir: BandDir::HigherIsWorse }
+    } else if name.contains("surcharge") {
+        ScalarBand { rel: 0.5, abs: 1e-3, dir: BandDir::HigherIsWorse }
+    } else if name.contains("speedup") {
+        ScalarBand { rel: 0.5, abs: 0.3, dir: BandDir::LowerIsWorse }
+    } else if name.contains("occupancy") {
+        ScalarBand { rel: 0.0, abs: 0.25, dir: BandDir::LowerIsWorse }
+    } else if name.contains("wait") {
+        ScalarBand { rel: 1.0, abs: 0.25, dir: BandDir::HigherIsWorse }
+    } else if name.contains("seconds") || name.contains("makespan") {
+        ScalarBand { rel: 1.0, abs: 0.5, dir: BandDir::HigherIsWorse }
+    } else {
+        ScalarBand { rel: default_rel, abs: 1e-12, dir: BandDir::TwoSided }
+    }
+}
+
+/// One trajectory scalar compared across two snapshots.
+#[derive(Debug, Clone)]
+pub struct ScalarDiffRow {
+    /// Scalar name.
+    pub name: String,
+    /// Baseline value.
+    pub old: f64,
+    /// Candidate value.
+    pub new: f64,
+    /// The band the comparison used.
+    pub band: ScalarBand,
+    /// Whether the drift left the band in the bad direction.
+    pub out_of_band: bool,
+}
+
+/// Compare `new`'s trajectory scalars against the `old` baseline under
+/// [`scalar_band_for`] bands. Scalars present in only one snapshot are
+/// skipped (renames and newly-added scalars must not fail CI on their
+/// first appearance).
+pub fn diff_scalars(
+    old: &BenchSnapshot,
+    new: &BenchSnapshot,
+    default_rel: f64,
+) -> Vec<ScalarDiffRow> {
+    let mut rows = Vec::new();
+    for (name, new_v) in &new.scalars {
+        let Some(&(_, old_v)) = old.scalars.iter().find(|(n, _)| n == name) else {
+            continue;
+        };
+        let band = scalar_band_for(name, default_rel);
+        let tol = band.abs + band.rel * old_v.abs();
+        let drift = new_v - old_v;
+        let out_of_band = match band.dir {
+            BandDir::HigherIsWorse => drift > tol,
+            BandDir::LowerIsWorse => -drift > tol,
+            BandDir::TwoSided => drift.abs() > tol,
+        };
+        rows.push(ScalarDiffRow {
+            name: name.clone(),
+            old: old_v,
+            new: *new_v,
+            band,
+            out_of_band,
         });
     }
     rows
@@ -595,6 +720,11 @@ mod tests {
         rec.scalar("bad", f64::NAN);
         let snap = BenchSnapshot::parse(&rec.to_json()).unwrap();
         assert_eq!(snap.suite, "suite \"x\"\nline", "escapes decode back");
+        assert_eq!(
+            snap.scalars,
+            vec![("rel".to_string(), 0.03)],
+            "finite scalars round-trip; null (NaN) scalars are dropped"
+        );
         assert_eq!(snap.benches.len(), 2);
         assert_eq!(snap.benches[0].name, "plain");
         assert!(snap.benches[0].throughput.is_none());
@@ -637,7 +767,75 @@ mod tests {
                     throughput: *tp,
                 })
                 .collect(),
+            scalars: Vec::new(),
         }
+    }
+
+    fn scalar_snap(scalars: &[(&str, f64)]) -> BenchSnapshot {
+        BenchSnapshot {
+            suite: "s".to_string(),
+            benches: Vec::new(),
+            scalars: scalars
+                .iter()
+                .map(|(n, v)| (n.to_string(), *v))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn scalar_bands_pick_direction_by_name() {
+        assert_eq!(
+            scalar_band_for("overlap_rel_stream", 0.15).dir,
+            BandDir::HigherIsWorse
+        );
+        assert_eq!(scalar_band_for("sweep_speedup", 0.15).dir, BandDir::LowerIsWorse);
+        assert_eq!(
+            scalar_band_for("sweep_occupancy", 0.15).dir,
+            BandDir::LowerIsWorse
+        );
+        assert_eq!(
+            scalar_band_for("sweep_makespan_seconds", 0.15).dir,
+            BandDir::HigherIsWorse
+        );
+        // Queue waits are pure scheduler noise: the wide absolute floor
+        // must win over the generic wall-clock band.
+        let wait = scalar_band_for("sweep_max_queue_wait_seconds", 0.15);
+        assert_eq!(wait.dir, BandDir::HigherIsWorse);
+        assert!(wait.abs >= 0.25, "wait scalars need a wide absolute floor");
+        assert_eq!(scalar_band_for("read_bps_512", 0.15).dir, BandDir::TwoSided);
+    }
+
+    #[test]
+    fn diff_scalars_flags_out_of_band_drift_only_in_the_bad_direction() {
+        let old = scalar_snap(&[
+            ("overlap_rel_a", 0.03),
+            ("sweep_speedup", 2.0),
+            ("sweep_occupancy", 0.8),
+            ("read_bps_512", 1000.0),
+            ("gone", 1.0),
+        ]);
+        let new = scalar_snap(&[
+            ("overlap_rel_a", 0.30),   // error blew up: out of band
+            ("sweep_speedup", 2.6),    // improvement: never flagged
+            ("sweep_occupancy", 0.35), // collapsed by 0.45 > 0.25 abs band
+            ("read_bps_512", 1100.0),  // +10% two-sided drift, 15% band: ok
+            ("fresh", 5.0),            // no baseline: skipped
+        ]);
+        let rows = diff_scalars(&old, &new, 0.15);
+        assert_eq!(rows.len(), 4, "unmatched scalars are skipped");
+        let get = |n: &str| rows.iter().find(|r| r.name == n).unwrap();
+        assert!(get("overlap_rel_a").out_of_band);
+        assert!(!get("sweep_speedup").out_of_band, "improvements pass");
+        assert!(get("sweep_occupancy").out_of_band);
+        assert!(!get("read_bps_512").out_of_band);
+
+        // The same improvement directions, reversed, do regress.
+        let worse = scalar_snap(&[("sweep_speedup", 0.4)]);
+        let rows = diff_scalars(&old, &worse, 0.15);
+        assert!(rows[0].out_of_band, "speedup 2.0 → 0.4 leaves the band");
+        // And a two-sided scalar drifting 30% either way fails.
+        let drifted = scalar_snap(&[("read_bps_512", 700.0)]);
+        assert!(diff_scalars(&old, &drifted, 0.15)[0].out_of_band);
     }
 
     #[test]

@@ -16,7 +16,9 @@
 //! * [`benchtool`] — a criterion-flavoured bench runner (warmup, timed
 //!   samples, mean ± CI, throughput rows, JSON trajectory files).
 //! * [`pool`] — thread/buffer pools: the persistent SPMD gang pool,
-//!   recycled token buffers, and typed background task queues.
+//!   recycled token buffers, typed background task queues, and the
+//!   [`pool::CoreBudget`] checkout the multi-gang scheduler admits
+//!   gangs against.
 //! * [`humanfmt`] — human-readable sizes/times for reports.
 
 pub mod benchtool;

@@ -1,9 +1,12 @@
 //! Thread and buffer pools: scoped SPMD launch, a **persistent gang
 //! pool** (the SPMD core threads are spawned once per process and
 //! checked out per run, not re-spawned per `run_gang`), a recycling
-//! [`BufferPool`] for token/message payloads, and a typed [`TaskPool`]
+//! [`BufferPool`] for token/message payloads, a typed [`TaskPool`]
 //! whose submits are plain queue pushes (no per-job boxing) — the
-//! substrates behind the engine's zero-allocation steady state.
+//! substrates behind the engine's zero-allocation steady state — and
+//! [`CoreBudget`], the budget-aware checkout/waitlist the multi-gang
+//! scheduler admits gangs against instead of letting every `run_gang`
+//! grow the worker pool ad hoc.
 //!
 //! (tokio is not in the offline crate set; the BSP runtime needs only
 //! fork-join SPMD semantics plus small pools for background work, so
@@ -247,6 +250,153 @@ impl Default for GangPool {
 }
 
 // ------------------------------------------------------------------
+// CoreBudget
+
+/// Ticketed waitlist state behind a [`CoreBudget`].
+struct BudgetState {
+    available: usize,
+    /// Next ticket to hand out to an [`CoreBudget::acquire`] caller.
+    next_ticket: u64,
+    /// Ticket currently first in line.
+    serving: u64,
+}
+
+/// A global budget of simulated cores that concurrent gangs check
+/// worker capacity out of.
+///
+/// [`GangPool`] hands each run disjoint threads, but nothing bounds how
+/// many it spawns: ten concurrent 16-core gangs happily occupy 160
+/// threads. A `CoreBudget` makes the capacity an explicit, shared
+/// resource: a gang **checks out** its `p` cores before running
+/// (blocking on a FIFO waitlist via [`CoreBudget::acquire`], or
+/// politely declining via [`CoreBudget::try_acquire`] — the
+/// backfill path the multi-gang scheduler uses) and the RAII
+/// [`BudgetLease`] returns them when the gang retires.
+///
+/// Fairness: `acquire` is strictly FIFO (tickets) — a large gang at the
+/// head of the line blocks later arrivals even while enough cores for
+/// *them* are free. `try_acquire` deliberately bypasses the waitlist so
+/// a scheduler can backfill those holes; a steady stream of backfilled
+/// small gangs can therefore starve a parked large `acquire` (see
+/// `docs/ARCHITECTURE.md`, "Multi-gang scheduling").
+pub struct CoreBudget {
+    capacity: usize,
+    state: Mutex<BudgetState>,
+    cv: Condvar,
+}
+
+/// RAII checkout of cores from a [`CoreBudget`]; returns them on drop.
+pub struct BudgetLease<'a> {
+    budget: &'a CoreBudget,
+    cores: usize,
+}
+
+impl BudgetLease<'_> {
+    /// Cores held by this lease.
+    pub fn cores(&self) -> usize {
+        self.cores
+    }
+}
+
+impl Drop for BudgetLease<'_> {
+    fn drop(&mut self) {
+        let mut st = self.budget.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.available += self.cores;
+        debug_assert!(st.available <= self.budget.capacity);
+        // Wake everyone: the FIFO head may now fit, and try_acquire
+        // callers parked in acquire-tickets behind it re-check too.
+        self.budget.cv.notify_all();
+    }
+}
+
+impl CoreBudget {
+    /// A budget of `capacity` cores.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "CoreBudget: capacity == 0");
+        Self {
+            capacity,
+            state: Mutex::new(BudgetState {
+                available: capacity,
+                next_ticket: 0,
+                serving: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// A budget sized to the host's parallelism (the `--cores` default).
+    pub fn host() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    /// Total cores this budget was created with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Cores currently checked out.
+    pub fn in_use(&self) -> usize {
+        self.capacity - self.state.lock().unwrap_or_else(|e| e.into_inner()).available
+    }
+
+    /// Cores currently free (ignores the waitlist).
+    pub fn available(&self) -> usize {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).available
+    }
+
+    /// Check `cores` out immediately if they are free, without joining
+    /// the waitlist — the scheduler's **backfill** path. Returns `None`
+    /// when the budget cannot satisfy the request right now.
+    ///
+    /// Panics if `cores` exceeds the budget's capacity (such a request
+    /// could never succeed — callers must reject it, not spin on it).
+    pub fn try_acquire(&self, cores: usize) -> Option<BudgetLease<'_>> {
+        assert!(cores > 0, "try_acquire: cores == 0");
+        assert!(
+            cores <= self.capacity,
+            "try_acquire: {cores} cores exceed the budget capacity {}",
+            self.capacity
+        );
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if st.available >= cores {
+            st.available -= cores;
+            Some(BudgetLease { budget: self, cores })
+        } else {
+            None
+        }
+    }
+
+    /// Check `cores` out, blocking on a strictly FIFO waitlist until
+    /// they are free. This is the scheduler-mediated entry point's
+    /// checkout (`bsp::engine::run_gang_budgeted`).
+    ///
+    /// Panics if `cores` exceeds the budget's capacity (waiting would
+    /// deadlock: the request can never be satisfied).
+    pub fn acquire(&self, cores: usize) -> BudgetLease<'_> {
+        assert!(cores > 0, "acquire: cores == 0");
+        assert!(
+            cores <= self.capacity,
+            "acquire: {cores} cores exceed the budget capacity {}",
+            self.capacity
+        );
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        loop {
+            if st.serving == ticket && st.available >= cores {
+                st.available -= cores;
+                st.serving += 1;
+                // The next ticket in line may also fit what remains.
+                self.cv.notify_all();
+                return BudgetLease { budget: self, cores };
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+// ------------------------------------------------------------------
 // TaskPool
 
 struct TaskQueue<T> {
@@ -425,6 +575,97 @@ mod tests {
         });
         assert_eq!(total.load(Ordering::SeqCst), 8);
         assert!(POOL.idle_workers() <= 6, "at most 2×3 helpers spawned");
+    }
+
+    #[test]
+    fn core_budget_counts_checkouts_and_returns_on_drop() {
+        let b = CoreBudget::new(8);
+        assert_eq!(b.capacity(), 8);
+        assert_eq!(b.available(), 8);
+        let l1 = b.try_acquire(5).expect("5 of 8 fit");
+        assert_eq!(l1.cores(), 5);
+        assert_eq!(b.available(), 3);
+        assert_eq!(b.in_use(), 5);
+        assert!(b.try_acquire(4).is_none(), "only 3 left");
+        let l2 = b.try_acquire(3).expect("exact fit");
+        assert_eq!(b.available(), 0);
+        drop(l1);
+        assert_eq!(b.available(), 5);
+        drop(l2);
+        assert_eq!(b.available(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed the budget capacity")]
+    fn core_budget_rejects_impossible_requests() {
+        let b = CoreBudget::new(4);
+        let _ = b.try_acquire(5);
+    }
+
+    #[test]
+    fn core_budget_acquire_blocks_until_cores_free() {
+        let b = Arc::new(CoreBudget::new(4));
+        let lease = b.try_acquire(3).unwrap();
+        let b2 = Arc::clone(&b);
+        let t = thread::spawn(move || {
+            // Needs 2, only 1 free: must block until the main thread
+            // releases, then run.
+            let _l = b2.acquire(2);
+            b2.in_use()
+        });
+        thread::sleep(std::time::Duration::from_millis(50));
+        drop(lease);
+        assert_eq!(t.join().unwrap(), 2);
+        assert_eq!(b.available(), 4);
+    }
+
+    #[test]
+    fn core_budget_acquire_is_fifo() {
+        // Three waiters of descending size behind a full budget: FIFO
+        // tickets mean they are served strictly in arrival order even
+        // though the later (smaller) ones would fit earlier holes.
+        let b = Arc::new(CoreBudget::new(4));
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let gate = b.try_acquire(4).unwrap();
+        let mut handles = Vec::new();
+        for (i, cores) in [(0usize, 4usize), (1, 2), (2, 1)] {
+            let b = Arc::clone(&b);
+            let order = Arc::clone(&order);
+            handles.push(thread::spawn(move || {
+                let _l = b.acquire(cores);
+                order.lock().unwrap().push(i);
+                // Hold briefly so overlap is possible but order is set
+                // by the acquire itself.
+                thread::sleep(std::time::Duration::from_millis(5));
+            }));
+            // Let each waiter park before the next takes its ticket.
+            thread::sleep(std::time::Duration::from_millis(30));
+        }
+        drop(gate);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let got = order.lock().unwrap().clone();
+        assert_eq!(got[0], 0, "the head ticket (largest gang) goes first");
+        assert_eq!(b.available(), 4);
+    }
+
+    #[test]
+    fn core_budget_try_acquire_backfills_past_a_parked_head() {
+        // A large acquire() parks at the head of the line; a small
+        // try_acquire must still succeed (backfill semantics).
+        let b = Arc::new(CoreBudget::new(4));
+        let held = b.try_acquire(2).unwrap();
+        let b2 = Arc::clone(&b);
+        let big = thread::spawn(move || {
+            let _l = b2.acquire(4); // cannot fit until everything frees
+        });
+        thread::sleep(std::time::Duration::from_millis(50));
+        let small = b.try_acquire(1).expect("backfill past the parked head");
+        drop(small);
+        drop(held);
+        big.join().unwrap();
+        assert_eq!(b.available(), 4);
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Scheduler stress: an oversubscribed queue (far more requested cores
+//! than the budget) must drain with no deadlock, every gang's results
+//! must be **byte-identical** to serial execution (scheduling must not
+//! be observable from inside a gang), the occupancy accounting must stay
+//! in bounds, and a panicking gang must retire without wedging the
+//! queue. Run with `--release` in CI (the scheduler-stress step).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use bsps::bsp::sched::{GangJob, GangScheduler};
+use bsps::bsp::{run_gang, Ctx};
+use bsps::model::params::AcceleratorParams;
+use bsps::util::prng::SplitMix64;
+
+fn machine(p: usize) -> AcceleratorParams {
+    let mut m = AcceleratorParams::epiphany3();
+    m.p = p;
+    m
+}
+
+/// A deterministic comm-heavy kernel: seeded put/get/send mix over a few
+/// supersteps, depositing a per-pid digest of the final state into
+/// `sink`. Two executions of the same `(seed, p)` must produce
+/// bit-identical digests no matter what else runs on the host.
+fn stress_kernel(
+    seed: u64,
+    sink: Arc<Mutex<BTreeMap<usize, Vec<u32>>>>,
+) -> impl Fn(&mut Ctx) + Send + Sync + 'static {
+    move |ctx: &mut Ctx| {
+        let p = ctx.nprocs();
+        let pid = ctx.pid();
+        let a = ctx.register("a", 16).unwrap();
+        let b = ctx.register("b", 16).unwrap();
+        let mut rng = SplitMix64::new(seed ^ (pid as u64).wrapping_mul(0x9e37));
+        ctx.with_var_mut(a, |v| {
+            for x in v.iter_mut() {
+                *x = rng.next_f32_in(-1.0, 1.0);
+            }
+        });
+        ctx.sync();
+        let mut msgs = Vec::new();
+        for step in 0..6u32 {
+            let dst = rng.next_range(0, p);
+            let off = rng.next_range(0, 8);
+            ctx.put(dst, a, off, &[rng.next_f32_in(-1.0, 1.0); 4]);
+            let src = rng.next_range(0, p);
+            ctx.get(src, a, off, b, off, 4);
+            let mut payload = ctx.take_msg_buf();
+            payload.extend_from_slice(&[pid as f32, step as f32]);
+            ctx.send_pooled((pid + 1) % p, step, payload);
+            ctx.charge_flops(32.0);
+            ctx.sync();
+            ctx.move_messages_into(&mut msgs);
+            for msg in msgs.drain(..) {
+                ctx.give_msg_buf(msg.payload);
+            }
+        }
+        let mut digest = Vec::new();
+        ctx.with_var(a, |v| digest.extend(v.iter().map(|x| x.to_bits())));
+        ctx.with_var(b, |v| digest.extend(v.iter().map(|x| x.to_bits())));
+        sink.lock().unwrap().insert(pid, digest);
+    }
+}
+
+#[test]
+fn oversubscribed_queue_matches_serial_execution() {
+    const JOBS: usize = 12;
+    const P: usize = 4;
+    const BUDGET: usize = 8; // 12 × 4 = 48 requested cores vs 8 budget
+
+    // Serial reference, one gang at a time on this thread.
+    let mut serial_digests = Vec::new();
+    let mut serial_costs = Vec::new();
+    for i in 0..JOBS {
+        let sink = Arc::new(Mutex::new(BTreeMap::new()));
+        let kern = stress_kernel(1000 + i as u64, Arc::clone(&sink));
+        let out = run_gang(&machine(P), None, false, |ctx| kern(ctx));
+        serial_digests.push(sink.lock().unwrap().clone());
+        serial_costs.push(out.cost.supersteps.clone());
+    }
+
+    // The same 12 gangs through the scheduler, oversubscribed 6×.
+    let mut sinks = Vec::new();
+    let mut jobs = Vec::new();
+    for i in 0..JOBS {
+        let sink = Arc::new(Mutex::new(BTreeMap::new()));
+        jobs.push(GangJob::new(
+            &format!("stress{i}"),
+            machine(P),
+            stress_kernel(1000 + i as u64, Arc::clone(&sink)),
+        ));
+        sinks.push(sink);
+    }
+    let out = GangScheduler::new(BUDGET).run(jobs);
+
+    assert_eq!(out.jobs.len(), JOBS);
+    for (i, job) in out.jobs.iter().enumerate() {
+        let outcome = job.outcome.as_ref().unwrap_or_else(|e| {
+            panic!("gang {i} failed under scheduling: {e}");
+        });
+        assert_eq!(
+            outcome.cost.supersteps, serial_costs[i],
+            "gang {i}: cost record diverged under scheduling"
+        );
+        let scheduled = sinks[i].lock().unwrap().clone();
+        assert_eq!(
+            scheduled, serial_digests[i],
+            "gang {i}: state digest diverged under scheduling (byte-identity)"
+        );
+    }
+
+    // Budget accounting: never above the budget, occupancy in (0, 1].
+    assert!(out.stats.peak_cores <= BUDGET, "peak {}", out.stats.peak_cores);
+    assert!(out.stats.peak_cores >= P, "at least one gang was admitted");
+    let occ = out.stats.occupancy();
+    assert!(occ > 0.0 && occ <= 1.02, "occupancy {occ} out of bounds");
+    assert!(
+        out.stats.makespan_seconds <= out.stats.serial_sum_seconds + 1.0,
+        "makespan {} wildly exceeds the gang-time sum {}",
+        out.stats.makespan_seconds,
+        out.stats.serial_sum_seconds
+    );
+}
+
+#[test]
+fn failure_injection_retires_the_faulty_gang_without_wedging() {
+    const JOBS: usize = 8;
+    const BOMB: usize = 3;
+    let mut sinks = Vec::new();
+    let mut jobs = Vec::new();
+    for i in 0..JOBS {
+        let sink = Arc::new(Mutex::new(BTreeMap::new()));
+        if i == BOMB {
+            jobs.push(GangJob::new("bomb", machine(4), |ctx| {
+                let x = ctx.register("x", 4).unwrap();
+                ctx.sync();
+                if ctx.pid() == 0 {
+                    // An out-of-range put: panics on the issuing core
+                    // pre-barrier and poisons the gang. Pid 0 so the
+                    // named diagnostic (not a helper's poisoned-barrier
+                    // panic) is what the scheduler records.
+                    ctx.put(2, x, 2, &[0.0; 8]);
+                }
+                ctx.sync();
+            }));
+        } else {
+            jobs.push(GangJob::new(
+                &format!("ok{i}"),
+                machine(4),
+                stress_kernel(i as u64, Arc::clone(&sink)),
+            ));
+        }
+        sinks.push(sink);
+    }
+    // Budget 4: strictly one gang at a time — the faulty gang must
+    // free its cores or everything behind it wedges.
+    let out = GangScheduler::new(4).run(jobs);
+    for (i, job) in out.jobs.iter().enumerate() {
+        if i == BOMB {
+            let err = job.outcome.as_ref().unwrap_err();
+            assert!(err.contains("out of range"), "diagnostic survives: {err}");
+            assert_eq!(job.name, "bomb");
+        } else {
+            assert!(job.outcome.is_ok(), "gang {i} wedged behind the fault");
+            assert_eq!(sinks[i].lock().unwrap().len(), 4, "all 4 pids reported");
+        }
+    }
+    // The process-wide pools survived the poisoned gang: run once more.
+    let sink = Arc::new(Mutex::new(BTreeMap::new()));
+    let kern = stress_kernel(99, Arc::clone(&sink));
+    run_gang(&machine(4), None, false, |ctx| kern(ctx));
+    assert_eq!(sink.lock().unwrap().len(), 4);
+}
+
+#[test]
+fn mixed_widths_share_the_budget_without_deadlock() {
+    // Heterogeneous gang sizes, including one as wide as the whole
+    // budget, plus one impossible job that must be rejected (not
+    // waited on forever).
+    let sink = Arc::new(Mutex::new(BTreeMap::new()));
+    let mut jobs = Vec::new();
+    for (i, p) in [1usize, 8, 2, 4, 8, 1, 2, 4].into_iter().enumerate() {
+        jobs.push(GangJob::new(
+            &format!("w{i}_p{p}"),
+            machine(p),
+            stress_kernel(500 + i as u64, Arc::clone(&sink)),
+        ));
+    }
+    jobs.push(GangJob::new("impossible", machine(16), |ctx| ctx.sync()));
+    let out = GangScheduler::new(8).run(jobs);
+    for job in &out.jobs[..8] {
+        assert!(job.outcome.is_ok(), "{}: {:?}", job.name, job.outcome.as_ref().err());
+    }
+    let err = out.jobs[8].outcome.as_ref().unwrap_err();
+    assert!(err.contains("never be admitted"), "{err}");
+    assert!(out.stats.peak_cores <= 8);
+}

@@ -4,8 +4,12 @@
 //! shape) performs **no heap allocations anywhere in the process** —
 //! not on the cores (interned var handles, pooled token buffers,
 //! arena-backed queues), not in the fill workers (recycled buffers,
-//! typed task queue), and not in the leader's superstep bookkeeping
-//! (pre-reserved record vectors, folded cost closing).
+//! typed task queue), not in the leader's superstep bookkeeping
+//! (pre-reserved record vectors, folded cost closing), and not in the
+//! message path: each hyperstep every core sends a neighbour a payload
+//! taken from the gang's message pool (`take_msg_buf`/`send_pooled`)
+//! and recycles the drained inbox payloads back (`give_msg_buf`), so
+//! message-heavy BSP programs are allocation-free too.
 //!
 //! This file is its own test binary with exactly one test, so the
 //! global counting allocator sees no unrelated traffic during the
@@ -74,12 +78,24 @@ fn steady_state_token_loop_is_allocation_free() {
     let reg = Arc::new(reg);
 
     run_gang(&m, Some(reg), true, |ctx| {
-        let h = ctx.stream_open(ctx.pid()).unwrap();
+        let pid = ctx.pid();
+        let h = ctx.stream_open(pid).unwrap();
         let mut tok = Vec::new();
+        let mut msgs = Vec::with_capacity(4);
         for t in 0..TOKENS {
             ctx.stream_move_down(h, &mut tok).unwrap();
             ctx.charge_flops(2.0 * C as f64);
+            // Pooled message traffic: take → fill → send; drained
+            // payloads go back to the pool after the barrier, so the
+            // same buffers circulate forever.
+            let mut payload = ctx.take_msg_buf();
+            payload.extend_from_slice(&[pid as f32; 8]);
+            ctx.send_pooled((pid + 1) % P, t as u32, payload);
             ctx.hyperstep_sync();
+            ctx.move_messages_into(&mut msgs);
+            for msg in msgs.drain(..) {
+                ctx.give_msg_buf(msg.payload);
+            }
             // hyperstep_sync is a full barrier: every core (and, because
             // fills for token t+1 were issued *before* the barrier, every
             // in-window fill job) is past hyperstep t when pid 0 reads
