@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use bsps::bsp::run_gang;
+use bsps::bsp::{run_gang, run_gang_cfg, AnalysisMode, GangConfig};
 use bsps::coordinator::ComputeBackend;
 use bsps::model::params::AcceleratorParams;
 use bsps::stream::StreamRegistry;
@@ -75,6 +75,36 @@ fn main() {
     });
     println!("{}", r.row());
     rec.push(&r);
+
+    section("superstep analyzer overhead (Warn vs Off, put+sync ×64)");
+    // The analyzer's Off mode is pinned to literal zero cost by
+    // tests/zero_alloc.rs; this measures the *Warn*-mode tax on the
+    // put-heavy path (the detectors hook put/sync, not move_down) and
+    // records it as a trajectory scalar: ratio 1.0 = free, and the
+    // benchdiff band fails CI if the tax creeps past its band.
+    let m = machine(16);
+    let analyzed_kernel = |ctx: &mut bsps::bsp::Ctx| {
+        let x = ctx.register("x", 64).unwrap();
+        ctx.sync();
+        let data = [1.0f32; 64];
+        let next = (ctx.pid() + 1) % ctx.nprocs();
+        for _ in 0..64 {
+            ctx.put(next, x, 0, &data);
+            ctx.sync();
+        }
+    };
+    let r_off = bench_throughput("put+sync ×64 analysis=off ", cfg, 64.0, |_| {
+        run_gang_cfg(&m, None, false, GangConfig::default(), analyzed_kernel)
+    });
+    println!("{}", r_off.row());
+    let warn = GangConfig { analysis: AnalysisMode::Warn, ..Default::default() };
+    let r_warn = bench_throughput("put+sync ×64 analysis=warn", cfg, 64.0, |_| {
+        run_gang_cfg(&m, None, false, warn.clone(), analyzed_kernel)
+    });
+    println!("{}", r_warn.row());
+    let overhead = r_warn.time.mean / r_off.time.mean;
+    println!("  analyzer_warn_overhead = {overhead:.3}x");
+    rec.scalar("analyzer_warn_overhead", overhead);
 
     section("var put/get round-trip (p=16, 64 supersteps, handle API)");
     let m = machine(16);

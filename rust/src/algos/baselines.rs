@@ -13,6 +13,7 @@ use crate::coordinator::compute::native_mm_acc;
 use crate::model::params::AcceleratorParams;
 
 /// Sequential matmul (row-major). Returns `(c, model_flops)`.
+#[must_use]
 pub fn seq_matmul(a: &[f32], b: &[f32], n: usize) -> (Vec<f32>, f64) {
     let mut c = vec![0.0f32; n * n];
     native_mm_acc(&mut c, a, b, n);
@@ -20,18 +21,21 @@ pub fn seq_matmul(a: &[f32], b: &[f32], n: usize) -> (Vec<f32>, f64) {
 }
 
 /// Sequential dot product. Returns `(alpha, model_flops)`.
+#[must_use]
 pub fn seq_dot(u: &[f32], v: &[f32]) -> (f32, f64) {
     let alpha = u.iter().zip(v).map(|(a, b)| a * b).sum();
     (alpha, 2.0 * u.len() as f64)
 }
 
 /// Single-core model seconds for a FLOP count.
+#[must_use]
 pub fn seq_seconds(m: &AcceleratorParams, flops: f64) -> f64 {
     m.flops_to_seconds(flops)
 }
 
 /// Cost (FLOPs) of multi-level Cannon with **no prefetch overlap**:
 /// `M³ · (N(2k³ + 2k²g + l) + e·2k²)`.
+#[must_use]
 pub fn naive_streaming_matmul_cost(m: &AcceleratorParams, n: usize, big_m: usize) -> f64 {
     let grid_n = m.grid_n();
     assert!(n % (grid_n * big_m) == 0);

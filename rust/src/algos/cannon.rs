@@ -66,8 +66,8 @@ pub fn cannon_inner(
             ctx.sync();
             // Copy in place through the handle — no clone of the
             // registered buffers on the shift path.
-            ctx.with_var(vars.a_nx, |v| a.copy_from_slice(v));
-            ctx.with_var(vars.b_nx, |v| b.copy_from_slice(v));
+            let _ = ctx.with_var(vars.a_nx, |v| a.copy_from_slice(v));
+            let _ = ctx.with_var(vars.b_nx, |v| b.copy_from_slice(v));
         }
         // The final multiply's superstep is closed by the caller's next
         // sync — in Algorithm 2 that is the hyperstep's own bulk
@@ -77,6 +77,7 @@ pub fn cannon_inner(
 }
 
 /// The initial Cannon skew: which inner block core `(s,t)` starts with.
+#[must_use]
 pub fn initial_skew(s: usize, t: usize, grid_n: usize) -> usize {
     (s + t) % grid_n
 }
@@ -107,7 +108,7 @@ mod tests {
             out
         };
 
-        run_gang(&m, None, false, |ctx| {
+        let _ = run_gang(&m, None, false, |ctx| {
             let (s, t) = (ctx.pid() / grid_n, ctx.pid() % grid_n);
             let skew = initial_skew(s, t, grid_n);
             let my_a = block(a, s, skew);

@@ -76,6 +76,7 @@ pub fn prepare(
 /// what [`run`] executes, exposed as a standalone closure so the
 /// multi-gang scheduler can run many Fig. 5 points concurrently
 /// (`bsps sweep`, `bench_fig5_cannon`).
+#[must_use]
 pub fn kernel(
     backend: Arc<ComputeBackend>,
     cs: &CannonStreams,

@@ -56,6 +56,7 @@ impl EllMatrix {
     }
 
     /// Dense reference product.
+    #[must_use]
     pub fn matvec_ref(&self, x: &[f32]) -> Vec<f32> {
         let mut y = vec![0.0f32; self.n];
         for r in 0..self.n {

@@ -100,6 +100,7 @@ pub fn run(env: &BspsEnv, frames: &[Vec<f32>], alpha: f32) -> Result<VideoRun> {
 }
 
 /// Reference filter for tests.
+#[must_use]
 pub fn filter_ref(frames: &[Vec<f32>], alpha: f32) -> Vec<Vec<f32>> {
     let mut out = Vec::with_capacity(frames.len());
     let mut prev = vec![0.0f32; frames[0].len()];

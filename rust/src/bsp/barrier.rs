@@ -29,6 +29,10 @@ pub struct Barrier {
     /// the host (spinning then only burns the timeslices the stragglers
     /// need), a few thousand when cores are plentiful.
     spin_iters: u32,
+    /// Diagnostic armed by [`Barrier::defect`]; replaces the generic
+    /// poison message so stalled cores report *why* the gang can never
+    /// release them (e.g. the analyzer's barrier-divergence findings).
+    defect_msg: Mutex<Option<String>>,
     /// Park/wake machinery for waiters that exhausted their spin.
     lock: Mutex<()>,
     cv: Condvar,
@@ -44,6 +48,7 @@ pub struct WaitResult {
 
 impl Barrier {
     /// A barrier for `p` cores.
+    #[must_use]
     pub fn new(p: usize) -> Self {
         assert!(p > 0);
         let host_cores = std::thread::available_parallelism()
@@ -55,6 +60,7 @@ impl Barrier {
             generation: AtomicU64::new(0),
             poisoned: AtomicBool::new(false),
             spin_iters: if host_cores > p { 4096 } else { 0 },
+            defect_msg: Mutex::new(None),
             lock: Mutex::new(()),
             cv: Condvar::new(),
         }
@@ -63,7 +69,11 @@ impl Barrier {
     #[inline]
     fn check_poison(&self) {
         if self.poisoned.load(Ordering::Acquire) {
-            panic!("bsp barrier poisoned: another core panicked");
+            let msg = self.defect_msg.lock().unwrap_or_else(|e| e.into_inner()).clone();
+            match msg {
+                Some(m) => panic!("bsp barrier poisoned: {m}"),
+                None => panic!("bsp barrier poisoned: another core panicked"),
+            }
         }
     }
 
@@ -155,7 +165,25 @@ impl Barrier {
         self.cv.notify_all();
     }
 
+    /// Poison the barrier with a diagnostic: any core that waits on a
+    /// generation that can no longer complete panics with `msg` instead
+    /// of the generic poison message. Cores already released by a
+    /// completed generation are unaffected — both wait paths check the
+    /// generation *before* the poison flag, so arming a defect as a
+    /// core retires never trips gang members that legitimately got
+    /// through. The first armed diagnostic wins.
+    pub fn defect(&self, msg: String) {
+        {
+            let mut slot = self.defect_msg.lock().unwrap_or_else(|e| e.into_inner());
+            if slot.is_none() {
+                *slot = Some(msg);
+            }
+        }
+        self.poison();
+    }
+
     /// Whether the barrier has been poisoned.
+    #[must_use]
     pub fn is_poisoned(&self) -> bool {
         self.poisoned.load(Ordering::Acquire)
     }
@@ -328,6 +356,30 @@ mod tests {
         assert!(r.is_err(), "survivor must unwind at the finish crossing");
         assert!(t.join().unwrap(), "faulting core must panic");
         assert!(b.is_poisoned());
+    }
+
+    #[test]
+    fn defect_message_reaches_the_stalled_waiter() {
+        let b = Arc::new(Barrier::new(2));
+        let b2 = Arc::clone(&b);
+        let waiter = std::thread::spawn(move || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                b2.wait();
+            }));
+            match r {
+                Err(payload) => *payload.downcast::<String>().unwrap(),
+                Ok(_) => panic!("waiter must not get through"),
+            }
+        });
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        b.defect("core 0 retired early".to_string());
+        let msg = waiter.join().unwrap();
+        assert!(msg.contains("core 0 retired early"), "got: {msg}");
+        // A later defect must not overwrite the first diagnostic.
+        b.defect("second".to_string());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.wait()));
+        let payload = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(payload.contains("core 0 retired early"), "got: {payload}");
     }
 
     #[test]

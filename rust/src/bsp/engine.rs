@@ -79,6 +79,9 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 
 use crate::bsp::barrier::{Barrier, PoisonOnPanic};
 use crate::bsp::timeline::{HyperstepSpan, Timeline};
+use crate::bsp::verify::{
+    AnalysisMode, AnalysisReport, Analyzer, Severity, SyncShape, WriteRecord,
+};
 use crate::model::bsps::{HyperstepCost, Ledger};
 use crate::model::cost::{BspCost, CoreStepUsage, SuperstepCost};
 use crate::model::params::{AcceleratorParams, WORD_BYTES};
@@ -126,6 +129,12 @@ pub struct GangConfig {
     /// ablation — the hop-weighted h-relation then collapses onto the
     /// flat one.
     pub noc: Option<Noc>,
+    /// Superstep race/hazard analysis ([`crate::bsp::verify`]). `Off`
+    /// (the default) does not even construct the analyzer, so the
+    /// steady-state hot path stays allocation-free; `Warn` logs
+    /// findings into [`RunOutcome::analysis`]; `Deny` poisons the gang
+    /// with the first error-severity finding as the diagnostic.
+    pub analysis: AnalysisMode,
 }
 
 /// An interned registered-variable handle.
@@ -141,6 +150,7 @@ pub struct VarHandle(u32);
 
 impl VarHandle {
     /// The raw interned id (index into the gang's variable table).
+    #[must_use]
     pub fn raw(self) -> u32 {
         self.0
     }
@@ -148,6 +158,7 @@ impl VarHandle {
     /// Rebuild a handle from a raw id (host-side tooling and tests).
     /// Using an id that was never interned panics at the operation (or
     /// at the sync that applies it), exactly like an unregistered name.
+    #[must_use]
     pub fn from_raw(id: u32) -> Self {
         Self(id)
     }
@@ -486,9 +497,14 @@ pub(crate) struct Shared {
     slots: Vec<Mutex<BTreeMap<usize, StreamSlot>>>,
     /// Measured hyperstep spans.
     timeline: Mutex<TimelineBuild>,
+    /// Superstep race/hazard analyzer. `None` when analysis is `Off`,
+    /// so every hook below is an untaken `if let` branch on the hot
+    /// path (`zero_alloc.rs` pins the allocation-free steady state).
+    analyzer: Option<Analyzer>,
 }
 
 impl Shared {
+    #[must_use]
     pub fn new(
         machine: AcceleratorParams,
         streams: Option<Arc<StreamRegistry>>,
@@ -539,6 +555,8 @@ impl Shared {
                 spans: Vec::with_capacity(STEADY_RESERVE),
                 hyper_start_cycles: 0.0,
             }),
+            analyzer: (cfg.analysis != AnalysisMode::Off)
+                .then(|| Analyzer::new(cfg.analysis, p, machine.local_mem)),
             machine,
         }
     }
@@ -607,16 +625,19 @@ pub struct Ctx {
 
 impl Ctx {
     /// This core's id, `bsp_pid()`.
+    #[must_use]
     pub fn pid(&self) -> usize {
         self.pid
     }
 
     /// Number of cores, `bsp_nprocs()`.
+    #[must_use]
     pub fn nprocs(&self) -> usize {
         self.shared.machine.p
     }
 
     /// The machine this gang runs on.
+    #[must_use]
     pub fn machine(&self) -> &AcceleratorParams {
         &self.shared.machine
     }
@@ -646,6 +667,7 @@ impl Ctx {
     }
 
     /// Bytes of scratchpad currently charged on this core.
+    #[must_use]
     pub fn local_used(&self) -> usize {
         *self.shared.local_used[self.pid].lock().unwrap()
     }
@@ -683,6 +705,20 @@ impl Ctx {
             if let Some(&id) = names.get(name) {
                 id
             } else {
+                // A *new* name past the first sync races the var-table
+                // write lock against other cores' hot-path read locks
+                // (registration is supposed to be collective, in the
+                // first superstep). Flag it; under `Deny`, fail the
+                // call instead of taking the write lock at all.
+                if let Some(an) = &sh.analyzer {
+                    if an.late_registration(self.pid, name) {
+                        return Err(anyhow!(
+                            "analysis (deny): core {} registered \"{name}\" after the \
+                             first sync; registration must happen in the first superstep",
+                            self.pid
+                        ));
+                    }
+                }
                 let mut slots = sh.vars.slots.write().unwrap();
                 let id = slots.len() as u32;
                 let p = self.nprocs();
@@ -715,6 +751,7 @@ impl Ctx {
     }
 
     /// Read this core's buffer of `h` through `f`.
+    #[must_use]
     pub fn with_var<R>(&self, h: VarHandle, f: impl FnOnce(&[f32]) -> R) -> R {
         let slots = self.shared.vars.slots.read().unwrap();
         let slot = slots
@@ -731,11 +768,18 @@ impl Ctx {
             .get(h.0 as usize)
             .unwrap_or_else(|| panic!("unregistered var handle {}", h.0));
         let mut buf = slot.bufs[self.pid].lock().unwrap();
-        f(&mut buf)
+        let r = f(&mut buf);
+        if let Some(an) = &self.shared.analyzer {
+            // Conservative dirty range: the closure had the whole
+            // buffer, so charge the whole buffer (detector 2).
+            an.mark_dirty(self.pid, h.0, 0, buf.len());
+        }
+        r
     }
 
     /// Clone this core's buffer of `h` (allocates — prefer
     /// [`Ctx::with_var`] on hot paths).
+    #[must_use]
     pub fn var(&self, h: VarHandle) -> Vec<f32> {
         self.with_var(h, |v| v.to_vec())
     }
@@ -886,6 +930,7 @@ impl Ctx {
 
     /// Drain this core's inbox (`bsp_move`). Returns the messages by
     /// move; the inbox keeps its capacity.
+    #[must_use]
     pub fn move_messages(&self) -> Vec<Message> {
         std::mem::take(&mut *self.shared.inbox[self.pid].lock().unwrap())
     }
@@ -926,6 +971,7 @@ impl Ctx {
     ///     }
     /// });
     /// ```
+    #[must_use]
     pub fn take_msg_buf(&self) -> Vec<f32> {
         self.shared.msg_pool.take()
     }
@@ -957,9 +1003,21 @@ impl Ctx {
                 self.put(t, var, self.pid * len, values);
             }
         }
-        self.with_var_mut(var, |buf| {
+        // Deposit our own slice directly rather than via `with_var_mut`:
+        // its conservative whole-buffer dirty range would make every
+        // peer's (disjoint) broadcast put look like a clobber. The local
+        // write touches exactly `[pid·len, (pid+1)·len)`.
+        {
+            let slots = self.shared.vars.slots.read().unwrap();
+            let slot = slots
+                .get(var.0 as usize)
+                .unwrap_or_else(|| panic!("unregistered var handle {}", var.0));
+            let mut buf = slot.bufs[self.pid].lock().unwrap();
             buf[self.pid * len..(self.pid + 1) * len].copy_from_slice(values);
-        });
+        }
+        if let Some(an) = &self.shared.analyzer {
+            an.mark_dirty(self.pid, var.0, self.pid * len, (self.pid + 1) * len);
+        }
     }
 
     /// Charge `flops` of local work to this superstep. Advances this
@@ -1003,15 +1061,37 @@ impl Ctx {
     /// ```
     pub fn sync(&self) {
         let _guard = PoisonOnPanic(&self.shared.barrier);
-        self.superstep_barrier(|| {});
+        self.superstep_barrier(SyncShape::Ordinary, || {});
+    }
+
+    /// `Deny`-mode abort: arm the gang barrier with the finding (so
+    /// cores parked at the sync report it instead of the generic poison
+    /// message) and panic this thread.
+    fn analysis_abort(&self, finding: &str) -> ! {
+        let msg = format!("bsp analysis: {finding}");
+        self.shared.barrier.defect(msg.clone());
+        panic!("{msg}");
     }
 
     /// One bulk synchronization under the gang's [`ApplyMode`]. `after`
     /// runs in the finish phase (leader-only, gang held) right after the
     /// superstep record closes — `hyperstep_sync` hooks its ledger cut
     /// in here so a hyperstep boundary is still a single protocol run.
-    fn superstep_barrier<F: FnOnce()>(&self, after: F) {
+    /// `shape` feeds detector 3 (mixed `sync`/`hyperstep_sync` shapes,
+    /// sync-after-retirement).
+    fn superstep_barrier<F: FnOnce()>(&self, shape: SyncShape, after: F) {
         let sh = &self.shared;
+        if let Some(an) = &sh.analyzer {
+            if an.enter_barrier(self.pid, shape) {
+                // Another core already retired: this barrier can never
+                // complete. The retiree armed the defect diagnostic;
+                // panic instead of deadlocking (even in `Warn` mode).
+                let finding = an
+                    .last_error_render()
+                    .unwrap_or_else(|| "barrier divergence".to_string());
+                self.analysis_abort(&finding);
+            }
+        }
         match sh.apply_mode {
             ApplyMode::Sharded => {
                 sh.barrier.wait_phased(
@@ -1034,6 +1114,9 @@ impl Ctx {
                 });
             }
         }
+        if let Some(an) = &sh.analyzer {
+            an.exit_barrier(self.pid, shape);
+        }
     }
 
     /// Plan phase (leader-only, gang held): drain every core's queued
@@ -1051,6 +1134,9 @@ impl Ctx {
     fn plan_superstep(&self) {
         let sh = &self.shared;
         let p = self.nprocs();
+        if let Some(an) = &sh.analyzer {
+            self.analyze_superstep(an);
+        }
         let slots = sh.vars.slots.read().unwrap();
         let mut traffic = sh.traffic.lock().unwrap();
         for t in traffic.iter_mut() {
@@ -1152,6 +1238,56 @@ impl Ctx {
                 traffic[dst].recv_cycles += cycles;
                 sh.inbox[dst].lock().unwrap().push(msg);
             }
+        }
+    }
+
+    /// Leader-only detector pass over the superstep's op set, run at
+    /// the top of the plan phase **before** the queues drain (while the
+    /// gang is held, so the set is complete and stable): detectors 1
+    /// and 2 sweep every queued put plus every conservative local-write
+    /// range for overlapping intervals on the same `(dst, var)`;
+    /// detector 4 charges each core's resident scratchpad plus its
+    /// queued put arena against `L`; detector 3's shape check closes
+    /// the superstep. Under `Deny` an error-severity finding aborts the
+    /// gang here, with the finding as the barrier diagnostic.
+    fn analyze_superstep(&self, an: &Analyzer) {
+        let sh = &self.shared;
+        let p = self.nprocs();
+        let mut abort = false;
+        let mut recs: Vec<WriteRecord> = Vec::new();
+        for pid in 0..p {
+            let arena_bytes = {
+                let q = sh.comm[pid].lock().unwrap();
+                for op in &q.puts {
+                    recs.push(WriteRecord {
+                        dst: op.dst_pid,
+                        var: op.var.0,
+                        lo: op.offset,
+                        hi: op.offset + op.len,
+                        src: pid,
+                        local: false,
+                    });
+                }
+                q.arena.len() * WORD_BYTES
+            };
+            // `local_used` already carries registered vars, explicit
+            // local allocs and stream token buffers (staging included);
+            // the queued put arena is the one uncharged resident.
+            let used = *sh.local_used[pid].lock().unwrap();
+            abort |= an.check_budget(
+                pid,
+                used + arena_bytes,
+                &format!("{used} B resident + {arena_bytes} B queued puts"),
+            );
+            an.drain_dirty_into(pid, &mut recs);
+        }
+        abort |= an.sweep_writes(&mut recs, &|id| sh.vars.name_of(id));
+        abort |= an.end_superstep();
+        if abort {
+            let finding = an
+                .last_error_render()
+                .unwrap_or_else(|| "error-severity finding".to_string());
+            self.analysis_abort(&finding);
         }
     }
 
@@ -1425,15 +1561,39 @@ impl Ctx {
     /// prefetches and the end-of-run drain.
     pub fn stream_move_up(&self, h: StreamHandle, token: &[f32]) -> Result<()> {
         let sh = &self.shared;
-        self.streams().move_up(h, self.pid, token)?;
         if sh.prefetch {
-            // The cursor moved; a staged fill for the old cursor is stale.
-            if let Some(slot) =
-                sh.slots[self.pid].lock().unwrap().get_mut(&h.stream_id)
-            {
-                slot.pending_idx = None;
+            // The cursor is about to move; a staged fill for the old
+            // cursor is stale. A fill still *pending* here is worse
+            // than stale: after a `move_down` the in-flight fill
+            // targets the very token this write lands on, so the
+            // staged copy may hold pre- or post-write data depending
+            // on wall-clock scheduling (detector 5, error).
+            let raced = match sh.slots[self.pid].lock().unwrap().get_mut(&h.stream_id) {
+                Some(slot) => slot.pending_idx.take().is_some(),
+                None => false,
+            };
+            if raced {
+                if let Some(an) = &sh.analyzer {
+                    let abort = an.stream_hazard(
+                        self.pid,
+                        Severity::Error,
+                        format!(
+                            "core {} stream_move_up on stream {} races the staged \
+                             prefetch fill of the token it writes; the staged copy \
+                             is nondeterministic",
+                            self.pid, h.stream_id
+                        ),
+                    );
+                    if abort {
+                        let finding = an
+                            .last_error_render()
+                            .unwrap_or_else(|| "stream token hazard".to_string());
+                        self.analysis_abort(&finding);
+                    }
+                }
             }
         }
+        self.streams().move_up(h, self.pid, token)?;
         sh.fetch_words[self.pid].fetch_add(token.len() as u64, Ordering::Relaxed);
         let now = sh.clocks.now(self.pid);
         sh.dma[self.pid].lock().unwrap().issue(
@@ -1452,10 +1612,31 @@ impl Ctx {
     pub fn stream_seek(&self, h: StreamHandle, delta_tokens: i64) -> Result<()> {
         self.streams().seek(h, self.pid, delta_tokens)?;
         if self.shared.prefetch {
-            if let Some(slot) =
-                self.shared.slots[self.pid].lock().unwrap().get_mut(&h.stream_id)
+            let discarded = match self
+                .shared
+                .slots[self.pid]
+                .lock()
+                .unwrap()
+                .get_mut(&h.stream_id)
             {
-                slot.pending_idx = None;
+                Some(slot) => slot.pending_idx.take().is_some(),
+                None => false,
+            };
+            if discarded {
+                if let Some(an) = &self.shared.analyzer {
+                    // Warning only: invalidating the staged token is the
+                    // normal multi-pass idiom, but the next `move_down`
+                    // pays a cold fetch — worth surfacing, never fatal.
+                    an.stream_hazard(
+                        self.pid,
+                        Severity::Warning,
+                        format!(
+                            "core {} seek on stream {} discarded a staged prefetch \
+                             token; the next move_down pays a cold fetch",
+                            self.pid, h.stream_id
+                        ),
+                    );
+                }
             }
         }
         Ok(())
@@ -1502,7 +1683,7 @@ impl Ctx {
         // superstep *and* cuts the hyperstep ledger while the gang is
         // held.
         let _guard = PoisonOnPanic(&self.shared.barrier);
-        self.superstep_barrier(|| {
+        self.superstep_barrier(SyncShape::Hyperstep, || {
             let sh = &self.shared;
             let compute: f64 = {
                 let cost = sh.cost.lock().unwrap();
@@ -1545,6 +1726,9 @@ pub struct RunOutcome {
     pub timeline: Timeline,
     /// Host wall-clock of the gang execution.
     pub wall_seconds: f64,
+    /// Superstep analysis findings ([`crate::bsp::verify`]); empty when
+    /// `GangConfig::analysis` was [`AnalysisMode::Off`].
+    pub analysis: AnalysisReport,
 }
 
 /// Run `kernel` in SPMD over the machine's `p` cores.
@@ -1569,6 +1753,7 @@ pub struct RunOutcome {
 /// // 100 FLOPs + l on the virtual timeline, at 5 cycles per FLOP.
 /// assert!((out.timeline.makespan_cycles - (100.0 + m.l) * 5.0).abs() < 1e-6);
 /// ```
+#[must_use]
 pub fn run_gang<F>(
     machine: &AcceleratorParams,
     streams: Option<Arc<StreamRegistry>>,
@@ -1585,6 +1770,7 @@ where
 /// [`ApplyMode`] (sharded gang apply vs the leader-only oracle) and
 /// override the [`Noc`] mesh (e.g. [`Noc::with_free_hops`] for the
 /// flat-`g` ablation).
+#[must_use]
 pub fn run_gang_cfg<F>(
     machine: &AcceleratorParams,
     streams: Option<Arc<StreamRegistry>>,
@@ -1606,6 +1792,14 @@ where
             let _guard = PoisonOnPanic(&shared.barrier);
             let mut ctx = Ctx { pid, shared: Arc::clone(shared) };
             kernel(&mut ctx);
+            if let Some(an) = &shared.analyzer {
+                // Arm the barrier as this core retires: in a correct
+                // program every core is already past its final barrier
+                // generation, so nobody sees the poison — but a core
+                // that syncs *again* has diverged, and reports this
+                // per-pid count diagnostic instead of deadlocking.
+                shared.barrier.defect(an.retire(pid));
+            }
         });
     }
     let wall_seconds = start.elapsed().as_secs_f64();
@@ -1619,11 +1813,13 @@ where
         .fold(0.0, f64::max);
     let tl = shared.timeline.into_inner().unwrap();
     let timeline = Timeline { spans: tl.spans, makespan_cycles: clocks_end.max(drain) };
+    let analysis = shared.analyzer.map(Analyzer::into_report).unwrap_or_default();
     RunOutcome {
         cost: shared.cost.into_inner().unwrap(),
         ledger: shared.ledger.into_inner().unwrap(),
         timeline,
         wall_seconds,
+        analysis,
     }
 }
 
@@ -1654,6 +1850,7 @@ where
 /// assert_eq!(out.cost.len(), 1);
 /// assert_eq!(budget.available(), 4); // lease returned at retirement
 /// ```
+#[must_use]
 pub fn run_gang_budgeted<F>(
     budget: &CoreBudget,
     machine: &AcceleratorParams,
@@ -1691,7 +1888,7 @@ mod tests {
 
     #[test]
     fn put_visible_after_sync_not_before() {
-        run_gang(&machine(2), None, false, |ctx| {
+        let _ = run_gang(&machine(2), None, false, |ctx| {
             let x = ctx.register("x", 1).unwrap();
             ctx.with_var_mut(x, |v| v[0] = -1.0);
             ctx.sync();
@@ -1713,7 +1910,7 @@ mod tests {
     fn handles_are_interned_consistently() {
         // Same name → same handle on every core; distinct names →
         // distinct handles; re-registering returns the original handle.
-        run_gang(&machine(4), None, false, |ctx| {
+        let _ = run_gang(&machine(4), None, false, |ctx| {
             let a = ctx.register("a", 2).unwrap();
             let b = ctx.register("b", 2).unwrap();
             assert_ne!(a, b);
@@ -1731,7 +1928,7 @@ mod tests {
 
     #[test]
     fn get_reads_pre_put_values() {
-        run_gang(&machine(2), None, false, |ctx| {
+        let _ = run_gang(&machine(2), None, false, |ctx| {
             let src = ctx.register("src", 1).unwrap();
             let dst = ctx.register("dst", 1).unwrap();
             ctx.with_var_mut(src, |v| v[0] = 10.0 + ctx.pid() as f32);
@@ -1756,7 +1953,7 @@ mod tests {
     fn get_with_aliasing_src_and_dst_buffer() {
         // src and dst are the same (var, core) buffer — the leader must
         // stage through scratch instead of deadlocking on the mutex.
-        run_gang(&machine(2), None, false, |ctx| {
+        let _ = run_gang(&machine(2), None, false, |ctx| {
             let v = ctx.register("v", 4).unwrap();
             ctx.with_var_mut(v, |b| {
                 for (i, x) in b.iter_mut().enumerate() {
@@ -1777,7 +1974,7 @@ mod tests {
 
     #[test]
     fn messages_delivered_next_superstep() {
-        run_gang(&machine(3), None, false, |ctx| {
+        let _ = run_gang(&machine(3), None, false, |ctx| {
             let next = (ctx.pid() + 1) % 3;
             ctx.send(next, 7, vec![ctx.pid() as f32]);
             assert!(ctx.move_messages().is_empty());
@@ -1796,7 +1993,7 @@ mod tests {
         // and inbox drain never copy the payload.
         use std::sync::atomic::AtomicUsize;
         let sent_ptr = AtomicUsize::new(0);
-        run_gang(&machine(2), None, false, |ctx| {
+        let _ = run_gang(&machine(2), None, false, |ctx| {
             if ctx.pid() == 0 {
                 let payload = vec![1.0f32, 2.0, 3.0];
                 sent_ptr.store(payload.as_ptr() as usize, Ordering::SeqCst);
@@ -1818,7 +2015,7 @@ mod tests {
 
     #[test]
     fn move_messages_into_reuses_capacity() {
-        run_gang(&machine(2), None, false, |ctx| {
+        let _ = run_gang(&machine(2), None, false, |ctx| {
             let mut msgs: Vec<Message> = Vec::with_capacity(8);
             let cap_ptr = msgs.as_ptr() as usize;
             for round in 0..3 {
@@ -1835,7 +2032,7 @@ mod tests {
 
     #[test]
     fn broadcast_gathers_all_values() {
-        run_gang(&machine(4), None, false, |ctx| {
+        let _ = run_gang(&machine(4), None, false, |ctx| {
             let all = ctx.register("all", 4).unwrap();
             ctx.sync();
             ctx.broadcast(all, &[ctx.pid() as f32 * 2.0]);
@@ -1952,8 +2149,8 @@ mod tests {
                 ctx.sync();
                 let msgs = ctx.move_messages();
                 let mut digest: Vec<u32> = Vec::new();
-                ctx.with_var(a, |v| digest.extend(v.iter().map(|x| x.to_bits())));
-                ctx.with_var(b, |v| digest.extend(v.iter().map(|x| x.to_bits())));
+                let _ = ctx.with_var(a, |v| digest.extend(v.iter().map(|x| x.to_bits())));
+                let _ = ctx.with_var(b, |v| digest.extend(v.iter().map(|x| x.to_bits())));
                 for msg in &msgs {
                     digest.push(msg.src_pid as u32);
                     digest.push(msg.tag);
@@ -1980,7 +2177,7 @@ mod tests {
         // have run yet when the put is issued. Repeat to exercise
         // scheduling interleavings.
         for _ in 0..20 {
-            run_gang(&machine(4), None, false, |ctx| {
+            let _ = run_gang(&machine(4), None, false, |ctx| {
                 let x = ctx.register("x", 8).unwrap();
                 let next = (ctx.pid() + 1) % 4;
                 ctx.put(next, x, 4, &[ctx.pid() as f32; 4]);
@@ -1996,7 +2193,7 @@ mod tests {
         // p = 1 so the faulting core is the caller: the panic payload
         // must be our named diagnostic, not a raw slice-index message.
         let r = std::panic::catch_unwind(|| {
-            run_gang(&machine(1), None, false, |ctx| {
+            let _ = run_gang(&machine(1), None, false, |ctx| {
                 let x = ctx.register("x", 4).unwrap();
                 ctx.sync();
                 ctx.put(0, x, 2, &[0.0; 8]); // 2 + 8 > 4
@@ -2045,7 +2242,7 @@ mod tests {
     fn local_memory_budget_enforced() {
         let mut m = machine(1);
         m.local_mem = 64; // 16 words
-        run_gang(&m, None, false, |ctx| {
+        let _ = run_gang(&m, None, false, |ctx| {
             assert!(ctx.register("a", 8).is_ok()); // 32 B
             assert!(ctx.register("b", 8).is_ok()); // 64 B total
             assert!(ctx.register("c", 1).is_err()); // would exceed
@@ -2057,7 +2254,7 @@ mod tests {
     #[test]
     fn gang_panics_propagate_without_hanging() {
         let result = std::panic::catch_unwind(|| {
-            run_gang(&machine(4), None, false, |ctx| {
+            let _ = run_gang(&machine(4), None, false, |ctx| {
                 if ctx.pid() == 2 {
                     panic!("core 2 exploded");
                 }
@@ -2198,7 +2395,7 @@ mod tests {
         let m = machine(1);
         let mut reg = StreamRegistry::new(&m);
         reg.create(16, 4, None).unwrap();
-        run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+        let _ = run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
             let h = ctx.stream_open(0).unwrap();
             ctx.stream_move_up(h, &[1.0, 2.0, 3.0, 4.0]).unwrap();
             ctx.stream_seek(h, -1).unwrap();
@@ -2240,7 +2437,7 @@ mod tests {
         use std::sync::atomic::AtomicUsize;
         let recycled = AtomicUsize::new(0);
         let given = Mutex::new(Vec::<usize>::new());
-        run_gang(&machine(2), None, false, |ctx| {
+        let _ = run_gang(&machine(2), None, false, |ctx| {
             let peer = 1 - ctx.pid();
             let mut msgs: Vec<Message> = Vec::new();
             for round in 0..3u32 {
@@ -2321,5 +2518,217 @@ mod tests {
             assert_eq!(out.cost.len(), 1);
             assert_eq!(out.cost.supersteps[0].w_max, 10.0);
         }
+    }
+
+    // ---------------------------------------------- superstep analysis
+
+    use crate::bsp::verify::FindingKind;
+
+    fn warn_cfg() -> GangConfig {
+        GangConfig { analysis: AnalysisMode::Warn, ..Default::default() }
+    }
+
+    fn deny_cfg() -> GangConfig {
+        GangConfig { analysis: AnalysisMode::Deny, ..Default::default() }
+    }
+
+    #[test]
+    fn analysis_warn_flags_overlapping_puts_and_completes() {
+        let out = run_gang_cfg(&machine(4), None, false, warn_cfg(), |ctx| {
+            let x = ctx.register("x", 8).unwrap();
+            ctx.sync();
+            if ctx.pid() < 2 {
+                ctx.put(3, x, 2, &[ctx.pid() as f32; 4]); // pids 0 and 1 overlap
+            }
+            ctx.sync();
+        });
+        assert_eq!(out.analysis.error_count(), 1, "{}", out.analysis.render());
+        let f = &out.analysis.findings[0];
+        assert_eq!(f.kind, FindingKind::WriteWriteConflict);
+        assert_eq!(f.pids, vec![0, 1]);
+        assert_eq!(f.var.as_deref(), Some("x"));
+        assert_eq!(f.interval, Some((2, 6)));
+    }
+
+    #[test]
+    fn analysis_deny_poisons_with_the_finding_as_diagnostic() {
+        let r = std::panic::catch_unwind(|| {
+            run_gang_cfg(&machine(2), None, false, deny_cfg(), |ctx| {
+                let x = ctx.register("x", 4).unwrap();
+                ctx.sync();
+                ctx.put(0, x, 0, &[1.0; 4]); // both cores write core 0's x[0..4)
+                ctx.sync();
+            });
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("panic payload should be the analysis diagnostic");
+        assert!(msg.contains("write-write-conflict"), "{msg}");
+    }
+
+    #[test]
+    fn analysis_flags_put_vs_local_write_clobber() {
+        let out = run_gang_cfg(&machine(2), None, false, warn_cfg(), |ctx| {
+            let x = ctx.register("x", 4).unwrap();
+            ctx.sync();
+            if ctx.pid() == 1 {
+                ctx.put(0, x, 0, &[9.0]);
+            } else {
+                ctx.with_var_mut(x, |v| v[0] = 1.0);
+            }
+            ctx.sync();
+        });
+        assert_eq!(out.analysis.error_count(), 1, "{}", out.analysis.render());
+        let f = &out.analysis.findings[0];
+        assert_eq!(f.kind, FindingKind::LocalWriteClobber);
+        assert_eq!(f.pids, vec![0, 1]);
+    }
+
+    #[test]
+    fn analysis_broadcast_and_disjoint_puts_are_clean() {
+        let out = run_gang_cfg(&machine(4), None, false, warn_cfg(), |ctx| {
+            let all = ctx.register("all", 4).unwrap();
+            ctx.sync();
+            ctx.broadcast(all, &[ctx.pid() as f32]);
+            ctx.sync();
+            assert_eq!(ctx.var(all), vec![0.0, 1.0, 2.0, 3.0]);
+        });
+        assert!(out.analysis.is_clean(), "{}", out.analysis.render());
+    }
+
+    #[test]
+    fn late_registration_denied_returns_error_not_poison() {
+        let out = run_gang_cfg(&machine(2), None, false, deny_cfg(), |ctx| {
+            let early = ctx.register("early", 2).unwrap();
+            ctx.sync();
+            // Re-registering an existing name is still fine.
+            assert_eq!(ctx.register("early", 2).unwrap(), early);
+            // A *new* name past the first sync fails under Deny.
+            let e = ctx.register("late", 2).unwrap_err().to_string();
+            assert!(e.contains("after the first sync"), "{e}");
+            ctx.sync();
+        });
+        assert_eq!(out.analysis.error_count(), 2, "{}", out.analysis.render()); // one per core
+        assert!(out
+            .analysis
+            .findings
+            .iter()
+            .all(|f| f.kind == FindingKind::LateRegistration));
+    }
+
+    #[test]
+    fn divergent_sync_counts_report_instead_of_deadlocking() {
+        let r = std::panic::catch_unwind(|| {
+            let _ = run_gang_cfg(&machine(2), None, false, warn_cfg(), |ctx| {
+                if ctx.pid() == 0 {
+                    ctx.sync(); // core 1 never syncs: this can never complete
+                }
+            });
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("panic payload should be the divergence diagnostic");
+        assert!(msg.contains("barrier-divergence"), "{msg}");
+        assert!(msg.contains("sync counts"), "{msg}");
+    }
+
+    #[test]
+    fn mixed_sync_shapes_flagged() {
+        let out = run_gang_cfg(&machine(2), None, false, warn_cfg(), |ctx| {
+            if ctx.pid() == 0 {
+                ctx.sync();
+            } else {
+                ctx.hyperstep_sync();
+            }
+        });
+        assert_eq!(out.analysis.error_count(), 1, "{}", out.analysis.render());
+        assert_eq!(out.analysis.findings[0].kind, FindingKind::BarrierDivergence);
+    }
+
+    #[test]
+    fn scratchpad_over_budget_charges_the_put_arena() {
+        let mut m = machine(2);
+        m.local_mem = 256; // 64 words
+        let out = run_gang_cfg(&m, None, false, warn_cfg(), |ctx| {
+            let x = ctx.register("x", 64).unwrap(); // exactly L
+            ctx.sync();
+            if ctx.pid() == 1 {
+                ctx.put(0, x, 0, &[1.0; 32]); // 128 B queued on core 1
+            }
+            ctx.sync();
+        });
+        assert_eq!(out.analysis.error_count(), 1, "{}", out.analysis.render());
+        let f = &out.analysis.findings[0];
+        assert_eq!(f.kind, FindingKind::ScratchpadOverBudget);
+        assert_eq!(f.pids, vec![1]);
+    }
+
+    #[test]
+    fn move_up_racing_staged_fill_is_an_error() {
+        let m = machine(1);
+        let mut reg = StreamRegistry::new(&m);
+        reg.create(16, 4, None).unwrap(); // 4 tokens of 4 words
+        let out = run_gang_cfg(&m, Some(Arc::new(reg)), true, warn_cfg(), |ctx| {
+            let h = ctx.stream_open(0).unwrap();
+            let mut buf = Vec::new();
+            ctx.stream_move_down(h, &mut buf).unwrap(); // stages the fill of token 1
+            ctx.stream_move_up(h, &[9.0; 4]).unwrap(); // …and writes token 1
+            ctx.hyperstep_sync();
+            ctx.stream_close(h).unwrap();
+        });
+        assert_eq!(out.analysis.error_count(), 1, "{}", out.analysis.render());
+        let f = &out.analysis.findings[0];
+        assert_eq!(f.kind, FindingKind::StreamTokenHazard);
+        assert_eq!(f.pids, vec![0]);
+    }
+
+    #[test]
+    fn seek_discarding_staged_token_is_a_warning_even_under_deny() {
+        let m = machine(1);
+        let mut reg = StreamRegistry::new(&m);
+        let init: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        reg.create(16, 4, Some(&init)).unwrap();
+        let out = run_gang_cfg(&m, Some(Arc::new(reg)), true, deny_cfg(), |ctx| {
+            let h = ctx.stream_open(0).unwrap();
+            let mut buf = Vec::new();
+            ctx.stream_move_down(h, &mut buf).unwrap();
+            ctx.stream_seek(h, -1).unwrap(); // discard the staged fill
+            ctx.stream_move_down(h, &mut buf).unwrap();
+            assert_eq!(buf[0], 0.0);
+            ctx.hyperstep_sync();
+            ctx.stream_close(h).unwrap();
+        });
+        assert_eq!(out.analysis.error_count(), 0, "{}", out.analysis.render());
+        assert_eq!(out.analysis.warning_count(), 1);
+        assert_eq!(out.analysis.findings[0].kind, FindingKind::StreamTokenHazard);
+    }
+
+    #[test]
+    fn deny_is_transparent_for_a_clean_streaming_program() {
+        let m = machine(2);
+        let mut reg = StreamRegistry::new(&m);
+        for _ in 0..2 {
+            reg.create(32, 8, None).unwrap();
+        }
+        let out = run_gang_cfg(&m, Some(Arc::new(reg)), true, deny_cfg(), |ctx| {
+            let all = ctx.register("all", 2).unwrap();
+            let h = ctx.stream_open(ctx.pid()).unwrap();
+            ctx.sync();
+            let mut buf = Vec::new();
+            for _ in 0..4 {
+                ctx.stream_move_down(h, &mut buf).unwrap();
+                ctx.charge_flops(8.0);
+                ctx.hyperstep_sync();
+            }
+            ctx.broadcast(all, &[ctx.pid() as f32]);
+            ctx.sync();
+            ctx.stream_close(h).unwrap();
+        });
+        assert!(out.analysis.is_clean(), "{}", out.analysis.render());
+        assert_eq!(out.ledger.hypersteps.len(), 4);
     }
 }

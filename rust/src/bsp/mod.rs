@@ -14,11 +14,17 @@
 //! * [`sched`]    — the multi-gang scheduler: a queue of gangs admitted
 //!   concurrently under a global core budget, with backfill as gangs
 //!   retire (the Fig. 5 sweep's execution layer).
+//! * [`verify`]   — the superstep race/hazard analyzer: exact,
+//!   superstep-granular detectors (overlapping puts, local-write
+//!   clobbers, barrier divergence, scratchpad over-budget, stream
+//!   token hazards) over the op sets the plan leader already drains,
+//!   wired through `GangConfig::analysis` (`bsps analyze` in the CLI).
 
 pub mod barrier;
 pub mod engine;
 pub mod sched;
 pub mod timeline;
+pub mod verify;
 
 pub use engine::{
     run_gang, run_gang_budgeted, run_gang_cfg, ApplyMode, Ctx, GangConfig, Message,
@@ -26,3 +32,4 @@ pub use engine::{
 };
 pub use sched::{GangJob, GangScheduler, JobResult, SchedOutcome, SchedStats};
 pub use timeline::{HyperstepSpan, Timeline};
+pub use verify::{AnalysisMode, AnalysisReport, Finding, FindingKind, Severity};

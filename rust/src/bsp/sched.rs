@@ -60,6 +60,7 @@ pub struct GangJob {
 
 impl GangJob {
     /// A plain-BSP job with default config and prefetch off.
+    #[must_use]
     pub fn new<F>(name: &str, machine: AcceleratorParams, kernel: F) -> Self
     where
         F: Fn(&mut Ctx) + Send + Sync + 'static,
@@ -75,6 +76,7 @@ impl GangJob {
     }
 
     /// Attach a stream registry and enable the prefetch executor.
+    #[must_use]
     pub fn with_streams(mut self, streams: Arc<StreamRegistry>, prefetch: bool) -> Self {
         self.streams = Some(streams);
         self.prefetch = prefetch;
@@ -82,12 +84,14 @@ impl GangJob {
     }
 
     /// Override the gang configuration (apply mode, NoC mesh).
+    #[must_use]
     pub fn with_cfg(mut self, cfg: GangConfig) -> Self {
         self.cfg = cfg;
         self
     }
 
     /// Cores this job requests from the budget.
+    #[must_use]
     pub fn cores(&self) -> usize {
         self.machine.p
     }
@@ -143,6 +147,7 @@ pub struct SchedStats {
 impl SchedStats {
     /// Fraction of the budget's core-time the queue kept busy:
     /// `core_seconds / (budget · makespan)`, in `(0, 1]`.
+    #[must_use]
     pub fn occupancy(&self) -> f64 {
         let denom = self.budget_cores as f64 * self.makespan_seconds;
         if denom > 0.0 {
@@ -153,6 +158,7 @@ impl SchedStats {
     }
 
     /// Serial-sum over makespan: >1 once any two gangs overlapped.
+    #[must_use]
     pub fn speedup(&self) -> f64 {
         if self.makespan_seconds > 0.0 {
             self.serial_sum_seconds / self.makespan_seconds
@@ -201,7 +207,7 @@ pub struct GangScheduler {
 
 /// Render a caught panic payload (`String`/`&str` panics keep their
 /// message, anything else gets a generic marker).
-fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = e.downcast_ref::<String>() {
         s.clone()
     } else if let Some(s) = e.downcast_ref::<&str>() {
@@ -213,17 +219,20 @@ fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
 
 impl GangScheduler {
     /// A scheduler over a budget of `cores` simulated cores.
+    #[must_use]
     pub fn new(cores: usize) -> Self {
         Self { budget: CoreBudget::new(cores) }
     }
 
     /// A scheduler budgeted to the host's parallelism (the `--cores`
     /// default).
+    #[must_use]
     pub fn host() -> Self {
         Self { budget: CoreBudget::host() }
     }
 
     /// The global core budget.
+    #[must_use]
     pub fn budget_cores(&self) -> usize {
         self.budget.capacity()
     }
@@ -237,6 +246,7 @@ impl GangScheduler {
     /// * A gang that **panics** is caught, recorded as `Err` with the
     ///   panic message, and its cores are returned to the budget — the
     ///   rest of the queue keeps draining.
+    #[must_use]
     pub fn run(&self, jobs: Vec<GangJob>) -> SchedOutcome {
         let n = jobs.len();
         let mut results: Vec<Option<JobResult>> = Vec::new();
@@ -313,7 +323,7 @@ impl GangScheduler {
                                 machine: job.machine,
                                 queue_wait_seconds,
                                 run_seconds,
-                                outcome: r.map_err(panic_message),
+                                outcome: r.map_err(|e| panic_message(e.as_ref())),
                             },
                         ));
                     });

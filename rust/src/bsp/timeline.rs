@@ -27,6 +27,7 @@ pub struct HyperstepSpan {
 
 impl HyperstepSpan {
     /// Duration of the hyperstep, cycles.
+    #[must_use]
     pub fn cycles(&self) -> f64 {
         self.end_cycles - self.start_cycles
     }
@@ -44,12 +45,14 @@ pub struct Timeline {
 
 impl Timeline {
     /// Makespan in seconds at the simulated core clock.
+    #[must_use]
     pub fn makespan_seconds(&self) -> f64 {
         self.makespan_cycles / CLOCK_HZ
     }
 
     /// Convert the makespan to FLOP-equivalents on machine `m` (the
     /// unit `model::bsps` predictions are stated in).
+    #[must_use]
     pub fn makespan_flops(&self, m: &crate::model::params::AcceleratorParams) -> f64 {
         self.makespan_cycles / (CLOCK_HZ / m.r)
     }

@@ -1,0 +1,853 @@
+//! Superstep-granular race and hazard analysis for BSP gangs.
+//!
+//! BSPlib-style semantics make every superstep's communication fully
+//! declarative: puts are buffered into per-core arenas, gets are
+//! snapshotted, and messages move by value, all resolved at `sync` time
+//! by the plan leader inside `Barrier::wait_phased`. Whole classes of
+//! nondeterminism are therefore *decidable per superstep* from the op
+//! set the leader already drains — no shadow memory, no happens-before
+//! graph, just the queues. This module runs five exact detectors over
+//! that op set:
+//!
+//! 1. **write-write conflicts** — puts (or put vs `broadcast`) from
+//!    different source cores targeting overlapping `[offset, offset+len)`
+//!    intervals of the same variable on the same destination core within
+//!    one superstep. Nondeterministic under any apply-order change.
+//! 2. **put-vs-local-write clobbers** — a put landing in a region the
+//!    destination core itself mutated via `with_var_mut` that superstep
+//!    (conservative whole-buffer dirty ranges; `broadcast` marks only
+//!    its own exact slot).
+//! 3. **barrier divergence** — cores retiring with unequal sync counts,
+//!    or mixing `sync`/`hyperstep_sync` shapes in one superstep.
+//!    Reported with per-pid superstep counts instead of a silent
+//!    deadlock.
+//! 4. **scratchpad over-budget** — a core's registered-var + put-arena +
+//!    stream-staging footprint exceeding the machine's local memory,
+//!    charged per superstep.
+//! 5. **stream token hazards** — `stream_move_up` racing a staged
+//!    prefetch fill (error), or `seek` discarding a staged token
+//!    (warning: the normal multi-pass idiom).
+//!
+//! The analyzer is wired through `GangConfig::analysis` as
+//! [`AnalysisMode`]: `Off` costs nothing (no recording at all — the
+//! steady-state hot path stays allocation-free, pinned by
+//! `zero_alloc.rs`), `Warn` logs findings into the run's
+//! [`AnalysisReport`], and `Deny` poisons the gang with the first
+//! error-severity finding as the diagnostic. The CLI front end is
+//! `bsps analyze`.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Findings kept per run; later findings only bump
+/// [`AnalysisReport::dropped`] so a hot loop full of conflicts cannot
+/// grow the log without bound.
+const MAX_FINDINGS: usize = 64;
+
+/// How much superstep analysis a gang performs
+/// (`GangConfig::analysis`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AnalysisMode {
+    /// No analysis: no recording, no checks, zero cost on the hot path
+    /// (the engine does not even construct the analyzer).
+    #[default]
+    Off,
+    /// Run every detector and log findings into the run's
+    /// [`AnalysisReport`]; the gang keeps going.
+    Warn,
+    /// Like `Warn`, but any [`Severity::Error`] finding poisons the
+    /// gang and the run panics with the finding as the diagnostic.
+    /// Warning-severity findings are still only logged.
+    Deny,
+}
+
+impl AnalysisMode {
+    /// Parse a CLI spelling (`off` / `warn` / `deny`).
+    #[must_use]
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(Self::Off),
+            "warn" => Some(Self::Warn),
+            "deny" => Some(Self::Deny),
+            _ => None,
+        }
+    }
+}
+
+/// How bad a finding is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Suspicious but well-defined behaviour (e.g. a `seek` discarding
+    /// a staged prefetch fill, which every multi-pass kernel does).
+    /// Never poisons the gang.
+    Warning,
+    /// Nondeterministic or unsound behaviour. Poisons the gang under
+    /// [`AnalysisMode::Deny`].
+    Error,
+}
+
+impl Severity {
+    /// Stable lowercase spelling (used in renders and JSON).
+    #[must_use]
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Warning => "warning",
+            Self::Error => "error",
+        }
+    }
+}
+
+/// The detector class a [`Finding`] belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FindingKind {
+    /// Detector 1: puts from different sources overlap on one
+    /// destination variable interval in one superstep.
+    WriteWriteConflict,
+    /// Detector 2: a put lands in a region the destination core itself
+    /// mutated that superstep.
+    LocalWriteClobber,
+    /// Detector 3: unequal per-pid sync counts at retirement, or mixed
+    /// `sync`/`hyperstep_sync` shapes in one superstep.
+    BarrierDivergence,
+    /// Detector 4: a core's scratchpad footprint (vars + put arena +
+    /// stream staging) exceeds the machine's local memory.
+    ScratchpadOverBudget,
+    /// Detector 5: a stream op races or invalidates a staged prefetch
+    /// token.
+    StreamTokenHazard,
+    /// Satellite detector: `Ctx::register` after the first sync (races
+    /// the var-table lock on other cores).
+    LateRegistration,
+}
+
+impl FindingKind {
+    /// Stable kebab-case spelling (used in renders, JSON and the CLI's
+    /// `--expect` flag).
+    #[must_use]
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::WriteWriteConflict => "write-write-conflict",
+            Self::LocalWriteClobber => "local-write-clobber",
+            Self::BarrierDivergence => "barrier-divergence",
+            Self::ScratchpadOverBudget => "scratchpad-over-budget",
+            Self::StreamTokenHazard => "stream-token-hazard",
+            Self::LateRegistration => "late-registration",
+        }
+    }
+}
+
+impl fmt::Display for FindingKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One analyzer finding: which detector fired, where, and on whom.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Detector class.
+    pub kind: FindingKind,
+    /// Whether the finding poisons the gang under `Deny`.
+    pub severity: Severity,
+    /// Superstep index (0-based, counted at the plan barrier) the
+    /// finding belongs to.
+    pub superstep: usize,
+    /// Variable name, for var-addressed findings.
+    pub var: Option<String>,
+    /// The cores involved, sorted ascending.
+    pub pids: Vec<usize>,
+    /// The conflicting `[lo, hi)` word interval, for interval-addressed
+    /// findings.
+    pub interval: Option<(usize, usize)>,
+    /// Human-readable description of the hazard.
+    pub detail: String,
+}
+
+impl Finding {
+    /// One grep-able report line:
+    /// `[error] write-write-conflict @s3 var "x" [0..8) pids [0, 1]: …`.
+    #[must_use]
+    pub fn render(&self) -> String {
+        let mut line = format!(
+            "[{}] {} @s{}",
+            self.severity.as_str(),
+            self.kind.as_str(),
+            self.superstep
+        );
+        if let Some(var) = &self.var {
+            line.push_str(&format!(" var \"{var}\""));
+        }
+        if let Some((lo, hi)) = self.interval {
+            line.push_str(&format!(" [{lo}..{hi})"));
+        }
+        line.push_str(&format!(" pids {:?}: {}", self.pids, self.detail));
+        line
+    }
+}
+
+/// The structured outcome of a gang's superstep analysis, returned
+/// beside the cost ledger in `RunOutcome` (and folded into the
+/// coordinator `Report`). Empty (and `is_clean`) when analysis was off
+/// or nothing fired.
+#[derive(Debug, Clone, Default)]
+pub struct AnalysisReport {
+    /// Findings in discovery order, capped at an internal maximum.
+    pub findings: Vec<Finding>,
+    /// Findings discarded after the cap was reached.
+    pub dropped: usize,
+}
+
+impl AnalysisReport {
+    /// `true` when no detector fired (and nothing was dropped).
+    #[must_use]
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty() && self.dropped == 0
+    }
+
+    /// Number of error-severity findings.
+    #[must_use]
+    pub fn error_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    /// Number of warning-severity findings.
+    #[must_use]
+    pub fn warning_count(&self) -> usize {
+        self.findings.len() - self.error_count()
+    }
+
+    /// Multi-line human-readable report (one [`Finding::render`] line
+    /// per finding, plus a drop note).
+    #[must_use]
+    pub fn render(&self) -> String {
+        if self.is_clean() {
+            return "analysis clean: no findings".to_string();
+        }
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.render());
+            out.push('\n');
+        }
+        if self.dropped > 0 {
+            out.push_str(&format!("(+{} findings dropped past the cap)\n", self.dropped));
+        }
+        out.push_str(&format!(
+            "analysis: {} error(s), {} warning(s)",
+            self.error_count(),
+            self.warning_count()
+        ));
+        out
+    }
+
+    /// Serialize as a self-contained JSON object (no third-party crates
+    /// in this build, so the writer is hand-rolled like the bench
+    /// snapshots').
+    #[must_use]
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"findings\":[");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"kind\":\"{}\",\"severity\":\"{}\",\"superstep\":{}",
+                f.kind.as_str(),
+                f.severity.as_str(),
+                f.superstep
+            ));
+            if let Some(var) = &f.var {
+                out.push_str(&format!(",\"var\":\"{}\"", json_escape(var)));
+            }
+            if let Some((lo, hi)) = f.interval {
+                out.push_str(&format!(",\"interval\":[{lo},{hi}]"));
+            }
+            out.push_str(",\"pids\":[");
+            for (j, pid) in f.pids.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&pid.to_string());
+            }
+            out.push_str(&format!("],\"detail\":\"{}\"}}", json_escape(&f.detail)));
+        }
+        out.push_str(&format!("],\"dropped\":{}}}", self.dropped));
+        out
+    }
+}
+
+/// Escape a string for embedding in a JSON literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The barrier flavour a core entered a superstep with (detector 3's
+/// shape check).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum SyncShape {
+    /// `Ctx::sync` — an ordinary superstep.
+    Ordinary,
+    /// `Ctx::hyperstep_sync` — a superstep that also cuts the ledger.
+    Hyperstep,
+}
+
+impl SyncShape {
+    fn as_str(self) -> &'static str {
+        match self {
+            Self::Ordinary => "sync",
+            Self::Hyperstep => "hyperstep_sync",
+        }
+    }
+
+    fn code(self) -> usize {
+        match self {
+            Self::Ordinary => 1,
+            Self::Hyperstep => 2,
+        }
+    }
+}
+
+/// One write landing on `(dst, var)` in the current superstep, as the
+/// plan leader sees it: a queued put (`local == false`, `src` = issuing
+/// core) or a conservative local-mutation range (`local == true`,
+/// `src == dst`). The interval is `[lo, hi)` in words.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct WriteRecord {
+    /// Destination core.
+    pub dst: usize,
+    /// Raw variable id.
+    pub var: u32,
+    /// Interval start (words).
+    pub lo: usize,
+    /// Interval end, exclusive (words).
+    pub hi: usize,
+    /// Issuing core.
+    pub src: usize,
+    /// Whether this is a local mutation rather than a queued put.
+    pub local: bool,
+}
+
+struct FindingLog {
+    findings: Vec<Finding>,
+    dropped: usize,
+}
+
+/// The per-gang analyzer state. Constructed by the engine only when
+/// `GangConfig::analysis != Off`; every hook is a no-op by absence in
+/// `Off` mode, which keeps the steady-state hot path allocation-free.
+pub(crate) struct Analyzer {
+    mode: AnalysisMode,
+    /// Local-memory budget per core, in bytes (detector 4).
+    local_mem_bytes: usize,
+    /// Superstep index, bumped by the plan leader at every barrier.
+    superstep: AtomicUsize,
+    /// Set once the first barrier's plan has run (late-registration
+    /// detector).
+    synced: AtomicBool,
+    /// Cores whose kernel closure has returned.
+    retired: AtomicUsize,
+    /// Per-pid ordinary-sync counts.
+    sync_counts: Vec<AtomicUsize>,
+    /// Per-pid hyperstep-sync counts.
+    hyper_counts: Vec<AtomicUsize>,
+    /// Per-pid barrier shape for the superstep in flight (0 = not
+    /// arrived, else [`SyncShape::code`]).
+    shapes: Vec<AtomicUsize>,
+    /// Per-pid conservative dirty ranges `(var, lo, hi)` accumulated
+    /// since the last barrier.
+    dirty: Vec<Mutex<Vec<(u32, usize, usize)>>>,
+    log: Mutex<FindingLog>,
+}
+
+impl Analyzer {
+    /// Build analyzer state for a `p`-core gang with `local_mem_bytes`
+    /// of scratchpad per core.
+    pub(crate) fn new(mode: AnalysisMode, p: usize, local_mem_bytes: usize) -> Self {
+        Self {
+            mode,
+            local_mem_bytes,
+            superstep: AtomicUsize::new(0),
+            synced: AtomicBool::new(false),
+            retired: AtomicUsize::new(0),
+            sync_counts: (0..p).map(|_| AtomicUsize::new(0)).collect(),
+            hyper_counts: (0..p).map(|_| AtomicUsize::new(0)).collect(),
+            shapes: (0..p).map(|_| AtomicUsize::new(0)).collect(),
+            dirty: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+            log: Mutex::new(FindingLog { findings: Vec::new(), dropped: 0 }),
+        }
+    }
+
+    /// Current superstep index (as counted at plan barriers).
+    pub(crate) fn superstep(&self) -> usize {
+        self.superstep.load(Ordering::Relaxed)
+    }
+
+    /// Record a finding; returns `true` when the gang must abort
+    /// (`Deny` mode and error severity).
+    pub(crate) fn record(&self, finding: Finding) -> bool {
+        let abort = self.mode == AnalysisMode::Deny && finding.severity == Severity::Error;
+        let mut log = self.log.lock().unwrap();
+        if log.findings.len() < MAX_FINDINGS {
+            log.findings.push(finding);
+        } else {
+            log.dropped += 1;
+        }
+        abort
+    }
+
+    /// Whether the finding log has hit its cap (lets the sweep bail out
+    /// of building messages nobody will see).
+    fn log_full(&self) -> bool {
+        self.log.lock().unwrap().findings.len() >= MAX_FINDINGS
+    }
+
+    /// `Ctx::with_var_mut` / `Ctx::broadcast` hook: core `pid` mutated
+    /// `var[lo..hi]` locally this superstep.
+    pub(crate) fn mark_dirty(&self, pid: usize, var: u32, lo: usize, hi: usize) {
+        self.dirty[pid].lock().unwrap().push((var, lo, hi));
+    }
+
+    /// Drain core `pid`'s dirty ranges into `out` as
+    /// [`WriteRecord`]s (plan leader, building the sweep input).
+    pub(crate) fn drain_dirty_into(&self, pid: usize, out: &mut Vec<WriteRecord>) {
+        let mut dirty = self.dirty[pid].lock().unwrap();
+        for &(var, lo, hi) in dirty.iter() {
+            out.push(WriteRecord { dst: pid, var, lo, hi, src: pid, local: true });
+        }
+        dirty.clear();
+    }
+
+    /// Detectors 1 and 2: interval sweep over every write landing this
+    /// superstep. Returns `true` when the gang must abort.
+    pub(crate) fn sweep_writes(
+        &self,
+        recs: &mut [WriteRecord],
+        name_of: &dyn Fn(u32) -> String,
+    ) -> bool {
+        if recs.len() < 2 {
+            return false;
+        }
+        recs.sort_unstable_by_key(|r| (r.dst, r.var, r.lo, r.hi));
+        let superstep = self.superstep();
+        let mut abort = false;
+        for i in 0..recs.len() - 1 {
+            for j in i + 1..recs.len() {
+                let (a, b) = (recs[i], recs[j]);
+                if b.dst != a.dst || b.var != a.var || b.lo >= a.hi {
+                    break;
+                }
+                if a.src == b.src {
+                    // Same issuing core: applied in deterministic
+                    // program/queue order.
+                    continue;
+                }
+                if self.log_full() {
+                    // Still count the drop, but skip message building.
+                    abort |= self.record(Finding {
+                        kind: FindingKind::WriteWriteConflict,
+                        severity: Severity::Error,
+                        superstep,
+                        var: None,
+                        pids: Vec::new(),
+                        interval: None,
+                        detail: String::new(),
+                    });
+                    continue;
+                }
+                let clobber = a.local || b.local;
+                let kind = if clobber {
+                    FindingKind::LocalWriteClobber
+                } else {
+                    FindingKind::WriteWriteConflict
+                };
+                let (lo, hi) = (a.lo.max(b.lo), a.hi.min(b.hi));
+                let mut pids = vec![a.src, b.src];
+                pids.sort_unstable();
+                let detail = if clobber {
+                    let (put, loc) = if a.local { (b, a) } else { (a, b) };
+                    format!(
+                        "put from pid {} lands in a region pid {} mutated locally this superstep",
+                        put.src, loc.src
+                    )
+                } else {
+                    format!(
+                        "puts from pids {} and {} overlap on core {}; \
+                         result depends on apply order",
+                        a.src, b.src, a.dst
+                    )
+                };
+                abort |= self.record(Finding {
+                    kind,
+                    severity: Severity::Error,
+                    superstep,
+                    var: Some(name_of(a.var)),
+                    pids,
+                    interval: Some((lo, hi)),
+                    detail,
+                });
+            }
+        }
+        abort
+    }
+
+    /// Detector 4: core `pid`'s scratchpad footprint this superstep.
+    /// Returns `true` when the gang must abort.
+    pub(crate) fn check_budget(&self, pid: usize, used_bytes: usize, breakdown: &str) -> bool {
+        if used_bytes <= self.local_mem_bytes {
+            return false;
+        }
+        self.record(Finding {
+            kind: FindingKind::ScratchpadOverBudget,
+            severity: Severity::Error,
+            superstep: self.superstep(),
+            var: None,
+            pids: vec![pid],
+            interval: None,
+            detail: format!(
+                "core {pid} uses {used_bytes} bytes of {} local ({breakdown})",
+                self.local_mem_bytes
+            ),
+        })
+    }
+
+    /// Pre-wait barrier hook for core `pid`. Returns `true` when the
+    /// core must panic instead of waiting: another core already retired,
+    /// so the barrier can never complete (this is reported rather than
+    /// deadlocked even in `Warn` mode).
+    pub(crate) fn enter_barrier(&self, pid: usize, shape: SyncShape) -> bool {
+        self.shapes[pid].store(shape.code(), Ordering::Relaxed);
+        if self.retired.load(Ordering::SeqCst) == 0 {
+            return false;
+        }
+        self.record(Finding {
+            kind: FindingKind::BarrierDivergence,
+            severity: Severity::Error,
+            superstep: self.superstep(),
+            var: None,
+            pids: vec![pid],
+            interval: None,
+            detail: format!(
+                "core {pid} entered {} after another core retired; {}",
+                shape.as_str(),
+                self.count_summary()
+            ),
+        });
+        true
+    }
+
+    /// Post-wait barrier hook for core `pid`: bump its per-shape sync
+    /// count.
+    pub(crate) fn exit_barrier(&self, pid: usize, shape: SyncShape) {
+        match shape {
+            SyncShape::Ordinary => self.sync_counts[pid].fetch_add(1, Ordering::Relaxed),
+            SyncShape::Hyperstep => self.hyper_counts[pid].fetch_add(1, Ordering::Relaxed),
+        };
+    }
+
+    /// Plan-leader hook closing a superstep: check shape uniformity
+    /// (detector 3's mixed-shape case), reset per-superstep state and
+    /// bump the counter. Returns `true` when the gang must abort.
+    pub(crate) fn end_superstep(&self) -> bool {
+        let mut abort = false;
+        let first = self.shapes[0].load(Ordering::Relaxed);
+        if self.shapes.iter().any(|s| s.load(Ordering::Relaxed) != first) {
+            let shapes: Vec<usize> =
+                self.shapes.iter().map(|s| s.load(Ordering::Relaxed)).collect();
+            abort = self.record(Finding {
+                kind: FindingKind::BarrierDivergence,
+                severity: Severity::Error,
+                superstep: self.superstep(),
+                var: None,
+                pids: (0..self.shapes.len()).collect(),
+                interval: None,
+                detail: format!(
+                    "cores mixed sync and hyperstep_sync in one superstep \
+                     (per-pid shapes {shapes:?}; 1 = sync, 2 = hyperstep_sync)"
+                ),
+            });
+        }
+        for s in &self.shapes {
+            s.store(0, Ordering::Relaxed);
+        }
+        self.synced.store(true, Ordering::SeqCst);
+        self.superstep.fetch_add(1, Ordering::Relaxed);
+        abort
+    }
+
+    /// Satellite detector: `Ctx::register` called by `pid` after the
+    /// first sync. Records the finding; returns `true` when `register`
+    /// must fail instead of racing the var-table lock (`Deny`).
+    pub(crate) fn late_registration(&self, pid: usize, name: &str) -> bool {
+        if !self.synced.load(Ordering::SeqCst) {
+            return false;
+        }
+        self.record(Finding {
+            kind: FindingKind::LateRegistration,
+            severity: Severity::Error,
+            superstep: self.superstep(),
+            var: Some(name.to_string()),
+            pids: vec![pid],
+            interval: None,
+            detail: format!(
+                "core {pid} registered \"{name}\" after the first sync; \
+                 registration must happen in the first superstep"
+            ),
+        })
+    }
+
+    /// Detector 5: a stream op on core `pid` raced (error) or discarded
+    /// (warning) a staged prefetch token. Returns `true` when the gang
+    /// must abort.
+    pub(crate) fn stream_hazard(&self, pid: usize, severity: Severity, detail: String) -> bool {
+        self.record(Finding {
+            kind: FindingKind::StreamTokenHazard,
+            severity,
+            superstep: self.superstep(),
+            var: None,
+            pids: vec![pid],
+            interval: None,
+            detail,
+        })
+    }
+
+    /// Kernel-retirement hook for core `pid`: bump the retired count
+    /// and return the divergence diagnostic the caller arms the barrier
+    /// with (so stragglers report instead of deadlocking).
+    pub(crate) fn retire(&self, pid: usize) -> String {
+        self.retired.fetch_add(1, Ordering::SeqCst);
+        format!(
+            "finding[barrier-divergence]: core {pid} retired; any core still \
+             syncing has diverged ({})",
+            self.count_summary()
+        )
+    }
+
+    /// Render the most recent error-severity finding — the diagnostic
+    /// the engine arms the barrier with on a `Deny` abort.
+    pub(crate) fn last_error_render(&self) -> Option<String> {
+        let log = self.log.lock().unwrap();
+        log.findings
+            .iter()
+            .rev()
+            .find(|f| f.severity == Severity::Error)
+            .map(Finding::render)
+    }
+
+    fn count_summary(&self) -> String {
+        let syncs: Vec<usize> =
+            self.sync_counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let hypers: Vec<usize> =
+            self.hyper_counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        format!("per-pid sync counts {syncs:?}, hyperstep counts {hypers:?}")
+    }
+
+    /// Consume the analyzer into its report (end of run).
+    pub(crate) fn into_report(self) -> AnalysisReport {
+        let log = self.log.into_inner().unwrap();
+        AnalysisReport { findings: log.findings, dropped: log.dropped }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn name_of(var: u32) -> String {
+        format!("v{var}")
+    }
+
+    fn put(dst: usize, var: u32, lo: usize, hi: usize, src: usize) -> WriteRecord {
+        WriteRecord { dst, var, lo, hi, src, local: false }
+    }
+
+    #[test]
+    fn overlapping_puts_from_different_sources_conflict() {
+        let a = Analyzer::new(AnalysisMode::Warn, 4, 1 << 20);
+        let mut recs = vec![put(2, 0, 0, 8, 0), put(2, 0, 4, 12, 1)];
+        assert!(!a.sweep_writes(&mut recs, &name_of));
+        let report = a.into_report();
+        assert_eq!(report.findings.len(), 1);
+        let f = &report.findings[0];
+        assert_eq!(f.kind, FindingKind::WriteWriteConflict);
+        assert_eq!(f.severity, Severity::Error);
+        assert_eq!(f.pids, vec![0, 1]);
+        assert_eq!(f.interval, Some((4, 8)));
+        assert_eq!(f.var.as_deref(), Some("v0"));
+    }
+
+    #[test]
+    fn same_source_overlap_is_deterministic_and_clean() {
+        let a = Analyzer::new(AnalysisMode::Warn, 4, 1 << 20);
+        let mut recs = vec![put(2, 0, 0, 8, 1), put(2, 0, 0, 8, 1)];
+        assert!(!a.sweep_writes(&mut recs, &name_of));
+        assert!(a.into_report().is_clean());
+    }
+
+    #[test]
+    fn disjoint_and_cross_var_writes_are_clean() {
+        let a = Analyzer::new(AnalysisMode::Warn, 4, 1 << 20);
+        let mut recs = vec![
+            put(2, 0, 0, 8, 0),
+            put(2, 0, 8, 16, 1), // adjacent, not overlapping
+            put(2, 1, 0, 8, 3),  // other var
+            put(3, 0, 0, 8, 1),  // other dst
+        ];
+        assert!(!a.sweep_writes(&mut recs, &name_of));
+        assert!(a.into_report().is_clean());
+    }
+
+    #[test]
+    fn put_into_locally_dirty_range_is_a_clobber() {
+        let a = Analyzer::new(AnalysisMode::Deny, 4, 1 << 20);
+        a.mark_dirty(2, 0, 0, 16);
+        let mut recs = vec![put(2, 0, 4, 8, 1)];
+        a.drain_dirty_into(2, &mut recs);
+        assert!(a.sweep_writes(&mut recs, &name_of), "deny must abort");
+        let report = a.into_report();
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].kind, FindingKind::LocalWriteClobber);
+        assert_eq!(report.findings[0].pids, vec![1, 2]);
+    }
+
+    #[test]
+    fn dirty_ranges_reset_between_supersteps() {
+        let a = Analyzer::new(AnalysisMode::Warn, 2, 1 << 20);
+        a.mark_dirty(0, 0, 0, 4);
+        let mut recs = Vec::new();
+        a.drain_dirty_into(0, &mut recs);
+        assert_eq!(recs.len(), 1);
+        recs.clear();
+        a.drain_dirty_into(0, &mut recs);
+        assert!(recs.is_empty(), "drain must clear the dirty set");
+    }
+
+    #[test]
+    fn budget_check_fires_only_past_the_limit() {
+        let a = Analyzer::new(AnalysisMode::Warn, 2, 1024);
+        assert!(!a.check_budget(0, 1024, "vars=1024"));
+        assert!(!a.check_budget(1, 1025, "vars=1025")); // warn: no abort
+        let report = a.into_report();
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].kind, FindingKind::ScratchpadOverBudget);
+        assert_eq!(report.findings[0].pids, vec![1]);
+    }
+
+    #[test]
+    fn mixed_shapes_flagged_at_superstep_end() {
+        let a = Analyzer::new(AnalysisMode::Warn, 2, 1 << 20);
+        assert!(!a.enter_barrier(0, SyncShape::Ordinary));
+        assert!(!a.enter_barrier(1, SyncShape::Hyperstep));
+        assert!(!a.end_superstep());
+        let report = a.into_report();
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].kind, FindingKind::BarrierDivergence);
+    }
+
+    #[test]
+    fn uniform_shapes_are_clean_and_bump_the_superstep() {
+        let a = Analyzer::new(AnalysisMode::Deny, 2, 1 << 20);
+        a.enter_barrier(0, SyncShape::Hyperstep);
+        a.enter_barrier(1, SyncShape::Hyperstep);
+        assert!(!a.end_superstep());
+        assert_eq!(a.superstep(), 1);
+        assert!(a.into_report().is_clean());
+    }
+
+    #[test]
+    fn sync_after_retirement_must_panic_even_in_warn() {
+        let a = Analyzer::new(AnalysisMode::Warn, 2, 1 << 20);
+        let _diag = a.retire(0);
+        assert!(a.enter_barrier(1, SyncShape::Ordinary));
+        let report = a.into_report();
+        assert_eq!(report.findings[0].kind, FindingKind::BarrierDivergence);
+        assert_eq!(report.findings[0].pids, vec![1]);
+    }
+
+    #[test]
+    fn late_registration_only_after_first_sync() {
+        let a = Analyzer::new(AnalysisMode::Deny, 2, 1 << 20);
+        assert!(!a.late_registration(0, "early"));
+        a.enter_barrier(0, SyncShape::Ordinary);
+        a.enter_barrier(1, SyncShape::Ordinary);
+        a.end_superstep();
+        assert!(a.late_registration(1, "late"), "deny must fail the call");
+        let report = a.into_report();
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].kind, FindingKind::LateRegistration);
+        assert_eq!(report.findings[0].var.as_deref(), Some("late"));
+    }
+
+    #[test]
+    fn warning_severity_never_aborts_in_deny() {
+        let a = Analyzer::new(AnalysisMode::Deny, 2, 1 << 20);
+        assert!(!a.stream_hazard(0, Severity::Warning, "seek discarded a staged token".into()));
+        assert!(a.stream_hazard(0, Severity::Error, "move_up raced a staged fill".into()));
+        let report = a.into_report();
+        assert_eq!(report.warning_count(), 1);
+        assert_eq!(report.error_count(), 1);
+    }
+
+    #[test]
+    fn finding_cap_counts_drops() {
+        let a = Analyzer::new(AnalysisMode::Warn, 2, 0);
+        for _ in 0..MAX_FINDINGS + 5 {
+            a.check_budget(0, 1, "x");
+        }
+        let report = a.into_report();
+        assert_eq!(report.findings.len(), MAX_FINDINGS);
+        assert_eq!(report.dropped, 5);
+        assert!(!report.is_clean());
+    }
+
+    #[test]
+    fn render_and_json_are_stable() {
+        let f = Finding {
+            kind: FindingKind::WriteWriteConflict,
+            severity: Severity::Error,
+            superstep: 3,
+            var: Some("x\"y".to_string()),
+            pids: vec![0, 1],
+            interval: Some((4, 8)),
+            detail: "overlap".to_string(),
+        };
+        let report = AnalysisReport { findings: vec![f], dropped: 1 };
+        let line = report.render();
+        assert!(line.contains("[error] write-write-conflict @s3"));
+        assert!(line.contains("[4..8)"));
+        assert!(line.contains("1 error(s), 0 warning(s)"));
+        let json = report.to_json();
+        assert!(json.contains("\"kind\":\"write-write-conflict\""));
+        assert!(json.contains("\"var\":\"x\\\"y\""));
+        assert!(json.contains("\"interval\":[4,8]"));
+        assert!(json.contains("\"pids\":[0,1]"));
+        assert!(json.contains("\"dropped\":1"));
+    }
+
+    #[test]
+    fn clean_report_renders_and_serializes() {
+        let report = AnalysisReport::default();
+        assert!(report.is_clean());
+        assert_eq!(report.render(), "analysis clean: no findings");
+        assert_eq!(report.to_json(), "{\"findings\":[],\"dropped\":0}");
+    }
+
+    #[test]
+    fn mode_parses_cli_spellings() {
+        assert_eq!(AnalysisMode::parse("off"), Some(AnalysisMode::Off));
+        assert_eq!(AnalysisMode::parse("warn"), Some(AnalysisMode::Warn));
+        assert_eq!(AnalysisMode::parse("deny"), Some(AnalysisMode::Deny));
+        assert_eq!(AnalysisMode::parse("nope"), None);
+    }
+}

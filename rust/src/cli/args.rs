@@ -47,6 +47,7 @@ impl Args {
     }
 
     /// Whether bare `--name` was passed.
+    #[must_use]
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }

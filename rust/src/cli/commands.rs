@@ -3,6 +3,7 @@
 use crate::util::error::{anyhow, bail, ensure, Result};
 
 use crate::bsp::sched::GangScheduler;
+use crate::bsp::{AnalysisMode, GangConfig};
 use crate::cli::args::Args;
 use crate::coordinator::{BspsEnv, SweepReport};
 use crate::model::params::AcceleratorParams;
@@ -20,6 +21,7 @@ pub fn dispatch(args: &Args) -> Result<String> {
         Some("calibrate") => calibrate_cmd(args),
         Some("predict") => predict_cmd(args),
         Some("run") => run_cmd(args),
+        Some("analyze") => analyze_cmd(args),
         Some("sweep") => sweep_cmd(args),
         Some("benchdiff") => benchdiff_cmd(args),
         Some(other) => bail!("unknown subcommand `{other}` (try `bsps info`)"),
@@ -39,11 +41,20 @@ USAGE:
   bsps run spmv --n <size> --nnz <per-row> --rows <per-token>
   bsps run sort --n <len> --c <token>
   bsps run video --frames <count> --pixels <per-frame>
+  bsps analyze --algo <inprod|cannon|cannon_ml|spmv|sort|video|racy|all>
+               [--mode warn|deny] [--expect <finding-kind>]
   bsps sweep [--cores <budget>] [--jobs <n>x<M>,<n>x<M>,…] [--check]
   bsps benchdiff <old.json> <new.json> [--max-regress 0.15]
                  [--max-scalar-rel 0.15]
 
 Machine presets: epiphany3 (default), epiphany4, epiphany5, xeonphi_like.
+analyze runs the superstep race/hazard analyzer (bsp::verify) over a
+small instance of the algorithm: deny (the default) aborts on the first
+error-severity finding — overlapping puts, put-vs-local-write clobbers,
+barrier divergence, scratchpad over-budget, stream token races — while
+warn logs findings and lets the run finish. `racy` is a deliberately
+conflicting fixture the analyzer must flag; `all` sweeps every shipped
+algorithm plus the fixture (the CI invocation).
 sweep runs the Fig. 5 Cannon points concurrently through the multi-gang
 scheduler under a global core budget (default: host parallelism, raised
 to the largest gang); --check re-runs each point serially and verifies
@@ -300,6 +311,165 @@ fn benchdiff_cmd(args: &Args) -> Result<String> {
     Ok(out)
 }
 
+/// Render a panic payload (a poisoned gang's diagnostic) as text.
+fn panic_payload_msg(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| p.downcast_ref::<&str>().map(|s| (*s).to_string()))
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// `bsps analyze`: run one shipped algorithm (or the deliberately-racy
+/// fixture, or `all`) with the superstep analyzer on, and report the
+/// findings. Under `deny` (the default) an error-severity finding
+/// aborts the gang; a clean algorithm must complete with zero errors
+/// (seek-invalidation warnings — the normal multi-pass idiom — are
+/// reported but do not fail). The racy fixture is inverted: the
+/// analyzer *must* flag it, and `--expect <kind>` asserts the detector
+/// class. `bsps analyze --algo all` is the CI gate.
+fn analyze_cmd(args: &Args) -> Result<String> {
+    let algo = args
+        .get("algo")
+        .or_else(|| args.positional.get(1).map(|s| s.as_str()))
+        .ok_or_else(|| {
+            anyhow!("analyze: missing --algo (inprod|cannon|cannon_ml|spmv|sort|video|racy|all)")
+        })?;
+    let mode_s = args.get("mode").unwrap_or("deny");
+    let mode = AnalysisMode::parse(mode_s)
+        .ok_or_else(|| anyhow!("analyze: --mode must be warn|deny, got `{mode_s}`"))?;
+    ensure!(mode != AnalysisMode::Off, "analyze: --mode off analyzes nothing");
+    let expect = args.get("expect");
+    let names: Vec<&str> = if algo == "all" {
+        vec!["inprod", "cannon", "cannon_ml", "spmv", "sort", "video", "racy"]
+    } else {
+        vec![algo]
+    };
+    let mut out = String::new();
+    for name in names {
+        out.push_str(&analyze_one(args, name, mode, mode_s, expect)?);
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Analyze one algorithm (small instances — the analyzer's verdict does
+/// not depend on problem size, and the recipes must fit the scratchpad
+/// budget detector 4 enforces).
+fn analyze_one(
+    args: &Args,
+    name: &str,
+    mode: AnalysisMode,
+    mode_s: &str,
+    expect: Option<&str>,
+) -> Result<String> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let check_expect = |text: &str| -> Result<()> {
+        if let Some(kind) = expect {
+            ensure!(
+                text.contains(kind),
+                "analyze {name}: expected finding kind `{kind}` absent from:\n{text}"
+            );
+        }
+        Ok(())
+    };
+
+    if name == "racy" {
+        // The fixture: two cores put overlapping intervals of the same
+        // variable on one destination in one superstep — nondeterministic
+        // under any apply-order change, so the analyzer must flag it.
+        let machine = machine_from(args)?;
+        ensure!(machine.p >= 2, "analyze racy: needs at least two cores");
+        let cfg = GangConfig { analysis: mode, ..Default::default() };
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            crate::bsp::run_gang_cfg(&machine, None, false, cfg, |ctx| {
+                let x = ctx.register("racy_x", 8).unwrap();
+                ctx.sync();
+                if ctx.pid() < 2 {
+                    let dst = ctx.nprocs() - 1;
+                    ctx.put(dst, x, 2, &[ctx.pid() as f32; 4]);
+                }
+                ctx.sync();
+            })
+        }));
+        let flagged = match res {
+            Ok(out) => {
+                ensure!(
+                    out.analysis.error_count() > 0,
+                    "analyze racy: the analyzer missed the planted conflict"
+                );
+                out.analysis.render()
+            }
+            Err(payload) => panic_payload_msg(payload.as_ref()),
+        };
+        check_expect(&flagged)?;
+        return Ok(format!("analyze racy [{mode_s}]: flagged as planted\n{flagged}"));
+    }
+
+    let env = env_from(args)?.with_analysis(mode);
+    let mut rng = SplitMix64::new(args.get_usize("seed", 42)? as u64);
+    let run = catch_unwind(AssertUnwindSafe(
+        || -> Result<crate::coordinator::Report> {
+            match name {
+                "inprod" => {
+                    let u = rng.f32_vec(1024, -1.0, 1.0);
+                    let v = rng.f32_vec(1024, -1.0, 1.0);
+                    Ok(crate::algos::inner_product::run(&env, &u, &v, 16)?.report)
+                }
+                "cannon" | "cannon_ml" => {
+                    let (n, m) = if name == "cannon" { (16, 1) } else { (16, 2) };
+                    let a = rng.f32_vec(n * n, -1.0, 1.0);
+                    let b = rng.f32_vec(n * n, -1.0, 1.0);
+                    Ok(crate::algos::cannon_ml::run(&env, &a, &b, n, m)?.report)
+                }
+                "spmv" => {
+                    let (n, nnz, rows) = (256, 4, 4);
+                    let mut triplets = Vec::new();
+                    for r in 0..n {
+                        for _ in 0..nnz / 2 {
+                            triplets.push((r, rng.next_range(0, n), rng.next_f32_in(-1.0, 1.0)));
+                        }
+                    }
+                    triplets.sort_by_key(|&(r, c, _)| (r, c));
+                    triplets.dedup_by_key(|&mut (r, c, _)| (r, c));
+                    let a = crate::algos::spmv::EllMatrix::from_triplets(n, nnz, &triplets)?;
+                    let x = rng.f32_vec(n, -1.0, 1.0);
+                    Ok(crate::algos::spmv::run(&env, &a, &x, rows)?.report)
+                }
+                "sort" => {
+                    let data = rng.f32_vec(1024, -1000.0, 1000.0);
+                    Ok(crate::algos::sort::run(&env, &data, 16)?.report)
+                }
+                "video" => {
+                    let fs: Vec<Vec<f32>> =
+                        (0..8).map(|_| rng.f32_vec(256, 0.0, 255.0)).collect();
+                    Ok(crate::algos::video::run(&env, &fs, 0.25)?.report)
+                }
+                other => bail!("unknown algorithm `{other}`"),
+            }
+        },
+    ));
+    match run {
+        Err(payload) => {
+            bail!("analyze {name} [{mode_s}]: aborted — {}", panic_payload_msg(payload.as_ref()))
+        }
+        Ok(report) => {
+            let report = report?;
+            ensure!(
+                report.analysis.error_count() == 0,
+                "analyze {name} [{mode_s}]: {} error finding(s):\n{}",
+                report.analysis.error_count(),
+                report.analysis.render()
+            );
+            check_expect(&report.analysis.render())?;
+            Ok(format!(
+                "analyze {name} [{mode_s}]: ok ({} warnings)",
+                report.analysis.warning_count()
+            ))
+        }
+    }
+}
+
 fn run_cmd(args: &Args) -> Result<String> {
     let algo = args
         .positional
@@ -449,6 +619,35 @@ mod tests {
     fn run_cannon_small() {
         let out = run("run cannon --n 16 --m 2").unwrap();
         assert!(out.contains("max |err|"), "{out}");
+    }
+
+    #[test]
+    fn analyze_clean_algo_passes_in_deny() {
+        let out = run("analyze --algo inprod").unwrap();
+        assert!(out.contains("analyze inprod [deny]: ok"), "{out}");
+    }
+
+    #[test]
+    fn analyze_flags_the_racy_fixture() {
+        let out = run("analyze --algo racy --expect write-write-conflict").unwrap();
+        assert!(out.contains("flagged as planted"), "{out}");
+        assert!(out.contains("write-write-conflict"), "{out}");
+        // Warn mode completes and reports the same class.
+        let out = run("analyze --algo racy --mode warn").unwrap();
+        assert!(out.contains("write-write-conflict"), "{out}");
+        // A wrong expectation is an error.
+        let err = run("analyze --algo racy --expect stream-token-hazard")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expected finding kind"), "{err}");
+    }
+
+    #[test]
+    fn analyze_rejects_bad_modes_and_algos() {
+        assert!(run("analyze --algo inprod --mode off").is_err());
+        assert!(run("analyze --algo inprod --mode sideways").is_err());
+        assert!(run("analyze --algo nothing").is_err());
+        assert!(run("analyze").is_err());
     }
 
     #[test]

@@ -37,6 +37,7 @@ impl ComputeBackend {
     pub const PJRT_MM_SIZES: [usize; 4] = [4, 8, 16, 32];
 
     /// Whether `mm_acc` with block size `k` can run on this backend.
+    #[must_use]
     pub fn supports_mm(&self, k: usize) -> bool {
         match self {
             ComputeBackend::Native => true,
@@ -177,6 +178,7 @@ impl ComputeBackend {
     }
 
     /// Human-readable backend name for reports.
+    #[must_use]
     pub fn name(&self) -> &'static str {
         match self {
             ComputeBackend::Native => "native",

@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use crate::bsp::{run_gang, Ctx, RunOutcome};
+use crate::bsp::{run_gang_cfg, AnalysisMode, Ctx, GangConfig, RunOutcome};
 use crate::coordinator::compute::ComputeBackend;
 use crate::coordinator::report::Report;
 use crate::model::params::AcceleratorParams;
@@ -24,12 +24,21 @@ pub struct BspsEnv {
     /// charge per open stream (§2). Off = the paper's `preload = 0`
     /// ablation: every fetch blocks and lands on the compute side.
     pub prefetch: bool,
+    /// Superstep race/hazard analysis mode (see `bsp::verify`). `Off`
+    /// by default: the analyzer is not even constructed.
+    pub analysis: AnalysisMode,
 }
 
 impl BspsEnv {
     /// Native-backend environment on the given machine.
+    #[must_use]
     pub fn native(machine: AcceleratorParams) -> Self {
-        Self { machine, backend: Arc::new(ComputeBackend::Native), prefetch: true }
+        Self {
+            machine,
+            backend: Arc::new(ComputeBackend::Native),
+            prefetch: true,
+            analysis: AnalysisMode::Off,
+        }
     }
 
     /// PJRT-backend environment (loads `artifacts/`).
@@ -38,12 +47,21 @@ impl BspsEnv {
             machine,
             backend: Arc::new(ComputeBackend::pjrt(artifact_dir)?),
             prefetch: true,
+            analysis: AnalysisMode::Off,
         })
     }
 
     /// Same env with prefetching disabled (the ablation).
+    #[must_use]
     pub fn without_prefetch(mut self) -> Self {
         self.prefetch = false;
+        self
+    }
+
+    /// Same env with the superstep analyzer switched on (`bsps analyze`).
+    #[must_use]
+    pub fn with_analysis(mut self, mode: AnalysisMode) -> Self {
+        self.analysis = mode;
         self
     }
 }
@@ -53,6 +71,7 @@ impl BspsEnv {
 /// The kernel receives the per-core [`Ctx`] plus the shared
 /// [`ComputeBackend`]; it is expected to structure itself in hypersteps
 /// (`ctx.hyperstep_sync()`) when it uses streams.
+#[must_use]
 pub fn run_bsps<F>(
     env: &BspsEnv,
     streams: Arc<StreamRegistry>,
@@ -62,7 +81,8 @@ where
     F: Fn(&mut Ctx, &ComputeBackend) + Sync,
 {
     let backend = Arc::clone(&env.backend);
-    let outcome = run_gang(&env.machine, Some(streams), env.prefetch, |ctx| {
+    let cfg = GangConfig { analysis: env.analysis, ..Default::default() };
+    let outcome = run_gang_cfg(&env.machine, Some(streams), env.prefetch, cfg, |ctx| {
         kernel(ctx, &backend);
     });
     let report = Report::from_outcome(&env.machine, &outcome);
@@ -105,6 +125,26 @@ mod tests {
         assert!(report.bsps_flops > 0.0);
         // e = 43.4 ≫ 1, tokens dominate the tiny compute: bandwidth heavy.
         assert_eq!(report.ledger.bandwidth_heavy, 4);
+    }
+
+    #[test]
+    fn analysis_mode_threads_through_the_env() {
+        let mut machine = AcceleratorParams::epiphany3();
+        machine.p = 1;
+        let env = BspsEnv::native(machine.clone()).with_analysis(AnalysisMode::Deny);
+        let mut reg = StreamRegistry::new(&machine);
+        reg.create(8, 4, None).unwrap();
+        let (report, outcome) = run_bsps(&env, Arc::new(reg), |ctx, _backend| {
+            let h = ctx.stream_open(0).unwrap();
+            let mut tok = Vec::new();
+            for _ in 0..2 {
+                ctx.stream_move_down(h, &mut tok).unwrap();
+                ctx.hyperstep_sync();
+            }
+            ctx.stream_close(h).unwrap();
+        });
+        assert!(report.analysis.is_clean(), "{}", report.analysis.render());
+        assert!(outcome.analysis.is_clean());
     }
 
     #[test]

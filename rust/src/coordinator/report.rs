@@ -40,10 +40,14 @@ pub struct Report {
     pub timeline: crate::bsp::Timeline,
     /// Host wall-clock spent executing the gang.
     pub wall_seconds: f64,
+    /// The superstep analyzer's findings (empty when analysis was
+    /// `Off` — see `GangConfig::analysis` and `bsp::verify`).
+    pub analysis: crate::bsp::AnalysisReport,
 }
 
 impl Report {
     /// Build from a finished gang run.
+    #[must_use]
     pub fn from_outcome(m: &AcceleratorParams, out: &RunOutcome) -> Self {
         let ledger = out.ledger.summarize(m);
         Self {
@@ -58,12 +62,14 @@ impl Report {
             rows: out.ledger.clone(),
             timeline: out.timeline.clone(),
             wall_seconds: out.wall_seconds,
+            analysis: out.analysis.clone(),
         }
     }
 
     /// Measured-over-model ratio: how closely the overlapped timeline
     /// tracked the Eq. 1 prediction (1.0 = exact; slightly above 1 is
     /// normal — pipeline warm-up stalls the model ignores).
+    #[must_use]
     pub fn overlap_ratio(&self) -> f64 {
         if self.sim_seconds > 0.0 {
             self.measured_seconds / self.sim_seconds
@@ -73,11 +79,13 @@ impl Report {
     }
 
     /// Stable, grep-able report rows.
+    #[must_use]
     pub fn render(&self) -> String {
         format!(
             "machine={} hypersteps={} supersteps={} \
              bsps_cost={} sim_time={} measured={} noc_surcharge={} \
-             bw_heavy={} comp_heavy={} wall={}",
+             bw_heavy={} comp_heavy={} wall={} \
+             analysis_errors={} analysis_warnings={}",
             self.machine_name,
             self.ledger.hypersteps,
             self.supersteps,
@@ -88,6 +96,8 @@ impl Report {
             self.ledger.bandwidth_heavy,
             self.ledger.computation_heavy,
             humanfmt::seconds(self.wall_seconds),
+            self.analysis.error_count(),
+            self.analysis.warning_count(),
         )
     }
 }
@@ -125,6 +135,7 @@ pub struct SweepReport {
 impl SweepReport {
     /// Build from a finished scheduler run: each job's [`RunOutcome`]
     /// becomes a per-gang [`Report`] costed on that job's machine.
+    #[must_use]
     pub fn from_sched(out: &SchedOutcome) -> Self {
         let gangs = out
             .jobs
@@ -149,17 +160,20 @@ impl SweepReport {
 
     /// Fraction of the budget's core-time the sweep kept busy, `(0, 1]`
     /// ([`SchedStats::occupancy`]).
+    #[must_use]
     pub fn occupancy(&self) -> f64 {
         self.stats.occupancy()
     }
 
     /// Serial-sum over makespan: >1 once any two gangs overlapped
     /// ([`SchedStats::speedup`]).
+    #[must_use]
     pub fn speedup(&self) -> f64 {
         self.stats.speedup()
     }
 
     /// Longest submit → admission wait across the queue, seconds.
+    #[must_use]
     pub fn max_queue_wait_seconds(&self) -> f64 {
         self.gangs
             .iter()
@@ -168,12 +182,14 @@ impl SweepReport {
     }
 
     /// Gangs that did not produce a report (panicked or rejected).
+    #[must_use]
     pub fn failed(&self) -> usize {
         self.gangs.iter().filter(|g| g.error.is_some()).count()
     }
 
     /// Stable, grep-able sweep summary: one header row with the
     /// concurrency stats, then one row per gang.
+    #[must_use]
     pub fn render(&self) -> String {
         let mut out = format!(
             "sweep budget={} gangs={} failed={} makespan={} serial_sum={} \
@@ -226,7 +242,13 @@ mod tests {
             spans: Vec::new(),
             makespan_cycles: 1136.0 * 5.0,
         };
-        let out = RunOutcome { cost, ledger, timeline, wall_seconds: 0.5 };
+        let out = RunOutcome {
+            cost,
+            ledger,
+            timeline,
+            wall_seconds: 0.5,
+            analysis: Default::default(),
+        };
         let r = Report::from_outcome(&m, &out);
         assert_eq!(r.supersteps, 1);
         assert!((r.bsp_flops - 1136.0).abs() < 1e-9);
@@ -239,6 +261,7 @@ mod tests {
         assert!(s.contains("machine=epiphany3"));
         assert!(s.contains("hypersteps=1"));
         assert!(s.contains("measured="));
+        assert!(s.contains("analysis_errors=0 analysis_warnings=0"));
     }
 
     #[test]

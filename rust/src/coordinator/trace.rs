@@ -33,6 +33,7 @@ pub struct TraceRow {
 }
 
 /// Build the timeline for a ledger under machine `m`.
+#[must_use]
 pub fn timeline(ledger: &Ledger, m: &AcceleratorParams) -> Vec<TraceRow> {
     let mut rows = Vec::with_capacity(ledger.hypersteps.len());
     let mut t = 0.0f64;
@@ -53,6 +54,7 @@ pub fn timeline(ledger: &Ledger, m: &AcceleratorParams) -> Vec<TraceRow> {
 }
 
 /// Render the timeline as CSV (header + one row per hyperstep).
+#[must_use]
 pub fn to_csv(rows: &[TraceRow]) -> String {
     let mut out = String::from(
         "hyperstep,start_s,end_s,compute_flops,fetch_words,side,slack_s\n",

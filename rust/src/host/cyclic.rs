@@ -8,6 +8,7 @@ use crate::util::error::{ensure, Result};
 use crate::stream::StreamRegistry;
 
 /// Split `v` cyclically over `p` cores: `out[s][j] = v[j·p + s]`.
+#[must_use]
 pub fn cyclic_split(v: &[f32], p: usize) -> Vec<Vec<f32>> {
     // Capacity hint only; usize::div_ceil needs 1.73 and the crate's
     // MSRV (CI-gated) is 1.70.
@@ -19,6 +20,7 @@ pub fn cyclic_split(v: &[f32], p: usize) -> Vec<Vec<f32>> {
 }
 
 /// Inverse of [`cyclic_split`].
+#[must_use]
 pub fn gather_cyclic(parts: &[Vec<f32>]) -> Vec<f32> {
     let p = parts.len();
     let n: usize = parts.iter().map(|q| q.len()).sum();

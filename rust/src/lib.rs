@@ -24,6 +24,10 @@
 //! the per-experiment index mapping tables/figures to bench targets.
 
 #![warn(missing_docs)]
+#![warn(clippy::must_use_candidate)]
+#![warn(clippy::needless_pass_by_value)]
+#![warn(clippy::redundant_clone)]
+#![warn(clippy::semicolon_if_nothing_returned)]
 
 pub mod algos;
 pub mod bsp;

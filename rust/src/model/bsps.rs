@@ -36,11 +36,13 @@ pub struct HyperstepCost {
 
 impl HyperstepCost {
     /// Fetch cost in FLOPs: `e · fetch_words`.
+    #[must_use]
     pub fn fetch_flops(&self, m: &AcceleratorParams) -> f64 {
         m.e * self.fetch_words as f64
     }
 
     /// The hyperstep's contribution to Eq. 1.
+    #[must_use]
     pub fn flops(&self, m: &AcceleratorParams) -> f64 {
         self.compute_flops.max(self.fetch_flops(m))
     }
@@ -48,6 +50,7 @@ impl HyperstepCost {
     /// Bandwidth- or computation-heavy (ties count as bandwidth heavy,
     /// matching the paper's "if fetching takes more time ... bound by
     /// the memory bandwidth" reading with ≥).
+    #[must_use]
     pub fn side(&self, m: &AcceleratorParams) -> HeavySide {
         if self.fetch_flops(m) >= self.compute_flops {
             HeavySide::Bandwidth
@@ -57,6 +60,7 @@ impl HyperstepCost {
     }
 
     /// Time wasted waiting on the slower side, FLOPs (0 when balanced).
+    #[must_use]
     pub fn imbalance(&self, m: &AcceleratorParams) -> f64 {
         (self.compute_flops - self.fetch_flops(m)).abs()
     }
@@ -90,6 +94,7 @@ pub struct LedgerSummary {
 
 impl Ledger {
     /// An empty ledger.
+    #[must_use]
     pub fn new() -> Self {
         Self::default()
     }
@@ -100,11 +105,13 @@ impl Ledger {
     }
 
     /// Total BSPS cost in FLOPs (Eq. 1).
+    #[must_use]
     pub fn total_flops(&self, m: &AcceleratorParams) -> f64 {
         self.hypersteps.iter().map(|h| h.flops(m)).sum()
     }
 
     /// Summarize the ledger under machine `m`.
+    #[must_use]
     pub fn summarize(&self, m: &AcceleratorParams) -> LedgerSummary {
         let total_flops = self.total_flops(m);
         let bandwidth_heavy = self

@@ -36,6 +36,7 @@ pub struct Calibration {
 
 /// Derive `e` from a bytes-per-second bandwidth measurement (§5):
 /// `e = r / (bandwidth / word_bytes)` FLOP per word.
+#[must_use]
 pub fn e_from_bandwidth(r_flops: f64, bytes_per_sec: f64) -> f64 {
     assert!(bytes_per_sec > 0.0);
     r_flops / (bytes_per_sec / WORD_BYTES as f64)
@@ -43,6 +44,7 @@ pub fn e_from_bandwidth(r_flops: f64, bytes_per_sec: f64) -> f64 {
 
 /// Fit `g` (slope) and `l` (intercept) from core-to-core write samples.
 /// `clock_overhead_seconds` is subtracted from every sample first.
+#[must_use]
 pub fn fit_g_l(
     r_flops: f64,
     samples: &[CommSample],
@@ -58,6 +60,7 @@ pub fn fit_g_l(
 }
 
 /// Full calibration from raw measurements.
+#[must_use]
 pub fn calibrate(
     r_flops: f64,
     contested_dma_read_bytes_per_sec: f64,
@@ -71,6 +74,7 @@ pub fn calibrate(
 
 /// Produce an [`AcceleratorParams`] from a calibration, keeping the
 /// structural parameters (p, r, L, E) of `base`.
+#[must_use]
 pub fn apply(base: &AcceleratorParams, cal: &Calibration) -> AcceleratorParams {
     AcceleratorParams { e: cal.e, g: cal.g, l: cal.l, ..base.clone() }
 }

@@ -39,12 +39,14 @@ pub struct SuperstepCost {
 impl SuperstepCost {
     /// A superstep cost with flat communication pricing (`h_noc = h`) —
     /// for cost walks with no placement information.
+    #[must_use]
     pub fn flat(w_max: f64, h: u64) -> Self {
         Self { w_max, h, h_noc: h as f64 }
     }
 
     /// Build a superstep cost from per-core usage records (flat
     /// pricing: usage records carry no mesh placement).
+    #[must_use]
     pub fn from_cores(cores: &[CoreStepUsage]) -> Self {
         assert!(!cores.is_empty(), "SuperstepCost: no cores");
         let w_max = cores.iter().map(|c| c.flops).fold(0.0, f64::max);
@@ -53,6 +55,7 @@ impl SuperstepCost {
     }
 
     /// Cost in FLOPs with flat communication pricing: `w + g·h + l`.
+    #[must_use]
     pub fn flops(&self, m: &AcceleratorParams) -> f64 {
         self.w_max + m.g * self.h as f64 + m.l
     }
@@ -60,6 +63,7 @@ impl SuperstepCost {
     /// Cost in FLOPs with NoC-routed communication pricing:
     /// `w + g·h_noc + l`. Equals [`SuperstepCost::flops`] when the
     /// superstep was recorded on a free-hop mesh.
+    #[must_use]
     pub fn flops_noc(&self, m: &AcceleratorParams) -> f64 {
         self.w_max + m.g * self.h_noc + m.l
     }
@@ -74,6 +78,7 @@ pub struct BspCost {
 
 impl BspCost {
     /// An empty cost record.
+    #[must_use]
     pub fn new() -> Self {
         Self::default()
     }
@@ -84,32 +89,38 @@ impl BspCost {
     }
 
     /// Total cost in FLOPs (the paper's `T`), flat pricing.
+    #[must_use]
     pub fn total_flops(&self, m: &AcceleratorParams) -> f64 {
         self.supersteps.iter().map(|s| s.flops(m)).sum()
     }
 
     /// Total cost in FLOPs with NoC-routed (hop-weighted)
     /// communication pricing.
+    #[must_use]
     pub fn total_flops_noc(&self, m: &AcceleratorParams) -> f64 {
         self.supersteps.iter().map(|s| s.flops_noc(m)).sum()
     }
 
     /// Total cost in seconds via `r`.
+    #[must_use]
     pub fn total_seconds(&self, m: &AcceleratorParams) -> f64 {
         m.flops_to_seconds(self.total_flops(m))
     }
 
     /// Number of supersteps, `k`.
+    #[must_use]
     pub fn len(&self) -> usize {
         self.supersteps.len()
     }
 
     /// Whether no superstep has closed yet.
+    #[must_use]
     pub fn is_empty(&self) -> bool {
         self.supersteps.is_empty()
     }
 
     /// Total communication volume bound: `Σ_i h_i` (words).
+    #[must_use]
     pub fn total_h(&self) -> u64 {
         self.supersteps.iter().map(|s| s.h).sum()
     }

@@ -19,6 +19,7 @@ use crate::model::params::AcceleratorParams;
 /// processes `W` FLOPs while fetching `W/I` words; with overlap
 /// (Eq. 1), each hyperstep costs `max(compute, fetch)`, so the rate is
 /// bounded by the slower of aggregate compute and aggregate fetch.
+#[must_use]
 pub fn unit_throughput(m: &AcceleratorParams, intensity: f64) -> f64 {
     assert!(intensity > 0.0, "need FLOPs-per-word > 0");
     // Aggregate compute rate: p cores at r FLOP/s.
@@ -33,6 +34,7 @@ pub fn unit_throughput(m: &AcceleratorParams, intensity: f64) -> f64 {
 /// split for divisible load): share_i ∝ throughput_i. Returns the
 /// fractions (summing to 1) and the resulting makespan in seconds for a
 /// total of `w_flops`.
+#[must_use]
 pub fn optimal_split(
     units: &[AcceleratorParams],
     intensity: f64,
@@ -47,6 +49,7 @@ pub fn optimal_split(
 }
 
 /// Makespan for an arbitrary split (for comparing policies).
+#[must_use]
 pub fn makespan(
     units: &[AcceleratorParams],
     intensity: f64,

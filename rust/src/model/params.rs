@@ -33,6 +33,7 @@ impl AcceleratorParams {
     /// 5 clock cycles for representative compiled code, `g ≈ 5.59`,
     /// `l ≈ 136`, `e ≈ 43.4` (pessimistic contested DMA read at
     /// 11 MB/s), 32 KB SRAM per core, 32 MB shared DRAM.
+    #[must_use]
     pub fn epiphany3() -> Self {
         Self {
             p: 16,
@@ -49,6 +50,7 @@ impl AcceleratorParams {
     /// The 64-core Epiphany-IV (limited-production Parallella). Same
     /// per-core microarchitecture; the shared-DRAM link is the same, so
     /// with 4× the cores contending, the per-core `e` scales up 4×.
+    #[must_use]
     pub fn epiphany4() -> Self {
         Self {
             p: 64,
@@ -65,6 +67,7 @@ impl AcceleratorParams {
     /// The announced 1024-core Epiphany-V (§5: 64-bit, more cores; we
     /// keep f32 words for comparability). Parameters are projections:
     /// 64 KB local memory per core, much wider external interface.
+    #[must_use]
     pub fn epiphany5() -> Self {
         Self {
             p: 1024,
@@ -81,6 +84,7 @@ impl AcceleratorParams {
     /// A Xeon-Phi-flavoured accelerator: fewer, fatter cores; large
     /// local caches treated as scratchpad; fast GDDR external memory
     /// (e < 1: hypersteps are practically never bandwidth heavy).
+    #[must_use]
     pub fn xeonphi_like() -> Self {
         Self {
             p: 61,
@@ -107,6 +111,7 @@ impl AcceleratorParams {
 
     /// Side length `N` of the square core grid; panics if `p` is not a
     /// perfect square (Cannon requires a square grid).
+    #[must_use]
     pub fn grid_n(&self) -> usize {
         let n = (self.p as f64).sqrt().round() as usize;
         assert_eq!(n * n, self.p, "p = {} is not a perfect square", self.p);
@@ -114,22 +119,26 @@ impl AcceleratorParams {
     }
 
     /// Convert a FLOP count to wall seconds via `r`.
+    #[must_use]
     pub fn flops_to_seconds(&self, flops: f64) -> f64 {
         flops / self.r
     }
 
     /// Local memory capacity in words.
+    #[must_use]
     pub fn local_mem_words(&self) -> usize {
         self.local_mem / WORD_BYTES
     }
 
     /// External memory capacity in words.
+    #[must_use]
     pub fn ext_mem_words(&self) -> usize {
         self.ext_mem / WORD_BYTES
     }
 
     /// Effective local token budget (words) when prefetching is on:
     /// the prefetch buffer halves the usable local memory (§2).
+    #[must_use]
     pub fn effective_local_words(&self, prefetch: bool) -> usize {
         if prefetch { self.local_mem_words() / 2 } else { self.local_mem_words() }
     }

@@ -24,6 +24,7 @@ pub struct InprodPrediction {
 /// in tokens of `c` words per core. Panics unless `p·c` divides
 /// `n_total` (the paper's simplifying assumption of constant-size
 /// tokens).
+#[must_use]
 pub fn inprod_cost(m: &AcceleratorParams, n_total: usize, c: usize) -> InprodPrediction {
     assert!(c > 0 && n_total % (m.p * c) == 0, "p·C must divide N");
     let n = n_total / (m.p * c);
@@ -63,6 +64,7 @@ pub struct CannonPrediction {
 
 /// Predict Algorithm 2's cost for an `n×n` product on an `N×N` grid with
 /// `M×M` outer blocks. Requires `N·M | n`.
+#[must_use]
 pub fn cannon_cost(m: &AcceleratorParams, n: usize, big_m: usize) -> CannonPrediction {
     let grid_n = m.grid_n();
     assert!(big_m > 0 && n % (grid_n * big_m) == 0, "N·M must divide n");
@@ -93,6 +95,7 @@ pub fn cannon_cost(m: &AcceleratorParams, n: usize, big_m: usize) -> CannonPredi
 /// ```
 ///
 /// which evaluates to ≈ 8 for the Epiphany-III parameters.
+#[must_use]
 pub fn k_equal(m: &AcceleratorParams) -> f64 {
     let n = m.grid_n() as f64;
     (2.0 * m.e - n * m.g) / (2.0 * n)
@@ -205,6 +208,6 @@ mod tests {
     #[test]
     #[should_panic]
     fn cannon_rejects_indivisible() {
-        cannon_cost(&m(), 100, 3);
+        let _ = cannon_cost(&m(), 100, 3);
     }
 }

@@ -35,6 +35,7 @@ pub struct TensorSig {
 
 impl TensorSig {
     /// Total element count.
+    #[must_use]
     pub fn elems(&self) -> usize {
         self.dims.iter().product()
     }
@@ -93,6 +94,7 @@ impl Manifest {
     }
 
     /// Path of the HLO text for `name`.
+    #[must_use]
     pub fn hlo_path(&self, name: &str) -> PathBuf {
         self.dir.join(format!("{name}.hlo.txt"))
     }

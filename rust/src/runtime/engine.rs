@@ -30,6 +30,7 @@ pub enum HostTensor {
 
 impl HostTensor {
     /// This tensor's shape + dtype signature.
+    #[must_use]
     pub fn sig(&self) -> TensorSig {
         match self {
             HostTensor::F32(_, dims) => TensorSig { dtype: DType::F32, dims: dims.clone() },
@@ -38,6 +39,7 @@ impl HostTensor {
     }
 
     /// Total element count.
+    #[must_use]
     pub fn elems(&self) -> usize {
         match self {
             HostTensor::F32(v, _) => v.len(),
@@ -47,6 +49,7 @@ impl HostTensor {
 
     /// Unwrap f32 data (panics on dtype mismatch — callers know their
     /// entry point's signature).
+    #[must_use]
     pub fn into_f32(self) -> Vec<f32> {
         match self {
             HostTensor::F32(v, _) => v,
@@ -151,6 +154,7 @@ impl PjrtEngine {
     }
 
     /// The manifest this engine serves.
+    #[must_use]
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -161,6 +165,7 @@ impl PjrtEngine {
 /// error telling the caller to use the native backend. The manifest
 /// parsing, shape validation, and threading model stay fully exercised.
 #[cfg(not(feature = "xla"))]
+#[allow(clippy::needless_pass_by_value)] // signature parity with the xla build
 fn engine_loop(rx: mpsc::Receiver<Request>, _manifest: Arc<Manifest>) {
     for req in rx {
         let _ = req.reply.send(Err(anyhow!(

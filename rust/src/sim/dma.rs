@@ -60,6 +60,7 @@ impl Default for DmaEngine {
 
 impl DmaEngine {
     /// An idle engine at virtual time 0 with the default log window.
+    #[must_use]
     pub fn new() -> Self {
         Self::with_log_capacity(DEFAULT_LOG_CAPACITY)
     }
@@ -67,6 +68,7 @@ impl DmaEngine {
     /// An idle engine whose log ring retains at most `cap` transfers.
     /// The ring is pre-allocated, so logging never touches the heap
     /// after construction (unless tracing is enabled).
+    #[must_use]
     pub fn with_log_capacity(cap: usize) -> Self {
         let cap = cap.max(1);
         Self {
@@ -117,16 +119,19 @@ impl DmaEngine {
     }
 
     /// Earliest time a new transfer could start.
+    #[must_use]
     pub fn free_at(&self) -> f64 {
         self.busy_until
     }
 
     /// Retained log entries (≤ the ring capacity unless tracing).
+    #[must_use]
     pub fn log_len(&self) -> usize {
         self.entries.len()
     }
 
     /// Transfers ever issued, including any the ring evicted.
+    #[must_use]
     pub fn log_total(&self) -> u64 {
         self.total
     }

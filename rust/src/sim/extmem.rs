@@ -86,6 +86,7 @@ pub struct ExtMemModel {
 
 impl ExtMemModel {
     /// Constants matching the Parallella measurements (Table 1 / Fig. 4).
+    #[must_use]
     pub fn epiphany3() -> Self {
         Self {
             core_read_free: 8.9e6,
@@ -115,6 +116,7 @@ impl ExtMemModel {
     /// timeline with, so the measured hyperstep spans can be compared
     /// against `model::bsps` predictions exactly, for *any* machine
     /// preset (not just the Epiphany-III the Table 1 constants match).
+    #[must_use]
     pub fn calibrated(machine: &crate::model::params::AcceleratorParams) -> Self {
         let bw = machine.r * crate::model::params::WORD_BYTES as f64 / machine.e.max(1e-12);
         Self {
@@ -129,6 +131,7 @@ impl ExtMemModel {
     }
 
     /// Table 1 asymptotic bandwidth (bytes/s per core).
+    #[must_use]
     pub fn bandwidth(&self, actor: Actor, dir: Dir, state: NetState) -> f64 {
         match (actor, dir, state) {
             (Actor::Core, Dir::Read, NetState::Free) => self.core_read_free,
@@ -156,6 +159,7 @@ impl ExtMemModel {
     /// burst speeds, which is also what DMA block transfers achieve).
     /// Non-burst free-state writes go through the mesh write buffer and
     /// show the paper's non-monotonic profile.
+    #[must_use]
     pub fn transfer_cycles(
         &self,
         actor: Actor,
@@ -193,6 +197,7 @@ impl ExtMemModel {
     }
 
     /// Measured speed (bytes/s) of a single transfer — what Fig. 4 plots.
+    #[must_use]
     pub fn measured_speed(
         &self,
         actor: Actor,

@@ -43,6 +43,7 @@ fn measured_bps(mem: &ExtMemModel, actor: Actor, dir: Dir, state: NetState) -> f
 }
 
 /// Regenerate Table 1 from the simulated link.
+#[must_use]
 pub fn table1(mem: &ExtMemModel) -> Vec<Table1Row> {
     let mut rows = Vec::new();
     for actor in [Actor::Core, Actor::Dma] {
@@ -73,6 +74,7 @@ pub struct Fig4Point {
 
 /// Regenerate Fig. 4: single core, free network, sizes 8 B … 1 MB.
 /// Uses the *core* actor like the paper's single-core measurement.
+#[must_use]
 pub fn fig4(mem: &ExtMemModel) -> Vec<Fig4Point> {
     let mut points = Vec::new();
     let mut bytes = 8u64;
@@ -96,6 +98,7 @@ pub fn fig4(mem: &ExtMemModel) -> Vec<Fig4Point> {
 /// bulk synchronization, mirroring how a superstep's communication phase
 /// ends; §5's fit then reads `g` off the slope and `l` off the
 /// intercept.
+#[must_use]
 pub fn comm_sweep(noc: &Noc, max_words: u64, step: u64) -> Vec<CommSample> {
     assert!(step > 0 && max_words >= step);
     let src = 0;

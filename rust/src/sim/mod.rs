@@ -34,11 +34,13 @@ pub const CLOCK_HZ: f64 = 600.0e6;
 pub const CYCLES_PER_FLOP: f64 = 5.0;
 
 /// Convert cycles to seconds at the default clock.
+#[must_use]
 pub fn cycles_to_seconds(cycles: f64) -> f64 {
     cycles / CLOCK_HZ
 }
 
 /// Convert a FLOP count to cycles.
+#[must_use]
 pub fn flops_to_cycles(flops: f64) -> f64 {
     flops * CYCLES_PER_FLOP
 }

@@ -30,6 +30,7 @@ pub struct Noc {
 
 impl Noc {
     /// Epiphany-III calibration for an `n×n` grid.
+    #[must_use]
     pub fn epiphany3(n: usize) -> Self {
         Self {
             n,
@@ -42,6 +43,7 @@ impl Noc {
     /// The smallest square grid holding `p` cores (row-major layout;
     /// the last row may be partially populated when `p` is not a
     /// perfect square).
+    #[must_use]
     pub fn grid_for(p: usize) -> usize {
         ((p.max(1)) as f64).sqrt().ceil() as usize
     }
@@ -50,6 +52,7 @@ impl Noc {
     /// matches `g` (so a zero-hop route prices exactly like the flat
     /// model) and `barrier_cycles` matches `l`. The per-hop latency
     /// keeps the Epiphany-III sub-FLOP measurement.
+    #[must_use]
     pub fn for_machine(machine: &AcceleratorParams) -> Self {
         Self {
             n: Self::grid_for(machine.p),
@@ -61,29 +64,34 @@ impl Noc {
 
     /// Same mesh with free routes (`hop_cycles = 0`): word pricing
     /// only, the flat-`g` ablation of the NoC-aware cost.
+    #[must_use]
     pub fn with_free_hops(mut self) -> Self {
         self.hop_cycles = 0.0;
         self
     }
 
     /// Total cores.
+    #[must_use]
     pub fn p(&self) -> usize {
         self.n * self.n
     }
 
     /// Grid coordinates of core `s` (row-major).
+    #[must_use]
     pub fn coords(&self, s: usize) -> (usize, usize) {
         assert!(s < self.p(), "core {s} out of range");
         (s / self.n, s % self.n)
     }
 
     /// Core index at `(row, col)`.
+    #[must_use]
     pub fn core_at(&self, row: usize, col: usize) -> usize {
         assert!(row < self.n && col < self.n);
         row * self.n + col
     }
 
     /// Manhattan hop count of the XY route from `src` to `dst`.
+    #[must_use]
     pub fn hops(&self, src: usize, dst: usize) -> usize {
         let (r1, c1) = self.coords(src);
         let (r2, c2) = self.coords(dst);
@@ -93,18 +101,21 @@ impl Noc {
     /// Cycles for a core-to-core write of `words` words. Writes are
     /// pipelined: the route is paid once, then one word per
     /// `cycles_per_word`.
+    #[must_use]
     pub fn write_cycles(&self, src: usize, dst: usize, words: u64) -> f64 {
         self.hops(src, dst) as f64 * self.hop_cycles
             + words as f64 * self.cycles_per_word
     }
 
     /// Right neighbour with wraparound (Cannon's A shift).
+    #[must_use]
     pub fn right_of(&self, s: usize) -> usize {
         let (r, c) = self.coords(s);
         self.core_at(r, (c + 1) % self.n)
     }
 
     /// Down neighbour with wraparound (Cannon's B shift).
+    #[must_use]
     pub fn down_of(&self, s: usize) -> usize {
         let (r, c) = self.coords(s);
         self.core_at((r + 1) % self.n, c)

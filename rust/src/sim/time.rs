@@ -27,17 +27,20 @@ pub struct CoreClocks {
 
 impl CoreClocks {
     /// `p` clocks at time 0.
+    #[must_use]
     pub fn new(p: usize) -> Self {
         assert!(p > 0);
         Self { cycles: vec![0.0; p] }
     }
 
     /// Number of cores.
+    #[must_use]
     pub fn p(&self) -> usize {
         self.cycles.len()
     }
 
     /// Current time of core `s`.
+    #[must_use]
     pub fn now(&self, s: usize) -> f64 {
         self.cycles[s]
     }
@@ -67,6 +70,7 @@ impl CoreClocks {
     }
 
     /// Global maximum (the program's makespan so far).
+    #[must_use]
     pub fn makespan(&self) -> f64 {
         self.cycles.iter().cloned().fold(0.0, f64::max)
     }
@@ -92,17 +96,20 @@ pub struct ShardedClocks {
 
 impl ShardedClocks {
     /// `p` clocks at time 0.
+    #[must_use]
     pub fn new(p: usize) -> Self {
         assert!(p > 0);
         Self { cells: (0..p).map(|_| PaddedCycles(AtomicU64::new(0))).collect() }
     }
 
     /// Number of cores.
+    #[must_use]
     pub fn p(&self) -> usize {
         self.cells.len()
     }
 
     /// Current time of core `s`.
+    #[must_use]
     pub fn now(&self, s: usize) -> f64 {
         f64::from_bits(self.cells[s].0.load(Ordering::Acquire))
     }
@@ -137,6 +144,7 @@ impl ShardedClocks {
     }
 
     /// Global maximum (the program's makespan so far).
+    #[must_use]
     pub fn makespan(&self) -> f64 {
         self.cells
             .iter()

@@ -125,6 +125,7 @@ pub struct StreamHandle {
 
 impl StreamRegistry {
     /// A registry whose capacity is the machine's external memory `E`.
+    #[must_use]
     pub fn new(machine: &AcceleratorParams) -> Self {
         Self {
             streams: Vec::new(),
@@ -134,6 +135,7 @@ impl StreamRegistry {
     }
 
     /// Unbounded registry (for tests and non-simulated use).
+    #[must_use]
     pub fn unbounded() -> Self {
         Self { streams: Vec::new(), capacity_words: usize::MAX, used_words: 0 }
     }
@@ -173,16 +175,19 @@ impl StreamRegistry {
     }
 
     /// Number of streams created.
+    #[must_use]
     pub fn len(&self) -> usize {
         self.streams.len()
     }
 
     /// Whether no stream has been created.
+    #[must_use]
     pub fn is_empty(&self) -> bool {
         self.streams.is_empty()
     }
 
     /// Words used of the external pool.
+    #[must_use]
     pub fn used_words(&self) -> usize {
         self.used_words
     }

@@ -48,6 +48,7 @@ impl BenchResult {
     }
 
     /// Render one stable report row.
+    #[must_use]
     pub fn row(&self) -> String {
         let mut s = format!(
             "bench {:<40} mean {:>12} ±{:>10} (n={})",
@@ -67,6 +68,7 @@ impl BenchResult {
 ///
 /// The body receives the iteration index; its return value is
 /// black-boxed so the optimizer cannot elide the work.
+#[must_use]
 pub fn bench<T, F: FnMut(u32) -> T>(
     name: &str,
     cfg: BenchConfig,
@@ -87,6 +89,7 @@ pub fn bench<T, F: FnMut(u32) -> T>(
 }
 
 /// Like [`bench`], with a throughput denominator (elements per iter).
+#[must_use]
 pub fn bench_throughput<T, F: FnMut(u32) -> T>(
     name: &str,
     cfg: BenchConfig,
@@ -155,6 +158,7 @@ fn json_num(v: f64) -> String {
 
 impl BenchRecorder {
     /// A recorder for the named suite.
+    #[must_use]
     pub fn new(suite: &str) -> Self {
         Self {
             suite: suite.to_string(),
@@ -180,6 +184,7 @@ impl BenchRecorder {
     }
 
     /// Serialize everything as a JSON document.
+    #[must_use]
     pub fn to_json(&self) -> String {
         let mut s = String::new();
         s.push_str("{\n");
@@ -523,6 +528,7 @@ pub struct DiffRow {
 /// throughput fell (or, lacking a throughput denominator, its mean time
 /// rose) by more than `max_regress` (e.g. `0.15` = 15%). Benches
 /// present in only one snapshot are skipped — renames must not fail CI.
+#[must_use]
 pub fn diff_snapshots(
     old: &BenchSnapshot,
     new: &BenchSnapshot,
@@ -584,6 +590,10 @@ pub struct ScalarBand {
 /// * `surcharge` — NoC route surcharge: same shape;
 /// * `speedup` — bigger is better; shrinking beyond the band regresses;
 /// * `occupancy` — a `(0, 1]` ratio: absolute band, shrinking is bad;
+/// * `overhead` — infrastructure tax ratios (e.g. the superstep
+///   analyzer's Warn-vs-Off scalar) that sit near 1.0: growth is the
+///   regression, with a wide band because they divide two noisy
+///   wall-clock means;
 /// * `wait` — queue waits are millisecond-scale scheduler noise with no
 ///   work-derived lower bound, so they get a wide absolute floor on top
 ///   of the loose relative band;
@@ -593,6 +603,7 @@ pub struct ScalarBand {
 ///   bad;
 /// * everything else — two-sided `default_rel` drift check (covers the
 ///   deterministic simulated-bandwidth curve points).
+#[must_use]
 pub fn scalar_band_for(name: &str, default_rel: f64) -> ScalarBand {
     if name.contains("rel_err") || name.contains("_rel") {
         ScalarBand { rel: 0.5, abs: 0.02, dir: BandDir::HigherIsWorse }
@@ -602,6 +613,8 @@ pub fn scalar_band_for(name: &str, default_rel: f64) -> ScalarBand {
         ScalarBand { rel: 0.5, abs: 0.3, dir: BandDir::LowerIsWorse }
     } else if name.contains("occupancy") {
         ScalarBand { rel: 0.0, abs: 0.25, dir: BandDir::LowerIsWorse }
+    } else if name.contains("overhead") {
+        ScalarBand { rel: 1.0, abs: 0.5, dir: BandDir::HigherIsWorse }
     } else if name.contains("wait") {
         ScalarBand { rel: 1.0, abs: 0.25, dir: BandDir::HigherIsWorse }
     } else if name.contains("seconds") || name.contains("makespan") {
@@ -630,6 +643,7 @@ pub struct ScalarDiffRow {
 /// [`scalar_band_for`] bands. Scalars present in only one snapshot are
 /// skipped (renames and newly-added scalars must not fail CI on their
 /// first appearance).
+#[must_use]
 pub fn diff_scalars(
     old: &BenchSnapshot,
     new: &BenchSnapshot,
@@ -802,6 +816,11 @@ mod tests {
         let wait = scalar_band_for("sweep_max_queue_wait_seconds", 0.15);
         assert_eq!(wait.dir, BandDir::HigherIsWorse);
         assert!(wait.abs >= 0.25, "wait scalars need a wide absolute floor");
+        // The analyzer tax ratio sits near 1.0 and divides two noisy
+        // means: only growth regresses, and the band must be wide.
+        let ovh = scalar_band_for("analyzer_warn_overhead", 0.15);
+        assert_eq!(ovh.dir, BandDir::HigherIsWorse);
+        assert!(ovh.rel >= 1.0 && ovh.abs >= 0.5, "overhead band too tight");
         assert_eq!(scalar_band_for("read_bps_512", 0.15).dir, BandDir::TwoSided);
     }
 

@@ -40,17 +40,20 @@ pub struct Error {
 
 impl Error {
     /// Build an error from any displayable message.
+    #[must_use]
     pub fn msg(msg: impl fmt::Display) -> Self {
         Self { chain: vec![msg.to_string()] }
     }
 
     /// Wrap the error in one more layer of context.
+    #[must_use]
     pub fn context(mut self, ctx: impl fmt::Display) -> Self {
         self.chain.insert(0, ctx.to_string());
         self
     }
 
     /// The root cause (the innermost message).
+    #[must_use]
     pub fn root_cause(&self) -> &str {
         self.chain.last().map(String::as_str).unwrap_or("")
     }

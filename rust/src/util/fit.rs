@@ -18,6 +18,7 @@ pub struct LineFit {
 
 /// Least-squares fit of `y ≈ a + b·x`. Panics if fewer than two points
 /// or if all `x` are identical.
+#[must_use]
 pub fn linear_fit(xs: &[f64], ys: &[f64]) -> LineFit {
     assert_eq!(xs.len(), ys.len(), "linear_fit: length mismatch");
     assert!(xs.len() >= 2, "linear_fit: need at least two points");
@@ -75,6 +76,6 @@ mod tests {
     #[test]
     #[should_panic]
     fn degenerate_x_panics() {
-        linear_fit(&[1.0, 1.0], &[2.0, 3.0]);
+        let _ = linear_fit(&[1.0, 1.0], &[2.0, 3.0]);
     }
 }

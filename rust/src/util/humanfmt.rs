@@ -1,6 +1,7 @@
 //! Human-readable formatting for report output.
 
 /// Format a byte count: `1.5 KB`, `32 MB`, ...
+#[must_use]
 pub fn bytes(n: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
     let mut v = n as f64;
@@ -17,6 +18,7 @@ pub fn bytes(n: u64) -> String {
 }
 
 /// Format seconds: `1.23 s`, `4.56 ms`, `7.89 µs`, `123 ns`.
+#[must_use]
 pub fn seconds(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.3} s")
@@ -30,11 +32,13 @@ pub fn seconds(s: f64) -> String {
 }
 
 /// Format a rate in MB/s (the unit Table 1 uses).
+#[must_use]
 pub fn mbps(bytes_per_sec: f64) -> String {
     format!("{:.1} MB/s", bytes_per_sec / 1e6)
 }
 
 /// Format FLOP counts: `2.0 GFLOP`, `1.5 MFLOP`, ...
+#[must_use]
 pub fn flops(f: f64) -> String {
     if f >= 1e9 {
         format!("{:.2} GFLOP", f / 1e9)

@@ -69,17 +69,20 @@ pub struct BufferPool {
 
 impl BufferPool {
     /// A pool retaining at most 64 buffers.
+    #[must_use]
     pub fn new() -> Self {
         Self::with_capacity(64)
     }
 
     /// A pool retaining at most `max_retained` buffers.
+    #[must_use]
     pub fn with_capacity(max_retained: usize) -> Self {
         Self { bufs: Mutex::new(Vec::with_capacity(max_retained)), max_retained }
     }
 
     /// Take a (cleared) buffer out of the pool, or an empty `Vec` if
     /// the pool is dry.
+    #[must_use]
     pub fn take(&self) -> Vec<f32> {
         self.bufs
             .lock()
@@ -102,6 +105,7 @@ impl BufferPool {
     }
 
     /// Buffers currently parked in the pool (diagnostics/tests).
+    #[must_use]
     pub fn retained(&self) -> usize {
         self.bufs.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
@@ -141,11 +145,13 @@ pub struct GangPool {
 
 impl GangPool {
     /// An empty pool (no threads until the first `run`).
+    #[must_use]
     pub const fn new() -> Self {
         Self { idle: Mutex::new(Vec::new()) }
     }
 
     /// The process-wide pool used by the engine.
+    #[must_use]
     pub fn global() -> &'static GangPool {
         static POOL: GangPool = GangPool::new();
         &POOL
@@ -167,6 +173,7 @@ impl GangPool {
     }
 
     /// Worker threads currently parked in the pool (diagnostics/tests).
+    #[must_use]
     pub fn idle_workers(&self) -> usize {
         self.idle.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
@@ -293,6 +300,7 @@ pub struct BudgetLease<'a> {
 
 impl BudgetLease<'_> {
     /// Cores held by this lease.
+    #[must_use]
     pub fn cores(&self) -> usize {
         self.cores
     }
@@ -311,6 +319,7 @@ impl Drop for BudgetLease<'_> {
 
 impl CoreBudget {
     /// A budget of `capacity` cores.
+    #[must_use]
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0, "CoreBudget: capacity == 0");
         Self {
@@ -325,22 +334,26 @@ impl CoreBudget {
     }
 
     /// A budget sized to the host's parallelism (the `--cores` default).
+    #[must_use]
     pub fn host() -> Self {
         let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
         Self::new(n)
     }
 
     /// Total cores this budget was created with.
+    #[must_use]
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
     /// Cores currently checked out.
+    #[must_use]
     pub fn in_use(&self) -> usize {
         self.capacity - self.state.lock().unwrap_or_else(|e| e.into_inner()).available
     }
 
     /// Cores currently free (ignores the waitlist).
+    #[must_use]
     pub fn available(&self) -> usize {
         self.state.lock().unwrap_or_else(|e| e.into_inner()).available
     }
@@ -373,6 +386,7 @@ impl CoreBudget {
     ///
     /// Panics if `cores` exceeds the budget's capacity (waiting would
     /// deadlock: the request can never be satisfied).
+    #[must_use]
     pub fn acquire(&self, cores: usize) -> BudgetLease<'_> {
         assert!(cores > 0, "acquire: cores == 0");
         assert!(
@@ -422,6 +436,7 @@ pub struct TaskPool<T: Send + 'static> {
 impl<T: Send + 'static> TaskPool<T> {
     /// Spawn `workers` threads, each running `handler` on every item it
     /// pops off the queue.
+    #[must_use]
     pub fn new<H>(workers: usize, handler: H) -> Self
     where
         H: Fn(T) + Send + Sync + 'static,

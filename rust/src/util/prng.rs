@@ -11,6 +11,7 @@ pub struct SplitMix64 {
 
 impl SplitMix64 {
     /// Create a generator from a seed.
+    #[must_use]
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }

@@ -19,6 +19,7 @@ pub struct Summary {
 }
 
 /// Compute a [`Summary`] of `xs`. Panics on an empty slice.
+#[must_use]
 pub fn summarize(xs: &[f64]) -> Summary {
     assert!(!xs.is_empty(), "summarize: empty sample");
     let n = xs.len();
@@ -38,6 +39,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
 }
 
 /// Median of a sample (copies + sorts).
+#[must_use]
 pub fn median(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty(), "median: empty sample");
     let mut v = xs.to_vec();
@@ -84,6 +86,6 @@ mod tests {
     #[test]
     #[should_panic]
     fn empty_panics() {
-        summarize(&[]);
+        let _ = summarize(&[]);
     }
 }

@@ -28,7 +28,7 @@ fn run_once(seed: u64, run_idx: u64, mode: ApplyMode) -> Vec<u32> {
     let digests: Mutex<Vec<Vec<u32>>> = Mutex::new(vec![Vec::new(); P]);
     let cfg = GangConfig { apply_mode: mode, ..Default::default() };
 
-    run_gang_cfg(&m, None, false, cfg, |ctx| {
+    let _ = run_gang_cfg(&m, None, false, cfg, |ctx| {
         let s = ctx.pid();
         let v1 = ctx.register("v1", VAR_LEN).unwrap();
         let v2 = ctx.register("v2", VAR_LEN).unwrap();
@@ -89,8 +89,8 @@ fn run_once(seed: u64, run_idx: u64, mode: ApplyMode) -> Vec<u32> {
             }
         }
 
-        ctx.with_var(v1, |v| digest.extend(v.iter().map(|x| x.to_bits())));
-        ctx.with_var(v2, |v| digest.extend(v.iter().map(|x| x.to_bits())));
+        let _ = ctx.with_var(v1, |v| digest.extend(v.iter().map(|x| x.to_bits())));
+        let _ = ctx.with_var(v2, |v| digest.extend(v.iter().map(|x| x.to_bits())));
         digests.lock().unwrap()[s] = digest;
     });
 

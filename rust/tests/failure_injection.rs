@@ -18,7 +18,7 @@ fn machine(p: usize) -> AcceleratorParams {
 #[test]
 fn panic_before_first_sync_unwinds_gang() {
     let r = std::panic::catch_unwind(|| {
-        run_gang(&machine(8), None, false, |ctx| {
+        let _ = run_gang(&machine(8), None, false, |ctx| {
             if ctx.pid() == 0 {
                 panic!("early death");
             }
@@ -37,7 +37,7 @@ fn panic_mid_hyperstep_unwinds_gang() {
     }
     let reg = Arc::new(reg);
     let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run_gang(&m, Some(reg), true, |ctx| {
+        let _ = run_gang(&m, Some(reg), true, |ctx| {
             let h = ctx.stream_open(ctx.pid()).unwrap();
             let mut buf = Vec::new();
             for i in 0..4 {
@@ -65,7 +65,7 @@ fn panic_with_prefetch_in_flight_unwinds_gang() {
     }
     let reg = Arc::new(reg);
     let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run_gang(&m, Some(reg), true, |ctx| {
+        let _ = run_gang(&m, Some(reg), true, |ctx| {
             let h = ctx.stream_open(ctx.pid()).unwrap();
             let mut buf = Vec::new();
             for i in 0..8 {
@@ -91,7 +91,7 @@ fn overflowing_put_aborts_the_gang_instead_of_hanging_it() {
     // poison guard unwinds every parked core, and this test completes
     // with an error instead of timing out.
     let r = std::panic::catch_unwind(|| {
-        run_gang(&machine(8), None, false, |ctx| {
+        let _ = run_gang(&machine(8), None, false, |ctx| {
             let x = ctx.register("x", 2).unwrap();
             ctx.sync();
             if ctx.pid() == 1 {
@@ -111,7 +111,7 @@ fn out_of_range_get_aborts_the_gang_instead_of_hanging_it() {
     // the issuing core with a named diagnostic (see the engine unit
     // tests for the message contents) and the gang unwinds cleanly.
     let r = std::panic::catch_unwind(|| {
-        run_gang(&machine(8), None, false, |ctx| {
+        let _ = run_gang(&machine(8), None, false, |ctx| {
             let x = ctx.register("x", 4).unwrap();
             ctx.sync();
             if ctx.pid() == 3 {
@@ -130,7 +130,7 @@ fn var_resize_race_is_caught_at_the_plan_phase() {
     // smaller. Whichever side loses the race (enqueue check or the
     // plan leader's re-check), the gang must abort cleanly.
     let r = std::panic::catch_unwind(|| {
-        run_gang(&machine(2), None, false, |ctx| {
+        let _ = run_gang(&machine(2), None, false, |ctx| {
             let x = ctx.register("x", 8).unwrap();
             ctx.sync();
             if ctx.pid() == 0 {
@@ -152,7 +152,7 @@ fn double_open_is_an_error_not_a_crash() {
     let reg = Arc::new(reg);
     let errors = Arc::new(AtomicUsize::new(0));
     let errors2 = Arc::clone(&errors);
-    run_gang(&m, Some(reg), true, move |ctx| {
+    let _ = run_gang(&m, Some(reg), true, move |ctx| {
         // Both cores race for stream 0; exactly one must win.
         match ctx.stream_open(0) {
             Ok(h) => {
@@ -173,7 +173,7 @@ fn cursor_overrun_is_an_error_not_a_crash() {
     let m = machine(1);
     let mut reg = StreamRegistry::new(&m);
     reg.create(8, 4, None).unwrap();
-    run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+    let _ = run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
         let h = ctx.stream_open(0).unwrap();
         let mut buf = Vec::new();
         ctx.stream_move_down(h, &mut buf).unwrap();
@@ -193,7 +193,7 @@ fn unregistered_var_put_panics_cleanly() {
     // loudly — at enqueue, on the issuing core's thread — not corrupt
     // memory or hang the gang.
     let r = std::panic::catch_unwind(|| {
-        run_gang(&machine(2), None, false, |ctx| {
+        let _ = run_gang(&machine(2), None, false, |ctx| {
             if ctx.pid() == 0 {
                 ctx.put(1, VarHandle::from_raw(7), 0, &[1.0]);
             }
@@ -208,7 +208,7 @@ fn gang_reuse_after_failure_is_fresh() {
     // A failed run must not poison *subsequent* gangs (each run_gang
     // builds fresh shared state).
     let _ = std::panic::catch_unwind(|| {
-        run_gang(&machine(4), None, false, |ctx| {
+        let _ = run_gang(&machine(4), None, false, |ctx| {
             if ctx.pid() == 3 {
                 panic!("boom");
             }

@@ -57,8 +57,8 @@ fn stress_kernel(
             }
         }
         let mut digest = Vec::new();
-        ctx.with_var(a, |v| digest.extend(v.iter().map(|x| x.to_bits())));
-        ctx.with_var(b, |v| digest.extend(v.iter().map(|x| x.to_bits())));
+        let _ = ctx.with_var(a, |v| digest.extend(v.iter().map(|x| x.to_bits())));
+        let _ = ctx.with_var(b, |v| digest.extend(v.iter().map(|x| x.to_bits())));
         sink.lock().unwrap().insert(pid, digest);
     }
 }
@@ -169,7 +169,7 @@ fn failure_injection_retires_the_faulty_gang_without_wedging() {
     // The process-wide pools survived the poisoned gang: run once more.
     let sink = Arc::new(Mutex::new(BTreeMap::new()));
     let kern = stress_kernel(99, Arc::clone(&sink));
-    run_gang(&machine(4), None, false, |ctx| kern(ctx));
+    let _ = run_gang(&machine(4), None, false, |ctx| kern(ctx));
     assert_eq!(sink.lock().unwrap().len(), 4);
 }
 

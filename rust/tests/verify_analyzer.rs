@@ -1,0 +1,252 @@
+//! Integration tests for the superstep race & hazard analyzer
+//! (`bsp::verify`), through the public API only.
+//!
+//! One positive fixture per detector class — each plants exactly the
+//! hazard its detector looks for and asserts the finding's kind and
+//! blamed pids — plus the negative sweep: every shipped algorithm runs
+//! to completion under `AnalysisMode::Deny` with zero error findings
+//! (the same gate CI enforces via `bsps analyze --algo all`).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use bsps::algos::{cannon_ml, inner_product, sort, spmv, video};
+use bsps::bsp::{run_gang_cfg, AnalysisMode, FindingKind, GangConfig};
+use bsps::coordinator::BspsEnv;
+use bsps::model::params::AcceleratorParams;
+use bsps::stream::StreamRegistry;
+use bsps::util::prng::SplitMix64;
+
+fn epiphany(p: usize) -> AcceleratorParams {
+    let mut m = AcceleratorParams::epiphany3();
+    m.p = p;
+    m
+}
+
+fn warn_cfg() -> GangConfig {
+    GangConfig { analysis: AnalysisMode::Warn, ..Default::default() }
+}
+
+fn deny_cfg() -> GangConfig {
+    GangConfig { analysis: AnalysisMode::Deny, ..Default::default() }
+}
+
+// ------------------------------------------------- positive fixtures
+
+#[test]
+fn detector_write_write_conflict() {
+    // Two cores put overlapping halves of the same interval on one
+    // destination in one superstep: last-apply-wins nondeterminism.
+    let out = run_gang_cfg(&epiphany(4), None, false, warn_cfg(), |ctx| {
+        let x = ctx.register("x", 8).unwrap();
+        ctx.sync();
+        if ctx.pid() < 2 {
+            ctx.put(3, x, 2, &[ctx.pid() as f32; 4]);
+        }
+        ctx.sync();
+    });
+    assert_eq!(out.analysis.error_count(), 1, "{}", out.analysis.render());
+    let f = &out.analysis.findings[0];
+    assert_eq!(f.kind, FindingKind::WriteWriteConflict);
+    assert_eq!(f.pids, vec![0, 1]);
+    assert_eq!(f.var.as_deref(), Some("x"));
+    assert_eq!(f.interval, Some((2, 6)));
+}
+
+#[test]
+fn detector_local_write_clobber() {
+    // Core 0 writes x[0] locally while core 1 puts into the same word:
+    // the put lands at the sync and silently overwrites the local write.
+    let out = run_gang_cfg(&epiphany(2), None, false, warn_cfg(), |ctx| {
+        let x = ctx.register("x", 4).unwrap();
+        ctx.sync();
+        if ctx.pid() == 1 {
+            ctx.put(0, x, 0, &[9.0]);
+        } else {
+            ctx.with_var_mut(x, |v| v[0] = 1.0);
+        }
+        ctx.sync();
+    });
+    assert_eq!(out.analysis.error_count(), 1, "{}", out.analysis.render());
+    let f = &out.analysis.findings[0];
+    assert_eq!(f.kind, FindingKind::LocalWriteClobber);
+    assert_eq!(f.pids, vec![0, 1]);
+}
+
+#[test]
+fn detector_barrier_divergence_mixed_shapes() {
+    // Same barrier crossing, different shapes: core 0 treats it as a
+    // plain superstep sync, core 1 as a hyperstep boundary.
+    let out = run_gang_cfg(&epiphany(2), None, false, warn_cfg(), |ctx| {
+        if ctx.pid() == 0 {
+            ctx.sync();
+        } else {
+            ctx.hyperstep_sync();
+        }
+    });
+    assert_eq!(out.analysis.error_count(), 1, "{}", out.analysis.render());
+    assert_eq!(out.analysis.findings[0].kind, FindingKind::BarrierDivergence);
+}
+
+#[test]
+fn detector_barrier_divergence_unequal_counts() {
+    // Core 1 exits without ever syncing: without the analyzer this
+    // deadlocks; with it the gang aborts with a divergence diagnostic.
+    let r = catch_unwind(|| {
+        let _ = run_gang_cfg(&epiphany(2), None, false, warn_cfg(), |ctx| {
+            if ctx.pid() == 0 {
+                ctx.sync();
+            }
+        });
+    });
+    let payload = r.unwrap_err();
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .expect("panic payload should be the divergence diagnostic");
+    assert!(msg.contains("barrier-divergence"), "{msg}");
+}
+
+#[test]
+fn detector_scratchpad_over_budget() {
+    // Registered variable fills the whole scratchpad; core 1's queued
+    // put arena then pushes core 1 past `L`.
+    let mut m = epiphany(2);
+    m.local_mem = 256;
+    let out = run_gang_cfg(&m, None, false, warn_cfg(), |ctx| {
+        let x = ctx.register("x", 64).unwrap();
+        ctx.sync();
+        if ctx.pid() == 1 {
+            ctx.put(0, x, 0, &[1.0; 32]);
+        }
+        ctx.sync();
+    });
+    assert_eq!(out.analysis.error_count(), 1, "{}", out.analysis.render());
+    let f = &out.analysis.findings[0];
+    assert_eq!(f.kind, FindingKind::ScratchpadOverBudget);
+    assert_eq!(f.pids, vec![1]);
+}
+
+#[test]
+fn detector_stream_token_hazard() {
+    // With prefetch on, `move_down` stages the fill of the *next*
+    // token; writing that token with `move_up` races the staged DMA.
+    let m = epiphany(1);
+    let mut reg = StreamRegistry::new(&m);
+    reg.create(16, 4, None).unwrap();
+    let out = run_gang_cfg(&m, Some(Arc::new(reg)), true, warn_cfg(), |ctx| {
+        let h = ctx.stream_open(0).unwrap();
+        let mut buf = Vec::new();
+        ctx.stream_move_down(h, &mut buf).unwrap();
+        ctx.stream_move_up(h, &[9.0; 4]).unwrap();
+        ctx.hyperstep_sync();
+        ctx.stream_close(h).unwrap();
+    });
+    assert_eq!(out.analysis.error_count(), 1, "{}", out.analysis.render());
+    let f = &out.analysis.findings[0];
+    assert_eq!(f.kind, FindingKind::StreamTokenHazard);
+    assert_eq!(f.pids, vec![0]);
+}
+
+#[test]
+fn detector_late_registration() {
+    // A brand-new variable past the first sync: under Deny the call
+    // fails with a recoverable error (not a poison) and is reported.
+    let out = run_gang_cfg(&epiphany(2), None, false, deny_cfg(), |ctx| {
+        let _early = ctx.register("early", 2).unwrap();
+        ctx.sync();
+        let e = ctx.register("late", 2).unwrap_err().to_string();
+        assert!(e.contains("after the first sync"), "{e}");
+        ctx.sync();
+    });
+    assert_eq!(out.analysis.error_count(), 2, "{}", out.analysis.render());
+    assert!(out
+        .analysis
+        .findings
+        .iter()
+        .all(|f| f.kind == FindingKind::LateRegistration));
+}
+
+#[test]
+fn deny_mode_aborts_with_the_finding_as_diagnostic() {
+    let r = catch_unwind(|| {
+        let _ = run_gang_cfg(&epiphany(2), None, false, deny_cfg(), |ctx| {
+            let x = ctx.register("x", 4).unwrap();
+            ctx.sync();
+            ctx.put(0, x, 0, &[1.0; 4]); // both cores write core 0's x
+            ctx.sync();
+        });
+    });
+    let payload = r.unwrap_err();
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .expect("panic payload should be the analysis diagnostic");
+    assert!(msg.contains("write-write-conflict"), "{msg}");
+}
+
+// ------------------------------------------------- negative sweep
+
+/// Every shipped algorithm, at an analyzer-friendly small size, must
+/// complete under `Deny` with zero error findings. Mirrors the recipes
+/// `bsps analyze --algo all` runs in CI.
+#[test]
+fn all_shipped_algorithms_are_deny_clean() {
+    let env = BspsEnv::native(AcceleratorParams::epiphany3())
+        .with_analysis(AnalysisMode::Deny);
+    let mut rng = SplitMix64::new(42);
+
+    let mut reports = Vec::new();
+
+    let u = rng.f32_vec(1024, -1.0, 1.0);
+    let v = rng.f32_vec(1024, -1.0, 1.0);
+    reports.push(("inprod", inner_product::run(&env, &u, &v, 16).unwrap().report));
+
+    for m in [1usize, 2] {
+        let n = 16;
+        let a = rng.f32_vec(n * n, -1.0, 1.0);
+        let b = rng.f32_vec(n * n, -1.0, 1.0);
+        let name = if m == 1 { "cannon" } else { "cannon_ml" };
+        reports.push((name, cannon_ml::run(&env, &a, &b, n, m).unwrap().report));
+    }
+
+    let n = 256;
+    let mut triplets = Vec::new();
+    for r in 0..n {
+        for _ in 0..2 {
+            triplets.push((r, rng.next_range(0, n), rng.next_f32_in(-1.0, 1.0)));
+        }
+    }
+    triplets.sort_by_key(|&(r, c, _)| (r, c));
+    triplets.dedup_by_key(|&mut (r, c, _)| (r, c));
+    let a = spmv::EllMatrix::from_triplets(n, 4, &triplets).unwrap();
+    let x = rng.f32_vec(n, -1.0, 1.0);
+    reports.push(("spmv", spmv::run(&env, &a, &x, 4).unwrap().report));
+
+    let data = rng.f32_vec(1024, -1000.0, 1000.0);
+    reports.push(("sort", sort::run(&env, &data, 16).unwrap().report));
+
+    let frames: Vec<Vec<f32>> = (0..8).map(|_| rng.f32_vec(256, 0.0, 255.0)).collect();
+    reports.push(("video", video::run(&env, &frames, 0.25).unwrap().report));
+
+    for (name, report) in &reports {
+        assert_eq!(
+            report.analysis.error_count(),
+            0,
+            "{name} must be Deny-clean:\n{}",
+            report.analysis.render()
+        );
+    }
+    // Forward-only streaming programs produce no findings at all; the
+    // multi-level Cannon (m ≥ 2) legitimately seeks mid-stream, which
+    // surfaces as warnings, never errors.
+    for (name, report) in &reports {
+        if *name != "cannon_ml" {
+            assert!(
+                report.analysis.is_clean(),
+                "{name} should have no findings:\n{}",
+                report.analysis.render()
+            );
+        }
+    }
+}

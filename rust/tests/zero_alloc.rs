@@ -77,7 +77,7 @@ fn steady_state_token_loop_is_allocation_free() {
     }
     let reg = Arc::new(reg);
 
-    run_gang(&m, Some(reg), true, |ctx| {
+    let _ = run_gang(&m, Some(reg), true, |ctx| {
         let pid = ctx.pid();
         let h = ctx.stream_open(pid).unwrap();
         let mut tok = Vec::new();
