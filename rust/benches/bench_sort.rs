@@ -1,0 +1,121 @@
+//! Bench: the out-of-core pseudo-streaming sample sort vs its
+//! closed-form Eq. 1 cost law, across a size sweep that crosses the
+//! scratchpad ceiling — and the same points run concurrently through
+//! the multi-gang scheduler with byte-identity checked against serial
+//! execution. The measured-vs-predicted relative error is recorded to
+//! `BENCH_sort.json` as a higher-is-worse scalar for the CI benchdiff
+//! gate: if the kernel's schedule and the predictor drift apart, the
+//! gate trips before the model becomes fiction.
+
+use bsps::algos::sort::{self, SortConfig};
+use bsps::bsp::sched::GangScheduler;
+use bsps::coordinator::{BspsEnv, SweepReport};
+use bsps::model::params::AcceleratorParams;
+use bsps::util::benchtool::{section, BenchRecorder};
+use bsps::util::humanfmt::seconds;
+use bsps::util::prng::SplitMix64;
+
+const SIZES: [usize; 3] = [4096, 16384, 65536];
+
+fn main() {
+    let machine = AcceleratorParams::epiphany3();
+
+    section("sample sort: measured Eq. 1 time vs closed-form prediction");
+    let mut rng = SplitMix64::new(2016);
+    let mut worst_rel = 0.0f64;
+    for n in SIZES {
+        let data = rng.f32_vec(n, -1000.0, 1000.0);
+        let env = BspsEnv::native(machine.clone());
+        let t0 = std::time::Instant::now();
+        let run = sort::run(&env, &data, 64).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let measured = run.report.bsps_flops;
+        let predicted = run.predicted.flops;
+        let rel = (measured - predicted).abs() / predicted;
+        worst_rel = worst_rel.max(rel);
+        println!(
+            "n={n:>6}: passes={} ε={:.3}  measured {} (wall {}), Eq.1 rel err {rel:.3}",
+            run.max_passes,
+            run.geometry.epsilon,
+            seconds(run.report.measured_seconds),
+            seconds(wall),
+        );
+        assert!(
+            rel < 0.35,
+            "n={n}: measured {measured:.3e} vs predicted {predicted:.3e} out of band"
+        );
+        // The largest point crosses the per-core scratchpad: the ceiling
+        // must show up as extra passes, never as a failure.
+        if n == *SIZES.last().unwrap() {
+            assert!(run.max_passes > 1, "n={n} must take the spill path");
+        }
+
+        // Prefetch ablation at the same size: disabling the double
+        // buffer folds every token fetch into the compute side, so the
+        // Eq. 1 total must rise.
+        let slow = sort::run(&BspsEnv::native(machine.clone()).without_prefetch(), &data, 64)
+            .unwrap();
+        let gain = slow.report.bsps_flops / measured;
+        println!("           prefetch off: {gain:.2}x the overlapped cost");
+        assert!(gain > 1.0, "prefetch must pay for itself at n={n}");
+    }
+    println!("cost law ✓: worst rel err {worst_rel:.3} across the sweep");
+
+    scheduled_sweep(&machine, worst_rel);
+}
+
+/// The same sweep through the multi-gang scheduler under a 2×-budget,
+/// checked byte-identical to serial execution gang by gang (the checker
+/// shared with `bsps sweep --algo sort --check`), then recorded for the
+/// CI trajectory gate.
+fn scheduled_sweep(machine: &AcceleratorParams, worst_rel: f64) {
+    section("sort sweep: serial loop vs multi-gang scheduler");
+    let budget = 2 * machine.p;
+    let (jobs, gangs) =
+        sort::sweep_jobs(machine, &SIZES, SortConfig::default(), 77).unwrap();
+    let out = GangScheduler::new(budget).run(jobs);
+    let sweep = SweepReport::from_sched(&out);
+    print!("{}", sweep.render());
+    assert_eq!(sweep.failed(), 0, "every sort gang must retire cleanly");
+
+    for (i, gang) in gangs.iter().enumerate() {
+        let report = sweep.gangs[i].report.as_ref().unwrap();
+        let serial = sort::verify_scheduled_identity(machine, gang, report)
+            .unwrap_or_else(|e| panic!("{e}"));
+        println!(
+            "  check {}: byte-identical to serial ✓ (passes = {})",
+            gang.name, serial.max_passes
+        );
+    }
+
+    let makespan = sweep.stats.makespan_seconds;
+    let serial_sum = sweep.stats.serial_sum_seconds;
+    println!(
+        "gang-time sum {}, scheduled makespan {} — {:.2}x speedup, occupancy {:.2}",
+        seconds(serial_sum),
+        seconds(makespan),
+        sweep.speedup(),
+        sweep.occupancy(),
+    );
+    assert!(
+        makespan < serial_sum,
+        "budget {budget} holds two 16-core gangs: makespan {makespan}s must \
+         undercut the serial sum {serial_sum}s"
+    );
+
+    let mut rec = BenchRecorder::new("sort");
+    rec.meta("machine", machine.name);
+    rec.meta("budget_cores", budget);
+    rec.meta(
+        "sizes",
+        SIZES.iter().map(|n| n.to_string()).collect::<Vec<_>>().join(","),
+    );
+    // `rel_err` in the name ⇒ benchdiff treats it as higher-is-worse:
+    // predictor drift trips the gate even while the sort stays correct.
+    rec.scalar("sort_pred_rel_err", worst_rel);
+    rec.scalar("sort_sweep_makespan_seconds", makespan);
+    rec.scalar("sort_sweep_speedup", sweep.speedup());
+    rec.scalar("sort_sweep_occupancy", sweep.occupancy());
+    rec.write("BENCH_sort.json").expect("write BENCH_sort.json");
+    println!("trajectory written to BENCH_sort.json");
+}

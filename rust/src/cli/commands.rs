@@ -39,11 +39,12 @@ USAGE:
   bsps run inprod --n <len> --c <token> [--pjrt] [--no-prefetch]
   bsps run cannon --n <size> --m <outer-blocks> [--pjrt]
   bsps run spmv --n <size> --nnz <per-row> --rows <per-token>
-  bsps run sort --n <len> --c <token>
+  bsps run sort --n <len> --c <token> [--chunk <words>] [--oversample <σ>]
   bsps run video --frames <count> --pixels <per-frame>
   bsps analyze --algo <inprod|cannon|cannon_ml|spmv|sort|video|racy|all>
                [--mode warn|deny] [--expect <finding-kind>]
-  bsps sweep [--cores <budget>] [--jobs <n>x<M>,<n>x<M>,…] [--check]
+  bsps sweep [--algo cannon|sort] [--cores <budget>] [--check]
+             [--jobs <n>x<M>,…] [--sizes <len>,<len>,…]
   bsps benchdiff <old.json> <new.json> [--max-regress 0.15]
                  [--max-scalar-rel 0.15]
 
@@ -55,10 +56,15 @@ barrier divergence, scratchpad over-budget, stream token races — while
 warn logs findings and lets the run finish. `racy` is a deliberately
 conflicting fixture the analyzer must flag; `all` sweeps every shipped
 algorithm plus the fixture (the CI invocation).
-sweep runs the Fig. 5 Cannon points concurrently through the multi-gang
-scheduler under a global core budget (default: host parallelism, raised
-to the largest gang); --check re-runs each point serially and verifies
-the scheduled products are byte-identical.
+sweep runs the Fig. 5 Cannon points (--algo cannon, --jobs) or a sort
+size sweep (--algo sort, --sizes — sizes past the scratchpad take the
+multi-pass spill path) concurrently through the multi-gang scheduler
+under a global core budget (default: host parallelism, raised to the
+largest gang); --check re-runs each point serially and verifies the
+scheduled outputs are byte-identical.
+run sort streams a dataset of any size through the out-of-core sample
+sort: --chunk caps the scratchpad run length (forcing extra merge
+passes), --oversample sets the regular-sampling ratio σ.
 Paper benches: cargo bench (see rust/benches/, one per table/figure);
 benchdiff compares two BENCH_<suite>.json trajectory files and errors
 on throughput regressions beyond the threshold and on trajectory
@@ -206,35 +212,77 @@ fn sweep_cmd(args: &Args) -> Result<String> {
          could ever be admitted",
         machine.p
     );
-    let points = parse_sweep_points(args.get("jobs").unwrap_or("64x2,128x4,128x2"))?;
-    let (jobs, gangs) = crate::algos::cannon_ml::sweep_jobs(
-        &machine,
-        &points,
-        args.get_usize("seed", 42)? as u64,
-    )?;
-
-    let sched = GangScheduler::new(cores);
-    let out = sched.run(jobs);
-    let sweep = SweepReport::from_sched(&out);
-    let mut text = sweep.render();
-
-    if args.flag("check") {
-        for (i, gang) in gangs.iter().enumerate() {
-            // Failed gangs are already reported as FAILED above.
-            let Some(report) = sweep.gangs[i].report.as_ref() else {
-                continue;
-            };
-            crate::algos::cannon_ml::verify_scheduled_identity(&machine, gang, report)?;
-            text.push_str(&format!(
-                "  check {}: byte-identical to serial ✓\n",
-                gang.name
-            ));
+    let seed = args.get_usize("seed", 42)? as u64;
+    let algo = args.get("algo").unwrap_or("cannon");
+    match algo {
+        "cannon" => {
+            let points = parse_sweep_points(args.get("jobs").unwrap_or("64x2,128x4,128x2"))?;
+            let (jobs, gangs) = crate::algos::cannon_ml::sweep_jobs(&machine, &points, seed)?;
+            let sched = GangScheduler::new(cores);
+            let out = sched.run(jobs);
+            let sweep = SweepReport::from_sched(&out);
+            let mut text = sweep.render();
+            if args.flag("check") {
+                for (i, gang) in gangs.iter().enumerate() {
+                    // Failed gangs are already reported as FAILED above.
+                    let Some(report) = sweep.gangs[i].report.as_ref() else {
+                        continue;
+                    };
+                    crate::algos::cannon_ml::verify_scheduled_identity(&machine, gang, report)?;
+                    text.push_str(&format!(
+                        "  check {}: byte-identical to serial ✓\n",
+                        gang.name
+                    ));
+                }
+            }
+            if sweep.failed() > 0 {
+                bail!("{text}sweep: {} gang(s) failed", sweep.failed());
+            }
+            Ok(text)
         }
+        "sort" => {
+            let sizes = parse_sweep_sizes(args.get("sizes").unwrap_or("4096,16384,65536"))?;
+            let cfg = crate::algos::sort::SortConfig::default();
+            let (jobs, gangs) = crate::algos::sort::sweep_jobs(&machine, &sizes, cfg, seed)?;
+            let sched = GangScheduler::new(cores);
+            let out = sched.run(jobs);
+            let sweep = SweepReport::from_sched(&out);
+            let mut text = sweep.render();
+            if args.flag("check") {
+                for (i, gang) in gangs.iter().enumerate() {
+                    let Some(report) = sweep.gangs[i].report.as_ref() else {
+                        continue;
+                    };
+                    let serial =
+                        crate::algos::sort::verify_scheduled_identity(&machine, gang, report)?;
+                    text.push_str(&format!(
+                        "  check {}: byte-identical to serial ✓ (passes = {})\n",
+                        gang.name, serial.max_passes
+                    ));
+                }
+            }
+            if sweep.failed() > 0 {
+                bail!("{text}sweep: {} gang(s) failed", sweep.failed());
+            }
+            Ok(text)
+        }
+        other => bail!("sweep: unknown --algo `{other}` (cannon|sort)"),
     }
-    if sweep.failed() > 0 {
-        bail!("{text}sweep: {} gang(s) failed", sweep.failed());
+}
+
+/// Parse a `--sizes` spec: comma-separated input lengths for the sort
+/// sweep.
+fn parse_sweep_sizes(spec: &str) -> Result<Vec<usize>> {
+    let mut sizes = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        let n: usize = part
+            .parse()
+            .map_err(|_| anyhow!("--sizes: bad input length `{part}`"))?;
+        sizes.push(n);
     }
-    Ok(text)
+    ensure!(!sizes.is_empty(), "--sizes: empty spec");
+    Ok(sizes)
 }
 
 /// `bsps benchdiff <old.json> <new.json>`: the perf-trajectory gate.
@@ -548,13 +596,35 @@ fn run_cmd(args: &Args) -> Result<String> {
         "sort" => {
             let n = args.get_usize("n", 16384)?;
             let c = args.get_usize("c", 64)?;
+            let chunk = match args.get("chunk") {
+                Some(s) => Some(
+                    s.parse::<usize>()
+                        .map_err(|_| anyhow!("run sort: bad --chunk `{s}`"))?,
+                ),
+                None => None,
+            };
+            let oversample = args.get_usize("oversample", 4)?;
             let data = rng.f32_vec(n, -1000.0, 1000.0);
-            let run = crate::algos::sort::run(&env, &data, c)?;
+            let cfg = crate::algos::sort::SortConfig {
+                token_words: c,
+                chunk_words: chunk,
+                oversample,
+            };
+            let run = crate::algos::sort::run_with(&env, &data, cfg)?;
             let sorted_ok = run.sorted.windows(2).all(|w| w[0] <= w[1]);
+            let trace = maybe_trace(args, &run.report.rows, &env.machine)?;
             Ok(format!(
-                "streaming sample sort n={n} C={c}\nsorted: {sorted_ok}, buckets = {:?}\n{}",
-                run.bucket_sizes,
-                run.report.render()
+                "streaming sample sort n={n} C={c} chunk={} σ={oversample}\n\
+                 sorted: {sorted_ok}, passes = {} (ε = {:.3}), max bucket = {} / bound {}\n{}\n\
+                 predicted (Eq.1): {} hypersteps, {}{trace}",
+                run.geometry.chunk_words,
+                run.max_passes,
+                run.geometry.epsilon,
+                run.bucket_sizes.iter().max().copied().unwrap_or(0),
+                run.geometry.bucket_bound_words,
+                run.report.render(),
+                run.predicted.hypersteps,
+                humanfmt::seconds(run.predicted.seconds),
             ))
         }
         "video" => {
@@ -675,6 +745,30 @@ mod tests {
     }
 
     #[test]
+    fn run_sort_out_of_core_reports_pass_count() {
+        // --chunk 256 < n/p forces every bucket (≥ 1024 elements by
+        // pigeonhole) through run formation + k-way merge: multi-pass.
+        let out = run("run sort --n 16384 --c 64 --chunk 256").unwrap();
+        assert!(out.contains("sorted: true"), "{out}");
+        assert!(!out.contains("passes = 1 ("), "{out}");
+        // A small input whose balance bound fits one chunk is
+        // guaranteed the direct single-pass path.
+        let out = run("run sort --n 2048 --c 64").unwrap();
+        assert!(out.contains("sorted: true"), "{out}");
+        assert!(out.contains("passes = 1 ("), "{out}");
+    }
+
+    #[test]
+    fn sweep_sort_runs_through_the_scheduler_and_checks_serial_identity() {
+        let out = run("sweep --algo sort --cores 32 --sizes 2048,4096 --check").unwrap();
+        assert!(out.contains("gang sort_n2048"), "{out}");
+        assert!(out.contains("gang sort_n4096"), "{out}");
+        assert!(out.contains("failed=0"), "{out}");
+        assert!(out.contains("check sort_n2048: byte-identical to serial"), "{out}");
+        assert!(out.contains("check sort_n4096: byte-identical to serial"), "{out}");
+    }
+
+    #[test]
     fn sweep_rejects_bad_specs_and_tiny_budgets() {
         let err = run("sweep --jobs banana").unwrap_err().to_string();
         assert!(err.contains("not of the form"), "{err}");
@@ -685,6 +779,13 @@ mod tests {
         // A budget smaller than one gang can never admit anything.
         let err = run("sweep --cores 4 --jobs 16x2").unwrap_err().to_string();
         assert!(err.contains("smaller than one 16-core gang"), "{err}");
+        let err = run("sweep --algo sort --sizes pear").unwrap_err().to_string();
+        assert!(err.contains("bad input length"), "{err}");
+        // Sort sizes must divide p·C; the point is rejected upfront.
+        let err = run("sweep --algo sort --sizes 1000").unwrap_err().to_string();
+        assert!(err.contains("sweep point n=1000"), "{err}");
+        let err = run("sweep --algo frobsort").unwrap_err().to_string();
+        assert!(err.contains("unknown --algo"), "{err}");
     }
 
     fn write_scalar_snapshot(name: &str, scalars: &[(&str, f64)]) -> String {

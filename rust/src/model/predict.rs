@@ -1,5 +1,6 @@
 //! Closed-form BSPS cost predictions for the paper's two worked
-//! algorithms (§3), and the `k_equal` crossover of §6.
+//! algorithms (§3), the `k_equal` crossover of §6, and the out-of-core
+//! sample sort of §7 (geometry + Eq. 1 walk shared with `algos::sort`).
 
 use crate::model::params::AcceleratorParams;
 
@@ -117,6 +118,319 @@ pub fn k_equal_full(m: &AcceleratorParams, k_max: usize) -> Option<usize> {
         .max()
 }
 
+// --------------------------------------------------------------- sort
+
+/// Geometry of the out-of-core pseudo-streaming sample sort (paper §7,
+/// recipe per Gerbessiotis & Siniolakis): every derived size the kernel
+/// and the Eq. 1 predictor must agree on, computed once from
+/// `(machine, n, token, chunk, oversample)`. Single source of truth —
+/// `algos::sort` plans its streams from this struct and
+/// [`sort_cost`] walks the same numbers, so measured-vs-predicted
+/// disagreement can only come from data (bucket imbalance), never from
+/// drifting formulas.
+#[derive(Debug, Clone)]
+pub struct SortGeometry {
+    /// Cores.
+    pub p: usize,
+    /// Total input length in words.
+    pub n: usize,
+    /// Per-core partition length `n / p`.
+    pub per_core: usize,
+    /// Stream token size in words.
+    pub token_words: usize,
+    /// Scratchpad chunk = sorted-run length, words (multiple of the
+    /// token size; this is the working-set ceiling the spill path turns
+    /// into a pass count).
+    pub chunk_words: usize,
+    /// Sorted sampling runs per core, `ceil(per_core / chunk)`.
+    pub sample_runs: usize,
+    /// Regular-sampling gap `g` within each sorted run.
+    pub sample_gap: usize,
+    /// Samples taken per core (identical on every core).
+    pub samples_per_core: usize,
+    /// Deterministic bucket-size bound: with regular samples of gap `g`
+    /// from `p·R` sorted runs and splitters every `samples_per_core`
+    /// ranks, every bucket holds at most
+    /// `g·(samples_per_core + p·R) = (1+ε)·n/p` elements.
+    pub bucket_bound_words: usize,
+    /// The proven slack `ε = bucket_bound / (n/p) − 1`.
+    pub epsilon: f64,
+    /// Exchange-stream capacity per bucket, tokens:
+    /// `ceil(bound/token) + p` (count prefix + per-source rounding) —
+    /// the `(1+ε)·n/p` sizing that replaces the old `O(n)` worst case.
+    pub bucket_cap_tokens: usize,
+    /// Per-core sample stream length, tokens (value/index pairs).
+    pub sample_tokens: usize,
+    /// Spill-stream capacity per core, tokens (runs are token-aligned).
+    pub spill_cap_tokens: usize,
+    /// Output-stream capacity per core, tokens (`[count, elems…]`).
+    pub out_tokens: usize,
+    /// K-way merge fan-in `F` (staging buffers the scratchpad affords).
+    pub fanin: usize,
+    /// Upper bound on sorted runs a bucket can spill.
+    pub max_runs: usize,
+    /// Whether the gang runs the double-buffered prefetch executor.
+    pub prefetch: bool,
+}
+
+impl SortGeometry {
+    /// FLOPs charged for sorting `len` elements in scratchpad.
+    #[must_use]
+    pub fn sort_flops(&self, len: usize) -> f64 {
+        let l = len.max(2) as f64;
+        l * l.log2()
+    }
+
+    /// FLOPs charged for routing `len` elements through the splitter
+    /// search (binary search over `p−1` splitters).
+    #[must_use]
+    pub fn route_flops(&self, len: usize) -> f64 {
+        len as f64 * (self.p as f64).log2().max(1.0)
+    }
+
+    /// FLOPs charged for merging `len` elements at fan-in `F`.
+    #[must_use]
+    pub fn merge_flops(&self, len: usize) -> f64 {
+        len as f64 * (self.fanin as f64).log2().max(1.0)
+    }
+
+    /// Merge levels needed to reduce `runs` sorted runs to one at this
+    /// geometry's fan-in (0 when the bucket forms a single run).
+    #[must_use]
+    pub fn merge_levels(&self, runs: usize) -> usize {
+        let mut r = runs.max(1);
+        let mut levels = 0;
+        while r > 1 {
+            r = r.div_ceil_(self.fanin);
+            levels += 1;
+        }
+        levels
+    }
+
+    /// Passes a bucket of `len` elements makes through external memory
+    /// in the merge phase: 1 when it fits one scratchpad chunk, else
+    /// run formation + one per merge level + the output copy.
+    #[must_use]
+    pub fn merge_passes(&self, len: usize) -> usize {
+        let runs = len.div_ceil_(self.chunk_words).max(1);
+        if runs <= 1 {
+            1
+        } else {
+            1 + self.merge_levels(runs) + 1
+        }
+    }
+}
+
+/// `ceil(a / b)` without the 1.73-stable `usize::div_ceil` (MSRV 1.70).
+trait DivCeil {
+    fn div_ceil_(self, b: Self) -> Self;
+}
+
+impl DivCeil for usize {
+    fn div_ceil_(self, b: usize) -> usize {
+        (self + b - 1) / b
+    }
+}
+
+/// Derive the sort geometry. `chunk_words` of `None` picks the largest
+/// scratchpad chunk the prefetch mode affords; `oversample` is the
+/// Gerbessiotis–Siniolakis oversampling ratio σ (samples per run target
+/// `σ·p`, capped by the sample-gather scratchpad budget). Requires
+/// `p·token_words | n` and a partition small enough for exact `f32`
+/// tie-break indices.
+pub fn sort_geometry(
+    m: &AcceleratorParams,
+    n: usize,
+    token_words: usize,
+    chunk_words: Option<usize>,
+    oversample: usize,
+    prefetch: bool,
+) -> crate::util::error::Result<SortGeometry> {
+    use crate::util::error::ensure;
+    let p = m.p;
+    ensure!(token_words > 0 && n % (p * token_words) == 0, "p·C | n required");
+    let per_core = n / p;
+    ensure!(per_core < (1 << 24), "per-core partition must index exactly in f32");
+    let local = m.effective_local_words(prefetch);
+    let default_chunk = ((local / 4).max(token_words) / token_words) * token_words;
+    let chunk = chunk_words.unwrap_or(default_chunk);
+    ensure!(
+        chunk >= token_words && chunk % token_words == 0,
+        "chunk must be a positive multiple of the token size"
+    );
+    ensure!(
+        chunk <= local / 2,
+        "chunk must fit the scratchpad working set (≤ {} words)",
+        local / 2
+    );
+    let sample_runs = per_core.div_ceil_(chunk).max(1);
+    // Samples per run: target σ·p, capped so the gathered p·s_pc
+    // value/index pairs fit the sample scratchpad budget.
+    let sample_budget = (local / 4).max(4 * p);
+    let s_pc_cap = (sample_budget / (2 * p)).max(1);
+    let s_r = (oversample.max(1) * p).min(s_pc_cap.div_ceil_(sample_runs)).max(1);
+    let full_run = chunk.min(per_core).max(1);
+    let gap = full_run.div_ceil_(s_r).max(1);
+    let last_run = per_core - (sample_runs - 1) * chunk.min(per_core);
+    let samples_per_core = ((sample_runs - 1) * (full_run / gap) + last_run / gap).max(1);
+    let bound = (gap * (samples_per_core + p * sample_runs)).min(n.max(1));
+    let epsilon = if per_core > 0 { bound as f64 / per_core as f64 - 1.0 } else { 0.0 };
+    let bucket_cap_tokens = bound.div_ceil_(token_words) + p;
+    let sample_tokens = (2 * samples_per_core).div_ceil_(token_words);
+    let max_runs = bound.div_ceil_(chunk).max(1);
+    let spill_cap_tokens = bound.div_ceil_(token_words) + max_runs + 1;
+    let out_tokens = (1 + bound).div_ceil_(token_words);
+    let fanin = ((local / 4) / token_words).clamp(2, 8);
+    Ok(SortGeometry {
+        p,
+        n,
+        per_core,
+        token_words,
+        chunk_words: chunk,
+        sample_runs,
+        sample_gap: gap,
+        samples_per_core,
+        bucket_bound_words: bound,
+        epsilon,
+        bucket_cap_tokens,
+        sample_tokens,
+        spill_cap_tokens,
+        out_tokens,
+        fanin,
+        max_runs,
+        prefetch,
+    })
+}
+
+/// Closed-form Eq. 1 prediction for the out-of-core sample sort.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SortPrediction {
+    /// Hypersteps across all phases (ledger rows).
+    pub hypersteps: usize,
+    /// Merge passes through `E` under perfect balance (`B = n/p`).
+    pub passes: usize,
+    /// Total cost, FLOPs (Σ over hypersteps of `max(T_h, e·fetch)`).
+    pub flops: f64,
+    /// Total cost, seconds.
+    pub seconds: f64,
+    /// Words exchanged through the bucket streams (the `E`-routed
+    /// h-relation: one write + one read of every element, plus count
+    /// prefixes).
+    pub exchange_words: u64,
+    /// Total stream words moved through `E` across all phases.
+    pub stream_words: u64,
+    /// Whether the dominant phases are bandwidth heavy.
+    pub bandwidth_heavy: bool,
+}
+
+/// Walk the sort's hyperstep schedule under perfect balance
+/// (`B_t = n/p` for every bucket) and price each row with Eq. 1:
+/// `max(T_h, e·fetch)` when prefetching overlaps the token traffic,
+/// `max(T_h + e·reads, e·writes)` when it does not (cold reads stall
+/// the compute side; `move_up` stays on the DMA side either way).
+#[must_use]
+pub fn sort_cost(m: &AcceleratorParams, geom: &SortGeometry) -> SortPrediction {
+    let g = geom;
+    let pf = g.p as f64;
+    let mut hypersteps = 0usize;
+    let mut flops = 0.0f64;
+    let mut stream_words = 0u64;
+
+    let mut row = |compute: f64, down: u64, up: u64, rows: usize| {
+        let cost = if g.prefetch {
+            (compute + m.l).max(m.e * (down + up) as f64)
+        } else {
+            (compute + m.l + m.e * down as f64).max(m.e * up as f64)
+        };
+        flops += rows as f64 * cost;
+        hypersteps += rows;
+        stream_words += rows as u64 * (down + up);
+    };
+
+    let chunk = g.chunk_words;
+    let per_core = g.per_core;
+    let last = per_core - (g.sample_runs - 1) * chunk.min(per_core);
+
+    // Setup — variable registration barrier (one empty hyperstep).
+    row(0.0, 0, 0, 1);
+    // Phase 1 — sample: stream the partition once in sorted chunks.
+    for r in 0..g.sample_runs {
+        let len = if r + 1 == g.sample_runs { last } else { chunk };
+        row(g.sort_flops(len), len as u64, 0, 1);
+    }
+    // Sample write-up, then p staggered gather rounds + splitter sort.
+    row(0.0, 0, (g.sample_tokens * g.token_words) as u64, 1);
+    let all = (g.p * g.samples_per_core).max(2) as f64;
+    for r in 0..g.p {
+        let sort = if r + 1 == g.p { all * all.log2() } else { 0.0 };
+        row(sort, (g.sample_tokens * g.token_words) as u64, 0, 1);
+    }
+
+    // Phase 2a — count pass over the partition.
+    for r in 0..g.sample_runs {
+        let len = if r + 1 == g.sample_runs { last } else { chunk };
+        row(g.route_flops(len), len as u64, 0, 1);
+    }
+    // Counts exchange: every core broadcasts its p counts, an
+    // h-relation of p·(p−1) words, closed as its own hyperstep.
+    row(pf * (pf - 1.0) * m.g, 0, 0, 1);
+    // Phase 2b — write pass: per chunk, one route hyperstep then p
+    // staggered flush rounds (the last chunk's rounds also flush the
+    // partial-token carries). Balanced: every core sends per_core
+    // words + p count words, token-rounded.
+    let sent = (per_core + g.p) as u64;
+    let rounds = (g.sample_runs * g.p) as u64;
+    for r in 0..g.sample_runs {
+        let len = if r + 1 == g.sample_runs { last } else { chunk };
+        row(g.route_flops(len), len as u64, 0, 1);
+        row(0.0, 0, sent / rounds, g.p);
+    }
+
+    // Phase 3 — merge. Balanced bucket B = n/p arriving as p segments.
+    let bucket = per_core;
+    let runs = bucket.div_ceil_(chunk).max(1);
+    let direct = runs <= 1;
+    if direct {
+        row(g.sort_flops(bucket), (bucket + g.p) as u64, 0, 1);
+    } else {
+        for r in 0..runs {
+            let len = if r + 1 == runs { bucket - (runs - 1) * chunk } else { chunk };
+            row(g.sort_flops(len), len as u64 + (g.p as u64) / runs as u64, len as u64, 1);
+        }
+        let mut r = runs;
+        while r > 1 {
+            let groups = r.div_ceil_(g.fanin);
+            let per_group = bucket.div_ceil_(groups);
+            row(
+                g.merge_flops(per_group),
+                per_group as u64,
+                per_group as u64,
+                groups,
+            );
+            r = groups;
+        }
+    }
+    // Output copy: stream the sorted bucket up as [count, elems…].
+    let (down, up) = if direct {
+        (0, (bucket + 1) as u64)
+    } else {
+        (bucket as u64, (bucket + 1) as u64)
+    };
+    row(bucket as f64, down, up, 1);
+
+    let exchange_words = 2 * (g.n + g.p * g.p) as u64;
+    let per_pass_fetch = m.e * chunk as f64;
+    SortPrediction {
+        hypersteps,
+        passes: g.merge_passes(bucket),
+        flops,
+        seconds: m.flops_to_seconds(flops),
+        exchange_words,
+        stream_words,
+        bandwidth_heavy: per_pass_fetch >= g.sort_flops(chunk),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,5 +523,54 @@ mod tests {
     #[should_panic]
     fn cannon_rejects_indivisible() {
         let _ = cannon_cost(&m(), 100, 3);
+    }
+
+    #[test]
+    fn sort_geometry_bound_is_one_plus_epsilon() {
+        let mm = m();
+        let g = sort_geometry(&mm, 16 * 64 * 16, 64, None, 4, true).unwrap();
+        assert_eq!(g.per_core, 1024);
+        assert!(g.bucket_bound_words >= g.per_core);
+        let bound = (1.0 + g.epsilon) * g.per_core as f64;
+        assert!((g.bucket_bound_words as f64 - bound).abs() < 1.0);
+        // The (1+ε)·n/p sizing must beat the old O(n) worst case.
+        assert!(g.bucket_cap_tokens * g.token_words < g.n);
+    }
+
+    #[test]
+    fn sort_geometry_rejects_indivisible_and_bad_chunks() {
+        let mm = m();
+        assert!(sort_geometry(&mm, 1000, 64, None, 4, true).is_err());
+        assert!(sort_geometry(&mm, 16 * 64, 64, Some(65), 4, true).is_err());
+    }
+
+    #[test]
+    fn sort_cost_out_of_core_has_multiple_passes() {
+        let mm = m();
+        // Chunk of 64 words against 1024-word buckets: 16 runs spill.
+        let g = sort_geometry(&mm, 16 * 64 * 16, 64, Some(64), 4, true).unwrap();
+        let pred = sort_cost(&mm, &g);
+        assert!(pred.passes > 1, "spill path must show as a pass count");
+        assert!(pred.hypersteps > 0 && pred.flops > 0.0);
+        assert_eq!(pred.exchange_words, 2 * (g.n as u64 + 256));
+    }
+
+    #[test]
+    fn sort_cost_in_core_is_single_pass() {
+        let mm = m();
+        let g = sort_geometry(&mm, 16 * 64 * 2, 64, None, 4, true).unwrap();
+        assert!(g.chunk_words >= g.per_core, "128-word buckets fit one chunk");
+        let pred = sort_cost(&mm, &g);
+        assert_eq!(pred.passes, 1);
+    }
+
+    #[test]
+    fn sort_cost_prefetch_is_cheaper_than_serial() {
+        let mm = m();
+        let gp = sort_geometry(&mm, 16 * 64 * 16, 64, Some(256), 4, true).unwrap();
+        let gs = sort_geometry(&mm, 16 * 64 * 16, 64, Some(256), 4, false).unwrap();
+        let tp = sort_cost(&mm, &gp).flops;
+        let ts = sort_cost(&mm, &gs).flops;
+        assert!(tp < ts, "overlap must price below blocking fetches: {tp} vs {ts}");
     }
 }

@@ -8,8 +8,10 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
+use bsps::algos::sort::{self, SortConfig};
 use bsps::bsp::sched::{GangJob, GangScheduler};
 use bsps::bsp::{run_gang, Ctx};
+use bsps::coordinator::SweepReport;
 use bsps::model::params::AcceleratorParams;
 use bsps::util::prng::SplitMix64;
 
@@ -171,6 +173,51 @@ fn failure_injection_retires_the_faulty_gang_without_wedging() {
     let kern = stress_kernel(99, Arc::clone(&sink));
     let _ = run_gang(&machine(4), None, false, |ctx| kern(ctx));
     assert_eq!(sink.lock().unwrap().len(), 4);
+}
+
+#[test]
+fn out_of_core_sort_gangs_survive_the_scheduler() {
+    // Two out-of-core sort gangs (p = 16, chunk pinned far below n/p so
+    // every bucket takes the spill/merge path) interleaved with
+    // comm-heavy stress gangs under a shared budget. Each sort must come
+    // out byte-identical to its own serial execution — external-memory
+    // streams and the multi-pass merge must not observe scheduling.
+    let m16 = machine(16);
+    let cfg = SortConfig { token_words: 16, chunk_words: Some(64), oversample: 4 };
+    let (mut jobs, gangs) = sort::sweep_jobs(&m16, &[4096, 8192], cfg, 77).unwrap();
+    let mut sinks = Vec::new();
+    for i in 0..4u64 {
+        let sink = Arc::new(Mutex::new(BTreeMap::new()));
+        jobs.push(GangJob::new(
+            &format!("mix{i}"),
+            machine(4),
+            stress_kernel(700 + i, Arc::clone(&sink)),
+        ));
+        sinks.push(sink);
+    }
+    // Budget 20: one 16-wide sort gang plus a 4-wide stress gang can
+    // overlap, so the sorts genuinely share the machine.
+    let out = GangScheduler::new(20).run(jobs);
+    let sweep = SweepReport::from_sched(&out);
+    for (i, gang) in gangs.iter().enumerate() {
+        let report = sweep.gangs[i]
+            .report
+            .as_ref()
+            .unwrap_or_else(|| panic!("{} failed under scheduling", gang.name));
+        let serial = sort::verify_scheduled_identity(&m16, gang, report)
+            .unwrap_or_else(|e| panic!("{}: {e}", gang.name));
+        assert!(
+            serial.max_passes > 1,
+            "{}: scheduler stress point must take the spill path",
+            gang.name
+        );
+    }
+    for (i, sink) in sinks.iter().enumerate() {
+        let job = &out.jobs[gangs.len() + i];
+        assert!(job.outcome.is_ok(), "{}: {:?}", job.name, job.outcome.as_ref().err());
+        assert_eq!(sink.lock().unwrap().len(), 4, "all 4 pids reported");
+    }
+    assert!(out.stats.peak_cores <= 20, "peak {}", out.stats.peak_cores);
 }
 
 #[test]
