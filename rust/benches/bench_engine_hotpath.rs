@@ -13,10 +13,15 @@
 //! run over run.
 
 use std::sync::Arc;
+use std::time::Duration;
 
-use bsps::bsp::{run_gang, run_gang_cfg, AnalysisMode, GangConfig};
+use bsps::bsp::{
+    run_gang, run_gang_cfg, AnalysisMode, CheckpointPolicy, FaultMode, FaultSite, GangConfig,
+    GangJob, GangScheduler, RetryPolicy,
+};
 use bsps::coordinator::ComputeBackend;
 use bsps::model::params::AcceleratorParams;
+use bsps::model::predict;
 use bsps::stream::StreamRegistry;
 use bsps::util::benchtool::{bench, bench_throughput, section, BenchConfig, BenchRecorder};
 
@@ -122,6 +127,92 @@ fn main() {
     });
     println!("{}", r.row());
     rec.push(&r);
+
+    section("checkpoint overhead & recovery replay (p=16, 64 hypersteps, k=8)");
+    // A barrier-consistent checkpoint is an e-priced external-memory
+    // write folded into the Eq. 1 ledger; `model::predict::checkpoint_cost`
+    // states the same overhead in closed form. Three trajectory scalars
+    // gate the fault subsystem's cost: the measured ledger overhead, its
+    // relative error against the closed form, and the fraction of
+    // hypersteps a checkpoint-recovered gang replays. All three are
+    // higher-is-worse under their benchdiff bands.
+    let m = machine(16);
+    fn ck_kernel(ctx: &mut bsps::bsp::Ctx) {
+        let x = ctx.register("state", 64).unwrap();
+        let h = ctx.stream_open(ctx.pid()).unwrap();
+        let start = ctx.resume_hyperstep();
+        if start > 0 {
+            ctx.stream_seek(h, start as i64).unwrap();
+        }
+        let mut tok = Vec::new();
+        for _ in start..64 {
+            ctx.stream_move_down(h, &mut tok).unwrap();
+            ctx.with_var_mut(x, |buf| {
+                for (b, w) in buf.iter_mut().zip(&tok) {
+                    *b += *w;
+                }
+            });
+            ctx.hyperstep_sync();
+        }
+        ctx.stream_close(h).unwrap();
+    }
+    let mk_reg = |m: &AcceleratorParams| {
+        let mut reg = StreamRegistry::new(m);
+        for _ in 0..16 {
+            reg.create(64 * 64, 64, None).unwrap();
+        }
+        Arc::new(reg)
+    };
+    let plain = run_gang_cfg(&m, Some(mk_reg(&m)), true, GangConfig::default(), ck_kernel);
+    let ck_cfg = GangConfig {
+        checkpoint: Some(CheckpointPolicy::every(8)),
+        ..Default::default()
+    };
+    let ckpt = run_gang_cfg(&m, Some(mk_reg(&m)), true, ck_cfg, ck_kernel);
+    let plain_flops = plain.ledger.total_flops(&m);
+    let ckpt_flops = ckpt.ledger.total_flops(&m);
+    let ck_overhead = ckpt_flops / plain_flops;
+    println!(
+        "  checkpoint_overhead = {ck_overhead:.4}x ({} words checkpointed)",
+        ckpt.checkpoint_words
+    );
+    rec.scalar("checkpoint_overhead", ck_overhead);
+    let checkpoints = 64u64 / 8;
+    let predicted = predict::checkpoint_cost(&m, 64, 8, ckpt.checkpoint_words / checkpoints);
+    let measured_extra = ckpt_flops - plain_flops;
+    let pred_rel_err = (measured_extra - predicted.flops).abs() / predicted.flops.max(1.0);
+    println!(
+        "  checkpoint_pred_rel_err = {pred_rel_err:.2e} \
+         (measured {measured_extra:.1} vs closed form {:.1} FLOPs)",
+        predicted.flops
+    );
+    rec.scalar("checkpoint_pred_rel_err", pred_rel_err);
+
+    // One real recovery through the scheduler: kill the gang at
+    // hyperstep 13, resume from the checkpoint at 8, replay 5 of 64.
+    let fault_cfg = GangConfig {
+        fault: FaultMode::single(FaultSite::KernelPanic, 3, 13),
+        barrier_timeout: Some(Duration::from_secs(10)),
+        checkpoint: Some(CheckpointPolicy::every(8)),
+        ..Default::default()
+    };
+    let job = GangJob::new("recovery_replay", m.clone(), ck_kernel)
+        .with_streams(mk_reg(&m), true)
+        .with_cfg(fault_cfg)
+        .with_retry(RetryPolicy::retries(2, Duration::ZERO));
+    let sched = GangScheduler::new(16).run(vec![job]);
+    let jr = &sched.jobs[0];
+    assert!(jr.outcome.is_ok(), "recovery bench job must recover");
+    let info = jr.recovery.expect("a retried job records its recovery");
+    let replay_ratio = info.lost_hypersteps as f64 / 64.0;
+    println!(
+        "  recovery_replay_ratio = {replay_ratio:.4} (attempts={}, resumed from {:?}, \
+         predicted replay {})",
+        jr.attempts,
+        info.resumed_from,
+        predict::replay_hypersteps(8, 13)
+    );
+    rec.scalar("recovery_replay_ratio", replay_ratio);
 
     section("token-compute dispatch (k=8 block mm_acc)");
     let native = ComputeBackend::Native;

@@ -16,6 +16,11 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Condvar tick for the watchdog / abandoned-wait park loops: bounds
+/// how stale a poison or timeout check can get while parked.
+const WATCHDOG_TICK: Duration = Duration::from_millis(5);
 
 /// Poisonable barrier for `p` cores.
 pub struct Barrier {
@@ -29,6 +34,15 @@ pub struct Barrier {
     /// the host (spinning then only burns the timeslices the stragglers
     /// need), a few thousand when cores are plentiful.
     spin_iters: u32,
+    /// Watchdog limit: a parked waiter that sees no progress for this
+    /// long poisons the gang, naming the cores that never arrived
+    /// (diagnosed from [`Barrier::arrive_hint`] stamps) instead of
+    /// letting the gang wedge. `None` = wait forever (the default).
+    timeout: Option<Duration>,
+    /// Per-pid arrival stamps for the watchdog diagnostic: pid `s`
+    /// stores `generation + 1` when it reaches a crossing. Monotone —
+    /// a stamp `<= gen` means the core never showed up for `gen`.
+    stamps: Vec<AtomicU64>,
     /// Diagnostic armed by [`Barrier::defect`]; replaces the generic
     /// poison message so stalled cores report *why* the gang can never
     /// release them (e.g. the analyzer's barrier-divergence findings).
@@ -47,9 +61,23 @@ pub struct WaitResult {
 }
 
 impl Barrier {
-    /// A barrier for `p` cores.
+    /// A barrier for `p` cores with no watchdog (waits forever).
     #[must_use]
     pub fn new(p: usize) -> Self {
+        Self::with_timeout(p, None)
+    }
+
+    /// A barrier for `p` cores with an optional watchdog limit: a
+    /// parked waiter that observes no generation progress for `timeout`
+    /// poisons the gang with a diagnostic naming the missing pids
+    /// (see [`Barrier::arrive_hint`]) instead of wedging forever.
+    ///
+    /// The limit must comfortably exceed the longest legitimate gap
+    /// between any two cores' arrivals at a crossing (i.e. the worst
+    /// per-superstep compute skew), or the watchdog will misdiagnose a
+    /// straggler as dead.
+    #[must_use]
+    pub fn with_timeout(p: usize, timeout: Option<Duration>) -> Self {
         assert!(p > 0);
         let host_cores = std::thread::available_parallelism()
             .map(|n| n.get())
@@ -60,10 +88,24 @@ impl Barrier {
             generation: AtomicU64::new(0),
             poisoned: AtomicBool::new(false),
             spin_iters: if host_cores > p { 4096 } else { 0 },
+            timeout,
+            stamps: (0..p).map(|_| AtomicU64::new(0)).collect(),
             defect_msg: Mutex::new(None),
             lock: Mutex::new(()),
             cv: Condvar::new(),
         }
+    }
+
+    /// Record that core `pid` has reached the upcoming crossing, for
+    /// the watchdog's missing-pid diagnostic. Callers that enable a
+    /// timeout (the engine) must hint immediately before **every**
+    /// [`Barrier::wait_leader`] crossing; a core that skips the hint
+    /// looks permanently missing once the watchdog fires. Free beyond
+    /// one atomic store, and a no-op concern when no timeout is set.
+    #[inline]
+    pub fn arrive_hint(&self, pid: usize) {
+        let gen = self.generation.load(Ordering::Acquire);
+        self.stamps[pid].store(gen.wrapping_add(1), Ordering::Release);
     }
 
     #[inline]
@@ -113,16 +155,63 @@ impl Barrier {
             }
             std::hint::spin_loop();
         }
-        // Slow path: park until the generation advances.
+        // Slow path: park until the generation advances. With a
+        // watchdog limit configured, park in ticks and — once the limit
+        // elapses with no progress — poison the gang, naming the pids
+        // whose arrive-hint stamps never reached this generation.
+        let mut start = Instant::now();
         let mut g = self.lock.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if self.generation.load(Ordering::Acquire) != gen {
                 return WaitResult { is_leader: false };
             }
             self.check_poison();
-            g = match self.cv.wait(g) {
-                Ok(g) => g,
-                Err(e) => e.into_inner(),
+            let Some(limit) = self.timeout else {
+                g = match self.cv.wait(g) {
+                    Ok(g) => g,
+                    Err(e) => e.into_inner(),
+                };
+                continue;
+            };
+            g = match self.cv.wait_timeout(g, WATCHDOG_TICK.min(limit)) {
+                Ok((g, _)) => g,
+                Err(e) => e.into_inner().0,
+            };
+            if start.elapsed() < limit || self.generation.load(Ordering::Acquire) != gen {
+                continue;
+            }
+            // A stamp <= gen means the pid never hinted for this
+            // crossing. (The u64 generation cannot realistically wrap.)
+            let missing: Vec<usize> = (0..self.p)
+                .filter(|&pid| self.stamps[pid].load(Ordering::Acquire) <= gen)
+                .collect();
+            if missing.is_empty() {
+                // Everyone hinted: the crossing is merely slow (e.g. a
+                // long leader phase). Restart the clock, keep waiting.
+                start = Instant::now();
+            } else {
+                self.defect(format!(
+                    "bsp barrier watchdog: core(s) {missing:?} never arrived at the barrier \
+                     within {limit:?} (generation {gen}); poisoning the gang instead of wedging"
+                ));
+            }
+        }
+    }
+
+    /// Park **without ever joining the barrier** until the gang is
+    /// poisoned, then unwind with the poison diagnostic. This is what
+    /// an injected barrier non-arrival fault calls: the abandoning core
+    /// deliberately never arrives, its peers' watchdog names it and
+    /// poisons the gang, and the resulting poison unwinds this core
+    /// too. Requires a watchdog timeout (or an external
+    /// [`Barrier::poison`]/[`Barrier::defect`]) to ever return.
+    pub fn wait_abandoned(&self) -> ! {
+        let mut g = self.lock.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            self.check_poison();
+            g = match self.cv.wait_timeout(g, WATCHDOG_TICK) {
+                Ok((g, _)) => g,
+                Err(e) => e.into_inner().0,
             };
         }
     }
@@ -380,6 +469,63 @@ mod tests {
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.wait()));
         let payload = *r.unwrap_err().downcast::<String>().unwrap();
         assert!(payload.contains("core 0 retired early"), "got: {payload}");
+    }
+
+    #[test]
+    fn watchdog_names_the_missing_pid_instead_of_wedging() {
+        // Core 1 never arrives; core 0's parked wait must poison the
+        // gang within the timeout and panic with a diagnostic naming
+        // pid 1 — not hang forever.
+        let b = Barrier::with_timeout(2, Some(Duration::from_millis(100)));
+        let t0 = Instant::now();
+        b.arrive_hint(0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.wait()));
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("watchdog"), "got: {msg}");
+        assert!(msg.contains("[1]"), "must name the missing pid, got: {msg}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "diagnosis must be prompt, took {:?}",
+            t0.elapsed()
+        );
+        assert!(b.is_poisoned());
+    }
+
+    #[test]
+    fn watchdog_tolerates_a_slow_leader_phase() {
+        // Every core hints and arrives; the leader phase then runs far
+        // longer than the timeout. The parked waiter sees no missing
+        // pids and must keep waiting, not fire a false positive.
+        let b = Arc::new(Barrier::with_timeout(2, Some(Duration::from_millis(30))));
+        let b2 = Arc::clone(&b);
+        let t = std::thread::spawn(move || {
+            b2.arrive_hint(1);
+            b2.wait_leader(|| std::thread::sleep(Duration::from_millis(150)));
+        });
+        b.arrive_hint(0);
+        b.wait_leader(|| std::thread::sleep(Duration::from_millis(150)));
+        t.join().unwrap();
+        assert!(!b.is_poisoned());
+    }
+
+    #[test]
+    fn abandoned_core_unwinds_via_the_watchdog_poison() {
+        // wait_abandoned never joins the barrier; the peer's watchdog
+        // names it, and the poison unwinds the abandoning core too.
+        let b = Arc::new(Barrier::with_timeout(2, Some(Duration::from_millis(80))));
+        let b2 = Arc::clone(&b);
+        let abandoner = std::thread::spawn(move || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                b2.wait_abandoned();
+            }));
+            *r.unwrap_err().downcast::<String>().unwrap()
+        });
+        b.arrive_hint(0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.wait()));
+        let waiter_msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(waiter_msg.contains("[1]"), "got: {waiter_msg}");
+        let abandoner_msg = abandoner.join().unwrap();
+        assert!(abandoner_msg.contains("watchdog"), "got: {abandoner_msg}");
     }
 
     #[test]

@@ -73,11 +73,14 @@
 //! ablation: the ledger then records `compute + fetch` per hyperstep
 //! instead of the overlapped `max`.
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+use std::time::Duration;
 
 use crate::bsp::barrier::{Barrier, PoisonOnPanic};
+use crate::bsp::fault::{CheckpointPolicy, FaultMode, FaultSite, GangCheckpoint, VarSnapshot};
 use crate::bsp::timeline::{HyperstepSpan, Timeline};
 use crate::bsp::verify::{
     AnalysisMode, AnalysisReport, Analyzer, Severity, SyncShape, WriteRecord,
@@ -135,6 +138,26 @@ pub struct GangConfig {
     /// findings into [`RunOutcome::analysis`]; `Deny` poisons the gang
     /// with the first error-severity finding as the diagnostic.
     pub analysis: AnalysisMode,
+    /// Deterministic fault injection ([`crate::bsp::fault`]). `Off`
+    /// (the default) keeps every instrumented site a free branch
+    /// (`zero_alloc.rs` pins it).
+    pub fault: FaultMode,
+    /// Barrier watchdog: if set, a core that never arrives at a barrier
+    /// crossing within this limit is named in a poison diagnostic and
+    /// the gang unwinds instead of wedging. The limit must exceed the
+    /// worst per-superstep compute skew between cores; leader phases of
+    /// any length are tolerated (every core already hinted arrival).
+    pub barrier_timeout: Option<Duration>,
+    /// Barrier-consistent checkpoints: every `every_k` hypersteps the
+    /// sync leader snapshots the gang into the policy's slot, charging
+    /// the snapshot through the Eq. 1 ledger as an `e`-priced
+    /// external-memory write.
+    pub checkpoint: Option<CheckpointPolicy>,
+    /// Resume from a checkpoint instead of starting fresh. Resumption
+    /// is **explicit**: a checkpoint sitting in `checkpoint`'s slot is
+    /// never auto-resumed — the scheduler injects the slot's latest
+    /// checkpoint here on each retry attempt.
+    pub resume: Option<Arc<GangCheckpoint>>,
 }
 
 /// An interned registered-variable handle.
@@ -501,6 +524,17 @@ pub(crate) struct Shared {
     /// so every hook below is an untaken `if let` branch on the hot
     /// path (`zero_alloc.rs` pins the allocation-free steady state).
     analyzer: Option<Analyzer>,
+    /// Fault-injection plan ([`FaultMode::Off`] = every site free).
+    fault: FaultMode,
+    /// Checkpoint cadence + slot (`None` = no checkpoints).
+    checkpoint: Option<CheckpointPolicy>,
+    /// Checkpoint to resume from (restored before the gang starts).
+    resume: Option<Arc<GangCheckpoint>>,
+    /// Hyperstep the gang resumes at (0 for a fresh run).
+    resume_from: usize,
+    /// Cumulative words charged for checkpoints (restored on resume so
+    /// a recovered run reports the same total as a fault-free one).
+    checkpoint_words: AtomicU64,
 }
 
 impl Shared {
@@ -525,8 +559,9 @@ impl Shared {
             noc.n,
             noc.n
         );
+        let resume_from = cfg.resume.as_ref().map_or(0, |ck| ck.hyperstep);
         Self {
-            barrier: Barrier::new(p),
+            barrier: Barrier::with_timeout(p, cfg.barrier_timeout),
             vars: VarStore::new(),
             comm: (0..p).map(|_| Mutex::new(CommQueue::default())).collect(),
             inbox: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
@@ -557,6 +592,11 @@ impl Shared {
             }),
             analyzer: (cfg.analysis != AnalysisMode::Off)
                 .then(|| Analyzer::new(cfg.analysis, p, machine.local_mem)),
+            fault: cfg.fault,
+            checkpoint: cfg.checkpoint,
+            resume: cfg.resume,
+            resume_from,
+            checkpoint_words: AtomicU64::new(0),
             machine,
         }
     }
@@ -621,6 +661,10 @@ enum CapFrom {
 pub struct Ctx {
     pid: usize,
     shared: Arc<Shared>,
+    /// Hypersteps this core has completed (counting the checkpointed
+    /// ones on a resumed run) — the `h` coordinate fault plans and
+    /// checkpoints key on.
+    hyper_done: Cell<usize>,
 }
 
 impl Ctx {
@@ -634,6 +678,33 @@ impl Ctx {
     #[must_use]
     pub fn nprocs(&self) -> usize {
         self.shared.machine.p
+    }
+
+    /// The hyperstep this gang resumed from (0 for a fresh run). A
+    /// resume-aware kernel skips its first `resume_hyperstep()` loop
+    /// iterations and re-seeks its streams to this index — everything
+    /// else (variables, inboxes, clocks, cursors) is restored by the
+    /// engine before the kernel starts.
+    #[must_use]
+    pub fn resume_hyperstep(&self) -> usize {
+        self.shared.resume_from
+    }
+
+    /// Whether the gang's fault plan fires `site` for this core at the
+    /// current hyperstep. [`FaultMode::Off`] is a free branch.
+    fn fault_fires(&self, site: FaultSite) -> bool {
+        match &self.shared.fault {
+            FaultMode::Off => false,
+            FaultMode::Plan(plan) => plan.should_fire(site, self.pid, self.hyper_done.get()),
+        }
+    }
+
+    /// Fire a fatal injected fault: arm the gang barrier with the
+    /// diagnostic (so parked cores report it instead of a generic
+    /// poison) and panic this thread — same shape as `analysis_abort`.
+    fn fault_abort(&self, msg: String) -> ! {
+        self.shared.barrier.defect(msg.clone());
+        panic!("{msg}");
     }
 
     /// The machine this gang runs on.
@@ -1092,18 +1163,23 @@ impl Ctx {
                 self.analysis_abort(&finding);
             }
         }
+        // `wait_phased` unrolled so the watchdog gets an arrival hint
+        // immediately before EVERY barrier crossing — with one hint per
+        // superstep, every core would look missing at the finish
+        // crossing and a slow apply phase would misfire the watchdog.
         match sh.apply_mode {
             ApplyMode::Sharded => {
-                sh.barrier.wait_phased(
-                    || self.plan_superstep(),
-                    || self.apply_shard(self.pid),
-                    || {
-                        self.finish_superstep();
-                        after();
-                    },
-                );
+                sh.barrier.arrive_hint(self.pid);
+                sh.barrier.wait_leader(|| self.plan_superstep());
+                self.apply_shard(self.pid);
+                sh.barrier.arrive_hint(self.pid);
+                sh.barrier.wait_leader(|| {
+                    self.finish_superstep();
+                    after();
+                });
             }
             ApplyMode::LeaderOnly => {
+                sh.barrier.arrive_hint(self.pid);
                 sh.barrier.wait_leader(|| {
                     self.plan_superstep();
                     for s in 0..self.nprocs() {
@@ -1487,9 +1563,31 @@ impl Ctx {
     /// ```
     pub fn stream_move_down(&self, h: StreamHandle, buf: &mut Vec<f32>) -> Result<usize> {
         let sh = &self.shared;
+        if self.fault_fires(FaultSite::DmaFail) {
+            self.fault_abort(format!(
+                "fault injection: DMA fill failure on core {} fetching stream {} at \
+                 hyperstep {}; aborting the gang",
+                self.pid,
+                h.stream_id,
+                self.hyper_done.get()
+            ));
+        }
+        if self.fault_fires(FaultSite::DmaStall) {
+            // Non-fatal: hold this core's DMA engine busy. Subsequent
+            // transfers (including `stream_move_up` writes) queue behind
+            // the stall, so the run completes with identical results and
+            // an inflated drain-inclusive makespan.
+            let now = sh.clocks.now(self.pid);
+            sh.dma[self.pid]
+                .lock()
+                .unwrap()
+                .inject_delay(now, crate::bsp::fault::DMA_STALL_CYCLES);
+        }
         if !sh.prefetch {
             // Blocking fetch, charged on the compute side (preload = 0).
+            let idx = self.streams().cursor(h, self.pid)?;
             let words = self.streams().move_down(h, self.pid, buf)?;
+            self.deliver_token(h, idx, buf);
             let stall_flops = sh.machine.e * words as f64;
             sh.usage[self.pid].lock().unwrap().flops += stall_flops;
             let cycles = sh.flops_to_cycles(stall_flops);
@@ -1543,6 +1641,7 @@ impl Ctx {
                 words
             }
         };
+        self.deliver_token(h, cursor, buf);
         // Either way the words count toward the hyperstep's fetch side.
         sh.fetch_words[self.pid].fetch_add(words as u64, Ordering::Relaxed);
         // Prime the double buffer with the next token.
@@ -1551,6 +1650,24 @@ impl Ctx {
             self.issue_fill(h, next);
         }
         Ok(words)
+    }
+
+    /// Post-fetch delivery gate, run on every `move_down` path (staged,
+    /// cold, and non-prefetch) **before the kernel sees the data**:
+    /// apply a planned [`FaultSite::StreamCorrupt`] bit-flip, then
+    /// verify the delivered token against the registry's per-token
+    /// checksum — a mismatch (injected or real) poisons the gang with a
+    /// diagnostic instead of letting a silently corrupted token flow
+    /// into the computation.
+    fn deliver_token(&self, h: StreamHandle, idx: usize, buf: &mut [f32]) {
+        if self.fault_fires(FaultSite::StreamCorrupt) {
+            if let Some(w) = buf.first_mut() {
+                *w = f32::from_bits(w.to_bits() ^ 1);
+            }
+        }
+        if let Err(e) = self.streams().verify_token(h.stream_id, idx, buf) {
+            self.fault_abort(format!("core {} move_down: {e}", self.pid));
+        }
     }
 
     /// `bsp_stream_move_up`: write a result token back at the cursor and
@@ -1683,6 +1800,20 @@ impl Ctx {
         // superstep *and* cuts the hyperstep ledger while the gang is
         // held.
         let _guard = PoisonOnPanic(&self.shared.barrier);
+        if self.fault_fires(FaultSite::KernelPanic) {
+            self.fault_abort(format!(
+                "fault injection: kernel panic on core {} ending hyperstep {}",
+                self.pid,
+                self.hyper_done.get()
+            ));
+        }
+        if self.fault_fires(FaultSite::BarrierSkip) {
+            // This core never arrives at the barrier. No defect is
+            // armed here — the point is that the *watchdog* diagnoses
+            // the absence (requires `GangConfig::barrier_timeout`);
+            // its poison unwinds this parked thread too.
+            self.shared.barrier.wait_abandoned();
+        }
         self.superstep_barrier(SyncShape::Hyperstep, || {
             let sh = &self.shared;
             let compute: f64 = {
@@ -1711,7 +1842,95 @@ impl Ctx {
             let span = HyperstepSpan { start_cycles: tl.hyper_start_cycles, end_cycles: end };
             tl.spans.push(span);
             tl.hyper_start_cycles = end;
+            drop(tl);
+            // Leader-only, gang held, records closed: the barrier cut
+            // where a checkpoint is consistent by construction.
+            self.checkpoint_if_due();
         });
+        self.hyper_done.set(self.hyper_done.get() + 1);
+    }
+
+    /// Checkpoint hook, run by the finish leader at every hyperstep cut
+    /// (free `else` branch when no [`CheckpointPolicy`] is set). Tracks
+    /// the furthest progress for lost-work accounting; every `every_k`
+    /// hypersteps it charges the snapshot's words through the Eq. 1
+    /// ledger (an `e`-priced external-memory write, folded into the
+    /// hyperstep row just closed — [`crate::model::predict::checkpoint_cost`]
+    /// states the same overhead in closed form) and then captures the
+    /// gang: variables, stream data + cursors, inboxes, virtual clocks,
+    /// DMA horizons, and all closed cost records.
+    fn checkpoint_if_due(&self) {
+        let sh = &self.shared;
+        let Some(policy) = &sh.checkpoint else { return };
+        let done = self.hyper_done.get() + 1;
+        {
+            let mut slot = policy.slot.lock().unwrap_or_else(|e| e.into_inner());
+            slot.progress = slot.progress.max(done);
+        }
+        if done % policy.every_k != 0 {
+            return;
+        }
+        let p = self.nprocs();
+        // Variables in interned-id order, so restoring re-registers
+        // them in the original order and reproduces identical handles.
+        let vars: Vec<VarSnapshot> = {
+            let names = sh.vars.names.lock().unwrap_or_else(|e| e.into_inner());
+            let slots = sh.vars.slots.read().unwrap();
+            let mut by_id: Vec<(u32, String)> =
+                names.iter().map(|(name, &id)| (id, name.clone())).collect();
+            by_id.sort_unstable_by_key(|&(id, _)| id);
+            by_id
+                .into_iter()
+                .map(|(id, name)| VarSnapshot {
+                    name,
+                    words: slots[id as usize].words.load(Ordering::Acquire),
+                    bufs: slots[id as usize]
+                        .bufs
+                        .iter()
+                        .map(|b| b.lock().unwrap().clone())
+                        .collect(),
+                })
+                .collect()
+        };
+        let inboxes: Vec<Vec<Message>> =
+            sh.inbox.iter().map(|i| i.lock().unwrap().clone()).collect();
+        // Charge the snapshot BEFORE cloning the ledger, so the rows a
+        // resumed run restores already include this checkpoint's cost —
+        // that is what makes the recovered ledger byte-identical.
+        let var_words: usize = vars.iter().map(|v| v.bufs.iter().map(Vec::len).sum::<usize>()).sum();
+        let inbox_words: usize = inboxes
+            .iter()
+            .map(|inbox| inbox.iter().map(|m| m.payload.len()).sum::<usize>())
+            .sum();
+        let charged = (var_words + inbox_words) as u64;
+        if let Some(row) = sh.ledger.lock().unwrap().hypersteps.last_mut() {
+            row.fetch_words += charged;
+        }
+        sh.checkpoint_words.fetch_add(charged, Ordering::Relaxed);
+        let streams = sh.streams.as_ref().map(|r| r.checkpoint_state()).unwrap_or_default();
+        let clocks: Vec<f64> = (0..p).map(|pid| sh.clocks.now(pid)).collect();
+        let dma_busy: Vec<f64> = sh.dma.iter().map(|d| d.lock().unwrap().free_at()).collect();
+        let cost_rows = sh.cost.lock().unwrap().supersteps.clone();
+        let ledger_rows = sh.ledger.lock().unwrap().hypersteps.clone();
+        let (spans, hyper_start_cycles) = {
+            let tl = sh.timeline.lock().unwrap();
+            (tl.spans.clone(), tl.hyper_start_cycles)
+        };
+        let ck = GangCheckpoint {
+            hyperstep: done,
+            vars,
+            streams,
+            inboxes,
+            clocks,
+            dma_busy,
+            cost_rows,
+            ledger_rows,
+            spans,
+            hyper_start_cycles,
+            hyper_start: *sh.hyper_start.lock().unwrap(),
+            checkpoint_words: sh.checkpoint_words.load(Ordering::Relaxed),
+        };
+        policy.slot.lock().unwrap_or_else(|e| e.into_inner()).last = Some(Arc::new(ck));
     }
 }
 
@@ -1726,6 +1945,11 @@ pub struct RunOutcome {
     pub timeline: Timeline,
     /// Host wall-clock of the gang execution.
     pub wall_seconds: f64,
+    /// Cumulative words the gang charged for barrier-consistent
+    /// checkpoints (0 without a [`CheckpointPolicy`]); a resumed run
+    /// restores the checkpointed total, so faulted-and-recovered runs
+    /// report the same figure as fault-free ones.
+    pub checkpoint_words: u64,
     /// Superstep analysis findings ([`crate::bsp::verify`]); empty when
     /// `GangConfig::analysis` was [`AnalysisMode::Off`].
     pub analysis: AnalysisReport,
@@ -1782,6 +2006,9 @@ where
     F: Fn(&mut Ctx) + Sync,
 {
     let shared = Arc::new(Shared::new(machine.clone(), streams, prefetch, cfg));
+    if let Some(ck) = shared.resume.clone() {
+        restore_gang_state(&shared, &ck);
+    }
     let start = std::time::Instant::now();
     {
         let shared = &shared;
@@ -1790,7 +2017,14 @@ where
             // Poison the gang barrier if this core panics anywhere in the
             // kernel, so cores blocked in sync() unwind instead of hanging.
             let _guard = PoisonOnPanic(&shared.barrier);
-            let mut ctx = Ctx { pid, shared: Arc::clone(shared) };
+            let mut ctx = Ctx {
+                pid,
+                shared: Arc::clone(shared),
+                hyper_done: Cell::new(shared.resume_from),
+            };
+            if let Some(ck) = ctx.shared.resume.clone() {
+                restore_core_vars(&ctx, &ck);
+            }
             kernel(&mut ctx);
             if let Some(an) = &shared.analyzer {
                 // Arm the barrier as this core retires: in a correct
@@ -1819,7 +2053,66 @@ where
         ledger: shared.ledger.into_inner().unwrap(),
         timeline,
         wall_seconds,
+        checkpoint_words: shared.checkpoint_words.load(Ordering::Relaxed),
         analysis,
+    }
+}
+
+/// Restore the gang-level half of a checkpoint into a freshly built
+/// [`Shared`], before any gang thread starts: virtual clocks (via
+/// `wait_until` — fresh clocks sit at 0 and virtual time never
+/// rewinds), DMA busy horizons, stream data + cursors (rewinding tokens
+/// the aborted attempt had already overwritten, so replayed reads see
+/// checkpoint-time values), inboxes, and all closed cost records. The
+/// per-core variable buffers are restored by [`restore_core_vars`] on
+/// each gang thread.
+fn restore_gang_state(sh: &Shared, ck: &GangCheckpoint) {
+    let p = sh.machine.p;
+    assert_eq!(ck.clocks.len(), p, "checkpoint is for a {}-core gang", ck.clocks.len());
+    for pid in 0..p {
+        sh.clocks.wait_until(pid, ck.clocks[pid]);
+        sh.dma[pid].lock().unwrap().restore_busy(ck.dma_busy[pid]);
+        let mut inbox = sh.inbox[pid].lock().unwrap();
+        inbox.clear();
+        inbox.extend(ck.inboxes[pid].iter().cloned());
+    }
+    if let Some(reg) = &sh.streams {
+        reg.restore_state(&ck.streams);
+    }
+    {
+        let mut cost = sh.cost.lock().unwrap();
+        cost.supersteps.clear();
+        cost.supersteps.extend_from_slice(&ck.cost_rows);
+    }
+    {
+        let mut ledger = sh.ledger.lock().unwrap();
+        ledger.hypersteps.clear();
+        ledger.hypersteps.extend_from_slice(&ck.ledger_rows);
+    }
+    *sh.hyper_start.lock().unwrap() = ck.hyper_start;
+    {
+        let mut tl = sh.timeline.lock().unwrap();
+        tl.spans.clear();
+        tl.spans.extend_from_slice(&ck.spans);
+        tl.hyper_start_cycles = ck.hyper_start_cycles;
+    }
+    sh.checkpoint_words.store(ck.checkpoint_words, Ordering::Relaxed);
+}
+
+/// Restore this core's variable buffers from a checkpoint, run on each
+/// gang thread before the kernel starts. Registering in interned-id
+/// order reproduces the original handles, so the kernel's own
+/// (idempotent) `register` calls hand back the same ids it
+/// checkpointed under.
+fn restore_core_vars(ctx: &Ctx, ck: &GangCheckpoint) {
+    for v in &ck.vars {
+        let h = ctx
+            .register(&v.name, v.words)
+            .unwrap_or_else(|e| panic!("checkpointed var `{}` failed to re-register: {e}", v.name));
+        ctx.with_var_mut(h, |buf| {
+            buf.clear();
+            buf.extend_from_slice(&v.bufs[ctx.pid()]);
+        });
     }
 }
 

@@ -1,0 +1,734 @@
+//! Deterministic fault injection, barrier-consistent checkpoints, and
+//! checkpoint-based gang recovery.
+//!
+//! The paper's pitch is *predictable* execution: Eq. 1 prices every
+//! hyperstep and the barrier structure makes superstep state
+//! well-defined. This module turns those barriers into **recovery
+//! lines**:
+//!
+//! * [`FaultPlan`] — a seeded, deterministic plan that fires exactly one
+//!   named fault at an instrumented engine site ([`FaultSite`]): a
+//!   kernel panic at hyperstep *k* on pid *j*, a DMA fill failure or
+//!   stall, a stream-token corruption (caught by the per-token
+//!   checksums in [`crate::stream::StreamRegistry`]), or a barrier
+//!   non-arrival (caught by the barrier watchdog,
+//!   `GangConfig::barrier_timeout`). [`FaultMode::Off`] is pinned free
+//!   by `rust/tests/zero_alloc.rs`.
+//! * [`CheckpointPolicy`] / [`GangCheckpoint`] — every `every_k`
+//!   hypersteps the sync leader (single-threaded, comm queues drained —
+//!   the analyzer's own vantage point) snapshots var slots, stream
+//!   data + cursors, inboxes, virtual clocks, DMA horizons, and the
+//!   cost records into a [`GangCheckpoint`], charged through the Eq. 1
+//!   ledger as an `e`-priced external-memory write
+//!   ([`crate::model::predict::checkpoint_cost`] states the overhead in
+//!   closed form).
+//! * [`RetryPolicy`] / [`RecoveryInfo`] — the scheduler
+//!   ([`crate::bsp::sched::GangScheduler`]) re-admits a faulted gang
+//!   under the same core-budget rules and resumes it from its last
+//!   checkpoint (`GangConfig::resume`), recording attempts, the
+//!   recovery source, and the lost hypersteps.
+//! * [`sweep_matrix`] — the flagship invariant as an executable check:
+//!   a gang killed by an injected fault at **any** hyperstep, retried
+//!   from its checkpoint, produces results **byte-identical** to a
+//!   fault-free run (`bsps faults --sweep` gates this in CI).
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::bsp::engine::{run_gang_cfg, Ctx, GangConfig, Message, RunOutcome};
+use crate::bsp::sched::{GangJob, GangScheduler};
+use crate::bsp::timeline::HyperstepSpan;
+use crate::model::bsps::HyperstepCost;
+use crate::model::cost::SuperstepCost;
+use crate::model::params::AcceleratorParams;
+use crate::stream::{StreamRegistry, StreamSnapshot};
+use crate::util::prng::SplitMix64;
+
+/// Extra virtual cycles a [`FaultSite::DmaStall`] holds the core's DMA
+/// engine busy — long enough to dominate a typical hyperstep's drain.
+pub const DMA_STALL_CYCLES: f64 = 100_000.0;
+
+/// An instrumented engine site a fault can fire at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// The kernel panics at `hyperstep_sync` entry, ending hyperstep
+    /// *k* — a software crash mid-gang.
+    KernelPanic,
+    /// A DMA fill fails hard inside `stream_move_down` — the transfer
+    /// cannot be completed; the gang aborts cleanly.
+    DmaFail,
+    /// A DMA fill stalls for [`DMA_STALL_CYCLES`] — non-fatal: the run
+    /// completes with identical results and an inflated makespan.
+    DmaStall,
+    /// The delivered stream token has one bit flipped after the
+    /// transfer; the registry's per-token checksum catches it before
+    /// the kernel sees the data.
+    StreamCorrupt,
+    /// The core never arrives at the hyperstep barrier (diverged loop
+    /// bounds, dead helper); the barrier watchdog names it. Requires
+    /// `GangConfig::barrier_timeout` and `p >= 2`.
+    BarrierSkip,
+}
+
+impl FaultSite {
+    /// Every injectable site, in sweep order.
+    pub const ALL: [FaultSite; 5] = [
+        FaultSite::KernelPanic,
+        FaultSite::DmaFail,
+        FaultSite::DmaStall,
+        FaultSite::StreamCorrupt,
+        FaultSite::BarrierSkip,
+    ];
+
+    /// Stable CLI name (`bsps run --inject <name>`).
+    #[must_use]
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::KernelPanic => "kernel-panic",
+            FaultSite::DmaFail => "dma-fail",
+            FaultSite::DmaStall => "dma-stall",
+            FaultSite::StreamCorrupt => "stream-corrupt",
+            FaultSite::BarrierSkip => "barrier-skip",
+        }
+    }
+
+    /// Parse a CLI name back into a site.
+    #[must_use]
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|site| site.name() == s)
+    }
+}
+
+impl fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A deterministic, one-shot fault: fire `site` on core `pid` at
+/// hyperstep `hyperstep`, exactly once per plan (retried attempts
+/// sharing the plan run clean — which is what makes recovery testable).
+#[derive(Debug)]
+pub struct FaultPlan {
+    site: FaultSite,
+    pid: usize,
+    hyperstep: usize,
+    fired: AtomicBool,
+}
+
+impl FaultPlan {
+    /// A plan firing `site` on `pid` at hyperstep `hyperstep`.
+    #[must_use]
+    pub fn single(site: FaultSite, pid: usize, hyperstep: usize) -> Self {
+        Self { site, pid, hyperstep, fired: AtomicBool::new(false) }
+    }
+
+    /// A seeded plan: site, pid and hyperstep drawn deterministically
+    /// from `seed` over `p` cores and `hypersteps` hypersteps.
+    #[must_use]
+    pub fn seeded(seed: u64, p: usize, hypersteps: usize) -> Self {
+        let mut g = SplitMix64::new(seed);
+        let site = Self::site_for(&mut g);
+        let pid = g.next_range(0, p.max(1));
+        let hyperstep = g.next_range(0, hypersteps.max(1));
+        Self::single(site, pid, hyperstep)
+    }
+
+    fn site_for(g: &mut SplitMix64) -> FaultSite {
+        FaultSite::ALL[g.next_range(0, FaultSite::ALL.len())]
+    }
+
+    /// The planned site.
+    #[must_use]
+    pub fn site(&self) -> FaultSite {
+        self.site
+    }
+
+    /// The planned victim pid.
+    #[must_use]
+    pub fn pid(&self) -> usize {
+        self.pid
+    }
+
+    /// The planned hyperstep.
+    #[must_use]
+    pub fn hyperstep(&self) -> usize {
+        self.hyperstep
+    }
+
+    /// Whether `(site, pid, h)` is this plan's trigger — true exactly
+    /// once (the engine's instrumented sites call this; the swap makes
+    /// the plan one-shot so a retried attempt runs clean).
+    #[must_use]
+    pub fn should_fire(&self, site: FaultSite, pid: usize, h: usize) -> bool {
+        site == self.site
+            && pid == self.pid
+            && h == self.hyperstep
+            && !self.fired.swap(true, Ordering::Relaxed)
+    }
+
+    /// Whether the fault has fired.
+    #[must_use]
+    pub fn has_fired(&self) -> bool {
+        self.fired.load(Ordering::Relaxed)
+    }
+
+    /// Re-arm the plan (tests re-using one plan across runs).
+    pub fn rearm(&self) {
+        self.fired.store(false, Ordering::Relaxed);
+    }
+}
+
+/// Gang-level fault injection switch (`GangConfig::fault`).
+#[derive(Debug, Clone, Default)]
+pub enum FaultMode {
+    /// No instrumentation active — the default, and allocation-free on
+    /// the hot path (`zero_alloc.rs` pins it).
+    #[default]
+    Off,
+    /// Fire the given plan's fault at its instrumented site.
+    Plan(Arc<FaultPlan>),
+}
+
+impl FaultMode {
+    /// Shorthand for a single planned fault.
+    #[must_use]
+    pub fn single(site: FaultSite, pid: usize, hyperstep: usize) -> Self {
+        FaultMode::Plan(Arc::new(FaultPlan::single(site, pid, hyperstep)))
+    }
+}
+
+/// One registered variable's checkpoint: the collective name/length and
+/// every core's buffer contents.
+#[derive(Debug, Clone)]
+pub struct VarSnapshot {
+    /// Registered name (re-interned on restore).
+    pub name: String,
+    /// Declared collective length in words.
+    pub words: usize,
+    /// Per-core buffer contents, indexed by pid.
+    pub bufs: Vec<Vec<f32>>,
+}
+
+/// A barrier-consistent snapshot of a gang, captured by the sync
+/// leader at a hyperstep cut while the gang is held (single-threaded,
+/// comm queues drained). Restoring it (`GangConfig::resume`) replays
+/// the run from `hyperstep` with byte-identical results.
+#[derive(Debug, Clone)]
+pub struct GangCheckpoint {
+    /// Hypersteps completed at the cut — the resume point.
+    pub hyperstep: usize,
+    /// Registered variables, in handle-id order (so restore re-interns
+    /// identical handles).
+    pub vars: Vec<VarSnapshot>,
+    /// Stream data + cursors ([`StreamRegistry::checkpoint_state`]).
+    pub streams: Vec<StreamSnapshot>,
+    /// Per-core delivered-message inboxes at the cut.
+    pub inboxes: Vec<Vec<Message>>,
+    /// Per-core virtual clocks, cycles.
+    pub clocks: Vec<f64>,
+    /// Per-core DMA busy horizons ([`crate::sim::dma::DmaEngine::free_at`]).
+    pub dma_busy: Vec<f64>,
+    /// Closed superstep cost records.
+    pub cost_rows: Vec<SuperstepCost>,
+    /// Closed hyperstep ledger rows (checkpoint charges included).
+    pub ledger_rows: Vec<HyperstepCost>,
+    /// Measured timeline spans at the cut.
+    pub spans: Vec<HyperstepSpan>,
+    /// Virtual start time of the next hyperstep's span.
+    pub hyper_start_cycles: f64,
+    /// Index into the cost records where the next hyperstep begins.
+    pub hyper_start: usize,
+    /// Cumulative checkpoint words charged so far (restored so a
+    /// resumed run reports the same `RunOutcome::checkpoint_words` as a
+    /// fault-free one).
+    pub checkpoint_words: u64,
+}
+
+impl GangCheckpoint {
+    /// Words this snapshot moved through external memory: every core's
+    /// var buffers plus the buffered inbox payloads. Stream *data*
+    /// already lives in external memory — only cursors (free descriptor
+    /// writes) are recorded for it, so it is not re-charged.
+    #[must_use]
+    pub fn charged_words(&self) -> u64 {
+        let var_words: usize = self
+            .vars
+            .iter()
+            .map(|v| v.bufs.iter().map(Vec::len).sum::<usize>())
+            .sum();
+        let inbox_words: usize = self
+            .inboxes
+            .iter()
+            .map(|inbox| inbox.iter().map(|m| m.payload.len()).sum::<usize>())
+            .sum();
+        (var_words + inbox_words) as u64
+    }
+}
+
+/// Mutable checkpoint slot shared between a gang and its scheduler:
+/// the latest checkpoint plus the furthest hyperstep ever completed
+/// (for lost-work accounting).
+#[derive(Debug, Default)]
+pub struct CheckpointState {
+    /// Latest captured checkpoint.
+    pub last: Option<Arc<GangCheckpoint>>,
+    /// Furthest hyperstep any attempt completed.
+    pub progress: usize,
+}
+
+/// Shared handle to a gang's [`CheckpointState`].
+pub type CheckpointSlot = Arc<Mutex<CheckpointState>>;
+
+/// Checkpoint cadence (`GangConfig::checkpoint`): snapshot the gang
+/// every `every_k` hypersteps into `slot`. Cloning shares the slot, so
+/// a scheduler retry sees the checkpoints its faulted attempt wrote.
+#[derive(Debug, Clone)]
+pub struct CheckpointPolicy {
+    /// Hypersteps between checkpoints (≥ 1).
+    pub every_k: usize,
+    /// Where captured checkpoints land.
+    pub slot: CheckpointSlot,
+}
+
+impl CheckpointPolicy {
+    /// Checkpoint every `k` hypersteps into a fresh slot.
+    #[must_use]
+    pub fn every(k: usize) -> Self {
+        Self { every_k: k.max(1), slot: CheckpointSlot::default() }
+    }
+
+    /// The latest captured checkpoint, if any.
+    #[must_use]
+    pub fn last(&self) -> Option<Arc<GangCheckpoint>> {
+        self.slot.lock().unwrap_or_else(|e| e.into_inner()).last.clone()
+    }
+
+    /// Furthest hyperstep any attempt completed under this policy.
+    #[must_use]
+    pub fn progress(&self) -> usize {
+        self.slot.lock().unwrap_or_else(|e| e.into_inner()).progress
+    }
+}
+
+/// Scheduler retry policy for a [`GangJob`]: how many total attempts a
+/// faulted/panicked/timed-out gang gets, and the backoff between them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts (≥ 1); 1 = no retry.
+    pub max_attempts: usize,
+    /// Wall-clock pause between attempts (cores are returned to the
+    /// budget for the duration, then re-acquired FIFO).
+    pub backoff: Duration,
+}
+
+impl RetryPolicy {
+    /// No retries (the default).
+    #[must_use]
+    pub fn none() -> Self {
+        Self { max_attempts: 1, backoff: Duration::ZERO }
+    }
+
+    /// Up to `max_attempts` total attempts with `backoff` between them.
+    #[must_use]
+    pub fn retries(max_attempts: usize, backoff: Duration) -> Self {
+        Self { max_attempts: max_attempts.max(1), backoff }
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// How a retried job's successful attempt started.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecoveryInfo {
+    /// `Some(k)` = resumed from the checkpoint at hyperstep `k`;
+    /// `None` = restarted fresh (no checkpoint had been captured).
+    pub resumed_from: Option<usize>,
+    /// Hypersteps of completed work the fault threw away (furthest
+    /// progress minus the resume point) — the numerator of the
+    /// `recovery_replay_ratio` bench scalar.
+    pub lost_hypersteps: usize,
+}
+
+// --------------------------------------------------------------- sweep
+
+/// Words per token in the sweep's demo workload.
+pub const SWEEP_TOKEN_WORDS: usize = 8;
+
+/// One `(site, pid, hyperstep)` cell of [`sweep_matrix`].
+#[derive(Debug)]
+pub struct CaseOutcome {
+    /// Injected site.
+    pub site: FaultSite,
+    /// Victim pid.
+    pub pid: usize,
+    /// Injection hyperstep.
+    pub hyperstep: usize,
+    /// Attempts the scheduler recorded.
+    pub attempts: usize,
+    /// Recovery source of the successful attempt, if it was a retry.
+    pub recovery: Option<RecoveryInfo>,
+    /// Whether the recovered results were byte-identical to the
+    /// fault-free reference (the flagship invariant).
+    pub identical: bool,
+    /// Human-readable diagnosis when `identical` is false.
+    pub detail: String,
+}
+
+impl CaseOutcome {
+    /// Whether the case upholds the recovery invariant.
+    #[must_use]
+    pub fn passed(&self) -> bool {
+        self.identical
+    }
+}
+
+fn sweep_machine(p: usize) -> AcceleratorParams {
+    let mut m = AcceleratorParams::epiphany3();
+    m.p = p;
+    m
+}
+
+/// One stream per core: `hypersteps` tokens of [`SWEEP_TOKEN_WORDS`],
+/// seeded deterministically.
+fn sweep_registry(m: &AcceleratorParams, hypersteps: usize, seed: u64) -> StreamRegistry {
+    let mut reg = StreamRegistry::new(m);
+    let mut g = SplitMix64::new(seed ^ 0x5352_4547); // "SREG"
+    for _ in 0..m.p {
+        let init = g.f32_vec(hypersteps * SWEEP_TOKEN_WORDS, -2.0, 2.0);
+        reg.create(hypersteps * SWEEP_TOKEN_WORDS, SWEEP_TOKEN_WORDS, Some(&init))
+            .expect("sweep stream fits external memory");
+    }
+    reg
+}
+
+/// The resume-aware demo kernel: every hyperstep drains last round's
+/// messages, consumes a token, folds neighbour state into an
+/// accumulator, writes the mutated token **back** (so stream-data
+/// restoration is load-bearing), and passes state to the next core via
+/// a put and a message. A successful attempt writes an accumulator
+/// digest into `sink[pid]` at the end.
+fn sweep_kernel(ctx: &mut Ctx, seed: u64, hypersteps: usize, sink: &Mutex<Vec<u64>>) {
+    let p = ctx.nprocs();
+    let pid = ctx.pid();
+    let acc = ctx.register("acc", SWEEP_TOKEN_WORDS).unwrap();
+    let nbr = ctx.register("nbr", 1).unwrap();
+    let h = ctx.stream_open(pid).unwrap();
+    let resume = ctx.resume_hyperstep();
+    if resume > 0 {
+        // `open` reset the cursor; fast-forward to the resume point.
+        ctx.stream_seek(h, resume as i64).unwrap();
+    }
+    let mut token: Vec<f32> = Vec::new();
+    let mut msgs: Vec<Message> = Vec::new();
+    for t in resume..hypersteps {
+        ctx.move_messages_into(&mut msgs);
+        let msg_sum: f32 = msgs.iter().flat_map(|m| &m.payload).sum();
+        let words = ctx.stream_move_down(h, &mut token).unwrap();
+        let nbr_val = ctx.with_var(nbr, |v| v[0]);
+        let mut g = SplitMix64::new(
+            seed ^ (t as u64).wrapping_mul(0x9E37_79B9) ^ ((pid as u64) << 40),
+        );
+        let noise = g.next_f32_in(-0.5, 0.5);
+        ctx.with_var_mut(acc, |a| {
+            for (ai, w) in a.iter_mut().zip(&token) {
+                *ai = ai.mul_add(0.5, *w + noise + nbr_val + msg_sum * 0.25);
+            }
+        });
+        for w in token.iter_mut() {
+            *w = w.mul_add(1.25, noise);
+        }
+        ctx.stream_seek(h, -1).unwrap();
+        ctx.stream_move_up(h, &token).unwrap();
+        ctx.put((pid + 1) % p, nbr, 0, &[token[0]]);
+        ctx.send((pid + 1) % p, t as u32, vec![token[words - 1], t as f32]);
+        ctx.charge_flops(4.0 * words as f64);
+        ctx.hyperstep_sync();
+    }
+    ctx.stream_close(h).unwrap();
+    let digest = ctx.with_var(acc, |a| {
+        let mut d: u64 = 0xcbf2_9ce4_8422_2325;
+        for w in a {
+            d = (d ^ u64::from(w.to_bits())).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        d
+    });
+    sink.lock().unwrap()[pid] = digest;
+}
+
+/// Everything a sweep run produces that identity is asserted over.
+struct SweepRun {
+    cost_rows: Vec<SuperstepCost>,
+    ledger_rows: Vec<HyperstepCost>,
+    spans: Vec<HyperstepSpan>,
+    makespan_cycles: f64,
+    checkpoint_words: u64,
+    digests: Vec<u64>,
+    stream_data: Vec<Vec<f32>>,
+}
+
+impl SweepRun {
+    fn collect(outcome: &RunOutcome, sink: &Mutex<Vec<u64>>, reg: &StreamRegistry) -> Self {
+        Self {
+            cost_rows: outcome.cost.supersteps.clone(),
+            ledger_rows: outcome.ledger.hypersteps.clone(),
+            spans: outcome.timeline.spans.clone(),
+            makespan_cycles: outcome.timeline.makespan_cycles,
+            checkpoint_words: outcome.checkpoint_words,
+            digests: sink.lock().unwrap().clone(),
+            stream_data: (0..reg.len())
+                .map(|id| reg.snapshot(id).expect("stream exists"))
+                .collect(),
+        }
+    }
+}
+
+fn fault_free_reference(
+    p: usize,
+    hypersteps: usize,
+    every_k: usize,
+    seed: u64,
+    timeout: Duration,
+) -> SweepRun {
+    let m = sweep_machine(p);
+    let reg = Arc::new(sweep_registry(&m, hypersteps, seed));
+    let sink = Arc::new(Mutex::new(vec![0u64; p]));
+    let cfg = GangConfig {
+        barrier_timeout: Some(timeout),
+        checkpoint: Some(CheckpointPolicy::every(every_k)),
+        ..GangConfig::default()
+    };
+    let outcome = {
+        let sink = Arc::clone(&sink);
+        run_gang_cfg(&m, Some(Arc::clone(&reg)), false, cfg, move |ctx| {
+            sweep_kernel(ctx, seed, hypersteps, &sink);
+        })
+    };
+    SweepRun::collect(&outcome, &sink, &reg)
+}
+
+fn diff_runs(site: FaultSite, got: &SweepRun, want: &SweepRun) -> Option<String> {
+    if got.digests != want.digests {
+        return Some(format!(
+            "accumulator digests differ: {:x?} vs {:x?}",
+            got.digests, want.digests
+        ));
+    }
+    if got.stream_data != want.stream_data {
+        return Some("final stream data differs".to_string());
+    }
+    if got.ledger_rows != want.ledger_rows {
+        return Some("hyperstep ledgers differ".to_string());
+    }
+    if got.cost_rows != want.cost_rows {
+        return Some("superstep cost records differ".to_string());
+    }
+    if got.spans != want.spans {
+        return Some("timeline spans differ".to_string());
+    }
+    if got.checkpoint_words != want.checkpoint_words {
+        return Some(format!(
+            "checkpoint words differ: {} vs {}",
+            got.checkpoint_words, want.checkpoint_words
+        ));
+    }
+    // A stalled DMA legitimately inflates the drain-inclusive makespan;
+    // everything else must match it exactly.
+    if site == FaultSite::DmaStall {
+        if got.makespan_cycles < want.makespan_cycles {
+            return Some("stalled run finished before the fault-free one".to_string());
+        }
+    } else if got.makespan_cycles != want.makespan_cycles {
+        return Some(format!(
+            "makespans differ: {} vs {}",
+            got.makespan_cycles, want.makespan_cycles
+        ));
+    }
+    None
+}
+
+/// Run the full fault matrix — every [`FaultSite`] × hyperstep on a
+/// `p`-core gang, victim pid drawn from `seed` — and assert the
+/// recovery invariant cell by cell: every injected fault either aborts
+/// cleanly and is retried to a **byte-identical** result (digests,
+/// stream data, ledgers, cost records, spans, makespan) or, for the
+/// non-fatal stall, completes identically with an inflated makespan.
+/// Never a wedge: the barrier watchdog converts non-arrival into a
+/// diagnosed abort.
+///
+/// This is both the test-suite sweep (`rust/tests/failure_injection.rs`)
+/// and the CI gate behind `bsps faults --sweep`.
+#[must_use]
+pub fn sweep_matrix(
+    p: usize,
+    hypersteps: usize,
+    every_k: usize,
+    seed: u64,
+    timeout: Duration,
+) -> Vec<CaseOutcome> {
+    let reference = fault_free_reference(p, hypersteps, every_k, seed, timeout);
+    let mut cases = Vec::new();
+    for site in FaultSite::ALL {
+        for h in 0..hypersteps {
+            let mut g = SplitMix64::new(seed ^ ((h as u64) << 8) ^ (site as u64));
+            let pid = g.next_range(0, p);
+            cases.push(run_case(
+                site, pid, h, p, hypersteps, every_k, seed, timeout, &reference,
+            ));
+        }
+    }
+    cases
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_case(
+    site: FaultSite,
+    pid: usize,
+    h: usize,
+    p: usize,
+    hypersteps: usize,
+    every_k: usize,
+    seed: u64,
+    timeout: Duration,
+    reference: &SweepRun,
+) -> CaseOutcome {
+    let m = sweep_machine(p);
+    let reg = Arc::new(sweep_registry(&m, hypersteps, seed));
+    let sink = Arc::new(Mutex::new(vec![0u64; p]));
+    let cfg = GangConfig {
+        fault: FaultMode::single(site, pid, h),
+        barrier_timeout: Some(timeout),
+        checkpoint: Some(CheckpointPolicy::every(every_k)),
+        ..GangConfig::default()
+    };
+    let job = {
+        let sink = Arc::clone(&sink);
+        GangJob::new(&format!("fault_{site}_pid{pid}_h{h}"), m, move |ctx| {
+            sweep_kernel(ctx, seed, hypersteps, &sink);
+        })
+        .with_streams(Arc::clone(&reg), false)
+        .with_cfg(cfg)
+        .with_retry(RetryPolicy::retries(2, Duration::ZERO))
+    };
+    let out = GangScheduler::new(p).run(vec![job]);
+    let jr = &out.jobs[0];
+    let (attempts, recovery) = (jr.attempts, jr.recovery);
+    match &jr.outcome {
+        Ok(outcome) => {
+            let run = SweepRun::collect(outcome, &sink, &reg);
+            let want_attempts = if site == FaultSite::DmaStall { 1 } else { 2 };
+            let detail = if attempts != want_attempts {
+                Some(format!("expected {want_attempts} attempts, saw {attempts}"))
+            } else {
+                diff_runs(site, &run, reference)
+            };
+            CaseOutcome {
+                site,
+                pid,
+                hyperstep: h,
+                attempts,
+                recovery,
+                identical: detail.is_none(),
+                detail: detail.unwrap_or_default(),
+            }
+        }
+        Err(e) => CaseOutcome {
+            site,
+            pid,
+            hyperstep: h,
+            attempts,
+            recovery,
+            identical: false,
+            detail: format!("job did not recover: {e}"),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_fires_exactly_once() {
+        let plan = FaultPlan::single(FaultSite::KernelPanic, 2, 5);
+        assert!(!plan.should_fire(FaultSite::KernelPanic, 2, 4), "wrong hyperstep");
+        assert!(!plan.should_fire(FaultSite::KernelPanic, 1, 5), "wrong pid");
+        assert!(!plan.should_fire(FaultSite::DmaFail, 2, 5), "wrong site");
+        assert!(!plan.has_fired(), "near-misses must not consume the shot");
+        assert!(plan.should_fire(FaultSite::KernelPanic, 2, 5));
+        assert!(!plan.should_fire(FaultSite::KernelPanic, 2, 5), "one-shot");
+        assert!(plan.has_fired());
+        plan.rearm();
+        assert!(plan.should_fire(FaultSite::KernelPanic, 2, 5));
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_in_range() {
+        let a = FaultPlan::seeded(42, 8, 10);
+        let b = FaultPlan::seeded(42, 8, 10);
+        assert_eq!(a.site(), b.site());
+        assert_eq!(a.pid(), b.pid());
+        assert_eq!(a.hyperstep(), b.hyperstep());
+        assert!(a.pid() < 8);
+        assert!(a.hyperstep() < 10);
+    }
+
+    #[test]
+    fn site_names_round_trip() {
+        for site in FaultSite::ALL {
+            assert_eq!(FaultSite::parse(site.name()), Some(site));
+            assert_eq!(format!("{site}"), site.name());
+        }
+        assert_eq!(FaultSite::parse("nope"), None);
+    }
+
+    #[test]
+    fn retry_policy_default_is_single_attempt() {
+        let r = RetryPolicy::default();
+        assert_eq!(r.max_attempts, 1);
+        assert!(r.backoff.is_zero());
+        assert_eq!(RetryPolicy::retries(0, Duration::ZERO).max_attempts, 1);
+    }
+
+    #[test]
+    fn checkpoint_policy_clamps_and_shares_its_slot() {
+        let p = CheckpointPolicy::every(0);
+        assert_eq!(p.every_k, 1);
+        let q = p.clone();
+        p.slot.lock().unwrap().progress = 7;
+        assert_eq!(q.progress(), 7, "clones share the slot");
+        assert!(q.last().is_none());
+    }
+
+    #[test]
+    fn charged_words_counts_vars_and_inboxes() {
+        let ck = GangCheckpoint {
+            hyperstep: 4,
+            vars: vec![VarSnapshot {
+                name: "acc".into(),
+                words: 3,
+                bufs: vec![vec![0.0; 3], vec![0.0; 3]],
+            }],
+            streams: Vec::new(),
+            inboxes: vec![
+                vec![Message { src_pid: 0, tag: 0, payload: vec![1.0, 2.0] }],
+                Vec::new(),
+            ],
+            clocks: vec![0.0; 2],
+            dma_busy: vec![0.0; 2],
+            cost_rows: Vec::new(),
+            ledger_rows: Vec::new(),
+            spans: Vec::new(),
+            hyper_start_cycles: 0.0,
+            hyper_start: 0,
+            checkpoint_words: 0,
+        };
+        assert_eq!(ck.charged_words(), 6 + 2);
+    }
+}

@@ -13,7 +13,13 @@
 //!   produce (per-hyperstep spans, makespan incl. DMA drain).
 //! * [`sched`]    — the multi-gang scheduler: a queue of gangs admitted
 //!   concurrently under a global core budget, with backfill as gangs
-//!   retire (the Fig. 5 sweep's execution layer).
+//!   retire (the Fig. 5 sweep's execution layer) and checkpoint-based
+//!   retry of faulted gangs ([`fault::RetryPolicy`]).
+//! * [`fault`]    — deterministic fault injection ([`fault::FaultPlan`]),
+//!   barrier-consistent checkpoints ([`fault::CheckpointPolicy`]), and
+//!   the recovery sweep behind `bsps faults --sweep` (a gang killed at
+//!   any hyperstep and retried from its checkpoint reproduces the
+//!   fault-free results byte for byte).
 //! * [`verify`]   — the superstep race/hazard analyzer: exact,
 //!   superstep-granular detectors (overlapping puts, local-write
 //!   clobbers, barrier divergence, scratchpad over-budget, stream
@@ -22,6 +28,7 @@
 
 pub mod barrier;
 pub mod engine;
+pub mod fault;
 pub mod sched;
 pub mod timeline;
 pub mod verify;
@@ -29,6 +36,10 @@ pub mod verify;
 pub use engine::{
     run_gang, run_gang_budgeted, run_gang_cfg, ApplyMode, Ctx, GangConfig, Message,
     RunOutcome, VarHandle,
+};
+pub use fault::{
+    CheckpointPolicy, FaultMode, FaultPlan, FaultSite, GangCheckpoint, RecoveryInfo,
+    RetryPolicy,
 };
 pub use sched::{GangJob, GangScheduler, JobResult, SchedOutcome, SchedStats};
 pub use timeline::{HyperstepSpan, Timeline};

@@ -36,9 +36,11 @@ use std::thread;
 use std::time::Instant;
 
 use crate::bsp::engine::{run_gang_cfg, Ctx, GangConfig, RunOutcome};
+use crate::bsp::fault::{RecoveryInfo, RetryPolicy};
 use crate::model::params::AcceleratorParams;
 use crate::stream::StreamRegistry;
-use crate::util::pool::CoreBudget;
+use crate::util::error::panic_payload_msg;
+use crate::util::pool::{CoreBudget, GangPool};
 
 /// One queued gang: a machine (whose `p` is the core request), the
 /// gang-level configuration, and the SPMD kernel to run.
@@ -54,6 +56,10 @@ pub struct GangJob {
     pub prefetch: bool,
     /// Apply-mode / NoC configuration.
     pub cfg: GangConfig,
+    /// Retry policy for gangs that die mid-run (panic or injected
+    /// fault). Retries resume from the last checkpoint when
+    /// `cfg.checkpoint` captured one, else restart fresh.
+    pub retry: RetryPolicy,
     /// The SPMD kernel, boxed so heterogeneous jobs share one queue.
     pub kernel: Box<dyn Fn(&mut Ctx) + Send + Sync>,
 }
@@ -71,6 +77,7 @@ impl GangJob {
             streams: None,
             prefetch: false,
             cfg: GangConfig::default(),
+            retry: RetryPolicy::none(),
             kernel: Box::new(kernel),
         }
     }
@@ -87,6 +94,15 @@ impl GangJob {
     #[must_use]
     pub fn with_cfg(mut self, cfg: GangConfig) -> Self {
         self.cfg = cfg;
+        self
+    }
+
+    /// Retry the gang on death (panic or injected fault), resuming from
+    /// the last checkpoint `cfg.checkpoint` captured (fresh restart if
+    /// none yet).
+    #[must_use]
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
         self
     }
 
@@ -121,9 +137,15 @@ pub struct JobResult {
     pub queue_wait_seconds: f64,
     /// Admission → retirement wall-clock, seconds (0 for rejected jobs).
     pub run_seconds: f64,
+    /// Execution attempts: 1 for a clean first run, more when the
+    /// job's [`RetryPolicy`] re-ran a dead gang, 0 for rejected jobs.
+    pub attempts: usize,
+    /// How the last attempt recovered (`None` unless the job retried):
+    /// its resume point and the hypersteps of completed work lost.
+    pub recovery: Option<RecoveryInfo>,
     /// The gang outcome, or a diagnostic: the panic payload of a gang
-    /// that died, or the rejection reason for a job whose core request
-    /// exceeds the whole budget.
+    /// that died (after exhausting any retries), or the rejection
+    /// reason for a job whose core request exceeds the whole budget.
     pub outcome: Result<RunOutcome, String>,
 }
 
@@ -205,18 +227,6 @@ pub struct GangScheduler {
     budget: CoreBudget,
 }
 
-/// Render a caught panic payload (`String`/`&str` panics keep their
-/// message, anything else gets a generic marker).
-fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = e.downcast_ref::<String>() {
-        s.clone()
-    } else if let Some(s) = e.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else {
-        "gang panicked (non-string payload)".to_string()
-    }
-}
-
 impl GangScheduler {
     /// A scheduler over a budget of `cores` simulated cores.
     #[must_use]
@@ -243,11 +253,21 @@ impl GangScheduler {
     /// * Jobs whose core request exceeds the whole budget are rejected
     ///   up front (running them could never be admitted — waiting would
     ///   wedge the queue) with an `Err` naming the budget.
-    /// * A gang that **panics** is caught, recorded as `Err` with the
-    ///   panic message, and its cores are returned to the budget — the
-    ///   rest of the queue keeps draining.
+    /// * A gang that **panics** is caught; under the job's
+    ///   [`RetryPolicy`] it is re-run — resuming from the last
+    ///   checkpoint its `cfg.checkpoint` captured, else fresh on
+    ///   rewound streams — re-acquiring its cores through the same
+    ///   FIFO budget as every other waiter. A gang that exhausts its
+    ///   attempts is recorded as `Err` with the panic message, and its
+    ///   cores are returned to the budget — the rest of the queue
+    ///   keeps draining.
     #[must_use]
     pub fn run(&self, jobs: Vec<GangJob>) -> SchedOutcome {
+        // Tie the persistent gang pool's idle-thread retention to this
+        // budget: pid 0 of every gang runs on its runner thread, so the
+        // pool never needs more than `capacity - 1` parked helpers to
+        // serve a fully-packed budget.
+        GangPool::global().set_helper_cap(self.budget.capacity().saturating_sub(1).max(1));
         let n = jobs.len();
         let mut results: Vec<Option<JobResult>> = Vec::new();
         results.resize_with(n, || None);
@@ -277,6 +297,8 @@ impl GangScheduler {
                             machine: job.machine,
                             queue_wait_seconds: t0.elapsed().as_secs_f64(),
                             run_seconds: 0.0,
+                            attempts: 0,
+                            recovery: None,
                             outcome: Err(format!(
                                 "job requests {cores} cores but the budget is {} — \
                                  it can never be admitted",
@@ -301,15 +323,79 @@ impl GangScheduler {
                     let tx = done_tx.clone();
                     s.spawn(move || {
                         let start = Instant::now();
-                        let r = catch_unwind(AssertUnwindSafe(|| {
-                            run_gang_cfg(
-                                &job.machine,
-                                job.streams.clone(),
-                                job.prefetch,
-                                job.cfg.clone(),
-                                |ctx| (job.kernel)(ctx),
-                            )
-                        }));
+                        let mut lease = Some(lease);
+                        // For checkpoint-less retries: the streams'
+                        // pre-run contents, so a fresh replay does not
+                        // read tokens the dead attempt overwrote.
+                        let init_streams = if job.retry.max_attempts > 1 {
+                            job.streams.as_ref().map(|r| r.checkpoint_state())
+                        } else {
+                            None
+                        };
+                        let mut attempts = 0usize;
+                        let mut recovery: Option<RecoveryInfo> = None;
+                        let outcome = loop {
+                            attempts += 1;
+                            let mut cfg = job.cfg.clone();
+                            if attempts > 1 {
+                                let (last, progress) = job
+                                    .cfg
+                                    .checkpoint
+                                    .as_ref()
+                                    .map_or((None, 0), |pol| (pol.last(), pol.progress()));
+                                recovery = Some(match last {
+                                    Some(ck) => {
+                                        let rec = RecoveryInfo {
+                                            resumed_from: Some(ck.hyperstep),
+                                            lost_hypersteps: progress
+                                                .saturating_sub(ck.hyperstep),
+                                        };
+                                        cfg.resume = Some(ck);
+                                        rec
+                                    }
+                                    None => {
+                                        // Nothing captured yet: replay
+                                        // from scratch on rewound
+                                        // streams.
+                                        if let (Some(reg), Some(init)) =
+                                            (&job.streams, &init_streams)
+                                        {
+                                            reg.restore_state(init);
+                                        }
+                                        RecoveryInfo {
+                                            resumed_from: None,
+                                            lost_hypersteps: progress,
+                                        }
+                                    }
+                                });
+                            }
+                            let r = catch_unwind(AssertUnwindSafe(|| {
+                                run_gang_cfg(
+                                    &job.machine,
+                                    job.streams.clone(),
+                                    job.prefetch,
+                                    cfg,
+                                    |ctx| (job.kernel)(ctx),
+                                )
+                            }));
+                            match r {
+                                Ok(out) => break Ok(out),
+                                Err(e) if attempts < job.retry.max_attempts => {
+                                    // Give the cores back while backing
+                                    // off — a sleeping retry must not
+                                    // hold the budget hostage — then
+                                    // rejoin the FIFO line like any
+                                    // other waiter.
+                                    drop(lease.take());
+                                    drop(e);
+                                    if !job.retry.backoff.is_zero() {
+                                        thread::sleep(job.retry.backoff);
+                                    }
+                                    lease = Some(self.budget.acquire(cores));
+                                }
+                                Err(e) => break Err(panic_payload_msg(e.as_ref())),
+                            }
+                        };
                         let run_seconds = start.elapsed().as_secs_f64();
                         // Return the cores *before* reporting, so the
                         // admission pass that our completion wakes is
@@ -323,7 +409,9 @@ impl GangScheduler {
                                 machine: job.machine,
                                 queue_wait_seconds,
                                 run_seconds,
-                                outcome: r.map_err(|e| panic_message(e.as_ref())),
+                                attempts,
+                                recovery,
+                                outcome,
                             },
                         ));
                     });
@@ -507,6 +595,43 @@ mod tests {
         // wide4 still eventually ran, and waited for the full budget.
         let wide4 = out.jobs.iter().find(|j| j.name == "wide4").unwrap();
         assert!(wide4.queue_wait_seconds > 0.0);
+    }
+
+    #[test]
+    fn retried_job_succeeds_on_second_attempt() {
+        use crate::bsp::fault::RetryPolicy;
+        let tries = Arc::new(AtomicUsize::new(0));
+        let t2 = Arc::clone(&tries);
+        let job = GangJob::new("flaky", machine(2), move |ctx| {
+            if ctx.pid() == 0 && t2.fetch_add(1, Ordering::SeqCst) == 0 {
+                panic!("first attempt dies");
+            }
+            ctx.sync();
+        })
+        .with_retry(RetryPolicy::retries(3, std::time::Duration::ZERO));
+        let out = GangScheduler::new(2).run(vec![job]);
+        let jr = &out.jobs[0];
+        assert!(jr.outcome.is_ok(), "{:?}", jr.outcome.as_ref().err());
+        assert_eq!(jr.attempts, 2);
+        let rec = jr.recovery.expect("a retried job reports its recovery");
+        assert_eq!(rec.resumed_from, None, "no checkpoint policy: fresh replay");
+    }
+
+    #[test]
+    fn exhausted_retries_report_the_last_panic() {
+        use crate::bsp::fault::RetryPolicy;
+        let job = GangJob::new("always_dies", machine(2), |ctx| {
+            if ctx.pid() == 1 {
+                panic!("persistent failure");
+            }
+            ctx.sync();
+        })
+        .with_retry(RetryPolicy::retries(2, std::time::Duration::ZERO));
+        let out = GangScheduler::new(2).run(vec![job]);
+        let jr = &out.jobs[0];
+        let err = jr.outcome.as_ref().unwrap_err();
+        assert!(err.contains("persistent failure"), "{err}");
+        assert_eq!(jr.attempts, 2, "both attempts were spent");
     }
 
     #[test]

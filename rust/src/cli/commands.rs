@@ -1,9 +1,9 @@
 //! Subcommand implementations for the `bsps` binary.
 
-use crate::util::error::{anyhow, bail, ensure, Result};
+use crate::util::error::{anyhow, bail, ensure, panic_payload_msg, Result};
 
 use crate::bsp::sched::GangScheduler;
-use crate::bsp::{AnalysisMode, GangConfig};
+use crate::bsp::{AnalysisMode, FaultMode, FaultSite, GangConfig};
 use crate::cli::args::Args;
 use crate::coordinator::{BspsEnv, SweepReport};
 use crate::model::params::AcceleratorParams;
@@ -23,6 +23,7 @@ pub fn dispatch(args: &Args) -> Result<String> {
         Some("run") => run_cmd(args),
         Some("analyze") => analyze_cmd(args),
         Some("sweep") => sweep_cmd(args),
+        Some("faults") => faults_cmd(args),
         Some("benchdiff") => benchdiff_cmd(args),
         Some(other) => bail!("unknown subcommand `{other}` (try `bsps info`)"),
         None => Ok(USAGE.to_string()),
@@ -41,10 +42,12 @@ USAGE:
   bsps run spmv --n <size> --nnz <per-row> --rows <per-token>
   bsps run sort --n <len> --c <token> [--chunk <words>] [--oversample <σ>]
   bsps run video --frames <count> --pixels <per-frame>
+  bsps run <algo> --inject <site> [--inject-at <h>] [--inject-pid <j>]
   bsps analyze --algo <inprod|cannon|cannon_ml|spmv|sort|video|racy|all>
                [--mode warn|deny] [--expect <finding-kind>]
   bsps sweep [--algo cannon|sort] [--cores <budget>] [--check]
              [--jobs <n>x<M>,…] [--sizes <len>,<len>,…]
+  bsps faults --sweep [--p <cores>] [--hypersteps <n>] [--every-k <k>]
   bsps benchdiff <old.json> <new.json> [--max-regress 0.15]
                  [--max-scalar-rel 0.15]
 
@@ -65,6 +68,15 @@ scheduled outputs are byte-identical.
 run sort streams a dataset of any size through the out-of-core sample
 sort: --chunk caps the scratchpad run length (forcing extra merge
 passes), --oversample sets the regular-sampling ratio σ.
+run --inject arms one deterministic fault (kernel-panic | dma-fail |
+dma-stall | stream-corrupt | barrier-skip) at hyperstep --inject-at on
+core --inject-pid, with the barrier watchdog on: the run either
+completes (dma-stall: inflated makespan) or aborts with a diagnostic
+naming the fault — never a wedge.
+faults --sweep injects every fault site at every hyperstep of a seeded
+BSPS kernel and retries each killed gang from its last barrier-consistent
+checkpoint, verifying recovered results byte-identical to a fault-free
+run (nonzero exit on any wedge or non-identical recovery — the CI gate).
 Paper benches: cargo bench (see rust/benches/, one per table/figure);
 benchdiff compares two BENCH_<suite>.json trajectory files and errors
 on throughput regressions beyond the threshold and on trajectory
@@ -101,6 +113,26 @@ fn env_from(args: &Args) -> Result<BspsEnv> {
     };
     if args.flag("no-prefetch") {
         env = env.without_prefetch();
+    }
+    if let Some(site_s) = args.get("inject") {
+        let site = FaultSite::parse(site_s).ok_or_else(|| {
+            anyhow!(
+                "--inject: unknown fault site `{site_s}` (kernel-panic | dma-fail | \
+                 dma-stall | stream-corrupt | barrier-skip)"
+            )
+        })?;
+        let hyperstep = args.get_usize("inject-at", 0)?;
+        let pid = args.get_usize("inject-pid", 0)?;
+        ensure!(
+            pid < env.machine.p,
+            "--inject-pid {pid} is not a core of the {}-core machine",
+            env.machine.p
+        );
+        // Arm the watchdog alongside the fault so a skipped barrier is
+        // diagnosed instead of wedging the CLI.
+        env = env
+            .with_fault(FaultMode::single(site, pid, hyperstep))
+            .with_barrier_timeout(std::time::Duration::from_secs(2));
     }
     Ok(env)
 }
@@ -359,12 +391,79 @@ fn benchdiff_cmd(args: &Args) -> Result<String> {
     Ok(out)
 }
 
-/// Render a panic payload (a poisoned gang's diagnostic) as text.
-fn panic_payload_msg(p: &(dyn std::any::Any + Send)) -> String {
-    p.downcast_ref::<String>()
-        .cloned()
-        .or_else(|| p.downcast_ref::<&str>().map(|s| (*s).to_string()))
-        .unwrap_or_else(|| "non-string panic payload".to_string())
+/// `bsps faults --sweep`: the recovery gate. Injects every fault site
+/// at every hyperstep of a seeded BSPS kernel (victim pid drawn
+/// deterministically from the seed), retries each killed gang from its
+/// last barrier-consistent checkpoint under the scheduler's
+/// [`crate::bsp::fault::RetryPolicy`], and verifies the recovered
+/// results — digests, stream contents, cost rows, ledger, spans — are
+/// byte-identical to a fault-free reference. The whole sweep runs
+/// against a wall-clock deadline on a helper thread, so the one failure
+/// mode the watchdog exists to kill (a wedged gang) fails the command
+/// instead of hanging CI.
+fn faults_cmd(args: &Args) -> Result<String> {
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    ensure!(args.flag("sweep"), "faults: nothing to do (try `bsps faults --sweep`)");
+    let p = args.get_usize("p", 4)?;
+    let hypersteps = args.get_usize("hypersteps", 6)?;
+    let every_k = args.get_usize("every-k", 2)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let timeout = Duration::from_millis(args.get_usize("timeout-ms", 2000)? as u64);
+    ensure!(p >= 2, "faults --sweep: needs at least 2 cores (barrier-skip is a no-op on 1)");
+    ensure!(hypersteps >= 1 && every_k >= 1, "faults --sweep: hypersteps and every-k must be ≥ 1");
+
+    // Watchdog-diagnosed cases (barrier-skip) each cost up to one
+    // `timeout` of wall-clock; everything else is virtual-time fast.
+    let deadline = timeout
+        .saturating_mul(u32::try_from(2 * hypersteps + 10).unwrap_or(u32::MAX))
+        .saturating_add(Duration::from_secs(30));
+    let (tx, rx) = mpsc::channel();
+    std::thread::Builder::new()
+        .name("bsps-fault-sweep".into())
+        .spawn(move || {
+            let _ = tx.send(crate::bsp::fault::sweep_matrix(p, hypersteps, every_k, seed, timeout));
+        })
+        .map_err(|e| anyhow!("faults --sweep: spawning the sweep thread: {e}"))?;
+    let cases = match rx.recv_timeout(deadline) {
+        Ok(cases) => cases,
+        Err(_) => bail!(
+            "faults --sweep: WEDGED — no verdict within {deadline:?}; a gang hung \
+             past its barrier watchdog (this is exactly the failure the sweep gates)"
+        ),
+    };
+
+    let mut out = format!(
+        "fault sweep: p={p} hypersteps={hypersteps} every_k={every_k} seed={seed} \
+         ({} cases)\n",
+        cases.len()
+    );
+    let mut failed = 0usize;
+    for c in &cases {
+        let recovery = match c.recovery {
+            Some(r) => match r.resumed_from {
+                Some(h) => format!("resumed@h{h} (lost {})", r.lost_hypersteps),
+                None => format!("fresh restart (lost {})", r.lost_hypersteps),
+            },
+            None => "no retry".to_string(),
+        };
+        out.push_str(&format!(
+            "  {:<15} pid={} h={} attempts={} {:<26} {}\n",
+            c.site.name(),
+            c.pid,
+            c.hyperstep,
+            c.attempts,
+            recovery,
+            if c.passed() { "identical ✓" } else { c.detail.as_str() }
+        ));
+        failed += usize::from(!c.passed());
+    }
+    if failed > 0 {
+        bail!("{out}faults --sweep: {failed} case(s) broke the recovery invariant");
+    }
+    out.push_str("faults --sweep: every fault recovered byte-identically\n");
+    Ok(out)
 }
 
 /// `bsps analyze`: run one shipped algorithm (or the deliberately-racy
@@ -519,13 +618,31 @@ fn analyze_one(
 }
 
 fn run_cmd(args: &Args) -> Result<String> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
     let algo = args
         .positional
         .get(1)
         .ok_or_else(|| anyhow!("run: missing algorithm (inprod|cannon|spmv|sort|video)"))?;
     let env = env_from(args)?;
+    if matches!(env.fault, FaultMode::Off) {
+        return run_algo(args, &env, algo);
+    }
+    // An armed fault may legitimately kill the gang (that is the point);
+    // catch the poison unwind and report the diagnostic instead of
+    // crashing the CLI. Non-fatal faults (dma-stall) complete normally.
+    match catch_unwind(AssertUnwindSafe(|| run_algo(args, &env, algo))) {
+        Ok(r) => r,
+        Err(payload) => Ok(format!(
+            "fault injection: gang aborted — {}",
+            panic_payload_msg(payload.as_ref())
+        )),
+    }
+}
+
+fn run_algo(args: &Args, env: &BspsEnv, algo: &str) -> Result<String> {
     let mut rng = SplitMix64::new(args.get_usize("seed", 42)? as u64);
-    match algo.as_str() {
+    match algo {
         "inprod" => {
             let n = args.get_usize("n", 65536)?;
             let c = args.get_usize("c", 64)?;

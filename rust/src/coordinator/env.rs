@@ -3,8 +3,9 @@
 //! `algos/` and the examples.
 
 use std::sync::Arc;
+use std::time::Duration;
 
-use crate::bsp::{run_gang_cfg, AnalysisMode, Ctx, GangConfig, RunOutcome};
+use crate::bsp::{run_gang_cfg, AnalysisMode, Ctx, FaultMode, GangConfig, RunOutcome};
 use crate::coordinator::compute::ComputeBackend;
 use crate::coordinator::report::Report;
 use crate::model::params::AcceleratorParams;
@@ -27,6 +28,13 @@ pub struct BspsEnv {
     /// Superstep race/hazard analysis mode (see `bsp::verify`). `Off`
     /// by default: the analyzer is not even constructed.
     pub analysis: AnalysisMode,
+    /// Deterministic fault injection (see `bsp::fault`). `Off` by
+    /// default: every fault hook is a free branch.
+    pub fault: FaultMode,
+    /// Barrier watchdog limit: a core absent from a barrier this long
+    /// poisons the gang with a diagnostic naming it, instead of
+    /// wedging. `None` (the default) disables the watchdog.
+    pub barrier_timeout: Option<Duration>,
 }
 
 impl BspsEnv {
@@ -38,6 +46,8 @@ impl BspsEnv {
             backend: Arc::new(ComputeBackend::Native),
             prefetch: true,
             analysis: AnalysisMode::Off,
+            fault: FaultMode::Off,
+            barrier_timeout: None,
         }
     }
 
@@ -48,6 +58,8 @@ impl BspsEnv {
             backend: Arc::new(ComputeBackend::pjrt(artifact_dir)?),
             prefetch: true,
             analysis: AnalysisMode::Off,
+            fault: FaultMode::Off,
+            barrier_timeout: None,
         })
     }
 
@@ -62,6 +74,23 @@ impl BspsEnv {
     #[must_use]
     pub fn with_analysis(mut self, mode: AnalysisMode) -> Self {
         self.analysis = mode;
+        self
+    }
+
+    /// Same env with deterministic fault injection armed
+    /// (`bsps run --inject`).
+    #[must_use]
+    pub fn with_fault(mut self, fault: FaultMode) -> Self {
+        self.fault = fault;
+        self
+    }
+
+    /// Same env with the barrier watchdog armed: a core missing from a
+    /// barrier for `limit` poisons the gang with a diagnostic naming
+    /// its pid instead of wedging the run.
+    #[must_use]
+    pub fn with_barrier_timeout(mut self, limit: Duration) -> Self {
+        self.barrier_timeout = Some(limit);
         self
     }
 }
@@ -81,7 +110,12 @@ where
     F: Fn(&mut Ctx, &ComputeBackend) + Sync,
 {
     let backend = Arc::clone(&env.backend);
-    let cfg = GangConfig { analysis: env.analysis, ..Default::default() };
+    let cfg = GangConfig {
+        analysis: env.analysis,
+        fault: env.fault.clone(),
+        barrier_timeout: env.barrier_timeout,
+        ..Default::default()
+    };
     let outcome = run_gang_cfg(&env.machine, Some(streams), env.prefetch, cfg, |ctx| {
         kernel(ctx, &backend);
     });

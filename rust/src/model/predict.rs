@@ -118,6 +118,55 @@ pub fn k_equal_full(m: &AcceleratorParams, k_max: usize) -> Option<usize> {
         .max()
 }
 
+// --------------------------------------------------------- checkpoints
+
+/// Closed-form Eq. 1 cost of barrier-consistent checkpointing
+/// ([`crate::bsp::fault::CheckpointPolicy`]): a checkpoint is an
+/// e-priced external-memory write of the gang's live state, charged on
+/// the checkpointing hyperstep's DMA side.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheckpointPrediction {
+    /// Checkpoints captured over the run, `⌊hypersteps / every_k⌋`.
+    pub checkpoints: usize,
+    /// Total words written to external memory for checkpoints.
+    pub words: u64,
+    /// Total checkpoint cost, FLOPs (`e · words`).
+    pub flops: f64,
+    /// Total checkpoint cost, seconds.
+    pub seconds: f64,
+}
+
+/// Predict the overhead of checkpointing every `every_k` hypersteps
+/// (clamped to ≥ 1) over a run of `hypersteps`, where each checkpoint
+/// snapshots `words_per_checkpoint` words (registered variables +
+/// queued message payloads — what the engine's
+/// `RunOutcome::checkpoint_words` tallies, divided by the checkpoint
+/// count). Each write costs `e` FLOPs per word, Eq. 1's price for
+/// external-memory traffic.
+#[must_use]
+pub fn checkpoint_cost(
+    m: &AcceleratorParams,
+    hypersteps: usize,
+    every_k: usize,
+    words_per_checkpoint: u64,
+) -> CheckpointPrediction {
+    let checkpoints = hypersteps / every_k.max(1);
+    let words = checkpoints as u64 * words_per_checkpoint;
+    let flops = m.e * words as f64;
+    CheckpointPrediction { checkpoints, words, flops, seconds: m.flops_to_seconds(flops) }
+}
+
+/// Hypersteps a fault at hyperstep `fault_at` (0-based) forces a
+/// checkpoint-resumed retry to replay: the work completed since the
+/// last checkpoint, `fault_at − ⌊fault_at / every_k⌋ · every_k`
+/// (`every_k` clamped to ≥ 1). This is the closed form behind the
+/// `recovery_replay_ratio` bench scalar.
+#[must_use]
+pub fn replay_hypersteps(every_k: usize, fault_at: usize) -> usize {
+    let k = every_k.max(1);
+    fault_at - (fault_at / k) * k
+}
+
 // --------------------------------------------------------------- sort
 
 /// Geometry of the out-of-core pseudo-streaming sample sort (paper §7,
@@ -523,6 +572,28 @@ mod tests {
     #[should_panic]
     fn cannon_rejects_indivisible() {
         let _ = cannon_cost(&m(), 100, 3);
+    }
+
+    #[test]
+    fn checkpoint_cost_prices_e_per_word() {
+        let mm = m();
+        let c = checkpoint_cost(&mm, 64, 8, 1000);
+        assert_eq!(c.checkpoints, 8);
+        assert_eq!(c.words, 8000);
+        assert!((c.flops - mm.e * 8000.0).abs() < 1e-9);
+        assert!((c.seconds - mm.flops_to_seconds(c.flops)).abs() < 1e-18);
+        // every_k = 0 is clamped, not a division by zero.
+        assert_eq!(checkpoint_cost(&mm, 10, 0, 5).checkpoints, 10);
+    }
+
+    #[test]
+    fn replay_hypersteps_counts_work_past_the_last_checkpoint() {
+        assert_eq!(replay_hypersteps(4, 0), 0);
+        assert_eq!(replay_hypersteps(4, 3), 3);
+        assert_eq!(replay_hypersteps(4, 4), 0);
+        assert_eq!(replay_hypersteps(4, 9), 1);
+        assert_eq!(replay_hypersteps(1, 7), 0, "checkpointing every step loses nothing");
+        assert_eq!(replay_hypersteps(0, 7), 0, "every_k clamps to 1");
     }
 
     #[test]

@@ -124,6 +124,20 @@ impl DmaEngine {
         self.busy_until
     }
 
+    /// Fault injection: hold the engine busy for `cycles` extra virtual
+    /// cycles from `now` (a stalled fill — e.g. DRAM refresh storm or a
+    /// retried burst). Subsequent transfers queue behind the stall, so
+    /// the run completes with an inflated makespan instead of failing.
+    pub fn inject_delay(&mut self, now: f64, cycles: f64) {
+        self.busy_until = self.busy_until.max(now) + cycles;
+    }
+
+    /// Checkpoint restore: fast-forward the engine to be free no
+    /// earlier than `t` (never rewinds — virtual time is monotone).
+    pub fn restore_busy(&mut self, t: f64) {
+        self.busy_until = self.busy_until.max(t);
+    }
+
     /// Retained log entries (≤ the ring capacity unless tracing).
     #[must_use]
     pub fn log_len(&self) -> usize {
@@ -226,6 +240,27 @@ mod tests {
         assert_eq!(d.log_len(), 10, "trace mode is unbounded");
         let issued: Vec<f64> = d.log().map(|t| t.issued_at).collect();
         assert_eq!(issued, (0..10).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn injected_delay_queues_later_transfers() {
+        let mut d = DmaEngine::new();
+        d.inject_delay(0.0, 10_000.0);
+        assert_eq!(d.free_at(), 10_000.0);
+        let done = d.issue(&mem(), 0.0, Dir::Read, NetState::Free, 8);
+        assert!(done > 10_000.0, "transfer queues behind the stall");
+        // A later stall stacks on top of the current busy horizon.
+        d.inject_delay(0.0, 5.0);
+        assert!((d.free_at() - (done + 5.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn restore_busy_never_rewinds() {
+        let mut d = DmaEngine::new();
+        d.restore_busy(500.0);
+        assert_eq!(d.free_at(), 500.0);
+        d.restore_busy(100.0);
+        assert_eq!(d.free_at(), 500.0, "virtual time is monotone");
     }
 
     #[test]

@@ -19,4 +19,4 @@
 
 pub mod registry;
 
-pub use registry::{StreamError, StreamHandle, StreamRegistry};
+pub use registry::{token_fnv, StreamError, StreamHandle, StreamRegistry, StreamSnapshot};

@@ -44,6 +44,9 @@ pub enum StreamError {
     ExtMemExhausted(usize, usize, usize),
     /// `create` with a total size not divisible by the token size.
     RaggedStream(usize, usize),
+    /// A delivered token's checksum does not match the stored one
+    /// (stream id, token index) — external-memory corruption.
+    TokenCorrupted(usize, usize),
 }
 
 impl fmt::Display for StreamError {
@@ -68,17 +71,54 @@ impl fmt::Display for StreamError {
             StreamError::RaggedStream(total, tok) => {
                 write!(f, "stream total size {total} not a multiple of token size {tok}")
             }
+            StreamError::TokenCorrupted(id, idx) => {
+                write!(
+                    f,
+                    "token {idx} of stream {id} failed its checksum: \
+                     external-memory corruption detected on move_down"
+                )
+            }
         }
     }
 }
 
 impl std::error::Error for StreamError {}
 
+/// FNV-1a over the bit patterns of a token's words — the per-token
+/// checksum stored at every write and verified on every `move_down`
+/// delivery (end-to-end corruption detection for the simulated
+/// external-memory path).
+#[must_use]
+pub fn token_fnv(words: &[f32]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for w in words {
+        for b in w.to_bits().to_le_bytes() {
+            h = (h ^ u32::from(b)).wrapping_mul(0x0100_0193);
+        }
+    }
+    h
+}
+
+/// Barrier-consistent snapshot of one stream, taken by
+/// [`StreamRegistry::checkpoint_state`]: the backing data plus the
+/// opener's cursor. Checksums are derived state and recomputed on
+/// restore.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSnapshot {
+    /// Full backing store at the checkpoint.
+    pub data: Vec<f32>,
+    /// Next-token cursor at the checkpoint.
+    pub cursor: usize,
+}
+
 /// One stream in external memory.
 struct StreamState {
     token_words: usize,
     /// Backing store (simulated external DRAM).
     data: Mutex<Vec<f32>>,
+    /// Per-token FNV-1a checksums, kept in lockstep with `data` (one
+    /// entry per token, pre-sized at create — no steady-state growth).
+    sums: Mutex<Vec<u32>>,
     /// Core currently holding the stream, or -1.
     opened_by: AtomicI64,
     /// Next-token cursor (only touched by the opener).
@@ -165,9 +205,11 @@ impl StreamRegistry {
             data[..n].copy_from_slice(&init[..n]);
         }
         self.used_words += total_words;
+        let sums: Vec<u32> = data.chunks_exact(token_words).map(token_fnv).collect();
         self.streams.push(StreamState {
             token_words,
             data: Mutex::new(data),
+            sums: Mutex::new(sums),
             opened_by: AtomicI64::new(-1),
             cursor: Mutex::new(0),
         });
@@ -275,6 +317,7 @@ impl StreamRegistry {
         }
         let start = *cursor * st.token_words;
         data[start..start + st.token_words].copy_from_slice(token);
+        st.sums.lock().unwrap()[*cursor] = token_fnv(token);
         *cursor += 1;
         Ok(())
     }
@@ -329,6 +372,64 @@ impl StreamRegistry {
     /// Token size in words of stream `id`.
     pub fn token_words(&self, id: usize) -> Result<usize, StreamError> {
         Ok(self.state(id)?.token_words)
+    }
+
+    /// Verify a delivered token against its stored checksum. The engine
+    /// calls this on every `move_down` delivery, *after* the transfer
+    /// and *before* the kernel sees the data — corrupted words can
+    /// never propagate into compute.
+    pub fn verify_token(
+        &self,
+        id: usize,
+        idx: usize,
+        words: &[f32],
+    ) -> Result<(), StreamError> {
+        let st = self.state(id)?;
+        let sums = st.sums.lock().unwrap();
+        if sums.get(idx).copied() != Some(token_fnv(words)) {
+            return Err(StreamError::TokenCorrupted(id, idx));
+        }
+        Ok(())
+    }
+
+    /// Snapshot every stream's data + cursor (one [`StreamSnapshot`]
+    /// per stream, in id order) — the stream half of a barrier-consistent
+    /// [`crate::bsp::fault::GangCheckpoint`], and the pristine-input
+    /// capture a retrying scheduler restores before a fresh re-run.
+    #[must_use]
+    pub fn checkpoint_state(&self) -> Vec<StreamSnapshot> {
+        self.streams
+            .iter()
+            .map(|st| StreamSnapshot {
+                data: st.data.lock().unwrap().clone(),
+                cursor: *st.cursor.lock().unwrap(),
+            })
+            .collect()
+    }
+
+    /// Restore every stream from a [`StreamRegistry::checkpoint_state`]
+    /// snapshot: data and cursor are rewound, checksums recomputed, and
+    /// every stream is force-closed (`opened_by = -1`) so the retried
+    /// gang's `open` calls succeed even though the faulted run never
+    /// reached its `close`s.
+    ///
+    /// # Panics
+    /// If the snapshot does not cover exactly this registry's streams.
+    pub fn restore_state(&self, snaps: &[StreamSnapshot]) {
+        assert_eq!(
+            snaps.len(),
+            self.streams.len(),
+            "stream snapshot does not match the registry"
+        );
+        for (st, snap) in self.streams.iter().zip(snaps) {
+            let mut data = st.data.lock().unwrap();
+            assert_eq!(data.len(), snap.data.len(), "stream size changed since snapshot");
+            data.copy_from_slice(&snap.data);
+            *st.sums.lock().unwrap() =
+                snap.data.chunks_exact(st.token_words).map(token_fnv).collect();
+            *st.cursor.lock().unwrap() = snap.cursor;
+            st.opened_by.store(-1, Ordering::Release);
+        }
     }
 }
 
@@ -479,6 +580,59 @@ mod tests {
         assert!(r.create(cap - 4, 4, None).is_ok());
         assert!(matches!(r.create(8, 4, None), Err(StreamError::ExtMemExhausted(..))));
         assert!(r.create(4, 4, None).is_ok(), "exactly full is fine");
+    }
+
+    #[test]
+    fn checksums_track_create_and_move_up() {
+        let mut r = reg();
+        let id = r.create(4, 2, Some(&[1.0, 2.0, 3.0, 4.0])).unwrap();
+        // Pristine tokens verify.
+        r.verify_token(id, 0, &[1.0, 2.0]).unwrap();
+        r.verify_token(id, 1, &[3.0, 4.0]).unwrap();
+        // A bit-flipped delivery is caught.
+        assert_eq!(
+            r.verify_token(id, 1, &[3.0, f32::from_bits(4.0f32.to_bits() ^ 1)]),
+            Err(StreamError::TokenCorrupted(id, 1))
+        );
+        // move_up refreshes the stored sum.
+        let h = r.open(id, 0).unwrap();
+        r.move_up(h, 0, &[9.0, 8.0]).unwrap();
+        r.verify_token(id, 0, &[9.0, 8.0]).unwrap();
+        assert_eq!(
+            r.verify_token(id, 0, &[1.0, 2.0]),
+            Err(StreamError::TokenCorrupted(id, 0))
+        );
+    }
+
+    #[test]
+    fn checkpoint_and_restore_round_trip() {
+        let mut r = reg();
+        let id = r.create(4, 2, Some(&[1.0, 2.0, 3.0, 4.0])).unwrap();
+        let h = r.open(id, 0).unwrap();
+        let mut buf = Vec::new();
+        r.move_down(h, 0, &mut buf).unwrap(); // cursor -> 1
+        let snap = r.checkpoint_state();
+        // Mutate past the snapshot and leave the stream open (as a
+        // faulted gang would).
+        r.move_up(h, 0, &[7.0, 7.0]).unwrap();
+        r.restore_state(&snap);
+        assert_eq!(r.snapshot(id).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        // Force-closed: a retry can reopen, and the cursor was rewound.
+        let h2 = r.open(id, 1).unwrap();
+        r.seek(h2, 1, snap[0].cursor as i64).unwrap();
+        r.move_down(h2, 1, &mut buf).unwrap();
+        assert_eq!(buf, vec![3.0, 4.0]);
+        // Restored data verifies against recomputed checksums.
+        r.verify_token(id, 0, &[1.0, 2.0]).unwrap();
+    }
+
+    #[test]
+    fn token_fnv_is_stable_and_bit_sensitive() {
+        let a = token_fnv(&[1.0, 2.0]);
+        assert_eq!(a, token_fnv(&[1.0, 2.0]), "deterministic");
+        assert_ne!(a, token_fnv(&[1.0, f32::from_bits(2.0f32.to_bits() ^ 1)]));
+        // -0.0 and +0.0 differ in bits, so they must differ in sum.
+        assert_ne!(token_fnv(&[0.0]), token_fnv(&[-0.0]));
     }
 
     #[test]

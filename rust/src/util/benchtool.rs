@@ -590,6 +590,10 @@ pub struct ScalarBand {
 /// * `surcharge` — NoC route surcharge: same shape;
 /// * `speedup` — bigger is better; shrinking beyond the band regresses;
 /// * `occupancy` — a `(0, 1]` ratio: absolute band, shrinking is bad;
+/// * `replay` — recovery replay ratios (hypersteps re-executed after a
+///   checkpoint resume over total): deterministic fractions in `[0, 1)`
+///   that only regress by growing (a checkpoint cadence or resume-point
+///   bug shows up as more replayed work);
 /// * `overhead` — infrastructure tax ratios (e.g. the superstep
 ///   analyzer's Warn-vs-Off scalar) that sit near 1.0: growth is the
 ///   regression, with a wide band because they divide two noisy
@@ -613,6 +617,8 @@ pub fn scalar_band_for(name: &str, default_rel: f64) -> ScalarBand {
         ScalarBand { rel: 0.5, abs: 0.3, dir: BandDir::LowerIsWorse }
     } else if name.contains("occupancy") {
         ScalarBand { rel: 0.0, abs: 0.25, dir: BandDir::LowerIsWorse }
+    } else if name.contains("replay") {
+        ScalarBand { rel: 0.5, abs: 0.05, dir: BandDir::HigherIsWorse }
     } else if name.contains("overhead") {
         ScalarBand { rel: 1.0, abs: 0.5, dir: BandDir::HigherIsWorse }
     } else if name.contains("wait") {
@@ -818,6 +824,11 @@ mod tests {
         assert!(wait.abs >= 0.25, "wait scalars need a wide absolute floor");
         // The analyzer tax ratio sits near 1.0 and divides two noisy
         // means: only growth regresses, and the band must be wide.
+        // Replay ratios only regress by growing, and need their own
+        // (tighter) band — they are deterministic, not wall-clock noise.
+        let rep = scalar_band_for("recovery_replay_ratio", 0.15);
+        assert_eq!(rep.dir, BandDir::HigherIsWorse);
+        assert!(rep.rel <= 0.5 && rep.abs <= 0.05, "replay band too loose");
         let ovh = scalar_band_for("analyzer_warn_overhead", 0.15);
         assert_eq!(ovh.dir, BandDir::HigherIsWorse);
         assert!(ovh.rel >= 1.0 && ovh.abs >= 0.5, "overhead band too tight");

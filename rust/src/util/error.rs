@@ -111,6 +111,20 @@ macro_rules! ensure {
 
 pub use crate::{anyhow, bail, ensure};
 
+/// Render a panic payload (e.g. a poisoned gang's diagnostic) as text.
+///
+/// The one panic-message renderer shared by the scheduler, the engine,
+/// the barrier-watchdog diagnostics and the CLI — `&str` and `String`
+/// payloads are returned verbatim, anything else gets a stable marker.
+#[must_use]
+pub fn panic_payload_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| (*s).to_string()))
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
 /// Extension trait adding context to fallible values, like
 /// `anyhow::Context`.
 pub trait Context<T> {
@@ -179,6 +193,16 @@ mod tests {
         let none: Option<i32> = None;
         assert_eq!(none.context("missing value").unwrap_err().to_string(), "missing value");
         assert_eq!(Some(1).context("unused").unwrap(), 1);
+    }
+
+    #[test]
+    fn panic_payload_renders_strings_and_markers() {
+        let s: Box<dyn std::any::Any + Send> = Box::new("static str".to_string());
+        assert_eq!(panic_payload_msg(s.as_ref()), "static str");
+        let s: Box<dyn std::any::Any + Send> = Box::new("literal");
+        assert_eq!(panic_payload_msg(s.as_ref()), "literal");
+        let s: Box<dyn std::any::Any + Send> = Box::new(42usize);
+        assert_eq!(panic_payload_msg(s.as_ref()), "non-string panic payload");
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -139,15 +140,24 @@ struct GangWorker {
 /// Panics in any core are caught, the remaining cores are joined (the
 /// engine's poisoned barrier unwinds them), and the first panic is
 /// re-raised on the caller — the same semantics as [`scoped_spmd`].
+///
+/// The pool retains at most [`GangPool::set_helper_cap`] idle helper
+/// threads between runs. A run always gets the `p - 1` distinct helpers
+/// it needs (a gang parks on barriers, so capping the *checkout* would
+/// deadlock it); the cap bounds what survives the run, so a scheduler
+/// operating under a [`CoreBudget`] keeps the thread count tied to the
+/// budget instead of the historical peak.
 pub struct GangPool {
     idle: Mutex<Vec<GangWorker>>,
+    /// Idle helpers retained beyond this are dropped at give-back.
+    helper_cap: AtomicUsize,
 }
 
 impl GangPool {
     /// An empty pool (no threads until the first `run`).
     #[must_use]
     pub const fn new() -> Self {
-        Self { idle: Mutex::new(Vec::new()) }
+        Self { idle: Mutex::new(Vec::new()), helper_cap: AtomicUsize::new(usize::MAX) }
     }
 
     /// The process-wide pool used by the engine.
@@ -176,6 +186,26 @@ impl GangPool {
     #[must_use]
     pub fn idle_workers(&self) -> usize {
         self.idle.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Bound the idle helper threads retained between runs (clamped to
+    /// at least 1). Surplus parked workers are dropped immediately —
+    /// each one's job channel closes and its thread exits. Runs that
+    /// need more helpers than the cap still get them (correctness
+    /// requires `p - 1` distinct threads); the surplus is shed when the
+    /// gang retires. The multi-gang scheduler sets this from its
+    /// [`CoreBudget`] capacity so the persistent pool never outgrows
+    /// the core budget it serves.
+    pub fn set_helper_cap(&self, cap: usize) {
+        let cap = cap.max(1);
+        self.helper_cap.store(cap, Ordering::Relaxed);
+        self.idle.lock().unwrap_or_else(|e| e.into_inner()).truncate(cap);
+    }
+
+    /// The current idle-helper retention cap.
+    #[must_use]
+    pub fn helper_cap(&self) -> usize {
+        self.helper_cap.load(Ordering::Relaxed)
     }
 
     /// Run `f(pid)` for `pid in 0..p` concurrently and wait for all of
@@ -236,10 +266,11 @@ impl GangPool {
                 Err(_) => break,
             }
         }
-        self.idle
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .append(&mut workers);
+        {
+            let mut idle = self.idle.lock().unwrap_or_else(|e| e.into_inner());
+            idle.append(&mut workers);
+            idle.truncate(self.helper_cap.load(Ordering::Relaxed));
+        }
         assert!(
             dispatched == helpers || first_panic.is_some(),
             "gang worker unavailable"
@@ -590,6 +621,30 @@ mod tests {
         });
         assert_eq!(total.load(Ordering::SeqCst), 8);
         assert!(POOL.idle_workers() <= 6, "at most 2×3 helpers spawned");
+    }
+
+    #[test]
+    fn gang_pool_helper_cap_bounds_retained_workers() {
+        let pool = GangPool::new();
+        assert_eq!(pool.helper_cap(), usize::MAX, "uncapped by default");
+        pool.run(8, |_| {});
+        assert_eq!(pool.idle_workers(), 7);
+        // Capping sheds surplus parked helpers immediately.
+        pool.set_helper_cap(3);
+        assert_eq!(pool.helper_cap(), 3);
+        assert_eq!(pool.idle_workers(), 3);
+        // A bigger gang still gets all the helpers it needs, but only
+        // the cap survives the run.
+        let ran = AtomicUsize::new(0);
+        pool.run(8, |_| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 8);
+        assert_eq!(pool.idle_workers(), 3);
+        // The clamp keeps at least one helper.
+        pool.set_helper_cap(0);
+        assert_eq!(pool.helper_cap(), 1);
+        assert_eq!(pool.idle_workers(), 1);
     }
 
     #[test]

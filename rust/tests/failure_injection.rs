@@ -4,10 +4,16 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use bsps::bsp::{run_gang, VarHandle};
+use bsps::bsp::fault::{sweep_matrix, CaseOutcome};
+use bsps::bsp::{
+    run_gang, run_gang_cfg, CheckpointPolicy, FaultMode, FaultSite, GangConfig, VarHandle,
+};
 use bsps::model::params::AcceleratorParams;
+use bsps::model::predict;
 use bsps::stream::StreamRegistry;
+use bsps::util::prop;
 
 fn machine(p: usize) -> AcceleratorParams {
     let mut m = AcceleratorParams::epiphany3();
@@ -220,6 +226,174 @@ fn gang_reuse_after_failure_is_fresh() {
         ctx.sync();
     });
     assert_eq!(out.cost.len(), 1);
+}
+
+// ------------------------------------------------ injected faults & recovery
+// The deterministic fault matrix (ISSUE 8): every fault site × injection
+// hyperstep must either abort with a diagnostic or recover from the last
+// barrier-consistent checkpoint with byte-identical results — and never
+// wedge the test binary.
+
+fn assert_sweep_clean(cases: &[CaseOutcome]) {
+    for c in cases {
+        assert!(
+            c.passed(),
+            "{} pid={} h={}: {}",
+            c.site.name(),
+            c.pid,
+            c.hyperstep,
+            c.detail
+        );
+        if c.site == FaultSite::DmaStall {
+            // A stall is non-fatal: the run completes on its first
+            // attempt, just later.
+            assert_eq!(c.attempts, 1, "stall must not retry: {c:?}");
+            assert!(c.recovery.is_none(), "stall must not recover: {c:?}");
+        } else {
+            assert_eq!(c.attempts, 2, "fatal faults retry exactly once: {c:?}");
+            assert!(c.recovery.is_some(), "fatal faults record recovery: {c:?}");
+        }
+    }
+}
+
+#[test]
+fn fault_matrix_recovers_byte_identically_p4() {
+    let cases = sweep_matrix(4, 5, 2, 42, Duration::from_millis(500));
+    assert_eq!(cases.len(), FaultSite::ALL.len() * 5);
+    assert_sweep_clean(&cases);
+    // With k=2 over 5 hypersteps both recovery paths must be exercised:
+    // early faults restart fresh, later ones resume from a checkpoint.
+    let resumed = cases
+        .iter()
+        .filter(|c| c.recovery.is_some_and(|r| r.resumed_from.is_some()))
+        .count();
+    let fresh = cases
+        .iter()
+        .filter(|c| c.recovery.is_some_and(|r| r.resumed_from.is_none()))
+        .count();
+    assert!(resumed > 0, "no case resumed from a checkpoint");
+    assert!(fresh > 0, "no case exercised the fresh-restart path");
+}
+
+#[test]
+fn fault_matrix_recovers_byte_identically_p16() {
+    // k=1: a checkpoint after every hyperstep, so every fatal fault at
+    // h ≥ 1 resumes exactly one hyperstep back.
+    let cases = sweep_matrix(16, 3, 1, 7, Duration::from_millis(500));
+    assert_eq!(cases.len(), FaultSite::ALL.len() * 3);
+    assert_sweep_clean(&cases);
+    for c in &cases {
+        if let Some(r) = c.recovery {
+            if let Some(from) = r.resumed_from {
+                assert_eq!(from, c.hyperstep, "k=1 resumes from the faulted hyperstep");
+                assert_eq!(r.lost_hypersteps, 0, "k=1 loses no completed work");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_random_fault_sweeps_never_wedge() {
+    prop::check("random fault sweeps recover byte-identically", 3, |g| {
+        let p = g.rng.next_range(2, 5);
+        let hypersteps = g.rng.next_range(1, 4);
+        let every_k = g.rng.next_range(1, 4);
+        let seed = g.rng.next_u64();
+        let cases = sweep_matrix(p, hypersteps, every_k, seed, Duration::from_millis(300));
+        for c in &cases {
+            assert!(
+                c.passed(),
+                "p={p} k={every_k} seed={seed:#x} {} pid={} h={}: {}",
+                c.site.name(),
+                c.pid,
+                c.hyperstep,
+                c.detail
+            );
+        }
+    });
+}
+
+#[test]
+fn barrier_watchdog_names_the_never_arriving_core() {
+    let m = machine(4);
+    let mut reg = StreamRegistry::new(&m);
+    for _ in 0..4 {
+        reg.create(16, 4, None).unwrap();
+    }
+    let cfg = GangConfig {
+        fault: FaultMode::single(FaultSite::BarrierSkip, 2, 1),
+        barrier_timeout: Some(Duration::from_millis(250)),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _ = run_gang_cfg(&m, Some(Arc::new(reg)), true, cfg, |ctx| {
+            let h = ctx.stream_open(ctx.pid()).unwrap();
+            let mut buf = Vec::new();
+            for _ in 0..4 {
+                ctx.stream_move_down(h, &mut buf).unwrap();
+                ctx.hyperstep_sync();
+            }
+            ctx.stream_close(h).unwrap();
+        });
+    }));
+    let payload = r.expect_err("the watchdog must poison the gang");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| (*s).to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("watchdog"), "got: {msg}");
+    assert!(msg.contains("[2]"), "must name the missing pid, got: {msg}");
+    // Diagnosed promptly — the whole point is not wedging the gang.
+    assert!(t0.elapsed() < Duration::from_secs(30), "watchdog too slow");
+}
+
+#[test]
+fn checkpoint_charge_matches_the_closed_form() {
+    // The Eq. 1 ledger delta between a checkpointed run and a plain one
+    // must equal `model::predict::checkpoint_cost` exactly: checkpoints
+    // are e-priced external-memory writes, nothing more.
+    let m = machine(4);
+    let mk_reg = || {
+        let mut reg = StreamRegistry::new(&m);
+        for _ in 0..4 {
+            reg.create(128, 16, None).unwrap();
+        }
+        Arc::new(reg)
+    };
+    let kernel = |ctx: &mut bsps::bsp::Ctx| {
+        let x = ctx.register("state", 16).unwrap();
+        let h = ctx.stream_open(ctx.pid()).unwrap();
+        let mut tok = Vec::new();
+        for _ in 0..8 {
+            ctx.stream_move_down(h, &mut tok).unwrap();
+            ctx.with_var_mut(x, |buf| {
+                for (b, w) in buf.iter_mut().zip(&tok) {
+                    *b += *w;
+                }
+            });
+            ctx.hyperstep_sync();
+        }
+        ctx.stream_close(h).unwrap();
+    };
+    let plain = run_gang_cfg(&m, Some(mk_reg()), true, GangConfig::default(), kernel);
+    let cfg = GangConfig {
+        checkpoint: Some(CheckpointPolicy::every(2)),
+        ..Default::default()
+    };
+    let ckpt = run_gang_cfg(&m, Some(mk_reg()), true, cfg, kernel);
+    // 4 checkpoints × (4 cores × 16 words of `state`) = 256 words.
+    assert_eq!(ckpt.checkpoint_words, 256);
+    assert_eq!(plain.checkpoint_words, 0);
+    let pred = predict::checkpoint_cost(&m, 8, 2, 64);
+    assert_eq!(pred.checkpoints, 4);
+    assert_eq!(pred.words, 256);
+    let extra = ckpt.ledger.total_flops(&m) - plain.ledger.total_flops(&m);
+    let rel = (extra - pred.flops).abs() / pred.flops;
+    assert!(rel < 1e-9, "measured extra {extra} vs closed form {}", pred.flops);
+    // And the replay arithmetic: a fault at h=7 under k=2 replays 1.
+    assert_eq!(predict::replay_hypersteps(2, 7), 1);
 }
 
 #[test]

@@ -7,12 +7,16 @@
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use bsps::algos::sort::{self, SortConfig};
 use bsps::bsp::sched::{GangJob, GangScheduler};
-use bsps::bsp::{run_gang, Ctx};
+use bsps::bsp::{
+    run_gang, run_gang_cfg, CheckpointPolicy, Ctx, FaultMode, FaultSite, GangConfig, RetryPolicy,
+};
 use bsps::coordinator::SweepReport;
 use bsps::model::params::AcceleratorParams;
+use bsps::stream::StreamRegistry;
 use bsps::util::prng::SplitMix64;
 
 fn machine(p: usize) -> AcceleratorParams {
@@ -218,6 +222,155 @@ fn out_of_core_sort_gangs_survive_the_scheduler() {
         assert_eq!(sink.lock().unwrap().len(), 4, "all 4 pids reported");
     }
     assert!(out.stats.peak_cores <= 20, "peak {}", out.stats.peak_cores);
+}
+
+/// A resume-aware pseudo-streaming kernel: consumes one token per
+/// hyperstep into a registered accumulator and deposits a per-pid bit
+/// digest at the end. After a checkpoint resume it seeks its stream
+/// forward and continues — which is what makes recovered runs
+/// comparable bit-for-bit against fault-free references.
+fn stream_kernel(
+    seed: u64,
+    hypersteps: usize,
+    sink: Arc<Mutex<BTreeMap<usize, Vec<u32>>>>,
+) -> impl Fn(&mut Ctx) + Send + Sync + 'static {
+    move |ctx: &mut Ctx| {
+        let pid = ctx.pid();
+        let x = ctx.register("state", 16).unwrap();
+        let h = ctx.stream_open(pid).unwrap();
+        let resume = ctx.resume_hyperstep();
+        if resume > 0 {
+            ctx.stream_seek(h, resume as i64).unwrap();
+        }
+        let mut tok = Vec::new();
+        for t in resume..hypersteps {
+            ctx.stream_move_down(h, &mut tok).unwrap();
+            let mut rng = SplitMix64::new(seed ^ ((t as u64) << 8) ^ pid as u64);
+            let noise = rng.next_f32_in(-1.0, 1.0);
+            ctx.with_var_mut(x, |v| {
+                for (a, w) in v.iter_mut().zip(&tok) {
+                    *a = a.mul_add(0.5, *w + noise);
+                }
+            });
+            ctx.charge_flops(2.0 * tok.len() as f64);
+            ctx.hyperstep_sync();
+        }
+        ctx.stream_close(h).unwrap();
+        let mut digest = Vec::new();
+        let _ = ctx.with_var(x, |v| digest.extend(v.iter().map(|f| f.to_bits())));
+        sink.lock().unwrap().insert(pid, digest);
+    }
+}
+
+#[test]
+fn retried_gangs_interleave_with_healthy_ones_under_a_shared_budget() {
+    // Three stream gangs are each killed once (at hypersteps 1, 3, 5 —
+    // before the first checkpoint, and past the k=2 checkpoints at 2
+    // and 4) while three healthy comm gangs share the same 8-core
+    // budget. Every faulted gang must retry to a result byte-identical
+    // to its fault-free serial reference, and the healthy gangs must
+    // drain unaffected.
+    const HYPERSTEPS: usize = 6;
+    let m = machine(4);
+    let mk_reg = |seed: u64| {
+        let mut reg = StreamRegistry::new(&m);
+        let mut rng = SplitMix64::new(seed);
+        for _ in 0..4 {
+            let init = rng.f32_vec(HYPERSTEPS * 16, -1.0, 1.0);
+            reg.create(HYPERSTEPS * 16, 16, Some(&init)).unwrap();
+        }
+        Arc::new(reg)
+    };
+    let fault_hs = [1usize, 3, 5];
+
+    // Fault-free serial references (same checkpoint policy: its ledger
+    // charge is part of the byte-identity contract).
+    let mut reference = Vec::new();
+    for j in 0..fault_hs.len() {
+        let seed = 4000 + j as u64;
+        let sink = Arc::new(Mutex::new(BTreeMap::new()));
+        let kern = stream_kernel(seed, HYPERSTEPS, Arc::clone(&sink));
+        let cfg = GangConfig {
+            checkpoint: Some(CheckpointPolicy::every(2)),
+            ..Default::default()
+        };
+        // prefetch=false: a resumed gang re-fetches its first token
+        // cold, which lands in a different ledger row than a staged
+        // prefetch would — the blocking-fetch path keeps the Eq. 1
+        // rows byte-comparable (same trade the fault sweep makes).
+        let out = run_gang_cfg(&m, Some(mk_reg(seed)), false, cfg, |ctx| kern(ctx));
+        let digests = sink.lock().unwrap().clone();
+        reference.push((out, digests));
+    }
+
+    let mut jobs = Vec::new();
+    let mut fault_sinks = Vec::new();
+    for (j, &fh) in fault_hs.iter().enumerate() {
+        let seed = 4000 + j as u64;
+        let sink = Arc::new(Mutex::new(BTreeMap::new()));
+        let cfg = GangConfig {
+            fault: FaultMode::single(FaultSite::KernelPanic, j % 4, fh),
+            barrier_timeout: Some(Duration::from_secs(10)),
+            checkpoint: Some(CheckpointPolicy::every(2)),
+            ..Default::default()
+        };
+        jobs.push(
+            GangJob::new(
+                &format!("faulty{j}"),
+                m.clone(),
+                stream_kernel(seed, HYPERSTEPS, Arc::clone(&sink)),
+            )
+            .with_streams(mk_reg(seed), false)
+            .with_cfg(cfg)
+            .with_retry(RetryPolicy::retries(3, Duration::ZERO)),
+        );
+        fault_sinks.push(sink);
+    }
+    let mut healthy_sinks = Vec::new();
+    for i in 0..3u64 {
+        let sink = Arc::new(Mutex::new(BTreeMap::new()));
+        jobs.push(GangJob::new(
+            &format!("healthy{i}"),
+            machine(4),
+            stress_kernel(8800 + i, Arc::clone(&sink)),
+        ));
+        healthy_sinks.push(sink);
+    }
+    let out = GangScheduler::new(8).run(jobs);
+
+    for (j, &fh) in fault_hs.iter().enumerate() {
+        let job = &out.jobs[j];
+        let outcome = job.outcome.as_ref().unwrap_or_else(|e| panic!("faulty{j}: {e}"));
+        assert_eq!(job.attempts, 2, "faulty{j}: one fault, one retry");
+        let rec = job.recovery.expect("retried jobs record their recovery");
+        let expect_resume = (fh / 2) * 2;
+        if expect_resume == 0 {
+            assert_eq!(rec.resumed_from, None, "faulty{j} faulted pre-checkpoint");
+            assert_eq!(rec.lost_hypersteps, fh);
+        } else {
+            assert_eq!(rec.resumed_from, Some(expect_resume), "faulty{j}");
+            assert_eq!(rec.lost_hypersteps, fh - expect_resume);
+        }
+        let (ref_out, ref_digests) = &reference[j];
+        assert_eq!(
+            &*fault_sinks[j].lock().unwrap(),
+            ref_digests,
+            "faulty{j}: recovered digests diverged from the fault-free run"
+        );
+        assert_eq!(
+            outcome.ledger.hypersteps, ref_out.ledger.hypersteps,
+            "faulty{j}: recovered Eq. 1 ledger diverged"
+        );
+        assert_eq!(outcome.checkpoint_words, ref_out.checkpoint_words, "faulty{j}");
+    }
+    for (i, sink) in healthy_sinks.iter().enumerate() {
+        let job = &out.jobs[fault_hs.len() + i];
+        assert!(job.outcome.is_ok(), "{} wedged behind the retries", job.name);
+        assert_eq!(job.attempts, 1, "{} must not retry", job.name);
+        assert!(job.recovery.is_none());
+        assert_eq!(sink.lock().unwrap().len(), 4, "all 4 pids reported");
+    }
+    assert!(out.stats.peak_cores <= 8, "peak {}", out.stats.peak_cores);
 }
 
 #[test]

@@ -11,6 +11,13 @@
 //! and recycles the drained inbox payloads back (`give_msg_buf`), so
 //! message-heavy BSP programs are allocation-free too.
 //!
+//! The window also pins the fault subsystem's default cost: with
+//! `FaultMode::Off` (the `run_gang` default) every injection hook in
+//! `move_down` / `hyperstep_sync` is a free branch, the checkpoint hook
+//! is a skipped `None`, and the always-on per-token checksum verify is
+//! a lock plus an FNV fold over the delivered words — none of which may
+//! allocate, or this test fails.
+//!
 //! This file is its own test binary with exactly one test, so the
 //! global counting allocator sees no unrelated traffic during the
 //! measurement window.
