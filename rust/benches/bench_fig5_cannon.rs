@@ -11,7 +11,7 @@
 //!    recorded to `BENCH_sweep.json` for the CI trajectory gate.
 
 use bsps::algos::cannon_ml;
-use bsps::bsp::sched::GangScheduler;
+use bsps::bsp::sched::{hetero_split_jobs, GangScheduler};
 use bsps::coordinator::{BspsEnv, SweepReport};
 use bsps::model::params::AcceleratorParams;
 use bsps::model::predict;
@@ -188,6 +188,37 @@ fn scheduled_sweep(machine: &AcceleratorParams) {
     rec.scalar("sweep_speedup", sweep.speedup());
     rec.scalar("sweep_occupancy", occ);
     rec.scalar("sweep_max_queue_wait_seconds", sweep.max_queue_wait_seconds());
+    hetero_split(&mut rec);
     rec.write("BENCH_sweep.json").expect("write BENCH_sweep.json");
     println!("trajectory written to BENCH_sweep.json");
+}
+
+/// The §7 heterogeneous split, executed for real: epiphany3 and a
+/// Xeon-Phi-class unit share one I = 50 divisible inner-product
+/// workload, one gang per profile through the class-matched weighted
+/// scheduler. Asserts the flagship invariant — the split's measured
+/// **virtual** makespan (deterministic Eq. 1 ledger time) strictly
+/// beats the fastest single unit running the whole workload alone,
+/// despite a 500× throughput gap leaving the Epiphany a single grain —
+/// and records the Eq. 1 prediction's relative error plus the weighted
+/// budget's occupancy into the sweep trajectory for the benchdiff gate
+/// (`rel_err` band: ≤ 0.5 growth; `occupancy` band: ≥ −0.25 drift).
+fn hetero_split(rec: &mut BenchRecorder) {
+    section("heterogeneous split: epiphany3 + xeonphi_like @ I = 50");
+    let units = vec![AcceleratorParams::epiphany3(), AcceleratorParams::xeonphi_like()];
+    let run = hetero_split_jobs(&units, 50.0, 5.0e8).run();
+    print!("{}", run.render());
+    assert!(run.byte_identical(), "scheduled shares diverged from their serial twins");
+    assert!(
+        run.makespan_virtual_seconds < run.best_solo_seconds(),
+        "split makespan {} must beat the best solo unit {}",
+        seconds(run.makespan_virtual_seconds),
+        seconds(run.best_solo_seconds()),
+    );
+    let rel_err = run.pred_rel_err();
+    assert!(rel_err < 0.5, "hetero prediction drifted: rel_err = {rel_err}");
+    let wocc = run.sched.stats.weighted_occupancy();
+    assert!(wocc > 0.0 && wocc.is_finite(), "weighted occupancy {wocc}");
+    rec.scalar("hetero_split_pred_rel_err", rel_err);
+    rec.scalar("weighted_occupancy", wocc);
 }

@@ -76,7 +76,7 @@
 use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
 use crate::bsp::barrier::{Barrier, PoisonOnPanic};
@@ -200,17 +200,71 @@ struct VarSlot {
     words: AtomicUsize,
 }
 
-/// The gang's variable table: a registration-time intern map plus the
-/// handle-indexed slots. Only `register` touches `names` or takes the
-/// `slots` write lock; every hot-path access is a read-lock + index.
+/// Slots per chunk of the append-only variable table.
+const VAR_CHUNK: usize = 64;
+/// Chunk-directory size: at most `VAR_CHUNK * VAR_CHUNKS` variables
+/// per gang (4096 — far past any collective registration in practice).
+const VAR_CHUNKS: usize = 64;
+
+/// The gang's variable table: a registration-time intern map plus an
+/// **append-only chunked index** of the handle-indexed slots.
+///
+/// Registration happens collectively before the first sync (the
+/// analyzer's `late_registration` check enforces the discipline), so
+/// the table only ever grows, and it grows rarely. That shape lets the
+/// steady state skip locking entirely: chunks are lazily allocated
+/// boxed slices whose addresses never move, `push` publishes a new slot
+/// with a `Release` store of `len`, and every hot-path access
+/// ([`Ctx::with_var`], `put`/`get` bounds checks, the plan/apply
+/// phases) is an `Acquire` load plus two array indexes — no
+/// `RwLock` read-lock per access, which is what this structure
+/// replaced. Writers are serialized by the `names` mutex, which
+/// `register` already holds across the append.
 struct VarStore {
     names: Mutex<BTreeMap<String, u32>>,
-    slots: RwLock<Vec<VarSlot>>,
+    /// Published slot count: ids `< len` are fully initialized.
+    len: AtomicUsize,
+    /// Lazily allocated fixed-size chunks with stable addresses.
+    chunks: [OnceLock<Box<[OnceLock<VarSlot>]>>; VAR_CHUNKS],
 }
 
 impl VarStore {
     fn new() -> Self {
-        Self { names: Mutex::new(BTreeMap::new()), slots: RwLock::new(Vec::new()) }
+        Self {
+            names: Mutex::new(BTreeMap::new()),
+            len: AtomicUsize::new(0),
+            chunks: std::array::from_fn(|_| OnceLock::new()),
+        }
+    }
+
+    /// Lock-free slot lookup. Published ids always resolve: `push`
+    /// initialized the chunk and the cell before the `Release` store
+    /// that made the id visible to this call's `Acquire` load.
+    fn get(&self, id: u32) -> Option<&VarSlot> {
+        let id = id as usize;
+        if id >= self.len.load(Ordering::Acquire) {
+            return None;
+        }
+        let chunk = self.chunks[id / VAR_CHUNK].get()?;
+        chunk[id % VAR_CHUNK].get()
+    }
+
+    /// Append a slot and return its id. The caller must hold the
+    /// `names` lock — registration is the only writer, and that lock
+    /// serializes concurrent appends of *different* names.
+    fn push(&self, slot: VarSlot) -> u32 {
+        let id = self.len.load(Ordering::Relaxed);
+        assert!(
+            id < VAR_CHUNK * VAR_CHUNKS,
+            "variable table full: {id} vars registered (max {})",
+            VAR_CHUNK * VAR_CHUNKS
+        );
+        let chunk = self.chunks[id / VAR_CHUNK].get_or_init(|| {
+            (0..VAR_CHUNK).map(|_| OnceLock::new()).collect::<Vec<_>>().into_boxed_slice()
+        });
+        assert!(chunk[id % VAR_CHUNK].set(slot).is_ok(), "var slot {id} double-initialized");
+        self.len.store(id + 1, Ordering::Release);
+        id as u32
     }
 
     /// Reverse-lookup a handle's name for diagnostics (cold path).
@@ -621,7 +675,6 @@ impl Shared {
     #[allow(clippy::too_many_arguments)]
     fn check_range(
         &self,
-        slots: &[VarSlot],
         cap_from: CapFrom,
         kind: &'static str,
         issuer: usize,
@@ -630,7 +683,7 @@ impl Shared {
         offset: usize,
         len: usize,
     ) -> Result<()> {
-        let slot = slots.get(var.0 as usize).ok_or_else(|| {
+        let slot = self.vars.get(var.0).ok_or_else(|| {
             anyhow!("{kind} by core {issuer}: unregistered var handle #{}", var.0)
         })?;
         let cap = match cap_from {
@@ -776,11 +829,12 @@ impl Ctx {
             if let Some(&id) = names.get(name) {
                 id
             } else {
-                // A *new* name past the first sync races the var-table
-                // write lock against other cores' hot-path read locks
-                // (registration is supposed to be collective, in the
-                // first superstep). Flag it; under `Deny`, fail the
-                // call instead of taking the write lock at all.
+                // A *new* name past the first sync violates the
+                // collective-registration discipline (registration
+                // belongs in the first superstep) — the append-only
+                // table makes it memory-safe, but the analyzer still
+                // flags it; under `Deny`, fail the call before the
+                // table grows at all.
                 if let Some(an) = &sh.analyzer {
                     if an.late_registration(self.pid, name) {
                         return Err(anyhow!(
@@ -790,10 +844,10 @@ impl Ctx {
                         ));
                     }
                 }
-                let mut slots = sh.vars.slots.write().unwrap();
-                let id = slots.len() as u32;
                 let p = self.nprocs();
-                slots.push(VarSlot {
+                // Appended under the `names` lock we still hold — the
+                // one writer-serialization point of the var table.
+                let id = sh.vars.push(VarSlot {
                     bufs: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
                     words: AtomicUsize::new(len),
                 });
@@ -801,8 +855,8 @@ impl Ctx {
                 id
             }
         };
-        let slots = sh.vars.slots.read().unwrap();
-        let mut buf = slots[id as usize].bufs[self.pid].lock().unwrap();
+        let slot = sh.vars.get(id).expect("just-registered var slot");
+        let mut buf = slot.bufs[self.pid].lock().unwrap();
         // Charge only the delta, so re-registration does not double-bill
         // the scratchpad (the budget is charged before the buffer grows,
         // and a failed charge leaves the buffer untouched).
@@ -817,16 +871,17 @@ impl Ctx {
         }
         // Re-registration may change the collective length; publish it
         // so enqueue-time checks bound against the newest declaration.
-        slots[id as usize].words.store(len, Ordering::Release);
+        slot.words.store(len, Ordering::Release);
         Ok(VarHandle(id))
     }
 
     /// Read this core's buffer of `h` through `f`.
     #[must_use]
     pub fn with_var<R>(&self, h: VarHandle, f: impl FnOnce(&[f32]) -> R) -> R {
-        let slots = self.shared.vars.slots.read().unwrap();
-        let slot = slots
-            .get(h.0 as usize)
+        let slot = self
+            .shared
+            .vars
+            .get(h.0)
             .unwrap_or_else(|| panic!("unregistered var handle {}", h.0));
         let buf = slot.bufs[self.pid].lock().unwrap();
         f(&buf)
@@ -834,9 +889,10 @@ impl Ctx {
 
     /// Mutate this core's buffer of `h` through `f`.
     pub fn with_var_mut<R>(&self, h: VarHandle, f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
-        let slots = self.shared.vars.slots.read().unwrap();
-        let slot = slots
-            .get(h.0 as usize)
+        let slot = self
+            .shared
+            .vars
+            .get(h.0)
             .unwrap_or_else(|| panic!("unregistered var handle {}", h.0));
         let mut buf = slot.bufs[self.pid].lock().unwrap();
         let r = f(&mut buf);
@@ -894,19 +950,7 @@ impl Ctx {
             self.pid,
             self.nprocs()
         );
-        {
-            let slots = sh.vars.slots.read().unwrap();
-            sh.check_range(
-                &slots,
-                CapFrom::Declared,
-                "put",
-                self.pid,
-                var,
-                dst_pid,
-                offset,
-                data.len(),
-            )?;
-        }
+        sh.check_range(CapFrom::Declared, "put", self.pid, var, dst_pid, offset, data.len())?;
         let mut q = sh.comm[self.pid].lock().unwrap();
         let arena_start = q.arena.len();
         q.arena.extend_from_slice(data);
@@ -952,29 +996,24 @@ impl Ctx {
             self.pid,
             self.nprocs()
         );
-        {
-            let slots = sh.vars.slots.read().unwrap();
-            sh.check_range(
-                &slots,
-                CapFrom::Declared,
-                "get (source)",
-                self.pid,
-                src_var,
-                src_pid,
-                src_offset,
-                len,
-            )?;
-            sh.check_range(
-                &slots,
-                CapFrom::Declared,
-                "get (destination)",
-                self.pid,
-                dst_var,
-                self.pid,
-                dst_offset,
-                len,
-            )?;
-        }
+        sh.check_range(
+            CapFrom::Declared,
+            "get (source)",
+            self.pid,
+            src_var,
+            src_pid,
+            src_offset,
+            len,
+        )?;
+        sh.check_range(
+            CapFrom::Declared,
+            "get (destination)",
+            self.pid,
+            dst_var,
+            self.pid,
+            dst_offset,
+            len,
+        )?;
         sh.comm[self.pid].lock().unwrap().gets.push(GetOp {
             src_pid,
             src_var,
@@ -1079,9 +1118,10 @@ impl Ctx {
         // peer's (disjoint) broadcast put look like a clobber. The local
         // write touches exactly `[pid·len, (pid+1)·len)`.
         {
-            let slots = self.shared.vars.slots.read().unwrap();
-            let slot = slots
-                .get(var.0 as usize)
+            let slot = self
+                .shared
+                .vars
+                .get(var.0)
                 .unwrap_or_else(|| panic!("unregistered var handle {}", var.0));
             let mut buf = slot.bufs[self.pid].lock().unwrap();
             buf[self.pid * len..(self.pid + 1) * len].copy_from_slice(values);
@@ -1213,7 +1253,6 @@ impl Ctx {
         if let Some(an) = &sh.analyzer {
             self.analyze_superstep(an);
         }
-        let slots = sh.vars.slots.read().unwrap();
         let mut traffic = sh.traffic.lock().unwrap();
         for t in traffic.iter_mut() {
             *t = TrafficCell::default();
@@ -1234,7 +1273,6 @@ impl Ctx {
                 // re-check the actual buffers (vars may have been
                 // re-registered smaller since, handles forged).
                 sh.check_range(
-                    &slots,
                     CapFrom::Buffer,
                     "get (source)",
                     pid,
@@ -1245,7 +1283,6 @@ impl Ctx {
                 )
                 .unwrap_or_else(|e| panic!("{e}"));
                 sh.check_range(
-                    &slots,
                     CapFrom::Buffer,
                     "get (destination)",
                     pid,
@@ -1257,7 +1294,8 @@ impl Ctx {
                 .unwrap_or_else(|e| panic!("{e}"));
                 let start = shard.arena.len();
                 {
-                    let src = slots[op.src_var.0 as usize].bufs[op.src_pid].lock().unwrap();
+                    let slot = sh.vars.get(op.src_var.0).expect("range-checked var slot");
+                    let src = slot.bufs[op.src_pid].lock().unwrap();
                     shard.arena.extend_from_slice(&src[op.src_offset..op.src_offset + op.len]);
                 }
                 shard.gets.push(PlannedGet {
@@ -1281,17 +1319,8 @@ impl Ctx {
             let mut q = sh.comm[pid].lock().unwrap();
             let q = &mut *q;
             for op in &q.puts {
-                sh.check_range(
-                    &slots,
-                    CapFrom::Buffer,
-                    "put",
-                    pid,
-                    op.var,
-                    op.dst_pid,
-                    op.offset,
-                    op.len,
-                )
-                .unwrap_or_else(|e| panic!("{e}"));
+                sh.check_range(CapFrom::Buffer, "put", pid, op.var, op.dst_pid, op.offset, op.len)
+                    .unwrap_or_else(|e| panic!("{e}"));
                 let mut shard = sh.shards[op.dst_pid].lock().unwrap();
                 let start = shard.arena.len();
                 shard.arena.extend_from_slice(&q.arena[op.arena_start..op.arena_start + op.len]);
@@ -1375,16 +1404,17 @@ impl Ctx {
     /// shard's vectors are cleared with capacity kept.
     fn apply_shard(&self, pid: usize) {
         let sh = &self.shared;
-        let slots = sh.vars.slots.read().unwrap();
         let mut shard = sh.shards[pid].lock().unwrap();
         let shard = &mut *shard;
         for g in &shard.gets {
-            let mut dst = slots[g.dst_var.0 as usize].bufs[pid].lock().unwrap();
+            let slot = sh.vars.get(g.dst_var.0).expect("planned var slot");
+            let mut dst = slot.bufs[pid].lock().unwrap();
             dst[g.dst_offset..g.dst_offset + g.len]
                 .copy_from_slice(&shard.arena[g.start..g.start + g.len]);
         }
         for op in &shard.puts {
-            let mut dst = slots[op.var.0 as usize].bufs[pid].lock().unwrap();
+            let slot = sh.vars.get(op.var.0).expect("planned var slot");
+            let mut dst = slot.bufs[pid].lock().unwrap();
             dst[op.offset..op.offset + op.len]
                 .copy_from_slice(&shard.arena[op.start..op.start + op.len]);
         }
@@ -1875,20 +1905,18 @@ impl Ctx {
         // them in the original order and reproduces identical handles.
         let vars: Vec<VarSnapshot> = {
             let names = sh.vars.names.lock().unwrap_or_else(|e| e.into_inner());
-            let slots = sh.vars.slots.read().unwrap();
             let mut by_id: Vec<(u32, String)> =
                 names.iter().map(|(name, &id)| (id, name.clone())).collect();
             by_id.sort_unstable_by_key(|&(id, _)| id);
             by_id
                 .into_iter()
-                .map(|(id, name)| VarSnapshot {
-                    name,
-                    words: slots[id as usize].words.load(Ordering::Acquire),
-                    bufs: slots[id as usize]
-                        .bufs
-                        .iter()
-                        .map(|b| b.lock().unwrap().clone())
-                        .collect(),
+                .map(|(id, name)| {
+                    let slot = sh.vars.get(id).expect("named var slot");
+                    VarSnapshot {
+                        name,
+                        words: slot.words.load(Ordering::Acquire),
+                        bufs: slot.bufs.iter().map(|b| b.lock().unwrap().clone()).collect(),
+                    }
                 })
                 .collect()
         };
@@ -2124,7 +2152,15 @@ fn restore_core_vars(ctx: &Ctx, ck: &GangCheckpoint) {
 /// scheduler ([`crate::bsp::sched::GangScheduler`]) layers queueing and
 /// backfill on top of the same checkout.
 ///
-/// Panics if `machine.p` exceeds the budget's capacity (the request
+/// On a multi-class budget the gang is admitted against the
+/// [`crate::util::pool::CoreClass`] whose name matches `machine.name`,
+/// so a Phi-class gang consumes Phi-class cores and an Epiphany-class
+/// gang consumes Epiphany-class cores. A budget with no matching class
+/// — in particular the single-class `CoreBudget::new(n)` every
+/// existing caller constructs — falls back to class 0, which preserves
+/// the old counting behaviour exactly.
+///
+/// Panics if `machine.p` exceeds the class's capacity (the request
 /// could never be satisfied).
 ///
 /// ```
@@ -2155,7 +2191,8 @@ pub fn run_gang_budgeted<F>(
 where
     F: Fn(&mut Ctx) + Sync,
 {
-    let _lease = budget.acquire(machine.p);
+    let class = budget.class_for(machine.name).unwrap_or(0);
+    let _lease = budget.acquire_class(class, machine.p);
     run_gang_cfg(machine, streams, prefetch, cfg, kernel)
 }
 

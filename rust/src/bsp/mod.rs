@@ -41,6 +41,9 @@ pub use fault::{
     CheckpointPolicy, FaultMode, FaultPlan, FaultSite, GangCheckpoint, RecoveryInfo,
     RetryPolicy,
 };
-pub use sched::{GangJob, GangScheduler, JobResult, SchedOutcome, SchedStats};
+pub use sched::{
+    hetero_split_jobs, GangJob, GangScheduler, HeteroSplit, HeteroSplitRun, JobResult,
+    SchedOutcome, SchedStats,
+};
 pub use timeline::{HyperstepSpan, Timeline};
 pub use verify::{AnalysisMode, AnalysisReport, Finding, FindingKind, Severity};

@@ -31,16 +31,20 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Instant;
 
 use crate::bsp::engine::{run_gang_cfg, Ctx, GangConfig, RunOutcome};
 use crate::bsp::fault::{RecoveryInfo, RetryPolicy};
+use crate::host::cyclic::cyclic_streams;
+use crate::model::hetero::{split_geometry, SplitGeometry, REFERENCE_INTENSITY};
 use crate::model::params::AcceleratorParams;
+use crate::model::predict::{hetero_sweep_cost, HeteroPrediction};
 use crate::stream::StreamRegistry;
 use crate::util::error::panic_payload_msg;
-use crate::util::pool::{CoreBudget, GangPool};
+use crate::util::pool::{CoreBudget, CoreClass, GangPool};
+use crate::util::prng::SplitMix64;
 
 /// One queued gang: a machine (whose `p` is the core request), the
 /// gang-level configuration, and the SPMD kernel to run.
@@ -150,10 +154,18 @@ pub struct JobResult {
 }
 
 /// Concurrency statistics of one [`GangScheduler::run`] call.
-#[derive(Debug, Clone, Copy)]
+///
+/// On a single-class budget every weighted field equals its unweighted
+/// twin (weight 1.0) — the heterogeneity additions degrade to the old
+/// counting stats bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SchedStats {
-    /// The global core budget the queue ran under.
+    /// The global core budget the queue ran under (physical cores,
+    /// summed across classes).
     pub budget_cores: usize,
+    /// Budget capacity in weighted units (`Σ cores × class weight`);
+    /// `budget_cores as f64` on single-class budgets.
+    pub weighted_budget: f64,
     /// Wall-clock from first admission scan to last retirement, seconds.
     pub makespan_seconds: f64,
     /// Σ per-job `run_seconds` — what a serial loop would have paid in
@@ -162,8 +174,16 @@ pub struct SchedStats {
     /// Σ `cores · run_seconds` over completed jobs (core-seconds of
     /// budget actually occupied).
     pub core_seconds: f64,
+    /// Σ `class weight · cores · run_seconds` — occupied budget in
+    /// weighted core-seconds (capacity delivered, not threads held).
+    pub weighted_core_seconds: f64,
     /// Peak concurrently-admitted cores.
     pub peak_cores: usize,
+    /// Peak concurrently-admitted capacity in weighted units.
+    pub peak_weighted: f64,
+    /// Peak concurrently-admitted cores per class, in class order
+    /// (length 1 — equal to `peak_cores` — on single-class budgets).
+    pub class_peak_cores: Vec<usize>,
 }
 
 impl SchedStats {
@@ -174,6 +194,21 @@ impl SchedStats {
         let denom = self.budget_cores as f64 * self.makespan_seconds;
         if denom > 0.0 {
             self.core_seconds / denom
+        } else {
+            0.0
+        }
+    }
+
+    /// Weighted occupancy: the fraction of the budget's *capacity*-time
+    /// kept busy, `weighted_core_seconds / (weighted_budget · makespan)`.
+    /// On a mixed budget this is the honest utilization figure — a busy
+    /// slow class cannot mask an idle fast one — and on a single-class
+    /// budget it equals [`SchedStats::occupancy`] exactly.
+    #[must_use]
+    pub fn weighted_occupancy(&self) -> f64 {
+        let denom = self.weighted_budget * self.makespan_seconds;
+        if denom > 0.0 {
+            self.weighted_core_seconds / denom
         } else {
             0.0
         }
@@ -241,10 +276,37 @@ impl GangScheduler {
         Self { budget: CoreBudget::host() }
     }
 
+    /// A scheduler over an explicit (possibly multi-class) budget.
+    #[must_use]
+    pub fn with_budget(budget: CoreBudget) -> Self {
+        Self { budget }
+    }
+
+    /// A heterogeneous scheduler: one [`CoreClass`] per unit (capacity
+    /// `unit.p`), weighted by per-core throughput against the first
+    /// unit at [`REFERENCE_INTENSITY`]. Unit machine names must be
+    /// distinct — jobs are admitted against the class matching their
+    /// machine's name.
+    #[must_use]
+    pub fn for_units(units: &[AcceleratorParams]) -> Self {
+        assert!(!units.is_empty(), "for_units: no units");
+        let classes = units
+            .iter()
+            .map(|u| (CoreClass::for_machine(u, &units[0], REFERENCE_INTENSITY), u.p))
+            .collect();
+        Self { budget: CoreBudget::with_classes(classes) }
+    }
+
     /// The global core budget.
     #[must_use]
     pub fn budget_cores(&self) -> usize {
         self.budget.capacity()
+    }
+
+    /// The budget jobs are admitted against.
+    #[must_use]
+    pub fn budget(&self) -> &CoreBudget {
+        &self.budget
     }
 
     /// Run the queue to completion and return per-job results (in
@@ -266,8 +328,12 @@ impl GangScheduler {
         // Tie the persistent gang pool's idle-thread retention to this
         // budget: pid 0 of every gang runs on its runner thread, so the
         // pool never needs more than `capacity - 1` parked helpers to
-        // serve a fully-packed budget.
-        GangPool::global().set_helper_cap(self.budget.capacity().saturating_sub(1).max(1));
+        // serve a fully-packed budget. The weighted capacity clamped to
+        // the physical core count keeps a mixed-class budget (whose
+        // weights exceed 1) from retaining threads no gang can occupy.
+        let thread_demand =
+            self.budget.weighted_capacity().min(self.budget.capacity() as f64);
+        GangPool::global().set_helper_cap((thread_demand - 1.0).max(1.0));
         let n = jobs.len();
         let mut results: Vec<Option<JobResult>> = Vec::new();
         results.resize_with(n, || None);
@@ -277,7 +343,10 @@ impl GangScheduler {
 
         let mut in_flight = 0usize;
         let mut peak_cores = 0usize;
+        let mut peak_weighted = 0.0f64;
+        let mut class_peaks = vec![0usize; self.budget.class_count()];
         let mut core_seconds = 0.0f64;
+        let mut weighted_core_seconds = 0.0f64;
         let mut serial_sum = 0.0f64;
 
         thread::scope(|s| {
@@ -289,7 +358,15 @@ impl GangScheduler {
                 let mut i = 0;
                 while i < pending.len() {
                     let cores = pending[i].1.cores();
-                    if cores > self.budget.capacity() {
+                    // Admit against the class matching the job's machine
+                    // profile; machines no class is declared for fall
+                    // back to class 0 (on single-class budgets that is
+                    // exactly the pre-heterogeneity behavior).
+                    let class = self
+                        .budget
+                        .class_for(pending[i].1.machine.name)
+                        .unwrap_or(0);
+                    if cores > self.budget.class_capacity(class) {
                         let (idx, job) = pending.remove(i).expect("index in range");
                         results[idx] = Some(JobResult {
                             name: job.name,
@@ -302,12 +379,12 @@ impl GangScheduler {
                             outcome: Err(format!(
                                 "job requests {cores} cores but the budget is {} — \
                                  it can never be admitted",
-                                self.budget.capacity()
+                                self.budget.class_capacity(class)
                             )),
                         });
                         continue;
                     }
-                    let Some(lease) = self.budget.try_acquire(cores) else {
+                    let Some(lease) = self.budget.try_acquire_class(class, cores) else {
                         i += 1;
                         continue;
                     };
@@ -319,6 +396,10 @@ impl GangScheduler {
                     // report a peak above the budget).
                     peak_cores =
                         peak_cores.max(self.budget.capacity() - self.budget.available());
+                    peak_weighted = peak_weighted.max(self.budget.weighted_in_use());
+                    for (c, peak) in class_peaks.iter_mut().enumerate() {
+                        *peak = (*peak).max(self.budget.class_in_use(c));
+                    }
                     let queue_wait_seconds = t0.elapsed().as_secs_f64();
                     let tx = done_tx.clone();
                     s.spawn(move || {
@@ -391,7 +472,7 @@ impl GangScheduler {
                                     if !job.retry.backoff.is_zero() {
                                         thread::sleep(job.retry.backoff);
                                     }
-                                    lease = Some(self.budget.acquire(cores));
+                                    lease = Some(self.budget.acquire_class(class, cores));
                                 }
                                 Err(e) => break Err(panic_payload_msg(e.as_ref())),
                             }
@@ -432,6 +513,9 @@ impl GangScheduler {
                     .expect("a gang runner died without reporting");
                 in_flight -= 1;
                 core_seconds += res.cores as f64 * res.run_seconds;
+                let class = self.budget.class_for(res.machine.name).unwrap_or(0);
+                weighted_core_seconds +=
+                    self.budget.class(class).weight * res.cores as f64 * res.run_seconds;
                 serial_sum += res.run_seconds;
                 results[idx] = Some(res);
             }
@@ -445,12 +529,383 @@ impl GangScheduler {
                 .collect(),
             stats: SchedStats {
                 budget_cores: self.budget.capacity(),
+                weighted_budget: self.budget.weighted_capacity(),
                 makespan_seconds,
                 serial_sum_seconds: serial_sum,
                 core_seconds,
+                weighted_core_seconds,
                 peak_cores,
+                peak_weighted,
+                class_peak_cores: class_peaks,
             },
         }
+    }
+}
+
+// ------------------------------------------------------------------
+// Hetero split: one divisible workload, one gang per unit
+
+/// Deterministic per-unit operand vectors for a [`SplitGeometry`]:
+/// unit `u` gets `unit_elements(u)`-long `x`/`y` fills from a seeded
+/// PRNG, so scheduled, serial, and re-built runs all see identical data.
+fn gen_inputs(geom: &SplitGeometry) -> Vec<(Vec<f32>, Vec<f32>)> {
+    (0..geom.share_grains.len())
+        .map(|u| {
+            let n = geom.unit_elements(u);
+            let mut rng = SplitMix64::new(0x4845_5445_524f + u as u64);
+            (rng.f32_vec(n, -1.0, 1.0), rng.f32_vec(n, -1.0, 1.0))
+        })
+        .collect()
+}
+
+/// The streaming inner-product kernel at a forced arithmetic intensity:
+/// per hyperstep each core moves one token down from each stream, folds
+/// the 2C-FLOP partial dot into `α_s`, and charges `2C·I` FLOPs total —
+/// the dot product padded with extra arithmetic so the hyperstep
+/// realizes exactly `I` FLOPs per fetched word. A final ordinary
+/// superstep broadcasts the partials; pid 0 stores the total in
+/// `alpha_out`.
+fn inprod_kernel(
+    p: usize,
+    token_words: usize,
+    intensity: f64,
+    hypersteps: usize,
+    x_ids: Vec<usize>,
+    y_ids: Vec<usize>,
+    alpha_out: Arc<Mutex<f32>>,
+) -> impl Fn(&mut Ctx) + Send + Sync {
+    move |ctx: &mut Ctx| {
+        let s = ctx.pid();
+        let hx = ctx.stream_open(x_ids[s]).expect("x stream exists");
+        let hy = ctx.stream_open(y_ids[s]).expect("y stream exists");
+        let alphas = ctx.register("alphas", p).expect("pre-sync registration");
+        ctx.sync();
+        let mut alpha_s = 0.0f32;
+        let (mut tx, mut ty) = (Vec::new(), Vec::new());
+        for _ in 0..hypersteps {
+            ctx.stream_move_down(hx, &mut tx).expect("x token");
+            ctx.stream_move_down(hy, &mut ty).expect("y token");
+            for (a, b) in tx.iter().zip(&ty) {
+                alpha_s += a * b;
+            }
+            ctx.charge_flops(2.0 * token_words as f64 * intensity);
+            ctx.hyperstep_sync();
+        }
+        ctx.stream_close(hx).expect("x close");
+        ctx.stream_close(hy).expect("y close");
+        ctx.broadcast(alphas, &[alpha_s]);
+        ctx.charge_flops(p as f64);
+        ctx.sync();
+        let alpha: f32 = ctx.with_var(alphas, |v| v.iter().sum());
+        if s == 0 {
+            *alpha_out.lock().unwrap() = alpha;
+        }
+    }
+}
+
+/// Tokenize `x`/`y` cyclically for `machine` and pair the registry with
+/// an [`inprod_kernel`] over them. The registry is unbounded: split
+/// shares always fit a unit's external memory, but the solo yardstick
+/// runs deliberately hold the *whole* workload on one unit — often more
+/// than its `E` (one more reason to split) — and must still be timeable.
+fn unit_workload(
+    machine: &AcceleratorParams,
+    token_words: usize,
+    intensity: f64,
+    x: &[f32],
+    y: &[f32],
+    alpha_out: Arc<Mutex<f32>>,
+) -> (Arc<StreamRegistry>, impl Fn(&mut Ctx) + Send + Sync) {
+    let p = machine.p;
+    let mut reg = StreamRegistry::unbounded();
+    let x_ids = cyclic_streams(&mut reg, x, p, token_words).expect("p·C divides the share");
+    let y_ids = cyclic_streams(&mut reg, y, p, token_words).expect("p·C divides the share");
+    let hypersteps = x.len() / (p * token_words);
+    (
+        Arc::new(reg),
+        inprod_kernel(p, token_words, intensity, hypersteps, x_ids, y_ids, alpha_out),
+    )
+}
+
+/// One divisible inner-product workload cut across heterogeneous units
+/// (the paper's §7 question, executed): the fluid
+/// [`crate::model::hetero::optimal_split`] quantized onto whole
+/// hyperstep grains by [`split_geometry`], with deterministic operand
+/// data per unit. Build with [`hetero_split_jobs`], then either take
+/// [`HeteroSplit::jobs`] to a scheduler of your own or call
+/// [`HeteroSplit::run`] for the full scheduled-vs-serial-vs-solo story.
+pub struct HeteroSplit {
+    /// The units, in share order (parallel to `geom` and `inputs`).
+    pub units: Vec<AcceleratorParams>,
+    /// Arithmetic intensity each hyperstep realizes (FLOPs per word).
+    pub intensity: f64,
+    /// The grain-quantized split geometry.
+    pub geom: SplitGeometry,
+    /// Per-unit operand vectors `(x, y)` (deterministic PRNG fill).
+    pub inputs: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+/// Cut a divisible workload of `w_flops` FLOPs at arithmetic intensity
+/// `intensity` (FLOPs per fetched word, ≥ 1) across `units`: the
+/// element count is `w_flops / (2·I)` rounded up to whole grains, each
+/// unit's share follows [`split_geometry`]'s quantization of the
+/// optimal (throughput-proportional) split, and every share becomes one
+/// streaming inner-product gang. Unit machine names must be distinct.
+#[must_use]
+pub fn hetero_split_jobs(
+    units: &[AcceleratorParams],
+    intensity: f64,
+    w_flops: f64,
+) -> HeteroSplit {
+    assert!(
+        intensity >= 1.0,
+        "the split kernel realizes intensities >= 1 (2C·I FLOPs per 2C words)"
+    );
+    assert!(w_flops >= 0.0 && w_flops.is_finite(), "bad workload {w_flops}");
+    let elements = (w_flops / (2.0 * intensity)).ceil().max(1.0) as usize;
+    let geom = split_geometry(units, intensity, elements);
+    let inputs = gen_inputs(&geom);
+    HeteroSplit { units: units.to_vec(), intensity, geom, inputs }
+}
+
+impl HeteroSplit {
+    /// Re-quantize onto explicit per-unit shares (in grains) — e.g. an
+    /// even split to race against the optimal one. The total must be
+    /// preserved so both splits run the same workload.
+    #[must_use]
+    pub fn with_share_grains(mut self, share_grains: Vec<usize>) -> Self {
+        assert_eq!(share_grains.len(), self.units.len());
+        assert_eq!(
+            share_grains.iter().sum::<usize>(),
+            self.geom.total_grains,
+            "shares must cover the whole workload"
+        );
+        self.geom.share_grains = share_grains;
+        self.inputs = gen_inputs(&self.geom);
+        self
+    }
+
+    /// One gang per unit over its share, plus the per-unit result cells
+    /// (pid 0 of gang `u` writes its α into cell `u` when it retires).
+    #[must_use]
+    pub fn jobs(&self) -> (Vec<GangJob>, Vec<Arc<Mutex<f32>>>) {
+        let cells: Vec<Arc<Mutex<f32>>> =
+            self.units.iter().map(|_| Arc::new(Mutex::new(0.0f32))).collect();
+        let jobs = self
+            .units
+            .iter()
+            .enumerate()
+            .map(|(u, m)| {
+                let (reg, kernel) = unit_workload(
+                    m,
+                    self.geom.token_words[u],
+                    self.intensity,
+                    &self.inputs[u].0,
+                    &self.inputs[u].1,
+                    Arc::clone(&cells[u]),
+                );
+                GangJob::new(&format!("hetero_{}", m.name), m.clone(), kernel)
+                    .with_streams(reg, true)
+            })
+            .collect();
+        (jobs, cells)
+    }
+
+    /// Run the split three ways and report the flagship comparison:
+    ///
+    /// 1. **Scheduled** — all gangs concurrent under a weighted
+    ///    per-class budget ([`GangScheduler::for_units`]); per-unit
+    ///    virtual times come from each gang's Eq. 1 hyperstep ledger,
+    ///    so the measured makespan is deterministic.
+    /// 2. **Serial reference** — the same per-unit workloads re-run one
+    ///    at a time; bitwise-equal α's certify scheduling isolation.
+    /// 3. **Solo yardsticks** — each unit takes the *whole* workload
+    ///    alone at its own token size (`p·C` divides the grain, so it
+    ///    walks exactly `total_grains` hypersteps): the split's
+    ///    makespan must beat the best of these.
+    #[must_use]
+    pub fn run(&self) -> HeteroSplitRun {
+        let n_units = self.units.len();
+        let (jobs, cells) = self.jobs();
+        let sched = GangScheduler::for_units(&self.units).run(jobs);
+        let mut unit_virtual_seconds = Vec::with_capacity(n_units);
+        for (u, j) in sched.jobs.iter().enumerate() {
+            let out = j
+                .outcome
+                .as_ref()
+                .unwrap_or_else(|e| panic!("hetero gang {} died: {e}", j.name));
+            unit_virtual_seconds.push(out.ledger.summarize(&self.units[u]).total_seconds);
+        }
+        let unit_alphas: Vec<f32> = cells.iter().map(|c| *c.lock().unwrap()).collect();
+        let makespan_virtual_seconds =
+            unit_virtual_seconds.iter().copied().fold(0.0, f64::max);
+
+        let mut serial_alphas = Vec::with_capacity(n_units);
+        for (u, m) in self.units.iter().enumerate() {
+            let cell = Arc::new(Mutex::new(0.0f32));
+            let (reg, kernel) = unit_workload(
+                m,
+                self.geom.token_words[u],
+                self.intensity,
+                &self.inputs[u].0,
+                &self.inputs[u].1,
+                Arc::clone(&cell),
+            );
+            let _ = run_gang_cfg(m, Some(reg), true, GangConfig::default(), kernel);
+            serial_alphas.push(*cell.lock().unwrap());
+        }
+
+        let x_full: Vec<f32> =
+            self.inputs.iter().flat_map(|(x, _)| x.iter().copied()).collect();
+        let y_full: Vec<f32> =
+            self.inputs.iter().flat_map(|(_, y)| y.iter().copied()).collect();
+        let mut solo_virtual_seconds = Vec::with_capacity(n_units);
+        for (u, m) in self.units.iter().enumerate() {
+            let cell = Arc::new(Mutex::new(0.0f32));
+            let (reg, kernel) = unit_workload(
+                m,
+                self.geom.token_words[u],
+                self.intensity,
+                &x_full,
+                &y_full,
+                Arc::clone(&cell),
+            );
+            let out = run_gang_cfg(m, Some(reg), true, GangConfig::default(), kernel);
+            solo_virtual_seconds.push(out.ledger.summarize(m).total_seconds);
+        }
+
+        let predicted = hetero_sweep_cost(&self.units, self.intensity, &self.geom);
+        let alpha = unit_alphas.iter().sum();
+        HeteroSplitRun {
+            units: self.units.clone(),
+            intensity: self.intensity,
+            geom: self.geom.clone(),
+            sched,
+            unit_alphas,
+            serial_alphas,
+            alpha,
+            unit_virtual_seconds,
+            makespan_virtual_seconds,
+            solo_virtual_seconds,
+            predicted,
+        }
+    }
+}
+
+/// Everything a [`HeteroSplit::run`] measured. Virtual seconds come
+/// from the gangs' Eq. 1 hyperstep ledgers (each priced with its own
+/// machine's `e`/`g`/`l`/`r`), so every timing here is deterministic —
+/// the flagship `makespan < best solo` margin can be thin and still be
+/// a hard invariant.
+pub struct HeteroSplitRun {
+    /// The units, in share order.
+    pub units: Vec<AcceleratorParams>,
+    /// Arithmetic intensity of every hyperstep.
+    pub intensity: f64,
+    /// The executed split geometry.
+    pub geom: SplitGeometry,
+    /// The scheduled pass (per-gang outcomes + weighted stats).
+    pub sched: SchedOutcome,
+    /// Per-unit α from the scheduled pass.
+    pub unit_alphas: Vec<f32>,
+    /// Per-unit α from the serial reference pass.
+    pub serial_alphas: Vec<f32>,
+    /// Total α (Σ of the scheduled per-unit partials, in unit order —
+    /// the serial concatenation's reduction order).
+    pub alpha: f32,
+    /// Per-unit virtual seconds of the scheduled pass.
+    pub unit_virtual_seconds: Vec<f64>,
+    /// Measured split makespan: max over units of the virtual seconds.
+    pub makespan_virtual_seconds: f64,
+    /// Virtual seconds each unit needs for the whole workload alone.
+    pub solo_virtual_seconds: Vec<f64>,
+    /// The model-side per-unit Eq. 1 schedule composition.
+    pub predicted: HeteroPrediction,
+}
+
+impl HeteroSplitRun {
+    /// Whether every scheduled per-unit α is bitwise equal to its
+    /// serial twin (the split's byte-identity invariant).
+    #[must_use]
+    pub fn byte_identical(&self) -> bool {
+        self.unit_alphas.len() == self.serial_alphas.len()
+            && self
+                .unit_alphas
+                .iter()
+                .zip(&self.serial_alphas)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
+    /// The fastest single unit's whole-workload virtual time.
+    #[must_use]
+    pub fn best_solo_seconds(&self) -> f64 {
+        self.solo_virtual_seconds.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Fraction of the best solo time the split saves (> 0 when the
+    /// split wins).
+    #[must_use]
+    pub fn split_gain(&self) -> f64 {
+        let solo = self.best_solo_seconds();
+        if solo > 0.0 {
+            (solo - self.makespan_virtual_seconds) / solo
+        } else {
+            0.0
+        }
+    }
+
+    /// Relative error of the predicted makespan against the measured
+    /// one — the scalar `bench_fig5_cannon` gates under benchdiff.
+    #[must_use]
+    pub fn pred_rel_err(&self) -> f64 {
+        if self.makespan_virtual_seconds > 0.0 {
+            (self.predicted.makespan_seconds - self.makespan_virtual_seconds).abs()
+                / self.makespan_virtual_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Stable, grep-able report: one header row, one row per unit, one
+    /// verdict row.
+    #[must_use]
+    pub fn render(&self) -> String {
+        use crate::util::humanfmt;
+        let mut out = format!(
+            "hetero units={} intensity={} grain={} grains={} elements={} alpha={:.4}\n",
+            self.units.len(),
+            self.intensity,
+            self.geom.grain,
+            self.geom.total_grains,
+            self.geom.total_elements(),
+            self.alpha,
+        );
+        for (u, m) in self.units.iter().enumerate() {
+            out.push_str(&format!(
+                "  unit {:<14} cores={:<4} share={}/{} token={:<5} virtual={} \
+                 solo={} alpha={:.4}\n",
+                m.name,
+                m.p,
+                self.geom.share_grains[u],
+                self.geom.total_grains,
+                self.geom.token_words[u],
+                humanfmt::seconds(self.unit_virtual_seconds[u]),
+                humanfmt::seconds(self.solo_virtual_seconds[u]),
+                self.unit_alphas[u],
+            ));
+        }
+        out.push_str(&format!(
+            "hetero makespan={} best_solo={} gain={:.3}% predicted={} rel_err={:.3} \
+             byte_identical={} weighted_occupancy={:.2}\n",
+            humanfmt::seconds(self.makespan_virtual_seconds),
+            humanfmt::seconds(self.best_solo_seconds()),
+            self.split_gain() * 100.0,
+            humanfmt::seconds(self.predicted.makespan_seconds),
+            self.pred_rel_err(),
+            self.byte_identical(),
+            self.sched.stats.weighted_occupancy(),
+        ));
+        out
     }
 }
 

@@ -76,6 +76,22 @@ impl Args {
                 .map_err(|_| anyhow!("--{name} expects a number, got `{v}`")),
         }
     }
+
+    /// Parse `--name` as a comma-separated list (`--machines a,b,c`),
+    /// with a default when absent. Empty items are rejected.
+    pub fn get_list(&self, name: &str, default: &[&str]) -> Result<Vec<String>> {
+        match self.options.get(name) {
+            None => Ok(default.iter().map(|s| (*s).to_string()).collect()),
+            Some(v) => {
+                let items: Vec<String> =
+                    v.split(',').map(|s| s.trim().to_string()).collect();
+                if items.iter().any(String::is_empty) {
+                    bail!("--{name} expects a comma-separated list, got `{v}`");
+                }
+                Ok(items)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -115,5 +131,17 @@ mod tests {
         let a = parse("x --fast --n 3");
         assert!(a.flag("fast"));
         assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn comma_lists_parse_with_defaults() {
+        let a = parse("run hetero --machines epiphany3,xeonphi_like");
+        assert_eq!(
+            a.get_list("machines", &["epiphany3"]).unwrap(),
+            vec!["epiphany3", "xeonphi_like"]
+        );
+        assert_eq!(a.get_list("units", &["a", "b"]).unwrap(), vec!["a", "b"]);
+        let bad = parse("run --machines a,,b");
+        assert!(bad.get_list("machines", &[]).is_err());
     }
 }

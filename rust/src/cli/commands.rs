@@ -42,11 +42,12 @@ USAGE:
   bsps run spmv --n <size> --nnz <per-row> --rows <per-token>
   bsps run sort --n <len> --c <token> [--chunk <words>] [--oversample <σ>]
   bsps run video --frames <count> --pixels <per-frame>
+  bsps run hetero [--machines <a,b,…>] [--intensity <I>] [--w <flops>]
   bsps run <algo> --inject <site> [--inject-at <h>] [--inject-pid <j>]
   bsps analyze --algo <inprod|cannon|cannon_ml|spmv|sort|video|racy|all>
                [--mode warn|deny] [--expect <finding-kind>]
   bsps sweep [--algo cannon|sort] [--cores <budget>] [--check]
-             [--jobs <n>x<M>,…] [--sizes <len>,<len>,…]
+             [--machines <a,b,…>] [--jobs <n>x<M>,…] [--sizes <len>,…]
   bsps faults --sweep [--p <cores>] [--hypersteps <n>] [--every-k <k>]
   bsps benchdiff <old.json> <new.json> [--max-regress 0.15]
                  [--max-scalar-rel 0.15]
@@ -64,7 +65,17 @@ size sweep (--algo sort, --sizes — sizes past the scratchpad take the
 multi-pass spill path) concurrently through the multi-gang scheduler
 under a global core budget (default: host parallelism, raised to the
 largest gang); --check re-runs each point serially and verifies the
-scheduled outputs are byte-identical.
+scheduled outputs are byte-identical. With --machines the same points
+run on every listed profile under one class-matched weighted budget
+(one core class per profile; --cores is ignored) — note cannon needs
+square-grid machines, so pair e.g. epiphany3,epiphany4.
+run hetero cuts one divisible inner-product workload (--w total FLOPs
+at arithmetic intensity --intensity, default 5e8 @ 50) across the
+listed machine profiles in proportion to their Eq. 1 throughputs,
+schedules one gang per profile concurrently, and reports the measured
+virtual makespan against the best single profile running everything
+alone, the Eq. 1 prediction's relative error, and byte-identity of
+every share to a serial re-run.
 run sort streams a dataset of any size through the out-of-core sample
 sort: --chunk caps the scratchpad run length (forcing extra merge
 passes), --oversample sets the regular-sampling ratio σ.
@@ -92,6 +103,24 @@ fn machine_from(args: &Args) -> Result<AcceleratorParams> {
     }
     let name = args.get("machine").unwrap_or("epiphany3");
     AcceleratorParams::preset(name).ok_or_else(|| anyhow!("unknown machine `{name}`"))
+}
+
+/// Resolve `--machines a,b,…` into presets (default when absent), with
+/// distinct names — the weighted budget keys one core class per
+/// profile, so a repeated profile is a usage error, not a bigger class.
+fn machines_from(args: &Args, default: &[&str]) -> Result<Vec<AcceleratorParams>> {
+    let names = args.get_list("machines", default)?;
+    let mut machines = Vec::with_capacity(names.len());
+    for n in &names {
+        let m =
+            AcceleratorParams::preset(n).ok_or_else(|| anyhow!("unknown machine `{n}`"))?;
+        ensure!(
+            machines.iter().all(|seen: &AcceleratorParams| seen.name != m.name),
+            "--machines lists `{n}` twice — each profile is one core class"
+        );
+        machines.push(m);
+    }
+    Ok(machines)
 }
 
 /// If `--trace <path>` was given, write the run's hyperstep CSV there.
@@ -231,40 +260,69 @@ fn parse_sweep_points(spec: &str) -> Result<Vec<(usize, usize)>> {
 /// report the per-gang costs plus the concurrency stats (makespan vs
 /// serial sum, occupancy, queue waits). With `--check`, each point is
 /// re-run serially and the scheduled product is verified byte-identical.
+/// With `--machines a,b,…` the same points run on *every* listed
+/// profile under one class-matched weighted budget (one class of `p_u`
+/// cores per profile, admission keyed on each gang's machine name);
+/// `--cores` applies only to the single-profile path.
 fn sweep_cmd(args: &Args) -> Result<String> {
-    let machine = machine_from(args)?;
-    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    // Default budget = host parallelism, raised to the largest gang so
-    // the no-flags invocation is runnable on small hosts (a gang wider
-    // than the whole budget could never be admitted).
-    let cores = args.get_usize("cores", host.max(machine.p))?;
-    ensure!(
-        cores >= machine.p,
-        "--cores {cores} is smaller than one {}-core gang — no sweep point \
-         could ever be admitted",
-        machine.p
-    );
+    let machines = match args.get("machines") {
+        None => vec![machine_from(args)?],
+        Some(_) => machines_from(args, &[])?,
+    };
+    let hetero = machines.len() > 1;
+    let sched = if hetero {
+        GangScheduler::for_units(&machines)
+    } else {
+        let machine = &machines[0];
+        let host =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        // Default budget = host parallelism, raised to the largest gang
+        // so the no-flags invocation is runnable on small hosts (a gang
+        // wider than the whole budget could never be admitted).
+        let cores = args.get_usize("cores", host.max(machine.p))?;
+        ensure!(
+            cores >= machine.p,
+            "--cores {cores} is smaller than one {}-core gang — no sweep point \
+             could ever be admitted",
+            machine.p
+        );
+        GangScheduler::new(cores)
+    };
     let seed = args.get_usize("seed", 42)? as u64;
     let algo = args.get("algo").unwrap_or("cannon");
+    // `--check` labels carry the profile only when several are in play,
+    // keeping the single-machine output stable.
+    let label = |gang: &str, m: &AcceleratorParams| {
+        if hetero { format!("{gang} on {}", m.name) } else { gang.to_string() }
+    };
     match algo {
         "cannon" => {
             let points = parse_sweep_points(args.get("jobs").unwrap_or("64x2,128x4,128x2"))?;
-            let (jobs, gangs) = crate::algos::cannon_ml::sweep_jobs(&machine, &points, seed)?;
-            let sched = GangScheduler::new(cores);
+            let mut jobs = Vec::new();
+            let mut gang_sets = Vec::new();
+            for m in &machines {
+                let (js, gs) = crate::algos::cannon_ml::sweep_jobs(m, &points, seed)?;
+                jobs.extend(js);
+                gang_sets.push(gs);
+            }
             let out = sched.run(jobs);
             let sweep = SweepReport::from_sched(&out);
             let mut text = sweep.render();
             if args.flag("check") {
-                for (i, gang) in gangs.iter().enumerate() {
-                    // Failed gangs are already reported as FAILED above.
-                    let Some(report) = sweep.gangs[i].report.as_ref() else {
-                        continue;
-                    };
-                    crate::algos::cannon_ml::verify_scheduled_identity(&machine, gang, report)?;
-                    text.push_str(&format!(
-                        "  check {}: byte-identical to serial ✓\n",
-                        gang.name
-                    ));
+                for (mi, m) in machines.iter().enumerate() {
+                    for (gi, gang) in gang_sets[mi].iter().enumerate() {
+                        // Failed gangs are already reported as FAILED above.
+                        let Some(report) =
+                            sweep.gangs[mi * points.len() + gi].report.as_ref()
+                        else {
+                            continue;
+                        };
+                        crate::algos::cannon_ml::verify_scheduled_identity(m, gang, report)?;
+                        text.push_str(&format!(
+                            "  check {}: byte-identical to serial ✓\n",
+                            label(&gang.name, m)
+                        ));
+                    }
                 }
             }
             if sweep.failed() > 0 {
@@ -275,22 +333,32 @@ fn sweep_cmd(args: &Args) -> Result<String> {
         "sort" => {
             let sizes = parse_sweep_sizes(args.get("sizes").unwrap_or("4096,16384,65536"))?;
             let cfg = crate::algos::sort::SortConfig::default();
-            let (jobs, gangs) = crate::algos::sort::sweep_jobs(&machine, &sizes, cfg, seed)?;
-            let sched = GangScheduler::new(cores);
+            let mut jobs = Vec::new();
+            let mut gang_sets = Vec::new();
+            for m in &machines {
+                let (js, gs) = crate::algos::sort::sweep_jobs(m, &sizes, cfg, seed)?;
+                jobs.extend(js);
+                gang_sets.push(gs);
+            }
             let out = sched.run(jobs);
             let sweep = SweepReport::from_sched(&out);
             let mut text = sweep.render();
             if args.flag("check") {
-                for (i, gang) in gangs.iter().enumerate() {
-                    let Some(report) = sweep.gangs[i].report.as_ref() else {
-                        continue;
-                    };
-                    let serial =
-                        crate::algos::sort::verify_scheduled_identity(&machine, gang, report)?;
-                    text.push_str(&format!(
-                        "  check {}: byte-identical to serial ✓ (passes = {})\n",
-                        gang.name, serial.max_passes
-                    ));
+                for (mi, m) in machines.iter().enumerate() {
+                    for (gi, gang) in gang_sets[mi].iter().enumerate() {
+                        let Some(report) =
+                            sweep.gangs[mi * sizes.len() + gi].report.as_ref()
+                        else {
+                            continue;
+                        };
+                        let serial =
+                            crate::algos::sort::verify_scheduled_identity(m, gang, report)?;
+                        text.push_str(&format!(
+                            "  check {}: byte-identical to serial ✓ (passes = {})\n",
+                            label(&gang.name, m),
+                            serial.max_passes
+                        ));
+                    }
                 }
             }
             if sweep.failed() > 0 {
@@ -623,7 +691,12 @@ fn run_cmd(args: &Args) -> Result<String> {
     let algo = args
         .positional
         .get(1)
-        .ok_or_else(|| anyhow!("run: missing algorithm (inprod|cannon|spmv|sort|video)"))?;
+        .ok_or_else(|| anyhow!("run: missing algorithm (inprod|cannon|spmv|sort|video|hetero)"))?;
+    if algo == "hetero" {
+        // The hetero split spans several machine profiles, so it cannot
+        // ride the single-machine `env_from` path.
+        return run_hetero(args);
+    }
     let env = env_from(args)?;
     if matches!(env.fault, FaultMode::Off) {
         return run_algo(args, &env, algo);
@@ -638,6 +711,36 @@ fn run_cmd(args: &Args) -> Result<String> {
             panic_payload_msg(payload.as_ref())
         )),
     }
+}
+
+/// `bsps run hetero`: cut one divisible inner-product workload
+/// (`--w` total FLOPs at arithmetic intensity `--intensity`) across the
+/// listed machine profiles in proportion to their Eq. 1 throughputs,
+/// run one gang per profile concurrently through the class-matched
+/// scheduler, and report the three split invariants: byte-identity of
+/// every share to a serial re-run, measured virtual makespan vs the
+/// best single profile running the whole workload alone, and the
+/// Eq. 1 prediction's relative error.
+fn run_hetero(args: &Args) -> Result<String> {
+    let units = machines_from(args, &["epiphany3", "xeonphi_like"])?;
+    let intensity = args.get_f64("intensity", 50.0)?;
+    ensure!(
+        intensity >= 1.0,
+        "run hetero: --intensity must be ≥ 1 (each hyperstep charges 2C·I FLOPs \
+         against 2C fetched words)"
+    );
+    let w = args.get_f64("w", 5.0e8)?;
+    ensure!(
+        w.is_finite() && w > 0.0,
+        "run hetero: --w must be a positive FLOP count, got {w}"
+    );
+    let run = crate::bsp::sched::hetero_split_jobs(&units, intensity, w).run();
+    ensure!(
+        run.byte_identical(),
+        "run hetero: a scheduled share diverged from its serial twin:\n{}",
+        run.render()
+    );
+    Ok(run.render())
 }
 
 fn run_algo(args: &Args, env: &BspsEnv, algo: &str) -> Result<String> {
@@ -859,6 +962,54 @@ mod tests {
             out.contains("check cannon_n32_M2: byte-identical to serial"),
             "{out}"
         );
+    }
+
+    #[test]
+    fn run_hetero_schedules_a_split_across_profiles() {
+        // A tiny workload on two Epiphany generations (moderate
+        // throughput ratio → 3-grain split) keeps the debug-mode run
+        // cheap; the release-mode CI smoke exercises the default
+        // epiphany3+xeonphi_like pairing.
+        let out = run("run hetero --machines epiphany3,epiphany4 --w 2e6").unwrap();
+        assert!(out.contains("hetero units=2"), "{out}");
+        assert!(out.contains("unit epiphany3"), "{out}");
+        assert!(out.contains("unit epiphany4"), "{out}");
+        assert!(out.contains("byte_identical=true"), "{out}");
+        assert!(out.contains("weighted_occupancy="), "{out}");
+    }
+
+    #[test]
+    fn run_hetero_rejects_bad_profiles_and_intensities() {
+        let err = run("run hetero --machines epiphany3,epiphany3")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("twice"), "{err}");
+        let err = run("run hetero --machines banana").unwrap_err().to_string();
+        assert!(err.contains("unknown machine"), "{err}");
+        let err = run("run hetero --intensity 0.5").unwrap_err().to_string();
+        assert!(err.contains("--intensity must be ≥ 1"), "{err}");
+        let err = run("run hetero --w -3").unwrap_err().to_string();
+        assert!(err.contains("--w must be a positive"), "{err}");
+    }
+
+    #[test]
+    fn sweep_machines_runs_every_profile_under_one_weighted_budget() {
+        let out = run("sweep --machines epiphany3,epiphany4 --jobs 16x2 --check").unwrap();
+        // One class per profile: budget = 16 + 64 cores.
+        assert!(out.contains("sweep budget=80"), "{out}");
+        assert!(out.contains("failed=0"), "{out}");
+        assert!(out.contains("weighted_occupancy="), "{out}");
+        assert!(
+            out.contains("check cannon_n16_M2 on epiphany3: byte-identical to serial"),
+            "{out}"
+        );
+        assert!(
+            out.contains("check cannon_n16_M2 on epiphany4: byte-identical to serial"),
+            "{out}"
+        );
+        let err =
+            run("sweep --machines epiphany3,epiphany3 --jobs 16x2").unwrap_err().to_string();
+        assert!(err.contains("twice"), "{err}");
     }
 
     #[test]

@@ -155,7 +155,7 @@ impl SweepReport {
                 }
             })
             .collect();
-        Self { stats: out.stats, gangs }
+        Self { stats: out.stats.clone(), gangs }
     }
 
     /// Fraction of the budget's core-time the sweep kept busy, `(0, 1]`
@@ -163,6 +163,14 @@ impl SweepReport {
     #[must_use]
     pub fn occupancy(&self) -> f64 {
         self.stats.occupancy()
+    }
+
+    /// Fraction of the budget's weighted capacity-time the sweep kept
+    /// busy ([`SchedStats::weighted_occupancy`]); equals
+    /// [`SweepReport::occupancy`] on single-class budgets.
+    #[must_use]
+    pub fn weighted_occupancy(&self) -> f64 {
+        self.stats.weighted_occupancy()
     }
 
     /// Serial-sum over makespan: >1 once any two gangs overlapped
@@ -193,7 +201,8 @@ impl SweepReport {
     pub fn render(&self) -> String {
         let mut out = format!(
             "sweep budget={} gangs={} failed={} makespan={} serial_sum={} \
-             speedup={:.2}x occupancy={:.2} peak_cores={} max_wait={}\n",
+             speedup={:.2}x occupancy={:.2} peak_cores={} max_wait={} \
+             weighted_budget={:.2} weighted_occupancy={:.2} peak_weighted={:.2}\n",
             self.stats.budget_cores,
             self.gangs.len(),
             self.failed(),
@@ -203,6 +212,9 @@ impl SweepReport {
             self.occupancy(),
             self.stats.peak_cores,
             humanfmt::seconds(self.max_queue_wait_seconds()),
+            self.stats.weighted_budget,
+            self.weighted_occupancy(),
+            self.stats.peak_weighted,
         );
         for g in &self.gangs {
             match (&g.report, &g.error) {
@@ -296,9 +308,17 @@ mod tests {
         assert!(sweep.stats.makespan_seconds > 0.0);
         assert!(sweep.occupancy() > 0.0 && sweep.occupancy() <= 1.02);
         assert!(sweep.stats.peak_cores <= 4);
+        // Single-class budget: the weighted stats degrade bit-for-bit.
+        assert_eq!(sweep.stats.weighted_budget.to_bits(), 4.0f64.to_bits());
+        assert_eq!(
+            sweep.weighted_occupancy().to_bits(),
+            sweep.occupancy().to_bits()
+        );
+        assert_eq!(sweep.stats.class_peak_cores, vec![sweep.stats.peak_cores]);
         let s = sweep.render();
         assert!(s.contains("sweep budget=4"), "{s}");
         assert!(s.contains("failed=1"), "{s}");
+        assert!(s.contains("weighted_occupancy="), "{s}");
         assert!(s.contains("gang g0"), "{s}");
         assert!(s.contains("FAILED: injected fault"), "{s}");
     }

@@ -15,6 +15,14 @@
 
 use crate::model::params::AcceleratorParams;
 
+/// Reference arithmetic intensity (FLOPs per word) at which
+/// [`crate::util::pool::CoreClass::for_machine`] derives budget
+/// weights. 8 FLOPs/word is the `k_equal ≈ 8` balance point of §6 —
+/// near the compute/fetch crossover, so both slow-link machines
+/// (throttled by `e`) and fast-link machines (throttled by `r`) price
+/// their cores realistically relative to each other.
+pub const REFERENCE_INTENSITY: f64 = 8.0;
+
 /// Effective streaming throughput of one unit, FLOP/s: the unit
 /// processes `W` FLOPs while fetching `W/I` words; with overlap
 /// (Eq. 1), each hyperstep costs `max(compute, fetch)`, so the rate is
@@ -62,6 +70,137 @@ pub fn makespan(
         .zip(fractions)
         .map(|(u, f)| f * w_flops / unit_throughput(u, intensity))
         .fold(0.0, f64::max)
+}
+
+/// Executable geometry for an [`optimal_split`]: the fluid fractions
+/// quantized onto a **common hyperstep grain** so every unit walks
+/// whole hypersteps and a scheduled hetero run can be compared
+/// byte-for-byte against a serial one.
+///
+/// The grain is `s · lcm(p_u)` elements: one hyperstep of *any* unit
+/// consumes exactly one grain, because unit `u` streams tokens of
+/// `grain / p_u` words per core. The scale `s` is raised until tokens
+/// use a healthy slice of the tightest unit's scratchpad (fewer, fatter
+/// hypersteps), and shares quantize to whole grains with a policy that
+/// keeps the split's makespan honest when units are wildly mismatched
+/// (an Epiphany-III next to a Phi-class card is a ~500× throughput
+/// gap): every *slower* unit rounds its share **down** and the
+/// fastest unit absorbs the slack. Rounding a slow unit up would grow
+/// the makespan by a whole slow-unit grain; the slack costs the fast
+/// unit almost nothing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SplitGeometry {
+    /// Elements one hyperstep of any unit consumes: `s · lcm(p_u)`.
+    pub grain: usize,
+    /// Per-unit stream token size in words, `grain / p_u`.
+    pub token_words: Vec<usize>,
+    /// Per-unit share in whole grains. Every unit holds at least one
+    /// grain — [`split_geometry`] raises the total until the smallest
+    /// optimal fraction still rounds to whole work.
+    pub share_grains: Vec<usize>,
+    /// Total grains across all units.
+    pub total_grains: usize,
+}
+
+impl SplitGeometry {
+    /// Elements assigned to `unit` (its per-vector stream length).
+    #[must_use]
+    pub fn unit_elements(&self, unit: usize) -> usize {
+        self.share_grains[unit] * self.grain
+    }
+
+    /// Total elements across all units.
+    #[must_use]
+    pub fn total_elements(&self) -> usize {
+        self.total_grains * self.grain
+    }
+
+    /// The quantized fractions actually executed (vs the fluid optimum).
+    #[must_use]
+    pub fn fractions(&self) -> Vec<f64> {
+        self.share_grains.iter().map(|&s| s as f64 / self.total_grains as f64).collect()
+    }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
+
+/// `ceil(a / b)` without the 1.73-stable `usize::div_ceil` (MSRV 1.70).
+fn div_ceil(a: usize, b: usize) -> usize {
+    a / b + usize::from(a % b != 0)
+}
+
+/// Quantize an [`optimal_split`] of at least `elements` elements onto
+/// the common hyperstep grain. The total may exceed `elements` for two
+/// reasons: rounding up to whole grains, and raising the grain count
+/// until **every** unit's optimal share covers at least 1.25 grains —
+/// so the slowest unit still floors to a whole grain of real work
+/// *and* the grain it takes off the fastest unit (one saved hyperstep
+/// there) exceeds the time it needs to run it, which is what makes the
+/// split's makespan strictly beat the best solo run.
+///
+/// Quantization policy: every unit except the fastest takes
+/// `⌊f_u · K⌋` grains; the fastest takes the remainder. See
+/// [`SplitGeometry`] for why slow units must round down.
+#[must_use]
+pub fn split_geometry(
+    units: &[AcceleratorParams],
+    intensity: f64,
+    elements: usize,
+) -> SplitGeometry {
+    assert!(!units.is_empty());
+    let base = units.iter().fold(1usize, |acc, u| {
+        assert!(u.p > 0, "unit needs at least one core");
+        lcm(acc, u.p)
+    });
+    // Scale the grain until per-core tokens use an eighth of the
+    // tightest unit's scratchpad: two streams, double-buffered, leave
+    // half the effective local store free for variables.
+    let scale = units
+        .iter()
+        .map(|u| (u.effective_local_words(true) / 8) * u.p / base)
+        .min()
+        .unwrap_or(1)
+        .max(1);
+    let grain = base * scale;
+    let rates: Vec<f64> = units.iter().map(|u| unit_throughput(u, intensity)).collect();
+    let total_rate: f64 = rates.iter().sum();
+    let fractions: Vec<f64> = rates.iter().map(|r| r / total_rate).collect();
+    let f_min = fractions.iter().copied().fold(f64::INFINITY, f64::min);
+    // f_u·K ≥ 1.25 for every unit: ⌊f_u·K⌋ ≥ 1, and one slow-unit
+    // grain runs in at most 0.8× the fluid makespan.
+    let floor_grains = (1.25 / f_min).ceil() as usize;
+    let total_grains = div_ceil(elements.max(1), grain).max(floor_grains);
+    let fastest = rates
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+        .map(|(i, _)| i)
+        .unwrap();
+    let mut share = vec![0usize; units.len()];
+    let mut rest = total_grains;
+    for (u, f) in fractions.iter().enumerate() {
+        if u != fastest {
+            share[u] = (f * total_grains as f64).floor() as usize;
+            rest -= share[u];
+        }
+    }
+    share[fastest] = rest;
+    SplitGeometry {
+        grain,
+        token_words: units.iter().map(|u| grain / u.p).collect(),
+        share_grains: share,
+        total_grains,
+    }
 }
 
 #[cfg(test)]
@@ -135,5 +274,55 @@ mod tests {
             lo[1] < hi[1],
             "weak-link unit's share must shrink when fetch-bound: {lo:?} vs {hi:?}"
         );
+    }
+
+    #[test]
+    fn split_geometry_uses_a_scaled_lcm_grain() {
+        let units = vec![AcceleratorParams::epiphany3(), AcceleratorParams::xeonphi_like()];
+        let g = split_geometry(&units, 50.0, 100_000);
+        // lcm(16, 61) = 976, scaled ×8 by the Epiphany scratchpad
+        // (4096 effective words / 8 = 512-word tokens, 488 used).
+        assert_eq!(g.grain, 7808);
+        assert_eq!(g.token_words, vec![488, 128]);
+        assert_eq!(g.share_grains.iter().sum::<usize>(), g.total_grains);
+        assert!(g.total_elements() >= 100_000);
+        // Tokens fit the double-buffered scratchpad budget.
+        for (u, &c) in units.iter().zip(&g.token_words) {
+            assert!(4 * c <= u.effective_local_words(true));
+        }
+    }
+
+    #[test]
+    fn split_shares_track_the_fluid_fractions_within_one_grain() {
+        let units = vec![AcceleratorParams::epiphany3(), AcceleratorParams::xeonphi_like()];
+        let (fractions, _) = optimal_split(&units, 50.0, 1.0);
+        let g = split_geometry(&units, 50.0, 2_000_000);
+        for (u, f) in fractions.iter().enumerate() {
+            let ideal = f * g.total_grains as f64;
+            let got = g.share_grains[u] as f64;
+            assert!((got - ideal).abs() <= 1.0, "unit {u}: {got} grains vs ideal {ideal:.2}");
+        }
+    }
+
+    #[test]
+    fn every_unit_gets_at_least_one_grain() {
+        // At I = 50 the phi-class unit out-runs the Epiphany ~500×;
+        // the total is raised until the slow unit still owns real work,
+        // and the slack from flooring slow shares lands on the fastest.
+        let units = vec![AcceleratorParams::epiphany3(), AcceleratorParams::xeonphi_like()];
+        let g = split_geometry(&units, 50.0, 1);
+        assert!(g.share_grains.iter().all(|&s| s >= 1), "{:?}", g.share_grains);
+        assert!(g.share_grains[1] > g.share_grains[0]);
+    }
+
+    #[test]
+    fn single_unit_split_takes_everything() {
+        let units = vec![AcceleratorParams::epiphany3()];
+        let g = split_geometry(&units, 8.0, 10_000);
+        // Grain = p·(scratchpad-sized token) = 16·512.
+        assert_eq!(g.grain, 8192);
+        assert_eq!(g.token_words, vec![512]);
+        assert_eq!(g.share_grains, vec![g.total_grains]);
+        assert_eq!(g.total_elements(), g.total_grains * 8192);
     }
 }

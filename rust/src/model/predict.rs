@@ -167,6 +167,61 @@ pub fn replay_hypersteps(every_k: usize, fault_at: usize) -> usize {
     fault_at - (fault_at / k) * k
 }
 
+// ------------------------------------------------------------- hetero
+
+/// Closed-form Eq. 1 walk of a heterogeneous split
+/// ([`crate::model::hetero::split_geometry`]): each unit runs the
+/// streaming inner-product schedule over its own share — `k_u`
+/// hypersteps of `max(2·C_u·I, 2·C_u·e_u)` FLOPs plus the final
+/// reduction superstep `p_u + (p_u−1)·g_u + l_u` — priced with its
+/// **own** machine pack and converted to seconds at its own clock.
+/// The makespan bound is list scheduling's for gangs admitted
+/// concurrently under disjoint per-class budget slices: the slowest
+/// unit. This is the figure the CI gate (`hetero_split_pred_rel_err`)
+/// checks the scheduled run against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeteroPrediction {
+    /// Per-unit hypersteps (= the unit's share in grains).
+    pub unit_hypersteps: Vec<usize>,
+    /// Per-unit predicted seconds on the unit's own clock.
+    pub unit_seconds: Vec<f64>,
+    /// Concurrent-makespan bound: `max over u of unit_seconds[u]`.
+    pub makespan_seconds: f64,
+    /// The fluid (unquantized, overhead-free) optimum from
+    /// [`crate::model::hetero::optimal_split`] over the same work.
+    pub fluid_seconds: f64,
+}
+
+/// Predict the concurrent makespan of executing `geom`'s split of a
+/// divisible intensity-`I` workload across `units`, one gang per unit.
+/// Requires `intensity ≥ 1` — the executable kernel streams 2 words
+/// per element and charges `2·I` FLOPs for them, so it cannot realize
+/// a sub-unit intensity.
+#[must_use]
+pub fn hetero_sweep_cost(
+    units: &[AcceleratorParams],
+    intensity: f64,
+    geom: &crate::model::hetero::SplitGeometry,
+) -> HeteroPrediction {
+    assert_eq!(units.len(), geom.share_grains.len());
+    assert!(intensity >= 1.0, "the hetero kernel realizes intensities >= 1");
+    let mut unit_hypersteps = Vec::with_capacity(units.len());
+    let mut unit_seconds = Vec::with_capacity(units.len());
+    for (u, m) in units.iter().enumerate() {
+        let k = geom.share_grains[u];
+        let c = geom.token_words[u] as f64;
+        let per_hyperstep = (2.0 * c * intensity).max(2.0 * c * m.e);
+        let final_step = m.p as f64 + (m.p as f64 - 1.0) * m.g + m.l;
+        let flops = k as f64 * per_hyperstep + final_step;
+        unit_hypersteps.push(k);
+        unit_seconds.push(m.flops_to_seconds(flops));
+    }
+    let makespan_seconds = unit_seconds.iter().copied().fold(0.0, f64::max);
+    let w_flops = 2.0 * geom.total_elements() as f64 * intensity;
+    let (_, fluid_seconds) = crate::model::hetero::optimal_split(units, intensity, w_flops);
+    HeteroPrediction { unit_hypersteps, unit_seconds, makespan_seconds, fluid_seconds }
+}
+
 // --------------------------------------------------------------- sort
 
 /// Geometry of the out-of-core pseudo-streaming sample sort (paper §7,
@@ -633,6 +688,44 @@ mod tests {
         assert!(g.chunk_words >= g.per_core, "128-word buckets fit one chunk");
         let pred = sort_cost(&mm, &g);
         assert_eq!(pred.passes, 1);
+    }
+
+    #[test]
+    fn hetero_sweep_cost_tracks_the_fluid_optimum() {
+        use crate::model::hetero::split_geometry;
+        let units = vec![AcceleratorParams::epiphany3(), AcceleratorParams::xeonphi_like()];
+        let i = 50.0;
+        let geom = split_geometry(&units, i, 2_000_000);
+        let pred = hetero_sweep_cost(&units, i, &geom);
+        assert_eq!(pred.unit_hypersteps, geom.share_grains);
+        let max_unit = pred.unit_seconds.iter().copied().fold(0.0, f64::max);
+        assert_eq!(pred.makespan_seconds, max_unit);
+        let rel = (pred.makespan_seconds - pred.fluid_seconds).abs() / pred.fluid_seconds;
+        assert!(
+            rel < 0.05,
+            "quantized schedule must track the fluid optimum: rel err {rel}"
+        );
+    }
+
+    #[test]
+    fn hetero_split_prediction_beats_any_single_unit() {
+        use crate::model::hetero::split_geometry;
+        let units = vec![AcceleratorParams::epiphany3(), AcceleratorParams::xeonphi_like()];
+        let i = 50.0;
+        let geom = split_geometry(&units, i, 2_000_000);
+        let pred = hetero_sweep_cost(&units, i, &geom);
+        for unit in &units {
+            let solo_units = vec![unit.clone()];
+            let solo_geom = split_geometry(&solo_units, i, geom.total_elements());
+            let solo = hetero_sweep_cost(&solo_units, i, &solo_geom);
+            assert!(
+                pred.makespan_seconds < solo.makespan_seconds,
+                "split {} must beat solo {} on {}",
+                pred.makespan_seconds,
+                solo.makespan_seconds,
+                unit.name
+            );
+        }
     }
 
     #[test]

@@ -833,6 +833,16 @@ mod tests {
         assert_eq!(ovh.dir, BandDir::HigherIsWorse);
         assert!(ovh.rel >= 1.0 && ovh.abs >= 0.5, "overhead band too tight");
         assert_eq!(scalar_band_for("read_bps_512", 0.15).dir, BandDir::TwoSided);
+        // The heterogeneous-split scalars `bench_fig5_cannon` records
+        // must land on the prediction-error and occupancy bands (both
+        // values are deterministic model-vs-ledger quantities, so the
+        // tight one-sided bands apply, not the generic two-sided one).
+        let hetero = scalar_band_for("hetero_split_pred_rel_err", 0.15);
+        assert_eq!(hetero.dir, BandDir::HigherIsWorse);
+        assert!((hetero.rel - 0.5).abs() < 1e-12 && hetero.abs <= 0.02);
+        let wocc = scalar_band_for("weighted_occupancy", 0.15);
+        assert_eq!(wocc.dir, BandDir::LowerIsWorse);
+        assert!(wocc.rel == 0.0 && (wocc.abs - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -146,7 +146,9 @@ struct GangWorker {
 /// it needs (a gang parks on barriers, so capping the *checkout* would
 /// deadlock it); the cap bounds what survives the run, so a scheduler
 /// operating under a [`CoreBudget`] keeps the thread count tied to the
-/// budget instead of the historical peak.
+/// budget instead of the historical peak. The cap is expressed in the
+/// budget's **weighted core units** (see [`CoreClass`]) and rounded up
+/// to whole threads, so a mixed-class budget does not over-retain.
 pub struct GangPool {
     idle: Mutex<Vec<GangWorker>>,
     /// Idle helpers retained beyond this are dropped at give-back.
@@ -188,16 +190,19 @@ impl GangPool {
         self.idle.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 
-    /// Bound the idle helper threads retained between runs (clamped to
+    /// Bound the idle helper threads retained between runs, in
+    /// **weighted core units** (rounded up to whole threads, clamped to
     /// at least 1). Surplus parked workers are dropped immediately —
     /// each one's job channel closes and its thread exits. Runs that
     /// need more helpers than the cap still get them (correctness
     /// requires `p - 1` distinct threads); the surplus is shed when the
     /// gang retires. The multi-gang scheduler sets this from its
-    /// [`CoreBudget`] capacity so the persistent pool never outgrows
-    /// the core budget it serves.
-    pub fn set_helper_cap(&self, cap: usize) {
-        let cap = cap.max(1);
+    /// [`CoreBudget`]'s weighted capacity clamped to its physical core
+    /// count, so the persistent pool never outgrows the budget it
+    /// serves — and a mixed-class budget whose weighted capacity dwarfs
+    /// its thread demand does not over-retain.
+    pub fn set_helper_cap(&self, cap: f64) {
+        let cap = (cap.ceil().max(1.0)) as usize;
         self.helper_cap.store(cap, Ordering::Relaxed);
         self.idle.lock().unwrap_or_else(|e| e.into_inner()).truncate(cap);
     }
@@ -290,9 +295,52 @@ impl Default for GangPool {
 // ------------------------------------------------------------------
 // CoreBudget
 
+/// A class of cores in a [`CoreBudget`]: a machine profile's cores,
+/// counted at a capacity `weight` relative to the budget's reference
+/// class (weight 1.0). A "fast" core (higher per-core BSPS throughput
+/// at the reference arithmetic intensity) counts for more than a
+/// "slow" one, so weighted occupancy over a mixed Epiphany/Phi-class
+/// budget measures delivered capacity, not thread-count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreClass {
+    /// Machine-profile name this class admits (`AcceleratorParams::name`).
+    pub name: &'static str,
+    /// Capacity weight of one core of this class (reference = 1.0).
+    pub weight: f64,
+}
+
+impl CoreClass {
+    /// The single uniform class behind [`CoreBudget::new`]: every core
+    /// weighs 1.0 — the weighted budget degrades to the old counting
+    /// budget.
+    #[must_use]
+    pub fn uniform() -> Self {
+        Self { name: "core", weight: 1.0 }
+    }
+
+    /// Derive a class for `machine` with its weight set to the ratio of
+    /// per-core BSPS throughputs (`model::hetero::unit_throughput / p`)
+    /// against `reference` at the given arithmetic `intensity` — the
+    /// same `min(compute, fetch)` rate `model::hetero::optimal_split`
+    /// splits work by, so admission and work-splitting price cores
+    /// consistently.
+    #[must_use]
+    pub fn for_machine(
+        machine: &crate::model::params::AcceleratorParams,
+        reference: &crate::model::params::AcceleratorParams,
+        intensity: f64,
+    ) -> Self {
+        let per_core = |m: &crate::model::params::AcceleratorParams| {
+            crate::model::hetero::unit_throughput(m, intensity) / m.p as f64
+        };
+        Self { name: machine.name, weight: per_core(machine) / per_core(reference) }
+    }
+}
+
 /// Ticketed waitlist state behind a [`CoreBudget`].
 struct BudgetState {
-    available: usize,
+    /// Free cores per class.
+    class_available: Vec<usize>,
     /// Next ticket to hand out to an [`CoreBudget::acquire`] caller.
     next_ticket: u64,
     /// Ticket currently first in line.
@@ -311,13 +359,25 @@ struct BudgetState {
 /// backfill path the multi-gang scheduler uses) and the RAII
 /// [`BudgetLease`] returns them when the gang retires.
 ///
-/// Fairness: `acquire` is strictly FIFO (tickets) — a large gang at the
-/// head of the line blocks later arrivals even while enough cores for
-/// *them* are free. `try_acquire` deliberately bypasses the waitlist so
-/// a scheduler can backfill those holes; a steady stream of backfilled
-/// small gangs can therefore starve a parked large `acquire` (see
-/// `docs/ARCHITECTURE.md`, "Multi-gang scheduling").
+/// A budget holds one or more [`CoreClass`]es ([`CoreBudget::new`] is
+/// the single-class fast path; [`CoreBudget::with_classes`] models a
+/// heterogeneous host, e.g. 16 Epiphany cores next to 61 Phi-class
+/// cores). Admission is exact integer accounting **per class** — a gang
+/// needs `p` cores of *its* machine's class — while `weighted_*`
+/// accessors report capacity/usage in weighted units for occupancy.
+///
+/// Fairness: `acquire` is strictly FIFO (tickets) across all classes —
+/// a large gang at the head of the line blocks later arrivals even
+/// while enough cores for *them* are free (including cores of a class
+/// the head does not even want). `try_acquire` deliberately bypasses
+/// the waitlist so a scheduler can backfill those holes; a steady
+/// stream of backfilled small gangs can therefore starve a parked large
+/// `acquire` (see `docs/ARCHITECTURE.md`, "Multi-gang scheduling").
 pub struct CoreBudget {
+    classes: Vec<CoreClass>,
+    /// Physical cores per class.
+    class_capacity: Vec<usize>,
+    /// Total physical cores (Σ class capacities).
     capacity: usize,
     state: Mutex<BudgetState>,
     cv: Condvar,
@@ -326,6 +386,7 @@ pub struct CoreBudget {
 /// RAII checkout of cores from a [`CoreBudget`]; returns them on drop.
 pub struct BudgetLease<'a> {
     budget: &'a CoreBudget,
+    class: usize,
     cores: usize,
 }
 
@@ -335,13 +396,27 @@ impl BudgetLease<'_> {
     pub fn cores(&self) -> usize {
         self.cores
     }
+
+    /// The class the cores were checked out of.
+    #[must_use]
+    pub fn class(&self) -> usize {
+        self.class
+    }
+
+    /// The lease's capacity in weighted units (`cores × class weight`).
+    #[must_use]
+    pub fn weighted(&self) -> f64 {
+        self.cores as f64 * self.budget.classes[self.class].weight
+    }
 }
 
 impl Drop for BudgetLease<'_> {
     fn drop(&mut self) {
         let mut st = self.budget.state.lock().unwrap_or_else(|e| e.into_inner());
-        st.available += self.cores;
-        debug_assert!(st.available <= self.budget.capacity);
+        st.class_available[self.class] += self.cores;
+        debug_assert!(
+            st.class_available[self.class] <= self.budget.class_capacity[self.class]
+        );
         // Wake everyone: the FIFO head may now fit, and try_acquire
         // callers parked in acquire-tickets behind it re-check too.
         self.budget.cv.notify_all();
@@ -349,14 +424,44 @@ impl Drop for BudgetLease<'_> {
 }
 
 impl CoreBudget {
-    /// A budget of `capacity` cores.
+    /// A budget of `capacity` cores in one uniform class (weight 1.0) —
+    /// the single-class fast path; all the weighted accessors degrade
+    /// to plain core counts.
     #[must_use]
     pub fn new(capacity: usize) -> Self {
-        assert!(capacity > 0, "CoreBudget: capacity == 0");
+        Self::with_classes(vec![(CoreClass::uniform(), capacity)])
+    }
+
+    /// A budget with one pool of cores per [`CoreClass`]. Class names
+    /// must be distinct (jobs are matched to classes by machine name),
+    /// every capacity positive, and every weight positive and finite.
+    #[must_use]
+    pub fn with_classes(classes: Vec<(CoreClass, usize)>) -> Self {
+        assert!(!classes.is_empty(), "CoreBudget: no classes");
+        let mut capacity = 0usize;
+        for (i, (class, cap)) in classes.iter().enumerate() {
+            assert!(*cap > 0, "CoreBudget: class {:?} capacity == 0", class.name);
+            assert!(
+                class.weight.is_finite() && class.weight > 0.0,
+                "CoreBudget: class {:?} weight {} must be positive and finite",
+                class.name,
+                class.weight
+            );
+            assert!(
+                classes[..i].iter().all(|(c, _)| c.name != class.name),
+                "CoreBudget: duplicate class name {:?}",
+                class.name
+            );
+            capacity += cap;
+        }
+        let class_available: Vec<usize> = classes.iter().map(|(_, cap)| *cap).collect();
+        let (classes, class_capacity): (Vec<_>, Vec<_>) = classes.into_iter().unzip();
         Self {
+            classes,
+            class_capacity,
             capacity,
             state: Mutex::new(BudgetState {
-                available: capacity,
+                class_available,
                 next_ticket: 0,
                 serving: 0,
             }),
@@ -371,70 +476,156 @@ impl CoreBudget {
         Self::new(n)
     }
 
-    /// Total cores this budget was created with.
+    /// Total physical cores across all classes.
     #[must_use]
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
-    /// Cores currently checked out.
+    /// Number of core classes (1 for [`CoreBudget::new`] budgets).
+    #[must_use]
+    pub fn class_count(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// The class table entry at `idx`.
+    #[must_use]
+    pub fn class(&self, idx: usize) -> &CoreClass {
+        &self.classes[idx]
+    }
+
+    /// Physical cores in class `idx`.
+    #[must_use]
+    pub fn class_capacity(&self, idx: usize) -> usize {
+        self.class_capacity[idx]
+    }
+
+    /// The class admitting machines named `name`, if any. Single-class
+    /// budgets admit every machine through class 0 (callers fall back
+    /// to 0 on `None` — the pre-heterogeneity behavior).
+    #[must_use]
+    pub fn class_for(&self, name: &str) -> Option<usize> {
+        self.classes.iter().position(|c| c.name == name)
+    }
+
+    /// Total capacity in weighted units (`Σ cores × weight`). Equals
+    /// [`CoreBudget::capacity`] for single-class budgets.
+    #[must_use]
+    pub fn weighted_capacity(&self) -> f64 {
+        self.classes
+            .iter()
+            .zip(&self.class_capacity)
+            .map(|(c, cap)| c.weight * *cap as f64)
+            .sum()
+    }
+
+    /// Physical cores currently checked out (all classes).
     #[must_use]
     pub fn in_use(&self) -> usize {
-        self.capacity - self.state.lock().unwrap_or_else(|e| e.into_inner()).available
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        self.capacity - st.class_available.iter().sum::<usize>()
     }
 
-    /// Cores currently free (ignores the waitlist).
+    /// Physical cores currently free (all classes; ignores the waitlist).
     #[must_use]
     pub fn available(&self) -> usize {
-        self.state.lock().unwrap_or_else(|e| e.into_inner()).available
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.class_available.iter().sum()
     }
 
-    /// Check `cores` out immediately if they are free, without joining
-    /// the waitlist — the scheduler's **backfill** path. Returns `None`
-    /// when the budget cannot satisfy the request right now.
+    /// Checked-out capacity in weighted units.
+    #[must_use]
+    pub fn weighted_in_use(&self) -> f64 {
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        self.classes
+            .iter()
+            .zip(&self.class_capacity)
+            .zip(&st.class_available)
+            .map(|((c, cap), avail)| c.weight * (*cap - *avail) as f64)
+            .sum()
+    }
+
+    /// Cores of class `idx` currently checked out.
+    #[must_use]
+    pub fn class_in_use(&self, idx: usize) -> usize {
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        self.class_capacity[idx] - st.class_available[idx]
+    }
+
+    /// Per-class cores currently checked out, in class order.
+    #[must_use]
+    pub fn class_usage(&self) -> Vec<usize> {
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        self.class_capacity
+            .iter()
+            .zip(&st.class_available)
+            .map(|(cap, avail)| cap - avail)
+            .collect()
+    }
+
+    fn check_request(&self, what: &str, class: usize, cores: usize) {
+        assert!(class < self.classes.len(), "{what}: class {class} out of range");
+        assert!(cores > 0, "{what}: cores == 0");
+        assert!(
+            cores <= self.class_capacity[class],
+            "{what}: {cores} cores exceed the budget capacity {} (class {})",
+            self.class_capacity[class],
+            self.classes[class].name
+        );
+    }
+
+    /// Check `cores` out of class 0 immediately if they are free,
+    /// without joining the waitlist — the scheduler's **backfill** path
+    /// on single-class budgets. Returns `None` when the budget cannot
+    /// satisfy the request right now.
     ///
-    /// Panics if `cores` exceeds the budget's capacity (such a request
+    /// Panics if `cores` exceeds the class capacity (such a request
     /// could never succeed — callers must reject it, not spin on it).
     pub fn try_acquire(&self, cores: usize) -> Option<BudgetLease<'_>> {
-        assert!(cores > 0, "try_acquire: cores == 0");
-        assert!(
-            cores <= self.capacity,
-            "try_acquire: {cores} cores exceed the budget capacity {}",
-            self.capacity
-        );
+        self.try_acquire_class(0, cores)
+    }
+
+    /// Per-class [`CoreBudget::try_acquire`]: backfill `cores` out of
+    /// class `class` if they are free right now.
+    pub fn try_acquire_class(&self, class: usize, cores: usize) -> Option<BudgetLease<'_>> {
+        self.check_request("try_acquire", class, cores);
         let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-        if st.available >= cores {
-            st.available -= cores;
-            Some(BudgetLease { budget: self, cores })
+        if st.class_available[class] >= cores {
+            st.class_available[class] -= cores;
+            Some(BudgetLease { budget: self, class, cores })
         } else {
             None
         }
     }
 
-    /// Check `cores` out, blocking on a strictly FIFO waitlist until
-    /// they are free. This is the scheduler-mediated entry point's
-    /// checkout (`bsp::engine::run_gang_budgeted`).
+    /// Check `cores` out of class 0, blocking on a strictly FIFO
+    /// waitlist until they are free. This is the scheduler-mediated
+    /// entry point's checkout (`bsp::engine::run_gang_budgeted`).
     ///
-    /// Panics if `cores` exceeds the budget's capacity (waiting would
+    /// Panics if `cores` exceeds the class capacity (waiting would
     /// deadlock: the request can never be satisfied).
     #[must_use]
     pub fn acquire(&self, cores: usize) -> BudgetLease<'_> {
-        assert!(cores > 0, "acquire: cores == 0");
-        assert!(
-            cores <= self.capacity,
-            "acquire: {cores} cores exceed the budget capacity {}",
-            self.capacity
-        );
+        self.acquire_class(0, cores)
+    }
+
+    /// Per-class [`CoreBudget::acquire`]: the FIFO waitlist is shared
+    /// across classes, so a parked head blocks later tickets even for
+    /// other classes (backfill via [`CoreBudget::try_acquire_class`]
+    /// routes around that, same as the single-class story).
+    #[must_use]
+    pub fn acquire_class(&self, class: usize, cores: usize) -> BudgetLease<'_> {
+        self.check_request("acquire", class, cores);
         let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         let ticket = st.next_ticket;
         st.next_ticket += 1;
         loop {
-            if st.serving == ticket && st.available >= cores {
-                st.available -= cores;
+            if st.serving == ticket && st.class_available[class] >= cores {
+                st.class_available[class] -= cores;
                 st.serving += 1;
                 // The next ticket in line may also fit what remains.
                 self.cv.notify_all();
-                return BudgetLease { budget: self, cores };
+                return BudgetLease { budget: self, class, cores };
             }
             st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
@@ -630,7 +821,7 @@ mod tests {
         pool.run(8, |_| {});
         assert_eq!(pool.idle_workers(), 7);
         // Capping sheds surplus parked helpers immediately.
-        pool.set_helper_cap(3);
+        pool.set_helper_cap(3.0);
         assert_eq!(pool.helper_cap(), 3);
         assert_eq!(pool.idle_workers(), 3);
         // A bigger gang still gets all the helpers it needs, but only
@@ -641,8 +832,12 @@ mod tests {
         });
         assert_eq!(ran.load(Ordering::SeqCst), 8);
         assert_eq!(pool.idle_workers(), 3);
+        // Fractional weighted caps round up to whole threads.
+        pool.set_helper_cap(1.2);
+        assert_eq!(pool.helper_cap(), 2);
+        assert_eq!(pool.idle_workers(), 2);
         // The clamp keeps at least one helper.
-        pool.set_helper_cap(0);
+        pool.set_helper_cap(0.0);
         assert_eq!(pool.helper_cap(), 1);
         assert_eq!(pool.idle_workers(), 1);
     }
@@ -736,6 +931,120 @@ mod tests {
         drop(held);
         big.join().unwrap();
         assert_eq!(b.available(), 4);
+    }
+
+    fn two_class_budget() -> CoreBudget {
+        CoreBudget::with_classes(vec![
+            (CoreClass { name: "slow", weight: 1.0 }, 4),
+            (CoreClass { name: "fast", weight: 10.0 }, 2),
+        ])
+    }
+
+    #[test]
+    fn weighted_budget_accounts_per_class() {
+        let b = two_class_budget();
+        assert_eq!(b.capacity(), 6, "physical cores sum over classes");
+        assert!((b.weighted_capacity() - 24.0).abs() < 1e-12);
+        assert_eq!(b.class_for("fast"), Some(1));
+        assert_eq!(b.class_for("epiphany3"), None);
+
+        let slow = b.try_acquire_class(0, 3).expect("3 of 4 slow cores");
+        let fast = b.try_acquire_class(1, 1).expect("1 of 2 fast cores");
+        assert_eq!(b.in_use(), 4);
+        assert!((b.weighted_in_use() - 13.0).abs() < 1e-12, "3·1 + 1·10");
+        assert!((slow.weighted() - 3.0).abs() < 1e-12);
+        assert!((fast.weighted() - 10.0).abs() < 1e-12);
+        assert_eq!(b.class_usage(), vec![3, 1]);
+
+        // Classes are disjoint pools: the slow class being nearly full
+        // does not block the fast class, and vice versa.
+        assert!(b.try_acquire_class(0, 2).is_none(), "only 1 slow core left");
+        let fast2 = b.try_acquire_class(1, 1).expect("fast class still has room");
+        assert_eq!(b.class_in_use(1), 2);
+        drop(fast2);
+        drop(fast);
+        drop(slow);
+        assert_eq!(b.available(), 6);
+        assert!((b.weighted_in_use()).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed the budget capacity")]
+    fn weighted_budget_rejects_impossible_class_requests() {
+        let b = two_class_budget();
+        // 3 fast cores can never exist (class capacity 2) even though 3
+        // physical cores are a fraction of the total.
+        let _ = b.try_acquire_class(1, 3);
+    }
+
+    #[test]
+    fn weighted_budget_fifo_spans_classes_and_backfill_routes_around() {
+        // A parked head waiting on fast cores blocks a later slow-class
+        // acquire (one FIFO line for the whole budget), but
+        // try_acquire_class backfills the idle slow cores.
+        let b = Arc::new(two_class_budget());
+        let gate = b.try_acquire_class(1, 2).unwrap();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for (i, (class, cores)) in [(0usize, (1usize, 1usize)), (1, (0, 1))] {
+            let b = Arc::clone(&b);
+            let order = Arc::clone(&order);
+            handles.push(thread::spawn(move || {
+                let _l = b.acquire_class(class, cores);
+                order.lock().unwrap().push(i);
+                thread::sleep(std::time::Duration::from_millis(5));
+            }));
+            thread::sleep(std::time::Duration::from_millis(30));
+        }
+        // Backfill: slow cores are all free and the waitlist is parked.
+        let fill = b.try_acquire_class(0, 4).expect("backfill past the parked head");
+        drop(fill);
+        drop(gate);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let got = order.lock().unwrap().clone();
+        assert_eq!(got, vec![0, 1], "strict ticket order across classes");
+        assert_eq!(b.available(), 6);
+    }
+
+    #[test]
+    fn single_class_budget_degrades_to_the_counting_budget() {
+        // CoreBudget::new(n) must behave exactly like the pre-weighted
+        // budget: one class, weight 1.0, weighted == unweighted.
+        let b = CoreBudget::new(8);
+        assert_eq!(b.class_count(), 1);
+        assert_eq!(b.class(0).weight.to_bits(), 1.0f64.to_bits());
+        assert_eq!(b.capacity(), 8);
+        assert_eq!(b.weighted_capacity().to_bits(), 8.0f64.to_bits());
+        let l = b.acquire(5);
+        assert_eq!(b.in_use(), 5);
+        assert_eq!(b.weighted_in_use().to_bits(), 5.0f64.to_bits());
+        assert_eq!(l.class(), 0);
+        assert_eq!(l.weighted().to_bits(), 5.0f64.to_bits());
+        drop(l);
+        assert_eq!(b.weighted_in_use().to_bits(), 0.0f64.to_bits());
+    }
+
+    #[test]
+    fn core_class_for_machine_weights_by_throughput_ratio() {
+        use crate::model::params::AcceleratorParams;
+        let epi = AcceleratorParams::epiphany3();
+        let phi = AcceleratorParams::xeonphi_like();
+        // Against itself the weight is exactly 1.
+        let own = CoreClass::for_machine(&epi, &epi, 8.0);
+        assert_eq!(own.name, "epiphany3");
+        assert!((own.weight - 1.0).abs() < 1e-12);
+        // At I = 8 the Epiphany is fetch-bound (e = 43.4 > 8): per-core
+        // rate I·r/e; the Phi is compute-bound (e = 0.8 < 8): rate r.
+        let w = CoreClass::for_machine(&phi, &epi, 8.0).weight;
+        let expect = phi.r / (8.0 * epi.r / epi.e);
+        assert!((w - expect).abs() / expect < 1e-12, "{w} vs {expect}");
+        assert!(w > 100.0, "a Phi-class core dwarfs an Epiphany core");
+        // Intensity moves the ratio: compute-bound on both sides at
+        // high I the ratio is just r/r.
+        let w_hi = CoreClass::for_machine(&phi, &epi, 1e6).weight;
+        assert!((w_hi - phi.r / epi.r).abs() / w_hi < 1e-9);
     }
 
     #[test]

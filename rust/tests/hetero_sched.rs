@@ -1,0 +1,245 @@
+//! Integration tests for the heterogeneous-gang stack: throughput-split
+//! geometry executed live through the class-matched scheduler, the
+//! weighted `CoreBudget`'s accounting and FIFO/backfill semantics, and
+//! the single-class degeneration that keeps the PR's refactor invisible
+//! to homogeneous sweeps.
+//!
+//! The live tests run on two deliberately tiny machine profiles (4 and
+//! 2 cores, 8× throughput apart at the test intensity) so the whole
+//! split is a 12-grain workload — fast in debug mode — while exercising
+//! exactly the same code path as the `epiphany3 + xeonphi_like` CLI
+//! pairing.
+
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use bsps::bsp::sched::hetero_split_jobs;
+use bsps::model::params::AcceleratorParams;
+use bsps::util::pool::{CoreBudget, CoreClass};
+use bsps::util::prop::check;
+
+/// 4 cores × 4 MFLOP/s, compute-bound at the test intensity (e = 1).
+fn fast() -> AcceleratorParams {
+    AcceleratorParams {
+        p: 4,
+        r: 4.0e6,
+        g: 1.0,
+        l: 8.0,
+        e: 1.0,
+        local_mem: 4096,
+        ext_mem: 1 << 22,
+        name: "hetero_fast",
+    }
+}
+
+/// 2 cores × 1 MFLOP/s — an 8× slower unit (same class of machine, one
+/// technology generation back).
+fn slow() -> AcceleratorParams {
+    AcceleratorParams {
+        p: 2,
+        r: 1.0e6,
+        g: 1.0,
+        l: 4.0,
+        e: 4.0,
+        local_mem: 4096,
+        ext_mem: 1 << 22,
+        name: "hetero_slow",
+    }
+}
+
+const INTENSITY: f64 = 8.0;
+
+#[test]
+fn optimal_split_beats_even_split_and_every_solo_unit() {
+    let units = vec![fast(), slow()];
+    // Tiny workload: the 1.25/f_min floor dominates, giving a 12-grain
+    // split with throughput shares [11, 1].
+    let split = hetero_split_jobs(&units, INTENSITY, 16.0);
+    assert_eq!(split.geom.share_grains, vec![11, 1], "throughput quantization");
+    let optimal = split.run();
+    let even = hetero_split_jobs(&units, INTENSITY, 16.0)
+        .with_share_grains(vec![6, 6])
+        .run();
+
+    assert!(optimal.byte_identical(), "optimal shares vs serial twins");
+    assert!(even.byte_identical(), "even shares vs serial twins");
+
+    // The ledger's virtual clock is deterministic, so these orderings
+    // are hard invariants, not statistical ones. The even split parks
+    // 5 extra grains on the 8×-slower unit; the throughput split keeps
+    // both units finishing within one grain of each other.
+    assert!(
+        optimal.makespan_virtual_seconds < even.makespan_virtual_seconds,
+        "throughput split {} must beat even split {}",
+        optimal.makespan_virtual_seconds,
+        even.makespan_virtual_seconds
+    );
+    assert!(
+        optimal.makespan_virtual_seconds < optimal.best_solo_seconds(),
+        "split {} must beat the best solo unit {}",
+        optimal.makespan_virtual_seconds,
+        optimal.best_solo_seconds()
+    );
+    assert!(optimal.split_gain() > 0.0);
+    // The Eq. 1 prediction differs from the measured ledger only by
+    // per-hyperstep latency terms — well inside benchdiff's 0.5 band
+    // for `hetero_split_pred_rel_err`.
+    assert!(
+        optimal.pred_rel_err() < 0.5,
+        "prediction drifted: rel_err = {}",
+        optimal.pred_rel_err()
+    );
+}
+
+#[test]
+fn scheduled_shares_run_under_a_weighted_two_class_budget() {
+    let units = vec![fast(), slow()];
+    let split = hetero_split_jobs(&units, INTENSITY, 16.0);
+    // α must match a straight dot product of the generated operands
+    // (the kernel's f32 summation order differs, so compare in f64).
+    let want: f64 = split
+        .inputs
+        .iter()
+        .flat_map(|(x, y)| x.iter().zip(y).map(|(a, b)| f64::from(*a) * f64::from(*b)))
+        .sum();
+    let run = split.run();
+    assert!(run.byte_identical());
+    assert!(
+        (f64::from(run.alpha) - want).abs() <= 1e-3 * want.abs().max(1.0),
+        "alpha {} vs reference {want}",
+        run.alpha
+    );
+
+    let stats = &run.sched.stats;
+    // One class per profile: 4 reference cores + 2 cores at weight
+    // 0.25 (1 MFLOP/s vs 4 MFLOP/s per core, both compute-bound at the
+    // reference intensity) = 4.5 weighted cores over 6 physical.
+    assert_eq!(stats.budget_cores, 6);
+    assert_eq!(stats.weighted_budget.to_bits(), 4.5f64.to_bits());
+    // Each gang fills its whole class while it runs, so the per-class
+    // peaks are exact regardless of overlap.
+    assert_eq!(stats.class_peak_cores, vec![4, 2]);
+    assert!(stats.peak_weighted >= 4.0, "peak_weighted = {}", stats.peak_weighted);
+    let wocc = stats.weighted_occupancy();
+    assert!(wocc > 0.0 && wocc.is_finite(), "weighted_occupancy = {wocc}");
+
+    // The render carries the full verdict row.
+    let text = run.render();
+    assert!(text.contains("unit hetero_fast"), "{text}");
+    assert!(text.contains("unit hetero_slow"), "{text}");
+    assert!(text.contains("byte_identical=true"), "{text}");
+}
+
+#[test]
+fn weighted_budget_accounting_holds_under_random_churn() {
+    static NAMES: [&str; 3] = ["churn_a", "churn_b", "churn_c"];
+    const WEIGHTS: [f64; 5] = [0.25, 0.5, 1.0, 2.0, 4.0];
+    check("weighted budget accounting", 64, |g| {
+        let n_classes = g.rng.next_range(1, 4);
+        let caps: Vec<usize> = (0..n_classes).map(|_| g.rng.next_range(1, 9)).collect();
+        let classes: Vec<(CoreClass, usize)> = caps
+            .iter()
+            .enumerate()
+            .map(|(i, &cap)| {
+                let weight = WEIGHTS[g.rng.next_range(0, WEIGHTS.len())];
+                (CoreClass { name: NAMES[i], weight }, cap)
+            })
+            .collect();
+        let budget = CoreBudget::with_classes(classes);
+        let mut leases = Vec::new();
+        for _ in 0..g.size(40) {
+            let c = g.rng.next_range(0, n_classes);
+            if g.rng.next_range(0, 2) == 0 {
+                let want = g.rng.next_range(1, caps[c] + 1);
+                let free = budget.class_capacity(c) - budget.class_in_use(c);
+                // Backfill admits exactly when the class has room —
+                // other classes' usage must not interfere.
+                let got = budget.try_acquire_class(c, want);
+                assert_eq!(got.is_some(), want <= free, "class {c}: want {want}, free {free}");
+                if let Some(lease) = got {
+                    assert_eq!(lease.class(), c);
+                    assert_eq!(lease.cores(), want);
+                    leases.push(lease);
+                }
+            } else if !leases.is_empty() {
+                let k = g.rng.next_range(0, leases.len());
+                drop(leases.swap_remove(k));
+            }
+            // Accounting invariants after every step.
+            let usage = budget.class_usage();
+            let mut weighted = 0.0f64;
+            let mut total = 0usize;
+            for (i, &used) in usage.iter().enumerate() {
+                assert!(used <= budget.class_capacity(i));
+                weighted += budget.class(i).weight * used as f64;
+                total += used;
+            }
+            assert_eq!(budget.in_use(), total);
+            assert_eq!(budget.available(), budget.capacity() - total);
+            assert!((budget.weighted_in_use() - weighted).abs() < 1e-9);
+            assert!(budget.weighted_in_use() <= budget.weighted_capacity() + 1e-9);
+        }
+        drop(leases);
+        assert_eq!(budget.in_use(), 0, "all cores return on lease drop");
+        assert_eq!(budget.weighted_in_use(), 0.0);
+    });
+}
+
+#[test]
+fn blocking_acquires_queue_fifo_while_backfill_routes_around_the_head() {
+    let budget = Arc::new(CoreBudget::with_classes(vec![
+        (CoreClass { name: "fifo_a", weight: 1.0 }, 4),
+        (CoreClass { name: "fifo_b", weight: 0.5 }, 2),
+    ]));
+    // Fill class 0 so the next blocking acquire parks at the head.
+    let first = budget.try_acquire_class(0, 4).expect("class 0 starts empty");
+    let (tx, rx) = mpsc::channel();
+    let parked = {
+        let budget = Arc::clone(&budget);
+        thread::spawn(move || {
+            let lease = budget.acquire_class(0, 3);
+            tx.send(lease.cores()).unwrap();
+            drop(lease);
+        })
+    };
+    thread::sleep(Duration::from_millis(50));
+    assert!(rx.try_recv().is_err(), "head admitted while class 0 was full");
+    // The backfill path (try_acquire_class) must route around the
+    // parked head: class 1 is idle and a waiting class-0 ticket must
+    // not embargo it.
+    let side = budget
+        .try_acquire_class(1, 2)
+        .expect("backfill on an idle class routes around the parked head");
+    drop(side);
+    drop(first);
+    assert_eq!(
+        rx.recv_timeout(Duration::from_secs(10)).expect("head admitted after release"),
+        3
+    );
+    parked.join().unwrap();
+}
+
+#[test]
+fn single_class_split_degenerates_to_the_unweighted_scheduler() {
+    // One unit: weight 1.0 exactly, so every weighted statistic must be
+    // bit-identical to its unweighted counterpart — the refactor is
+    // invisible to homogeneous scheduling.
+    let run = hetero_split_jobs(&[fast()], INTENSITY, 16.0).run();
+    assert!(run.byte_identical());
+    let stats = &run.sched.stats;
+    assert_eq!(stats.weighted_budget.to_bits(), (stats.budget_cores as f64).to_bits());
+    assert_eq!(stats.peak_weighted.to_bits(), (stats.peak_cores as f64).to_bits());
+    assert_eq!(stats.class_peak_cores, vec![stats.peak_cores]);
+    assert_eq!(
+        stats.weighted_occupancy().to_bits(),
+        stats.occupancy().to_bits(),
+        "weight 1.0 must not perturb occupancy bitwise"
+    );
+    // With one unit the "split" and the solo yardstick are the same
+    // schedule, so their virtual clocks agree bit for bit.
+    assert_eq!(
+        run.makespan_virtual_seconds.to_bits(),
+        run.solo_virtual_seconds[0].to_bits()
+    );
+}

@@ -87,11 +87,23 @@ fn steady_state_token_loop_is_allocation_free() {
     let _ = run_gang(&m, Some(reg), true, |ctx| {
         let pid = ctx.pid();
         let h = ctx.stream_open(pid).unwrap();
+        // 65 registered variables span two chunks of the engine's
+        // chunked var table (64 slots per chunk): the steady-state
+        // `with_var` reads below cross the chunk boundary, proving the
+        // append-only index is lock- and allocation-free on the read
+        // path (registration itself allocates — that's warm-up).
+        let vars: Vec<_> = (0..65)
+            .map(|i| ctx.register(&format!("slot{i}"), 1).unwrap())
+            .collect();
+        ctx.sync();
         let mut tok = Vec::new();
         let mut msgs = Vec::with_capacity(4);
         for t in 0..TOKENS {
             ctx.stream_move_down(h, &mut tok).unwrap();
             ctx.charge_flops(2.0 * C as f64);
+            let probe = ctx.with_var(vars[t % vars.len()], |v| v[0])
+                + ctx.with_var(vars[64], |v| v[0]);
+            assert!(probe == 0.0, "registered vars start zeroed");
             // Pooled message traffic: take → fill → send; drained
             // payloads go back to the pool after the barrier, so the
             // same buffers circulate forever.
