@@ -16,7 +16,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use bsps::bsp::{
-    run_gang, run_gang_cfg, AnalysisMode, CheckpointPolicy, FaultMode, FaultSite, GangConfig,
+    AnalysisMode, CheckpointPolicy, FaultMode, FaultSite, Gang, GangConfig,
     GangJob, GangScheduler, RetryPolicy,
 };
 use bsps::coordinator::ComputeBackend;
@@ -42,7 +42,7 @@ fn main() {
     for p in [1usize, 4, 16] {
         let m = machine(p);
         let r = bench(&format!("run_gang(p={p}) empty"), cfg, |_| {
-            run_gang(&m, None, false, |_| {})
+            Gang::new(&m).run(|_| {})
         });
         println!("{}", r.row());
         rec.push(&r);
@@ -51,7 +51,7 @@ fn main() {
     section("superstep barrier round-trips (p=16, 100 syncs)");
     let m = machine(16);
     let r = bench_throughput("sync×100", cfg, 100.0, |_| {
-        run_gang(&m, None, false, |ctx| {
+        Gang::new(&m).run(|ctx| {
             for _ in 0..100 {
                 ctx.sync();
             }
@@ -68,7 +68,7 @@ fn main() {
             reg.create(64 * 64, 64, None).unwrap();
         }
         let reg = Arc::new(reg);
-        run_gang(&m, Some(reg), true, |ctx| {
+        Gang::new(&m).with_streams(reg).with_prefetch(true).run(|ctx| {
             let h = ctx.stream_open(ctx.pid()).unwrap();
             let mut tok = Vec::new();
             for _ in 0..64 {
@@ -99,12 +99,12 @@ fn main() {
         }
     };
     let r_off = bench_throughput("put+sync ×64 analysis=off ", cfg, 64.0, |_| {
-        run_gang_cfg(&m, None, false, GangConfig::default(), analyzed_kernel)
+        Gang::new(&m).run(analyzed_kernel)
     });
     println!("{}", r_off.row());
     let warn = GangConfig { analysis: AnalysisMode::Warn, ..Default::default() };
     let r_warn = bench_throughput("put+sync ×64 analysis=warn", cfg, 64.0, |_| {
-        run_gang_cfg(&m, None, false, warn.clone(), analyzed_kernel)
+        Gang::new(&m).with_cfg(warn.clone()).run(analyzed_kernel)
     });
     println!("{}", r_warn.row());
     let overhead = r_warn.time.mean / r_off.time.mean;
@@ -114,7 +114,7 @@ fn main() {
     section("var put/get round-trip (p=16, 64 supersteps, handle API)");
     let m = machine(16);
     let r = bench_throughput("put+sync ×64", cfg, 64.0, |_| {
-        run_gang(&m, None, false, |ctx| {
+        Gang::new(&m).run(|ctx| {
             let x = ctx.register("x", 64).unwrap();
             ctx.sync();
             let data = [1.0f32; 64];
@@ -163,12 +163,13 @@ fn main() {
         }
         Arc::new(reg)
     };
-    let plain = run_gang_cfg(&m, Some(mk_reg(&m)), true, GangConfig::default(), ck_kernel);
+    let plain = Gang::new(&m).with_streams(mk_reg(&m)).with_prefetch(true).run(ck_kernel);
     let ck_cfg = GangConfig {
         checkpoint: Some(CheckpointPolicy::every(8)),
         ..Default::default()
     };
-    let ckpt = run_gang_cfg(&m, Some(mk_reg(&m)), true, ck_cfg, ck_kernel);
+    let gang = Gang::new(&m).with_streams(mk_reg(&m)).with_prefetch(true);
+    let ckpt = gang.with_cfg(ck_cfg).run(ck_kernel);
     let plain_flops = plain.ledger.total_flops(&m);
     let ckpt_flops = ckpt.ledger.total_flops(&m);
     let ck_overhead = ckpt_flops / plain_flops;

@@ -17,7 +17,7 @@
 
 use std::sync::Arc;
 
-use bsps::bsp::{run_gang, run_gang_cfg, Ctx, GangConfig, RunOutcome};
+use bsps::bsp::{Ctx, Gang, GangConfig, RunOutcome};
 use bsps::model::params::AcceleratorParams;
 use bsps::sim::extmem::ExtMemModel;
 use bsps::sim::membench;
@@ -98,10 +98,10 @@ fn noc_ablation(rec: &mut BenchRecorder) {
             ctx.sync();
         }
     };
-    let routed = run_gang(&m, None, false, kernel);
+    let routed = Gang::new(&m).run(kernel);
     let free_cfg =
         GangConfig { noc: Some(Noc::for_machine(&m).with_free_hops()), ..Default::default() };
-    let free = run_gang_cfg(&m, None, false, free_cfg, kernel);
+    let free = Gang::new(&m).with_cfg(free_cfg).run(kernel);
 
     let flat = routed.cost.total_flops(&m);
     let noc_priced = routed.cost.total_flops_noc(&m);
@@ -145,7 +145,7 @@ fn stream_workload(
         }
         ctx.stream_close(h).unwrap();
     };
-    run_gang(m, Some(Arc::new(reg)), prefetch, kernel)
+    Gang::new(m).with_streams(Arc::new(reg)).with_prefetch(prefetch).run(kernel)
 }
 
 fn overlap_acceptance(rec: &mut BenchRecorder) {

@@ -85,7 +85,7 @@ pub fn initial_skew(s: usize, t: usize, grid_n: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bsp::run_gang;
+    use crate::bsp::Gang;
     use crate::coordinator::compute::native_mm_acc;
     use crate::model::params::AcceleratorParams;
     use crate::util::prng::SplitMix64;
@@ -108,7 +108,7 @@ mod tests {
             out
         };
 
-        let _ = run_gang(&m, None, false, |ctx| {
+        let _ = Gang::new(&m).run(|ctx| {
             let (s, t) = (ctx.pid() / grid_n, ctx.pid() % grid_n);
             let skew = initial_skew(s, t, grid_n);
             let my_a = block(a, s, skew);
@@ -180,7 +180,7 @@ mod tests {
         let mut m = AcceleratorParams::epiphany3();
         m.p = 4;
         let backend = ComputeBackend::Native;
-        let out = run_gang(&m, None, false, |ctx| {
+        let out = Gang::new(&m).run(|ctx| {
             let vars = CannonVars::register(ctx, k).unwrap();
             ctx.sync();
             let a = vec![1.0f32; k * k];
@@ -212,7 +212,7 @@ mod tests {
         let mut m = AcceleratorParams::epiphany3();
         m.p = 4;
         let backend = ComputeBackend::Native;
-        let out = run_gang(&m, None, false, |ctx| {
+        let out = Gang::new(&m).run(|ctx| {
             let vars = CannonVars::register(ctx, k).unwrap();
             ctx.sync();
             let a = vec![1.0f32; k * k];

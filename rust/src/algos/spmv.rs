@@ -13,13 +13,16 @@
 //! Column indices travel in f32 streams (the registry is f32-typed);
 //! that is exact for all indices below 2²⁴, and `n` here is far below.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::util::error::{ensure, Result};
 
-use crate::coordinator::{run_bsps, BspsEnv, Report};
-use crate::model::params::WORD_BYTES;
+use crate::bsp::sched::GangJob;
+use crate::bsp::Ctx;
+use crate::coordinator::{run_bsps, BspsEnv, ComputeBackend, Report};
+use crate::model::params::{AcceleratorParams, WORD_BYTES};
 use crate::stream::StreamRegistry;
+use crate::util::prng::SplitMix64;
 
 /// An ELLPACK matrix.
 #[derive(Debug, Clone)]
@@ -80,19 +83,30 @@ pub struct SpmvRun {
     pub report: Report,
 }
 
-/// Run `y = A·x` streamed in row-block tokens of `rows_per_token` rows.
-/// Requires `p · rows_per_token | n`.
-pub fn run(env: &BspsEnv, a: &EllMatrix, x: &[f32], rows_per_token: usize) -> Result<SpmvRun> {
-    let p = env.machine.p;
+/// The per-core stream layout of the resident-x SpMV path, shared by
+/// the direct [`run`] entry and the scheduler-job factory [`sweep_job`].
+struct ResidentPlan {
+    val_ids: Vec<usize>,
+    col_ids: Vec<usize>,
+    y_ids: Vec<usize>,
+    blocks_per_core: usize,
+    rows_per_token: usize,
+    nnz: usize,
+}
+
+/// Validate the geometry and build the block-cyclic val/col/y streams.
+fn resident_streams(
+    machine: &AcceleratorParams,
+    a: &EllMatrix,
+    rows_per_token: usize,
+) -> Result<(StreamRegistry, ResidentPlan)> {
+    let p = machine.p;
     let (n, nnz) = (a.n, a.nnz);
-    ensure!(x.len() == n, "x must have length n");
     ensure!(rows_per_token > 0 && n % (p * rows_per_token) == 0, "p·rows | n required");
-    // x + one token of values + one of cols must fit next to the stream
-    // buffers; x is charged explicitly below.
     let blocks_per_core = n / (p * rows_per_token);
     let token_vals = rows_per_token * nnz;
 
-    let mut reg = StreamRegistry::new(&env.machine);
+    let mut reg = StreamRegistry::new(machine);
     let mut val_ids = Vec::new();
     let mut col_ids = Vec::new();
     let mut y_ids = Vec::new();
@@ -112,43 +126,61 @@ pub fn run(env: &BspsEnv, a: &EllMatrix, x: &[f32], rows_per_token: usize) -> Re
         col_ids.push(reg.create(cols.len(), token_vals, Some(&cols))?);
         y_ids.push(reg.create(blocks_per_core * rows_per_token, rows_per_token, None)?);
     }
+    let plan = ResidentPlan { val_ids, col_ids, y_ids, blocks_per_core, rows_per_token, nnz };
+    Ok((reg, plan))
+}
+
+/// The per-core kernel of the resident-x path. Panics if `x` does not
+/// fit in the scratchpad — callers (both `run_bsps` and the gang
+/// scheduler) surface the panic as a failed run.
+fn resident_kernel(ctx: &mut Ctx, backend: &ComputeBackend, x: &[f32], plan: &ResidentPlan) {
+    let s = ctx.pid();
+    // x resides in scratchpad for the whole run.
+    if let Err(e) = ctx.local_alloc(x.len() * WORD_BYTES) {
+        panic!("{e}");
+    }
+    let hv = ctx.stream_open(plan.val_ids[s]).unwrap();
+    let hc = ctx.stream_open(plan.col_ids[s]).unwrap();
+    let hy = ctx.stream_open(plan.y_ids[s]).unwrap();
+    let (mut tv, mut tc) = (Vec::new(), Vec::new());
+    for _ in 0..plan.blocks_per_core {
+        ctx.stream_move_down(hv, &mut tv).unwrap();
+        ctx.stream_move_down(hc, &mut tc).unwrap();
+        let cols_i32: Vec<i32> = tc.iter().map(|&c| c as i32).collect();
+        let (y_tok, flops) = backend
+            .spmv_ell(&tv, &cols_i32, x, plan.rows_per_token, plan.nnz)
+            .unwrap();
+        ctx.charge_flops(flops);
+        ctx.stream_move_up(hy, &y_tok).unwrap();
+        ctx.hyperstep_sync();
+    }
+    ctx.stream_close(hv).unwrap();
+    ctx.stream_close(hc).unwrap();
+    ctx.stream_close(hy).unwrap();
+    ctx.local_free(x.len() * WORD_BYTES);
+}
+
+/// Run `y = A·x` streamed in row-block tokens of `rows_per_token` rows.
+/// Requires `p · rows_per_token | n`.
+pub fn run(env: &BspsEnv, a: &EllMatrix, x: &[f32], rows_per_token: usize) -> Result<SpmvRun> {
+    let p = env.machine.p;
+    let n = a.n;
+    ensure!(x.len() == n, "x must have length n");
+    // x + one token of values + one of cols must fit next to the stream
+    // buffers; x is charged explicitly inside the kernel.
+    let (reg, plan) = resident_streams(&env.machine, a, rows_per_token)?;
     let reg = Arc::new(reg);
     let x_shared = x.to_vec();
-    let err: Mutex<Option<String>> = Mutex::new(None);
 
     let (report, _) = run_bsps(env, Arc::clone(&reg), |ctx, backend| {
-        let s = ctx.pid();
-        // x resides in scratchpad for the whole run.
-        if let Err(e) = ctx.local_alloc(x_shared.len() * WORD_BYTES) {
-            *err.lock().unwrap() = Some(e.to_string());
-            panic!("{e}");
-        }
-        let hv = ctx.stream_open(val_ids[s]).unwrap();
-        let hc = ctx.stream_open(col_ids[s]).unwrap();
-        let hy = ctx.stream_open(y_ids[s]).unwrap();
-        let (mut tv, mut tc) = (Vec::new(), Vec::new());
-        for _ in 0..blocks_per_core {
-            ctx.stream_move_down(hv, &mut tv).unwrap();
-            ctx.stream_move_down(hc, &mut tc).unwrap();
-            let cols_i32: Vec<i32> = tc.iter().map(|&c| c as i32).collect();
-            let (y_tok, flops) = backend
-                .spmv_ell(&tv, &cols_i32, &x_shared, rows_per_token, nnz)
-                .unwrap();
-            ctx.charge_flops(flops);
-            ctx.stream_move_up(hy, &y_tok).unwrap();
-            ctx.hyperstep_sync();
-        }
-        ctx.stream_close(hv).unwrap();
-        ctx.stream_close(hc).unwrap();
-        ctx.stream_close(hy).unwrap();
-        ctx.local_free(x_shared.len() * WORD_BYTES);
+        resident_kernel(ctx, backend, &x_shared, &plan);
     });
 
     // Host gathers y from the per-core output streams (block-cyclic).
     let mut y = vec![0.0f32; n];
     for s in 0..p {
-        let data = reg.snapshot(y_ids[s])?;
-        for j in 0..blocks_per_core {
+        let data = reg.snapshot(plan.y_ids[s])?;
+        for j in 0..plan.blocks_per_core {
             let block = s + j * p;
             let row0 = block * rows_per_token;
             y[row0..row0 + rows_per_token]
@@ -156,6 +188,45 @@ pub fn run(env: &BspsEnv, a: &EllMatrix, x: &[f32], rows_per_token: usize) -> Re
         }
     }
     Ok(SpmvRun { y, report })
+}
+
+/// Build one scheduler job for a seeded random `n×n` SpMV point: a
+/// diagonally-anchored ELLPACK matrix with up to `nnz` entries per row
+/// and a random dense `x`, run through the resident-x kernel. This is
+/// the gang-entry used by the sweep service's `spmv` recipe — the same
+/// streams and kernel as [`run`], packaged for `GangScheduler`
+/// admission.
+pub fn sweep_job(
+    machine: &AcceleratorParams,
+    n: usize,
+    nnz: usize,
+    rows_per_token: usize,
+    seed: u64,
+) -> Result<GangJob> {
+    ensure!(nnz > 0, "nnz must be positive");
+    let mut rng = SplitMix64::new(seed);
+    let mut triplets = Vec::new();
+    for r in 0..n {
+        triplets.push((r, r, rng.next_f32_in(-1.0, 1.0)));
+        let extra = rng.next_range(0, nnz);
+        let mut used = std::collections::BTreeSet::new();
+        used.insert(r);
+        for _ in 0..extra {
+            let c = rng.next_range(0, n);
+            if used.insert(c) {
+                triplets.push((r, c, rng.next_f32_in(-1.0, 1.0)));
+            }
+        }
+    }
+    let a = EllMatrix::from_triplets(n, nnz, &triplets)?;
+    let x = rng.f32_vec(n, -1.0, 1.0);
+    let (reg, plan) = resident_streams(machine, &a, rows_per_token)?;
+    let backend = ComputeBackend::Native;
+    let name = format!("spmv_n{n}");
+    Ok(GangJob::new(&name, machine.clone(), move |ctx| {
+        resident_kernel(ctx, &backend, &x, &plan);
+    })
+    .with_streams(Arc::new(reg), true))
 }
 
 /// Out-of-core SpMV: neither the matrix **nor `x`** fits in local

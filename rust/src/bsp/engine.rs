@@ -94,7 +94,8 @@ use crate::sim::noc::Noc;
 use crate::sim::time::ShardedClocks;
 use crate::sim::CLOCK_HZ;
 use crate::stream::{StreamHandle, StreamRegistry};
-use crate::util::error::{anyhow, ensure, Result};
+use crate::util::error::{anyhow, bail, ensure, Result};
+use crate::util::json::{JsonObj, JsonValue};
 use crate::util::pool::{BufferPool, CoreBudget, GangPool, TaskPool};
 
 /// Entries pre-reserved in the per-run record vectors (superstep costs,
@@ -158,6 +159,207 @@ pub struct GangConfig {
     /// never auto-resumed — the scheduler injects the slot's latest
     /// checkpoint here on each retry attempt.
     pub resume: Option<Arc<GangCheckpoint>>,
+}
+
+impl GangConfig {
+    /// Select who applies queued communication at sync (the sharded
+    /// gang apply vs the leader-only determinism oracle).
+    #[must_use]
+    pub fn with_apply_mode(mut self, mode: ApplyMode) -> Self {
+        self.apply_mode = mode;
+        self
+    }
+
+    /// Override the NoC mesh used to price routed communication (e.g.
+    /// [`Noc::with_free_hops`] for the flat-`g` ablation).
+    #[must_use]
+    pub fn with_noc(mut self, noc: Noc) -> Self {
+        self.noc = Some(noc);
+        self
+    }
+
+    /// Enable superstep race/hazard analysis at the given mode.
+    #[must_use]
+    pub fn with_analysis(mut self, mode: AnalysisMode) -> Self {
+        self.analysis = mode;
+        self
+    }
+
+    /// Arm deterministic fault injection.
+    #[must_use]
+    pub fn with_fault(mut self, fault: FaultMode) -> Self {
+        self.fault = fault;
+        self
+    }
+
+    /// Arm the barrier watchdog: a core that never arrives within
+    /// `limit` is named in a poison diagnostic instead of wedging the
+    /// gang.
+    #[must_use]
+    pub fn with_barrier_timeout(mut self, limit: Duration) -> Self {
+        self.barrier_timeout = Some(limit);
+        self
+    }
+
+    /// Capture barrier-consistent checkpoints under `policy`.
+    #[must_use]
+    pub fn with_checkpoint(mut self, policy: CheckpointPolicy) -> Self {
+        self.checkpoint = Some(policy);
+        self
+    }
+
+    /// Resume from `checkpoint` instead of starting fresh (the
+    /// scheduler injects this on each retry attempt).
+    #[must_use]
+    pub fn with_resume(mut self, checkpoint: Arc<GangCheckpoint>) -> Self {
+        self.resume = Some(checkpoint);
+        self
+    }
+
+    /// Serialize the portable subset of the config as one-line JSON —
+    /// the representation CLI flags, sweep arguments, and `bsps serve`
+    /// job specs all round-trip through.
+    ///
+    /// Covers `apply_mode`, `analysis`, the `fault` plan (resolved to
+    /// its site/pid/hyperstep triple), `barrier_timeout_us`, and
+    /// `checkpoint_every_k`. The in-memory-only fields — the [`Noc`]
+    /// mesh override (derived from the machine) and a `resume`
+    /// checkpoint (injected by a running scheduler) — are intentionally
+    /// not serialized; [`GangConfig::from_json`] leaves them at their
+    /// defaults.
+    #[must_use]
+    pub fn to_json(&self) -> String {
+        let fault = match &self.fault {
+            FaultMode::Off => JsonValue::Null,
+            FaultMode::Plan(plan) => JsonObj::new()
+                .str("site", plan.site().name())
+                .num("pid", plan.pid() as f64)
+                .num("hyperstep", plan.hyperstep() as f64)
+                .build(),
+        };
+        let timeout = self.barrier_timeout.map_or(JsonValue::Null, |t| {
+            JsonValue::Num(t.as_micros() as f64)
+        });
+        let every_k = self
+            .checkpoint
+            .as_ref()
+            .map_or(JsonValue::Null, |p| JsonValue::Num(p.every_k as f64));
+        JsonObj::new()
+            .str(
+                "apply_mode",
+                match self.apply_mode {
+                    ApplyMode::Sharded => "sharded",
+                    ApplyMode::LeaderOnly => "leader-only",
+                },
+            )
+            .str(
+                "analysis",
+                match self.analysis {
+                    AnalysisMode::Off => "off",
+                    AnalysisMode::Warn => "warn",
+                    AnalysisMode::Deny => "deny",
+                },
+            )
+            .field("fault", fault)
+            .field("barrier_timeout_us", timeout)
+            .field("checkpoint_every_k", every_k)
+            .build()
+            .render()
+    }
+
+    /// Parse a config from the JSON [`GangConfig::to_json`] renders.
+    ///
+    /// Every field is optional (absent fields keep their defaults), but
+    /// an unknown field, or a known field with the wrong shape, is a
+    /// clean `Err` naming the field — the one audited path every config
+    /// source goes through.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = JsonValue::parse(text)?;
+        let JsonValue::Obj(fields) = &v else {
+            bail!("gang config: expected a JSON object");
+        };
+        let mut cfg = Self::default();
+        for (key, val) in fields {
+            match key.as_str() {
+                "apply_mode" => {
+                    let s = val.as_str().ok_or_else(|| {
+                        anyhow!("gang config: `apply_mode` must be a string")
+                    })?;
+                    cfg.apply_mode = match s {
+                        "sharded" => ApplyMode::Sharded,
+                        "leader-only" => ApplyMode::LeaderOnly,
+                        other => bail!(
+                            "gang config: unknown `apply_mode` `{other}` \
+                             (want sharded|leader-only)"
+                        ),
+                    };
+                }
+                "analysis" => {
+                    let s = val.as_str().ok_or_else(|| {
+                        anyhow!("gang config: `analysis` must be a string")
+                    })?;
+                    cfg.analysis = AnalysisMode::parse(s).ok_or_else(|| {
+                        anyhow!(
+                            "gang config: unknown `analysis` `{s}` (want off|warn|deny)"
+                        )
+                    })?;
+                }
+                "fault" => {
+                    if matches!(val, JsonValue::Null) {
+                        continue;
+                    }
+                    let site_s =
+                        val.get("site").and_then(JsonValue::as_str).ok_or_else(|| {
+                            anyhow!("gang config: `fault.site` must name a fault site")
+                        })?;
+                    let site = FaultSite::parse(site_s).ok_or_else(|| {
+                        anyhow!("gang config: unknown `fault.site` `{site_s}`")
+                    })?;
+                    let pid =
+                        val.get("pid").and_then(JsonValue::as_usize).ok_or_else(|| {
+                            anyhow!("gang config: `fault.pid` must be a non-negative integer")
+                        })?;
+                    let hyperstep = val
+                        .get("hyperstep")
+                        .and_then(JsonValue::as_usize)
+                        .ok_or_else(|| {
+                            anyhow!(
+                                "gang config: `fault.hyperstep` must be a \
+                                 non-negative integer"
+                            )
+                        })?;
+                    cfg.fault = FaultMode::single(site, pid, hyperstep);
+                }
+                "barrier_timeout_us" => {
+                    if matches!(val, JsonValue::Null) {
+                        continue;
+                    }
+                    let us = val.as_usize().ok_or_else(|| {
+                        anyhow!(
+                            "gang config: `barrier_timeout_us` must be a \
+                             non-negative integer"
+                        )
+                    })?;
+                    cfg.barrier_timeout = Some(Duration::from_micros(us as u64));
+                }
+                "checkpoint_every_k" => {
+                    if matches!(val, JsonValue::Null) {
+                        continue;
+                    }
+                    let k = val.as_usize().ok_or_else(|| {
+                        anyhow!("gang config: `checkpoint_every_k` must be an integer >= 1")
+                    })?;
+                    ensure!(
+                        k >= 1,
+                        "gang config: `checkpoint_every_k` must be an integer >= 1"
+                    );
+                    cfg.checkpoint = Some(CheckpointPolicy::every(k));
+                }
+                other => bail!("gang config: unknown field `{other}`"),
+            }
+        }
+        Ok(cfg)
+    }
 }
 
 /// An interned registered-variable handle.
@@ -807,12 +1009,12 @@ impl Ctx {
     /// core's buffer is charged against `L`, and shrinking refunds.
     ///
     /// ```
-    /// use bsps::bsp::run_gang;
+    /// use bsps::bsp::Gang;
     /// use bsps::model::params::AcceleratorParams;
     ///
     /// let mut m = AcceleratorParams::epiphany3();
     /// m.p = 2;
-    /// run_gang(&m, None, false, |ctx| {
+    /// Gang::new(&m).run(|ctx| {
     ///     let x = ctx.register("x", 4).unwrap();
     ///     // Same name → same handle on every core, and re-registering
     ///     // just hands the handle back (no double scratchpad charge).
@@ -1063,12 +1265,12 @@ impl Ctx {
     /// forever (`rust/tests/zero_alloc.rs` pins this).
     ///
     /// ```
-    /// use bsps::bsp::run_gang;
+    /// use bsps::bsp::Gang;
     /// use bsps::model::params::AcceleratorParams;
     ///
     /// let mut m = AcceleratorParams::epiphany3();
     /// m.p = 2;
-    /// run_gang(&m, None, false, |ctx| {
+    /// Gang::new(&m).run(|ctx| {
     ///     let mut payload = ctx.take_msg_buf();
     ///     payload.push(ctx.pid() as f32);
     ///     ctx.send_pooled(1 - ctx.pid(), 7, payload);
@@ -1152,12 +1354,12 @@ impl Ctx {
     /// the cost record.
     ///
     /// ```
-    /// use bsps::bsp::run_gang;
+    /// use bsps::bsp::Gang;
     /// use bsps::model::params::AcceleratorParams;
     ///
     /// let mut m = AcceleratorParams::epiphany3();
     /// m.p = 2;
-    /// let out = run_gang(&m, None, false, |ctx| {
+    /// let out = Gang::new(&m).run(|ctx| {
     ///     let x = ctx.register("x", 1).unwrap();
     ///     ctx.sync();
     ///     if ctx.pid() == 0 {
@@ -1566,7 +1768,7 @@ impl Ctx {
     ///
     /// ```
     /// use std::sync::Arc;
-    /// use bsps::bsp::run_gang;
+    /// use bsps::bsp::Gang;
     /// use bsps::model::params::AcceleratorParams;
     /// use bsps::stream::StreamRegistry;
     ///
@@ -1575,7 +1777,7 @@ impl Ctx {
     /// let mut reg = StreamRegistry::new(&m);
     /// let init: Vec<f32> = (0..16).map(|i| i as f32).collect();
     /// reg.create(16, 4, Some(&init)).unwrap(); // 4 tokens of 4 words
-    /// let out = run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+    /// let out = Gang::new(&m).with_streams(Arc::new(reg)).with_prefetch(true).run(|ctx| {
     ///     let h = ctx.stream_open(0).unwrap();
     ///     let mut token = Vec::new();
     ///     let mut sum = 0.0;
@@ -1799,7 +2001,7 @@ impl Ctx {
     ///
     /// ```
     /// use std::sync::Arc;
-    /// use bsps::bsp::run_gang;
+    /// use bsps::bsp::Gang;
     /// use bsps::model::params::AcceleratorParams;
     /// use bsps::stream::StreamRegistry;
     ///
@@ -1809,7 +2011,7 @@ impl Ctx {
     /// for _ in 0..2 {
     ///     reg.create(32, 8, None).unwrap(); // 4 tokens of 8 words per core
     /// }
-    /// let out = run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+    /// let out = Gang::new(&m).with_streams(Arc::new(reg)).with_prefetch(true).run(|ctx| {
     ///     let h = ctx.stream_open(ctx.pid()).unwrap();
     ///     let mut token = Vec::new();
     ///     for _ in 0..4 {
@@ -1983,21 +2185,25 @@ pub struct RunOutcome {
     pub analysis: AnalysisReport,
 }
 
-/// Run `kernel` in SPMD over the machine's `p` cores.
+/// Builder-style gang entry point: configure once, then
+/// [`run`](Gang::run) a kernel in SPMD over the machine's `p` cores.
 ///
-/// The cores run on the process-wide persistent [`GangPool`] (pid 0 on
-/// the calling thread), so repeated runs do not pay `p` thread spawns.
-/// `streams`, if given, enables the `stream_*` primitives; `prefetch`
-/// selects the double-buffered overlapped executor (see
-/// [`Ctx::stream_move_down`]).
+/// This is the one way into the engine — the old
+/// `run_gang`/`run_gang_cfg`/`run_gang_budgeted` free functions are
+/// deprecated shims over it. The cores run on the process-wide
+/// persistent [`GangPool`] (pid 0 on the calling thread), so repeated
+/// runs do not pay `p` thread spawns; construction and every `with_*`
+/// knob happen once, before the gang starts, so the steady-state
+/// hyperstep loop stays allocation-free (`rust/tests/zero_alloc.rs`
+/// pins it through this entry point).
 ///
 /// ```
-/// use bsps::bsp::run_gang;
+/// use bsps::bsp::Gang;
 /// use bsps::model::params::AcceleratorParams;
 ///
 /// let mut m = AcceleratorParams::epiphany3();
 /// m.p = 4;
-/// let out = run_gang(&m, None, false, |ctx| {
+/// let out = Gang::new(&m).run(|ctx| {
 ///     ctx.charge_flops(100.0);
 ///     ctx.sync();
 /// });
@@ -2005,6 +2211,165 @@ pub struct RunOutcome {
 /// // 100 FLOPs + l on the virtual timeline, at 5 cycles per FLOP.
 /// assert!((out.timeline.makespan_cycles - (100.0 + m.l) * 5.0).abs() < 1e-6);
 /// ```
+///
+/// With a [`CoreBudget`] attached ([`Gang::with_budget`]) the gang's
+/// cores are checked out of the budget — blocking on its FIFO waitlist
+/// until free — before any thread starts, and returned at retirement:
+///
+/// ```
+/// use bsps::bsp::Gang;
+/// use bsps::model::params::AcceleratorParams;
+/// use bsps::util::pool::CoreBudget;
+///
+/// let mut m = AcceleratorParams::epiphany3();
+/// m.p = 2;
+/// let budget = CoreBudget::new(4);
+/// let out = Gang::new(&m).with_budget(&budget).run(|ctx| {
+///     ctx.charge_flops(10.0);
+///     ctx.sync();
+/// });
+/// assert_eq!(out.cost.len(), 1);
+/// assert_eq!(budget.available(), 4); // lease returned at retirement
+/// ```
+#[must_use]
+pub struct Gang<'a> {
+    machine: &'a AcceleratorParams,
+    streams: Option<Arc<StreamRegistry>>,
+    prefetch: bool,
+    cfg: GangConfig,
+    budget: Option<&'a CoreBudget>,
+}
+
+impl<'a> Gang<'a> {
+    /// A gang over `machine` (its `p` is the gang width), with
+    /// defaults: no streams, prefetch off, [`GangConfig::default`], no
+    /// core budget.
+    #[must_use]
+    pub fn new(machine: &'a AcceleratorParams) -> Self {
+        Self {
+            machine,
+            streams: None,
+            prefetch: false,
+            cfg: GangConfig::default(),
+            budget: None,
+        }
+    }
+
+    /// Attach a stream registry, enabling the `stream_*` primitives.
+    #[must_use]
+    pub fn with_streams(mut self, streams: Arc<StreamRegistry>) -> Self {
+        self.streams = Some(streams);
+        self
+    }
+
+    /// Select the double-buffered overlapped prefetch executor (see
+    /// [`Ctx::stream_move_down`]). Off by default — every `move_down`
+    /// is then a blocking fetch charged on the compute side, the
+    /// paper's `preload = 0` ablation.
+    #[must_use]
+    pub fn with_prefetch(mut self, prefetch: bool) -> Self {
+        self.prefetch = prefetch;
+        self
+    }
+
+    /// Override the gang configuration (apply mode, NoC mesh, analysis,
+    /// fault plan, barrier watchdog, checkpoint/resume).
+    #[must_use]
+    pub fn with_cfg(mut self, cfg: GangConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Mediate the run through a global [`CoreBudget`]: the gang's `p`
+    /// cores are acquired before any thread starts and returned when
+    /// the run retires, so the *sum* of live gangs never exceeds the
+    /// budget. On a multi-class budget the gang is admitted against the
+    /// [`crate::util::pool::CoreClass`] whose name matches
+    /// `machine.name`; a budget with no matching class falls back to
+    /// class 0, which preserves the single-class counting behaviour
+    /// exactly. [`Gang::run`] panics if `machine.p` exceeds the class's
+    /// capacity (the request could never be satisfied).
+    #[must_use]
+    pub fn with_budget(mut self, budget: &'a CoreBudget) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
+    /// Run `kernel` in SPMD over the machine's `p` cores and collect
+    /// the [`RunOutcome`] (superstep costs, hyperstep ledger, measured
+    /// timeline, analysis findings).
+    #[must_use]
+    pub fn run<F>(self, kernel: F) -> RunOutcome
+    where
+        F: Fn(&mut Ctx) + Sync,
+    {
+        let _lease = self.budget.map(|budget| {
+            let class = budget.class_for(self.machine.name).unwrap_or(0);
+            budget.acquire_class(class, self.machine.p)
+        });
+        let p = self.machine.p;
+        let shared = Arc::new(Shared::new(
+            self.machine.clone(),
+            self.streams,
+            self.prefetch,
+            self.cfg,
+        ));
+        if let Some(ck) = shared.resume.clone() {
+            restore_gang_state(&shared, &ck);
+        }
+        let start = std::time::Instant::now();
+        {
+            let shared = &shared;
+            let kernel = &kernel;
+            GangPool::global().run(p, move |pid| {
+                // Poison the gang barrier if this core panics anywhere in the
+                // kernel, so cores blocked in sync() unwind instead of hanging.
+                let _guard = PoisonOnPanic(&shared.barrier);
+                let mut ctx = Ctx {
+                    pid,
+                    shared: Arc::clone(shared),
+                    hyper_done: Cell::new(shared.resume_from),
+                };
+                if let Some(ck) = ctx.shared.resume.clone() {
+                    restore_core_vars(&ctx, &ck);
+                }
+                kernel(&mut ctx);
+                if let Some(an) = &shared.analyzer {
+                    // Arm the barrier as this core retires: in a correct
+                    // program every core is already past its final barrier
+                    // generation, so nobody sees the poison — but a core
+                    // that syncs *again* has diverged, and reports this
+                    // per-pid count diagnostic instead of deadlocking.
+                    shared.barrier.defect(an.retire(pid));
+                }
+            });
+        }
+        let wall_seconds = start.elapsed().as_secs_f64();
+        let shared = Arc::try_unwrap(shared)
+            .unwrap_or_else(|_| panic!("gang threads leaked a Ctx"));
+        let clocks_end = shared.clocks.makespan();
+        let drain = shared
+            .dma
+            .iter()
+            .map(|d| d.lock().unwrap().free_at())
+            .fold(0.0, f64::max);
+        let tl = shared.timeline.into_inner().unwrap();
+        let timeline =
+            Timeline { spans: tl.spans, makespan_cycles: clocks_end.max(drain) };
+        let analysis = shared.analyzer.map(Analyzer::into_report).unwrap_or_default();
+        RunOutcome {
+            cost: shared.cost.into_inner().unwrap(),
+            ledger: shared.ledger.into_inner().unwrap(),
+            timeline,
+            wall_seconds,
+            checkpoint_words: shared.checkpoint_words.load(Ordering::Relaxed),
+            analysis,
+        }
+    }
+}
+
+/// Deprecated free-function gang entry; see [`Gang`].
+#[deprecated(since = "0.4.0", note = "use `Gang::new(machine)…run(kernel)`")]
 #[must_use]
 pub fn run_gang<F>(
     machine: &AcceleratorParams,
@@ -2015,13 +2380,16 @@ pub fn run_gang<F>(
 where
     F: Fn(&mut Ctx) + Sync,
 {
-    run_gang_cfg(machine, streams, prefetch, GangConfig::default(), kernel)
+    let mut gang = Gang::new(machine).with_prefetch(prefetch);
+    if let Some(reg) = streams {
+        gang = gang.with_streams(reg);
+    }
+    gang.run(kernel)
 }
 
-/// [`run_gang`] with an explicit [`GangConfig`]: choose the sync
-/// [`ApplyMode`] (sharded gang apply vs the leader-only oracle) and
-/// override the [`Noc`] mesh (e.g. [`Noc::with_free_hops`] for the
-/// flat-`g` ablation).
+/// Deprecated free-function gang entry with an explicit [`GangConfig`];
+/// see [`Gang::with_cfg`].
+#[deprecated(since = "0.4.0", note = "use `Gang::new(machine).with_cfg(cfg)…run(kernel)`")]
 #[must_use]
 pub fn run_gang_cfg<F>(
     machine: &AcceleratorParams,
@@ -2033,57 +2401,11 @@ pub fn run_gang_cfg<F>(
 where
     F: Fn(&mut Ctx) + Sync,
 {
-    let shared = Arc::new(Shared::new(machine.clone(), streams, prefetch, cfg));
-    if let Some(ck) = shared.resume.clone() {
-        restore_gang_state(&shared, &ck);
+    let mut gang = Gang::new(machine).with_prefetch(prefetch).with_cfg(cfg);
+    if let Some(reg) = streams {
+        gang = gang.with_streams(reg);
     }
-    let start = std::time::Instant::now();
-    {
-        let shared = &shared;
-        let kernel = &kernel;
-        GangPool::global().run(machine.p, move |pid| {
-            // Poison the gang barrier if this core panics anywhere in the
-            // kernel, so cores blocked in sync() unwind instead of hanging.
-            let _guard = PoisonOnPanic(&shared.barrier);
-            let mut ctx = Ctx {
-                pid,
-                shared: Arc::clone(shared),
-                hyper_done: Cell::new(shared.resume_from),
-            };
-            if let Some(ck) = ctx.shared.resume.clone() {
-                restore_core_vars(&ctx, &ck);
-            }
-            kernel(&mut ctx);
-            if let Some(an) = &shared.analyzer {
-                // Arm the barrier as this core retires: in a correct
-                // program every core is already past its final barrier
-                // generation, so nobody sees the poison — but a core
-                // that syncs *again* has diverged, and reports this
-                // per-pid count diagnostic instead of deadlocking.
-                shared.barrier.defect(an.retire(pid));
-            }
-        });
-    }
-    let wall_seconds = start.elapsed().as_secs_f64();
-    let shared = Arc::try_unwrap(shared)
-        .unwrap_or_else(|_| panic!("gang threads leaked a Ctx"));
-    let clocks_end = shared.clocks.makespan();
-    let drain = shared
-        .dma
-        .iter()
-        .map(|d| d.lock().unwrap().free_at())
-        .fold(0.0, f64::max);
-    let tl = shared.timeline.into_inner().unwrap();
-    let timeline = Timeline { spans: tl.spans, makespan_cycles: clocks_end.max(drain) };
-    let analysis = shared.analyzer.map(Analyzer::into_report).unwrap_or_default();
-    RunOutcome {
-        cost: shared.cost.into_inner().unwrap(),
-        ledger: shared.ledger.into_inner().unwrap(),
-        timeline,
-        wall_seconds,
-        checkpoint_words: shared.checkpoint_words.load(Ordering::Relaxed),
-        analysis,
-    }
+    gang.run(kernel)
 }
 
 /// Restore the gang-level half of a checkpoint into a freshly built
@@ -2144,41 +2466,12 @@ fn restore_core_vars(ctx: &Ctx, ck: &GangCheckpoint) {
     }
 }
 
-/// [`run_gang_cfg`] mediated by a global [`CoreBudget`]: the gang's `p`
-/// cores are checked out of `budget` (blocking on its FIFO waitlist
-/// until they are free) before any thread starts, and returned when the
-/// run retires — the scheduler-aware entry point concurrent callers use
-/// so the *sum* of live gangs never exceeds the budget. The multi-gang
-/// scheduler ([`crate::bsp::sched::GangScheduler`]) layers queueing and
-/// backfill on top of the same checkout.
-///
-/// On a multi-class budget the gang is admitted against the
-/// [`crate::util::pool::CoreClass`] whose name matches `machine.name`,
-/// so a Phi-class gang consumes Phi-class cores and an Epiphany-class
-/// gang consumes Epiphany-class cores. A budget with no matching class
-/// — in particular the single-class `CoreBudget::new(n)` every
-/// existing caller constructs — falls back to class 0, which preserves
-/// the old counting behaviour exactly.
-///
-/// Panics if `machine.p` exceeds the class's capacity (the request
-/// could never be satisfied).
-///
-/// ```
-/// use bsps::bsp::run_gang_budgeted;
-/// use bsps::bsp::engine::GangConfig;
-/// use bsps::model::params::AcceleratorParams;
-/// use bsps::util::pool::CoreBudget;
-///
-/// let mut m = AcceleratorParams::epiphany3();
-/// m.p = 2;
-/// let budget = CoreBudget::new(4);
-/// let out = run_gang_budgeted(&budget, &m, None, false, GangConfig::default(), |ctx| {
-///     ctx.charge_flops(10.0);
-///     ctx.sync();
-/// });
-/// assert_eq!(out.cost.len(), 1);
-/// assert_eq!(budget.available(), 4); // lease returned at retirement
-/// ```
+/// Deprecated free-function gang entry mediated by a [`CoreBudget`];
+/// see [`Gang::with_budget`].
+#[deprecated(
+    since = "0.4.0",
+    note = "use `Gang::new(machine).with_budget(budget)…run(kernel)`"
+)]
 #[must_use]
 pub fn run_gang_budgeted<F>(
     budget: &CoreBudget,
@@ -2191,9 +2484,14 @@ pub fn run_gang_budgeted<F>(
 where
     F: Fn(&mut Ctx) + Sync,
 {
-    let class = budget.class_for(machine.name).unwrap_or(0);
-    let _lease = budget.acquire_class(class, machine.p);
-    run_gang_cfg(machine, streams, prefetch, cfg, kernel)
+    let mut gang = Gang::new(machine)
+        .with_prefetch(prefetch)
+        .with_cfg(cfg)
+        .with_budget(budget);
+    if let Some(reg) = streams {
+        gang = gang.with_streams(reg);
+    }
+    gang.run(kernel)
 }
 
 #[cfg(test)]
@@ -2208,7 +2506,7 @@ mod tests {
 
     #[test]
     fn pid_and_nprocs() {
-        let out = run_gang(&machine(4), None, false, |ctx| {
+        let out = Gang::new(&machine(4)).run(|ctx| {
             assert!(ctx.pid() < 4);
             assert_eq!(ctx.nprocs(), 4);
         });
@@ -2218,7 +2516,7 @@ mod tests {
 
     #[test]
     fn put_visible_after_sync_not_before() {
-        let _ = run_gang(&machine(2), None, false, |ctx| {
+        let _ = Gang::new(&machine(2)).run(|ctx| {
             let x = ctx.register("x", 1).unwrap();
             ctx.with_var_mut(x, |v| v[0] = -1.0);
             ctx.sync();
@@ -2240,7 +2538,7 @@ mod tests {
     fn handles_are_interned_consistently() {
         // Same name → same handle on every core; distinct names →
         // distinct handles; re-registering returns the original handle.
-        let _ = run_gang(&machine(4), None, false, |ctx| {
+        let _ = Gang::new(&machine(4)).run(|ctx| {
             let a = ctx.register("a", 2).unwrap();
             let b = ctx.register("b", 2).unwrap();
             assert_ne!(a, b);
@@ -2258,7 +2556,7 @@ mod tests {
 
     #[test]
     fn get_reads_pre_put_values() {
-        let _ = run_gang(&machine(2), None, false, |ctx| {
+        let _ = Gang::new(&machine(2)).run(|ctx| {
             let src = ctx.register("src", 1).unwrap();
             let dst = ctx.register("dst", 1).unwrap();
             ctx.with_var_mut(src, |v| v[0] = 10.0 + ctx.pid() as f32);
@@ -2283,7 +2581,7 @@ mod tests {
     fn get_with_aliasing_src_and_dst_buffer() {
         // src and dst are the same (var, core) buffer — the leader must
         // stage through scratch instead of deadlocking on the mutex.
-        let _ = run_gang(&machine(2), None, false, |ctx| {
+        let _ = Gang::new(&machine(2)).run(|ctx| {
             let v = ctx.register("v", 4).unwrap();
             ctx.with_var_mut(v, |b| {
                 for (i, x) in b.iter_mut().enumerate() {
@@ -2304,7 +2602,7 @@ mod tests {
 
     #[test]
     fn messages_delivered_next_superstep() {
-        let _ = run_gang(&machine(3), None, false, |ctx| {
+        let _ = Gang::new(&machine(3)).run(|ctx| {
             let next = (ctx.pid() + 1) % 3;
             ctx.send(next, 7, vec![ctx.pid() as f32]);
             assert!(ctx.move_messages().is_empty());
@@ -2323,7 +2621,7 @@ mod tests {
         // and inbox drain never copy the payload.
         use std::sync::atomic::AtomicUsize;
         let sent_ptr = AtomicUsize::new(0);
-        let _ = run_gang(&machine(2), None, false, |ctx| {
+        let _ = Gang::new(&machine(2)).run(|ctx| {
             if ctx.pid() == 0 {
                 let payload = vec![1.0f32, 2.0, 3.0];
                 sent_ptr.store(payload.as_ptr() as usize, Ordering::SeqCst);
@@ -2345,7 +2643,7 @@ mod tests {
 
     #[test]
     fn move_messages_into_reuses_capacity() {
-        let _ = run_gang(&machine(2), None, false, |ctx| {
+        let _ = Gang::new(&machine(2)).run(|ctx| {
             let mut msgs: Vec<Message> = Vec::with_capacity(8);
             let cap_ptr = msgs.as_ptr() as usize;
             for round in 0..3 {
@@ -2362,7 +2660,7 @@ mod tests {
 
     #[test]
     fn broadcast_gathers_all_values() {
-        let _ = run_gang(&machine(4), None, false, |ctx| {
+        let _ = Gang::new(&machine(4)).run(|ctx| {
             let all = ctx.register("all", 4).unwrap();
             ctx.sync();
             ctx.broadcast(all, &[ctx.pid() as f32 * 2.0]);
@@ -2373,7 +2671,7 @@ mod tests {
 
     #[test]
     fn cost_records_h_relation_and_work() {
-        let out = run_gang(&machine(2), None, false, |ctx| {
+        let out = Gang::new(&machine(2)).run(|ctx| {
             let x = ctx.register("x", 8).unwrap();
             ctx.sync(); // superstep 0: registration only
             if ctx.pid() == 0 {
@@ -2396,7 +2694,7 @@ mod tests {
         // superstep. The flat-priced total sits just below it (the hop
         // surcharge on a 1-hop, 5-word put is a fraction of a FLOP).
         let m = machine(2);
-        let out = run_gang(&m, None, false, |ctx| {
+        let out = Gang::new(&m).run(|ctx| {
             let x = ctx.register("x", 8).unwrap();
             ctx.sync();
             if ctx.pid() == 0 {
@@ -2433,7 +2731,7 @@ mod tests {
             }
             ctx.sync();
         };
-        let routed = run_gang(&m, None, false, kernel);
+        let routed = Gang::new(&m).run(kernel);
         let s = routed.cost.supersteps[1];
         assert_eq!(s.h, 10);
         let noc = Noc::for_machine(&m);
@@ -2448,7 +2746,7 @@ mod tests {
             noc: Some(Noc::for_machine(&m).with_free_hops()),
             ..Default::default()
         };
-        let free = run_gang_cfg(&m, None, false, cfg, kernel);
+        let free = Gang::new(&m).with_cfg(cfg).run(kernel);
         let s = free.cost.supersteps[1];
         assert_eq!(s.h, 10);
         assert!(
@@ -2467,7 +2765,7 @@ mod tests {
         let run = |mode: ApplyMode| {
             let state = Mutex::new(Vec::new());
             let cfg = GangConfig { apply_mode: mode, ..Default::default() };
-            let out = run_gang_cfg(&machine(4), None, false, cfg, |ctx| {
+            let out = Gang::new(&machine(4)).with_cfg(cfg).run(|ctx| {
                 let a = ctx.register("a", 8).unwrap();
                 let b = ctx.register("b", 8).unwrap();
                 ctx.with_var_mut(a, |v| v.fill(ctx.pid() as f32));
@@ -2507,7 +2805,7 @@ mod tests {
         // have run yet when the put is issued. Repeat to exercise
         // scheduling interleavings.
         for _ in 0..20 {
-            let _ = run_gang(&machine(4), None, false, |ctx| {
+            let _ = Gang::new(&machine(4)).run(|ctx| {
                 let x = ctx.register("x", 8).unwrap();
                 let next = (ctx.pid() + 1) % 4;
                 ctx.put(next, x, 4, &[ctx.pid() as f32; 4]);
@@ -2523,7 +2821,7 @@ mod tests {
         // p = 1 so the faulting core is the caller: the panic payload
         // must be our named diagnostic, not a raw slice-index message.
         let r = std::panic::catch_unwind(|| {
-            let _ = run_gang(&machine(1), None, false, |ctx| {
+            let _ = Gang::new(&machine(1)).run(|ctx| {
                 let x = ctx.register("x", 4).unwrap();
                 ctx.sync();
                 ctx.put(0, x, 2, &[0.0; 8]); // 2 + 8 > 4
@@ -2544,7 +2842,7 @@ mod tests {
     fn try_put_and_try_get_faults_are_recoverable_errors() {
         // A kernel that checks its bounds gets an error naming the var,
         // pids, offset and length — and the gang still completes.
-        let out = run_gang(&machine(2), None, false, |ctx| {
+        let out = Gang::new(&machine(2)).run(|ctx| {
             let x = ctx.register("x", 4).unwrap();
             ctx.sync();
             if ctx.pid() == 0 {
@@ -2572,7 +2870,7 @@ mod tests {
     fn local_memory_budget_enforced() {
         let mut m = machine(1);
         m.local_mem = 64; // 16 words
-        let _ = run_gang(&m, None, false, |ctx| {
+        let _ = Gang::new(&m).run(|ctx| {
             assert!(ctx.register("a", 8).is_ok()); // 32 B
             assert!(ctx.register("b", 8).is_ok()); // 64 B total
             assert!(ctx.register("c", 1).is_err()); // would exceed
@@ -2584,7 +2882,7 @@ mod tests {
     #[test]
     fn gang_panics_propagate_without_hanging() {
         let result = std::panic::catch_unwind(|| {
-            let _ = run_gang(&machine(4), None, false, |ctx| {
+            let _ = Gang::new(&machine(4)).run(|ctx| {
                 if ctx.pid() == 2 {
                     panic!("core 2 exploded");
                 }
@@ -2604,7 +2902,7 @@ mod tests {
             reg.create(32, 8, Some(&init)).unwrap();
         }
         let reg = Arc::new(reg);
-        let out = run_gang(&m, Some(Arc::clone(&reg)), true, |ctx| {
+        let out = Gang::new(&m).with_streams(Arc::clone(&reg)).with_prefetch(true).run(|ctx| {
             let h = ctx.stream_open(ctx.pid()).unwrap();
             let mut buf = Vec::new();
             for t in 0..4 {
@@ -2657,8 +2955,8 @@ mod tests {
             }
             ctx.stream_close(h).unwrap();
         };
-        let on = run_gang(&m, Some(mk_reg()), true, kernel);
-        let off = run_gang(&m, Some(mk_reg()), false, kernel);
+        let on = Gang::new(&m).with_streams(mk_reg()).with_prefetch(true).run(kernel);
+        let off = Gang::new(&m).with_streams(mk_reg()).run(kernel);
 
         let model_on = on.ledger.total_flops(&m); // Σ max(T_h, e·C_h)
         let measured_on = on.timeline.makespan_flops(&m);
@@ -2681,7 +2979,7 @@ mod tests {
         let m = machine(1);
         let mut reg = StreamRegistry::new(&m);
         reg.create(8, 8, None).unwrap();
-        let out = run_gang(&m, Some(Arc::new(reg)), false, |ctx| {
+        let out = Gang::new(&m).with_streams(Arc::new(reg)).run(|ctx| {
             let h = ctx.stream_open(0).unwrap();
             let mut buf = Vec::new();
             ctx.stream_move_down(h, &mut buf).unwrap();
@@ -2701,7 +2999,7 @@ mod tests {
         let mut reg = StreamRegistry::new(&m);
         let init: Vec<f32> = (0..32).map(|i| i as f32).collect();
         reg.create(32, 8, Some(&init)).unwrap();
-        let out = run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+        let out = Gang::new(&m).with_streams(Arc::new(reg)).with_prefetch(true).run(|ctx| {
             let h = ctx.stream_open(0).unwrap();
             let mut buf = Vec::new();
             ctx.stream_move_down(h, &mut buf).unwrap();
@@ -2725,7 +3023,7 @@ mod tests {
         let m = machine(1);
         let mut reg = StreamRegistry::new(&m);
         reg.create(16, 4, None).unwrap();
-        let _ = run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+        let _ = Gang::new(&m).with_streams(Arc::new(reg)).with_prefetch(true).run(|ctx| {
             let h = ctx.stream_open(0).unwrap();
             ctx.stream_move_up(h, &[1.0, 2.0, 3.0, 4.0]).unwrap();
             ctx.stream_seek(h, -1).unwrap();
@@ -2741,7 +3039,7 @@ mod tests {
         let m = machine(2);
         let mut reg = StreamRegistry::new(&m);
         reg.create(8, 8, None).unwrap();
-        let out = run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+        let out = Gang::new(&m).with_streams(Arc::new(reg)).with_prefetch(true).run(|ctx| {
             ctx.sync();
             if ctx.pid() == 0 {
                 let h = ctx.stream_open(0).unwrap();
@@ -2767,7 +3065,7 @@ mod tests {
         use std::sync::atomic::AtomicUsize;
         let recycled = AtomicUsize::new(0);
         let given = Mutex::new(Vec::<usize>::new());
-        let _ = run_gang(&machine(2), None, false, |ctx| {
+        let _ = Gang::new(&machine(2)).run(|ctx| {
             let peer = 1 - ctx.pid();
             let mut msgs: Vec<Message> = Vec::new();
             for round in 0..3u32 {
@@ -2808,25 +3106,18 @@ mod tests {
                 let live = &live;
                 let peak = &peak;
                 s.spawn(move || {
-                    let out = run_gang_budgeted(
-                        budget,
-                        &machine(2),
-                        None,
-                        false,
-                        GangConfig::default(),
-                        |ctx| {
-                            if ctx.pid() == 0 {
-                                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
-                                peak.fetch_max(now, Ordering::SeqCst);
-                            }
-                            ctx.sync();
-                            std::thread::sleep(std::time::Duration::from_millis(10));
-                            ctx.sync();
-                            if ctx.pid() == 0 {
-                                live.fetch_sub(1, Ordering::SeqCst);
-                            }
-                        },
-                    );
+                    let out = Gang::new(&machine(2)).with_budget(budget).run(|ctx| {
+                        if ctx.pid() == 0 {
+                            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                            peak.fetch_max(now, Ordering::SeqCst);
+                        }
+                        ctx.sync();
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                        ctx.sync();
+                        if ctx.pid() == 0 {
+                            live.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    });
                     assert_eq!(out.cost.len(), 2);
                 });
             }
@@ -2841,7 +3132,7 @@ mod tests {
         // pool hands out clean state every run) — the perf win itself is
         // asserted in bench_engine_hotpath and the pool unit tests.
         for _ in 0..5 {
-            let out = run_gang(&machine(4), None, false, |ctx| {
+            let out = Gang::new(&machine(4)).run(|ctx| {
                 ctx.charge_flops(10.0);
                 ctx.sync();
             });
@@ -2864,7 +3155,7 @@ mod tests {
 
     #[test]
     fn analysis_warn_flags_overlapping_puts_and_completes() {
-        let out = run_gang_cfg(&machine(4), None, false, warn_cfg(), |ctx| {
+        let out = Gang::new(&machine(4)).with_cfg(warn_cfg()).run(|ctx| {
             let x = ctx.register("x", 8).unwrap();
             ctx.sync();
             if ctx.pid() < 2 {
@@ -2883,7 +3174,7 @@ mod tests {
     #[test]
     fn analysis_deny_poisons_with_the_finding_as_diagnostic() {
         let r = std::panic::catch_unwind(|| {
-            run_gang_cfg(&machine(2), None, false, deny_cfg(), |ctx| {
+            Gang::new(&machine(2)).with_cfg(deny_cfg()).run(|ctx| {
                 let x = ctx.register("x", 4).unwrap();
                 ctx.sync();
                 ctx.put(0, x, 0, &[1.0; 4]); // both cores write core 0's x[0..4)
@@ -2900,7 +3191,7 @@ mod tests {
 
     #[test]
     fn analysis_flags_put_vs_local_write_clobber() {
-        let out = run_gang_cfg(&machine(2), None, false, warn_cfg(), |ctx| {
+        let out = Gang::new(&machine(2)).with_cfg(warn_cfg()).run(|ctx| {
             let x = ctx.register("x", 4).unwrap();
             ctx.sync();
             if ctx.pid() == 1 {
@@ -2918,7 +3209,7 @@ mod tests {
 
     #[test]
     fn analysis_broadcast_and_disjoint_puts_are_clean() {
-        let out = run_gang_cfg(&machine(4), None, false, warn_cfg(), |ctx| {
+        let out = Gang::new(&machine(4)).with_cfg(warn_cfg()).run(|ctx| {
             let all = ctx.register("all", 4).unwrap();
             ctx.sync();
             ctx.broadcast(all, &[ctx.pid() as f32]);
@@ -2930,7 +3221,7 @@ mod tests {
 
     #[test]
     fn late_registration_denied_returns_error_not_poison() {
-        let out = run_gang_cfg(&machine(2), None, false, deny_cfg(), |ctx| {
+        let out = Gang::new(&machine(2)).with_cfg(deny_cfg()).run(|ctx| {
             let early = ctx.register("early", 2).unwrap();
             ctx.sync();
             // Re-registering an existing name is still fine.
@@ -2951,7 +3242,7 @@ mod tests {
     #[test]
     fn divergent_sync_counts_report_instead_of_deadlocking() {
         let r = std::panic::catch_unwind(|| {
-            let _ = run_gang_cfg(&machine(2), None, false, warn_cfg(), |ctx| {
+            let _ = Gang::new(&machine(2)).with_cfg(warn_cfg()).run(|ctx| {
                 if ctx.pid() == 0 {
                     ctx.sync(); // core 1 never syncs: this can never complete
                 }
@@ -2968,7 +3259,7 @@ mod tests {
 
     #[test]
     fn mixed_sync_shapes_flagged() {
-        let out = run_gang_cfg(&machine(2), None, false, warn_cfg(), |ctx| {
+        let out = Gang::new(&machine(2)).with_cfg(warn_cfg()).run(|ctx| {
             if ctx.pid() == 0 {
                 ctx.sync();
             } else {
@@ -2983,7 +3274,7 @@ mod tests {
     fn scratchpad_over_budget_charges_the_put_arena() {
         let mut m = machine(2);
         m.local_mem = 256; // 64 words
-        let out = run_gang_cfg(&m, None, false, warn_cfg(), |ctx| {
+        let out = Gang::new(&m).with_cfg(warn_cfg()).run(|ctx| {
             let x = ctx.register("x", 64).unwrap(); // exactly L
             ctx.sync();
             if ctx.pid() == 1 {
@@ -3002,7 +3293,8 @@ mod tests {
         let m = machine(1);
         let mut reg = StreamRegistry::new(&m);
         reg.create(16, 4, None).unwrap(); // 4 tokens of 4 words
-        let out = run_gang_cfg(&m, Some(Arc::new(reg)), true, warn_cfg(), |ctx| {
+        let gang = Gang::new(&m).with_streams(Arc::new(reg)).with_prefetch(true);
+        let out = gang.with_cfg(warn_cfg()).run(|ctx| {
             let h = ctx.stream_open(0).unwrap();
             let mut buf = Vec::new();
             ctx.stream_move_down(h, &mut buf).unwrap(); // stages the fill of token 1
@@ -3022,7 +3314,8 @@ mod tests {
         let mut reg = StreamRegistry::new(&m);
         let init: Vec<f32> = (0..16).map(|i| i as f32).collect();
         reg.create(16, 4, Some(&init)).unwrap();
-        let out = run_gang_cfg(&m, Some(Arc::new(reg)), true, deny_cfg(), |ctx| {
+        let gang = Gang::new(&m).with_streams(Arc::new(reg)).with_prefetch(true);
+        let out = gang.with_cfg(deny_cfg()).run(|ctx| {
             let h = ctx.stream_open(0).unwrap();
             let mut buf = Vec::new();
             ctx.stream_move_down(h, &mut buf).unwrap();
@@ -3044,7 +3337,8 @@ mod tests {
         for _ in 0..2 {
             reg.create(32, 8, None).unwrap();
         }
-        let out = run_gang_cfg(&m, Some(Arc::new(reg)), true, deny_cfg(), |ctx| {
+        let gang = Gang::new(&m).with_streams(Arc::new(reg)).with_prefetch(true);
+        let out = gang.with_cfg(deny_cfg()).run(|ctx| {
             let all = ctx.register("all", 2).unwrap();
             let h = ctx.stream_open(ctx.pid()).unwrap();
             ctx.sync();
@@ -3060,5 +3354,55 @@ mod tests {
         });
         assert!(out.analysis.is_clean(), "{}", out.analysis.render());
         assert_eq!(out.ledger.hypersteps.len(), 4);
+    }
+
+    #[test]
+    fn gang_config_json_roundtrips() {
+        use crate::bsp::fault::{CheckpointPolicy, FaultMode, FaultSite};
+        let cfg = GangConfig::default()
+            .with_apply_mode(ApplyMode::LeaderOnly)
+            .with_analysis(AnalysisMode::Warn)
+            .with_fault(FaultMode::single(FaultSite::KernelPanic, 3, 13))
+            .with_barrier_timeout(Duration::from_millis(250))
+            .with_checkpoint(CheckpointPolicy::every(8));
+        let json = cfg.to_json();
+        let back = GangConfig::from_json(&json).expect("own output parses");
+        // Render → parse → re-render is a fixpoint: the round-trip
+        // preserves every portable field.
+        assert_eq!(back.to_json(), json, "{json}");
+        assert_eq!(back.apply_mode, ApplyMode::LeaderOnly);
+        assert_eq!(back.analysis, AnalysisMode::Warn);
+        assert_eq!(back.barrier_timeout, Some(Duration::from_millis(250)));
+        assert_eq!(back.checkpoint.as_ref().map(|p| p.every_k), Some(8));
+        match &back.fault {
+            FaultMode::Plan(p) => {
+                assert_eq!(p.site(), FaultSite::KernelPanic);
+                assert_eq!(p.pid(), 3);
+                assert_eq!(p.hyperstep(), 13);
+            }
+            FaultMode::Off => panic!("fault plan lost in round-trip: {json}"),
+        }
+        // The default config round-trips to all-null/off too.
+        let dflt = GangConfig::default().to_json();
+        let back = GangConfig::from_json(&dflt).expect("default parses");
+        assert_eq!(back.to_json(), dflt, "{dflt}");
+    }
+
+    #[test]
+    fn gang_config_json_errors_name_the_field() {
+        let cases = [
+            (r#"{"apply_mode":"both"}"#, "apply_mode"),
+            (r#"{"analysis":"loud"}"#, "analysis"),
+            (r#"{"fault":{"site":"warp-core","pid":0,"hyperstep":1}}"#, "fault.site"),
+            (r#"{"fault":{"site":"kernel-panic","pid":-1,"hyperstep":1}}"#, "fault.pid"),
+            (r#"{"barrier_timeout_us":1.5}"#, "barrier_timeout_us"),
+            (r#"{"checkpoint_every_k":0}"#, "checkpoint_every_k"),
+            (r#"{"mystery_knob":1}"#, "mystery_knob"),
+            (r#"[1,2,3]"#, "object"),
+        ];
+        for (doc, needle) in cases {
+            let err = GangConfig::from_json(doc).expect_err(doc).to_string();
+            assert!(err.contains(needle), "`{doc}` -> `{err}` misses `{needle}`");
+        }
     }
 }

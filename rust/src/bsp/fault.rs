@@ -37,7 +37,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::bsp::engine::{run_gang_cfg, Ctx, GangConfig, Message, RunOutcome};
+use crate::bsp::engine::{Ctx, Gang, GangConfig, Message, RunOutcome};
 use crate::bsp::sched::{GangJob, GangScheduler};
 use crate::bsp::timeline::HyperstepSpan;
 use crate::model::bsps::HyperstepCost;
@@ -506,7 +506,7 @@ fn fault_free_reference(
     };
     let outcome = {
         let sink = Arc::clone(&sink);
-        run_gang_cfg(&m, Some(Arc::clone(&reg)), false, cfg, move |ctx| {
+        Gang::new(&m).with_streams(Arc::clone(&reg)).with_cfg(cfg).run(move |ctx| {
             sweep_kernel(ctx, seed, hypersteps, &sink);
         })
     };

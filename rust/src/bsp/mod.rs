@@ -33,10 +33,12 @@ pub mod sched;
 pub mod timeline;
 pub mod verify;
 
-pub use engine::{
-    run_gang, run_gang_budgeted, run_gang_cfg, ApplyMode, Ctx, GangConfig, Message,
-    RunOutcome, VarHandle,
-};
+pub use engine::{ApplyMode, Ctx, Gang, GangConfig, Message, RunOutcome, VarHandle};
+// The deprecated free-function gang entries stay re-exported so external
+// callers keep compiling (with a deprecation warning) through the
+// migration to the `Gang` builder.
+#[allow(deprecated)]
+pub use engine::{run_gang, run_gang_budgeted, run_gang_cfg};
 pub use fault::{
     CheckpointPolicy, FaultMode, FaultPlan, FaultSite, GangCheckpoint, RecoveryInfo,
     RetryPolicy,

@@ -35,7 +35,7 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Instant;
 
-use crate::bsp::engine::{run_gang_cfg, Ctx, GangConfig, RunOutcome};
+use crate::bsp::engine::{Ctx, Gang, GangConfig, RunOutcome};
 use crate::bsp::fault::{RecoveryInfo, RetryPolicy};
 use crate::host::cyclic::cyclic_streams;
 use crate::model::hetero::{split_geometry, SplitGeometry, REFERENCE_INTENSITY};
@@ -43,7 +43,7 @@ use crate::model::params::AcceleratorParams;
 use crate::model::predict::{hetero_sweep_cost, HeteroPrediction};
 use crate::stream::StreamRegistry;
 use crate::util::error::panic_payload_msg;
-use crate::util::pool::{CoreBudget, CoreClass, GangPool};
+use crate::util::pool::{BudgetLease, CoreBudget, CoreClass, GangPool};
 use crate::util::prng::SplitMix64;
 
 /// One queued gang: a machine (whose `p` is the core request), the
@@ -64,6 +64,13 @@ pub struct GangJob {
     /// fault). Retries resume from the last checkpoint when
     /// `cfg.checkpoint` captured one, else restart fresh.
     pub retry: RetryPolicy,
+    /// When the job entered its queue. `None` (the default) means "at
+    /// scheduler start" — the batch path, where submission and the
+    /// first admission scan coincide. Long-lived submitters (the
+    /// `bsps serve` job manager) stamp this at enqueue time so
+    /// [`JobResult::queue_wait_seconds`] counts from submission, not
+    /// from whenever a scheduler got around to the job.
+    pub submitted_at: Option<Instant>,
     /// The SPMD kernel, boxed so heterogeneous jobs share one queue.
     pub kernel: Box<dyn Fn(&mut Ctx) + Send + Sync>,
 }
@@ -82,6 +89,7 @@ impl GangJob {
             prefetch: false,
             cfg: GangConfig::default(),
             retry: RetryPolicy::none(),
+            submitted_at: None,
             kernel: Box::new(kernel),
         }
     }
@@ -107,6 +115,14 @@ impl GangJob {
     #[must_use]
     pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
         self.retry = retry;
+        self
+    }
+
+    /// Stamp the moment the job was submitted, so queue-wait accounting
+    /// starts there instead of at scheduler start.
+    #[must_use]
+    pub fn with_submission(mut self, at: Instant) -> Self {
+        self.submitted_at = Some(at);
         self
     }
 
@@ -368,11 +384,13 @@ impl GangScheduler {
                         .unwrap_or(0);
                     if cores > self.budget.class_capacity(class) {
                         let (idx, job) = pending.remove(i).expect("index in range");
+                        let queue_wait_seconds =
+                            job.submitted_at.unwrap_or(t0).elapsed().as_secs_f64();
                         results[idx] = Some(JobResult {
                             name: job.name,
                             cores,
                             machine: job.machine,
-                            queue_wait_seconds: t0.elapsed().as_secs_f64(),
+                            queue_wait_seconds,
                             run_seconds: 0.0,
                             attempts: 0,
                             recovery: None,
@@ -400,101 +418,14 @@ impl GangScheduler {
                     for (c, peak) in class_peaks.iter_mut().enumerate() {
                         *peak = (*peak).max(self.budget.class_in_use(c));
                     }
-                    let queue_wait_seconds = t0.elapsed().as_secs_f64();
+                    let queue_wait_seconds =
+                        job.submitted_at.unwrap_or(t0).elapsed().as_secs_f64();
                     let tx = done_tx.clone();
+                    let budget = &self.budget;
                     s.spawn(move || {
-                        let start = Instant::now();
-                        let mut lease = Some(lease);
-                        // For checkpoint-less retries: the streams'
-                        // pre-run contents, so a fresh replay does not
-                        // read tokens the dead attempt overwrote.
-                        let init_streams = if job.retry.max_attempts > 1 {
-                            job.streams.as_ref().map(|r| r.checkpoint_state())
-                        } else {
-                            None
-                        };
-                        let mut attempts = 0usize;
-                        let mut recovery: Option<RecoveryInfo> = None;
-                        let outcome = loop {
-                            attempts += 1;
-                            let mut cfg = job.cfg.clone();
-                            if attempts > 1 {
-                                let (last, progress) = job
-                                    .cfg
-                                    .checkpoint
-                                    .as_ref()
-                                    .map_or((None, 0), |pol| (pol.last(), pol.progress()));
-                                recovery = Some(match last {
-                                    Some(ck) => {
-                                        let rec = RecoveryInfo {
-                                            resumed_from: Some(ck.hyperstep),
-                                            lost_hypersteps: progress
-                                                .saturating_sub(ck.hyperstep),
-                                        };
-                                        cfg.resume = Some(ck);
-                                        rec
-                                    }
-                                    None => {
-                                        // Nothing captured yet: replay
-                                        // from scratch on rewound
-                                        // streams.
-                                        if let (Some(reg), Some(init)) =
-                                            (&job.streams, &init_streams)
-                                        {
-                                            reg.restore_state(init);
-                                        }
-                                        RecoveryInfo {
-                                            resumed_from: None,
-                                            lost_hypersteps: progress,
-                                        }
-                                    }
-                                });
-                            }
-                            let r = catch_unwind(AssertUnwindSafe(|| {
-                                run_gang_cfg(
-                                    &job.machine,
-                                    job.streams.clone(),
-                                    job.prefetch,
-                                    cfg,
-                                    |ctx| (job.kernel)(ctx),
-                                )
-                            }));
-                            match r {
-                                Ok(out) => break Ok(out),
-                                Err(e) if attempts < job.retry.max_attempts => {
-                                    // Give the cores back while backing
-                                    // off — a sleeping retry must not
-                                    // hold the budget hostage — then
-                                    // rejoin the FIFO line like any
-                                    // other waiter.
-                                    drop(lease.take());
-                                    drop(e);
-                                    if !job.retry.backoff.is_zero() {
-                                        thread::sleep(job.retry.backoff);
-                                    }
-                                    lease = Some(self.budget.acquire_class(class, cores));
-                                }
-                                Err(e) => break Err(panic_payload_msg(e.as_ref())),
-                            }
-                        };
-                        let run_seconds = start.elapsed().as_secs_f64();
-                        // Return the cores *before* reporting, so the
-                        // admission pass that our completion wakes is
-                        // guaranteed to see them free.
-                        drop(lease);
-                        let _ = tx.send((
-                            idx,
-                            JobResult {
-                                name: job.name,
-                                cores,
-                                machine: job.machine,
-                                queue_wait_seconds,
-                                run_seconds,
-                                attempts,
-                                recovery,
-                                outcome,
-                            },
-                        ));
+                        let res =
+                            run_admitted(budget, class, job, lease, queue_wait_seconds);
+                        let _ = tx.send((idx, res));
                     });
                 }
 
@@ -539,6 +470,106 @@ impl GangScheduler {
                 class_peak_cores: class_peaks,
             },
         }
+    }
+}
+
+/// Execute one *admitted* job on the calling thread: the retry loop
+/// with checkpoint resume, stream rewind on checkpoint-less replays,
+/// and lease give-back/re-acquire around backoff sleeps.
+///
+/// This is the single execution path behind every gang the crate runs
+/// under a budget: [`GangScheduler::run`]'s runner threads land here,
+/// and so does the `bsps serve` job manager after its own admission —
+/// which is what makes daemon-run gangs byte-identical to batch runs.
+/// The caller owns admission (the `lease` must already hold
+/// `job.cores()` cores of `class` on `budget`); the lease is released
+/// *before* the result is returned, so a completion the caller reports
+/// is guaranteed to observe the cores free.
+pub(crate) fn run_admitted<'a>(
+    budget: &'a CoreBudget,
+    class: usize,
+    job: GangJob,
+    lease: BudgetLease<'a>,
+    queue_wait_seconds: f64,
+) -> JobResult {
+    let cores = job.cores();
+    let start = Instant::now();
+    let mut lease = Some(lease);
+    // For checkpoint-less retries: the streams' pre-run contents, so a
+    // fresh replay does not read tokens the dead attempt overwrote.
+    let init_streams = if job.retry.max_attempts > 1 {
+        job.streams.as_ref().map(|r| r.checkpoint_state())
+    } else {
+        None
+    };
+    let mut attempts = 0usize;
+    let mut recovery: Option<RecoveryInfo> = None;
+    let outcome = loop {
+        attempts += 1;
+        let mut cfg = job.cfg.clone();
+        if attempts > 1 {
+            let (last, progress) = job
+                .cfg
+                .checkpoint
+                .as_ref()
+                .map_or((None, 0), |pol| (pol.last(), pol.progress()));
+            recovery = Some(match last {
+                Some(ck) => {
+                    let rec = RecoveryInfo {
+                        resumed_from: Some(ck.hyperstep),
+                        lost_hypersteps: progress.saturating_sub(ck.hyperstep),
+                    };
+                    cfg.resume = Some(ck);
+                    rec
+                }
+                None => {
+                    // Nothing captured yet: replay from scratch on
+                    // rewound streams.
+                    if let (Some(reg), Some(init)) = (&job.streams, &init_streams) {
+                        reg.restore_state(init);
+                    }
+                    RecoveryInfo { resumed_from: None, lost_hypersteps: progress }
+                }
+            });
+        }
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let mut gang = Gang::new(&job.machine)
+                .with_prefetch(job.prefetch)
+                .with_cfg(cfg);
+            if let Some(reg) = job.streams.clone() {
+                gang = gang.with_streams(reg);
+            }
+            gang.run(|ctx| (job.kernel)(ctx))
+        }));
+        match r {
+            Ok(out) => break Ok(out),
+            Err(e) if attempts < job.retry.max_attempts => {
+                // Give the cores back while backing off — a sleeping
+                // retry must not hold the budget hostage — then rejoin
+                // the FIFO line like any other waiter.
+                drop(lease.take());
+                drop(e);
+                if !job.retry.backoff.is_zero() {
+                    thread::sleep(job.retry.backoff);
+                }
+                lease = Some(budget.acquire_class(class, cores));
+            }
+            Err(e) => break Err(panic_payload_msg(e.as_ref())),
+        }
+    };
+    let run_seconds = start.elapsed().as_secs_f64();
+    // Return the cores *before* reporting, so an admission pass woken
+    // by this completion is guaranteed to see them free.
+    drop(lease);
+    JobResult {
+        name: job.name,
+        cores,
+        machine: job.machine,
+        queue_wait_seconds,
+        run_seconds,
+        attempts,
+        recovery,
+        outcome,
     }
 }
 
@@ -751,7 +782,7 @@ impl HeteroSplit {
                 &self.inputs[u].1,
                 Arc::clone(&cell),
             );
-            let _ = run_gang_cfg(m, Some(reg), true, GangConfig::default(), kernel);
+            let _ = Gang::new(m).with_streams(reg).with_prefetch(true).run(kernel);
             serial_alphas.push(*cell.lock().unwrap());
         }
 
@@ -770,7 +801,7 @@ impl HeteroSplit {
                 &y_full,
                 Arc::clone(&cell),
             );
-            let out = run_gang_cfg(m, Some(reg), true, GangConfig::default(), kernel);
+            let out = Gang::new(m).with_streams(reg).with_prefetch(true).run(kernel);
             solo_virtual_seconds.push(out.ledger.summarize(m).total_seconds);
         }
 
@@ -1087,6 +1118,40 @@ mod tests {
         let err = jr.outcome.as_ref().unwrap_err();
         assert!(err.contains("persistent failure"), "{err}");
         assert_eq!(jr.attempts, 2, "both attempts were spent");
+    }
+
+    #[test]
+    fn queue_wait_counts_from_submission() {
+        // Two 2-core jobs stamped at submission, a 20 ms gap before the
+        // scheduler starts, and a strictly serial budget: job 0's wait
+        // must include the pre-scheduler gap, and job 1 — parked behind
+        // the full budget — must report a wait at least as long as its
+        // predecessor's run. (The old accounting started the clock at
+        // scheduler start, hiding time spent queued in a submitter.)
+        let submitted = Instant::now();
+        let mk = |name: &str| {
+            GangJob::new(name, machine(2), |ctx| {
+                ctx.sync();
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                ctx.sync();
+            })
+            .with_submission(submitted)
+        };
+        let jobs = vec![mk("first"), mk("second")];
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let out = GangScheduler::new(2).run(jobs);
+        assert!(out.jobs.iter().all(|j| j.outcome.is_ok()));
+        assert!(
+            out.jobs[0].queue_wait_seconds >= 0.02,
+            "job 0 waited {} s but was submitted 20 ms before the scheduler ran",
+            out.jobs[0].queue_wait_seconds
+        );
+        assert!(
+            out.jobs[1].queue_wait_seconds >= out.jobs[0].run_seconds,
+            "job 1 queued behind job 0's whole run: wait {} s < run {} s",
+            out.jobs[1].queue_wait_seconds,
+            out.jobs[0].run_seconds
+        );
     }
 
     #[test]

@@ -2,11 +2,14 @@
 
 use crate::util::error::{anyhow, bail, ensure, panic_payload_msg, Result};
 
-use crate::bsp::sched::GangScheduler;
+use crate::bsp::sched::{GangJob, GangScheduler, SchedOutcome};
 use crate::bsp::{AnalysisMode, FaultMode, FaultSite, GangConfig};
 use crate::cli::args::Args;
-use crate::coordinator::{BspsEnv, SweepReport};
+use crate::coordinator::{BspsEnv, Report, SweepReport};
 use crate::model::params::AcceleratorParams;
+use crate::serve::wire;
+use crate::serve::{ArtifactManager, JobManager, JobSpec, ServeConfig, ServeOptions};
+use crate::util::json::{JsonObj, JsonValue};
 use crate::model::{calibrate, predict};
 use crate::sim::extmem::{Actor, Dir, ExtMemModel, NetState};
 use crate::sim::membench;
@@ -23,6 +26,11 @@ pub fn dispatch(args: &Args) -> Result<String> {
         Some("run") => run_cmd(args),
         Some("analyze") => analyze_cmd(args),
         Some("sweep") => sweep_cmd(args),
+        Some("serve") => serve_cmd(args),
+        Some("submit") => submit_cmd(args),
+        Some("status") => status_cmd(args),
+        Some("fetch") => fetch_cmd(args),
+        Some("shutdown") => shutdown_cmd(args),
         Some("faults") => faults_cmd(args),
         Some("benchdiff") => benchdiff_cmd(args),
         Some(other) => bail!("unknown subcommand `{other}` (try `bsps info`)"),
@@ -48,6 +56,13 @@ USAGE:
                [--mode warn|deny] [--expect <finding-kind>]
   bsps sweep [--algo cannon|sort] [--cores <budget>] [--check]
              [--machines <a,b,…>] [--jobs <n>x<M>,…] [--sizes <len>,…]
+  bsps serve --socket <path> [--tcp <addr>] [--cores <budget>]
+             [--machines <a,b,…>] [--queue-cap <jobs>]
+  bsps submit --socket <path> --algo <recipe> [size flags] [--name <label>]
+              [--wait] [--check]
+  bsps status <id> --socket <path>
+  bsps fetch <id> --socket <path> [--evict]
+  bsps shutdown --socket <path>
   bsps faults --sweep [--p <cores>] [--hypersteps <n>] [--every-k <k>]
   bsps benchdiff <old.json> <new.json> [--max-regress 0.15]
                  [--max-scalar-rel 0.15]
@@ -88,6 +103,17 @@ faults --sweep injects every fault site at every hyperstep of a seeded
 BSPS kernel and retries each killed gang from its last barrier-consistent
 checkpoint, verifying recovered results byte-identical to a fault-free
 run (nonzero exit on any wedge or non-identical recovery — the CI gate).
+serve starts the persistent sweep service: newline-delimited JSON jobs
+over a unix socket (and/or --tcp), executed through the same admission
+and gang machinery as sweep, artifacts retrievable by job id until
+evicted. submit/status/fetch/shutdown are its clients: submit turns the
+run-style size flags into a job spec (recipes: inprod | cannon |
+cannon_ml | spmv | sort | hetero), --wait polls the lifecycle
+(queued → admitted → running → retired) and prints the artifact, and
+--check additionally re-runs the spec serially in-process and verifies
+the served reports byte-identical. A full service queue rejects new
+submissions gracefully (`rejected: queue-full`) without touching the
+core budget — retry later; nothing blocks.
 Paper benches: cargo bench (see rust/benches/, one per table/figure);
 benchdiff compares two BENCH_<suite>.json trajectory files and errors
 on throughput regressions beyond the threshold and on trajectory
@@ -270,8 +296,11 @@ fn sweep_cmd(args: &Args) -> Result<String> {
         Some(_) => machines_from(args, &[])?,
     };
     let hetero = machines.len() > 1;
-    let sched = if hetero {
-        GangScheduler::for_units(&machines)
+    // The sweep is a thin client of the service path: the same
+    // `ServeConfig` → `JobManager` machinery `bsps serve` runs under
+    // (budget shape identical to `GangScheduler::{new,for_units}`).
+    let service_cfg = if hetero {
+        ServeConfig { machines: machines.clone(), cores: 0, queue_cap: 1 }
     } else {
         let machine = &machines[0];
         let host =
@@ -286,7 +315,7 @@ fn sweep_cmd(args: &Args) -> Result<String> {
              could ever be admitted",
             machine.p
         );
-        GangScheduler::new(cores)
+        ServeConfig { machines: Vec::new(), cores, queue_cap: 1 }
     };
     let seed = args.get_usize("seed", 42)? as u64;
     let algo = args.get("algo").unwrap_or("cannon");
@@ -305,7 +334,7 @@ fn sweep_cmd(args: &Args) -> Result<String> {
                 jobs.extend(js);
                 gang_sets.push(gs);
             }
-            let out = sched.run(jobs);
+            let out = run_jobs_via_service(service_cfg, jobs)?;
             let sweep = SweepReport::from_sched(&out);
             let mut text = sweep.render();
             if args.flag("check") {
@@ -340,7 +369,7 @@ fn sweep_cmd(args: &Args) -> Result<String> {
                 jobs.extend(js);
                 gang_sets.push(gs);
             }
-            let out = sched.run(jobs);
+            let out = run_jobs_via_service(service_cfg, jobs)?;
             let sweep = SweepReport::from_sched(&out);
             let mut text = sweep.render();
             if args.flag("check") {
@@ -383,6 +412,252 @@ fn parse_sweep_sizes(spec: &str) -> Result<Vec<usize>> {
     }
     ensure!(!sizes.is_empty(), "--sizes: empty spec");
     Ok(sizes)
+}
+
+/// Run a flat batch of gangs through the persistent-service path: one
+/// [`JobManager`] job per gang, strict-FIFO admission, results returned
+/// in submission order. `bsps sweep` is a thin client of the same
+/// machinery `bsps serve` runs under — both end in `run_admitted`, so
+/// their reports are byte-identical.
+fn run_jobs_via_service(mut cfg: ServeConfig, gangs: Vec<GangJob>) -> Result<SchedOutcome> {
+    cfg.queue_cap = gangs.len().max(1);
+    let mgr = JobManager::start(&cfg, std::sync::Arc::new(ArtifactManager::new()));
+    let mut ids = Vec::with_capacity(gangs.len());
+    for gang in gangs {
+        let label = gang.name.clone();
+        ids.push(mgr.submit_jobs(&label, vec![gang])?);
+    }
+    let mut jobs = Vec::with_capacity(ids.len());
+    for id in ids {
+        let _ = mgr.wait(id);
+        jobs.extend(mgr.take_results(id).unwrap_or_default());
+    }
+    mgr.join();
+    Ok(SchedOutcome { jobs, stats: mgr.stats() })
+}
+
+/// `bsps serve`: run the persistent sweep service until a `shutdown`
+/// request arrives. Listens on `--socket <path>` (unix) and/or
+/// `--tcp <addr>`; `--machines` builds a weighted multi-class budget
+/// (one class per profile), otherwise `--cores` sizes a uniform one.
+fn serve_cmd(args: &Args) -> Result<String> {
+    let machines = match args.get("machines") {
+        None => Vec::new(),
+        Some(_) => machines_from(args, &[])?,
+    };
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    // Raised to one epiphany3 gang so the no-flags service can run the
+    // default-machine recipes even on small hosts.
+    let cores = args.get_usize("cores", host.max(16))?;
+    let queue_cap = args.get_usize("queue-cap", 16)?;
+    ensure!(queue_cap >= 1, "--queue-cap must be at least 1");
+    let opts = ServeOptions {
+        socket: args.get("socket").map(String::from),
+        tcp: args.get("tcp").map(String::from),
+        config: ServeConfig { machines, cores, queue_cap },
+    };
+    wire::serve(&opts)
+}
+
+/// Build a job-spec JSON object from `bsps submit`'s size flags. The
+/// spec is also validated client-side (`JobSpec::parse`) so a bad field
+/// errors before any connection is made.
+fn spec_from_args(args: &Args) -> Result<JsonValue> {
+    let algo = args.get("algo").unwrap_or("inprod");
+    let mut o = JsonObj::new().str("algo", algo);
+    if let Some(name) = args.get("name") {
+        o = o.str("name", name);
+    }
+    // CLI flag → spec field, numbers parsed with the flag's own error.
+    let int_keys = [
+        ("n", "n"),
+        ("m", "m"),
+        ("nnz", "nnz"),
+        ("rows", "rows"),
+        ("c", "token_words"),
+        ("chunk", "chunk_words"),
+        ("oversample", "oversample"),
+        ("intensity", "intensity"),
+        ("seed", "seed"),
+    ];
+    for (flag, field) in int_keys {
+        if args.get(flag).is_some() {
+            o = o.num(field, args.get_usize(flag, 0)? as f64);
+        }
+    }
+    if args.get("w").is_some() {
+        o = o.num("w", args.get_f64("w", 0.0)?);
+    }
+    if let Some(list) = args.get("machines") {
+        let names: Vec<JsonValue> = list
+            .split(',')
+            .map(|s| JsonValue::Str(s.trim().to_string()))
+            .collect();
+        o = o.field("machines", JsonValue::Arr(names));
+    } else if let Some(m) = args.get("machine") {
+        o = o.str("machine", m);
+    }
+    Ok(o.build())
+}
+
+/// Client address from `--socket` / `--tcp`.
+fn serve_addr(args: &Args) -> (Option<&str>, Option<&str>) {
+    (args.get("socket"), args.get("tcp"))
+}
+
+/// Job id from the client subcommand's positional argument.
+fn serve_job_id(args: &Args) -> Result<u64> {
+    let raw = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("missing job id (usage: bsps {} <id> --socket <path>)",
+            args.subcommand().unwrap_or("fetch")))?;
+    raw.parse::<u64>().map_err(|_| anyhow!("bad job id `{raw}`"))
+}
+
+/// `bsps submit`: send one job spec to a running `bsps serve`. With
+/// `--wait`, poll the lifecycle to retirement and print the artifact;
+/// with `--check` (implies waiting), additionally re-run the same spec
+/// serially in-process and verify the served reports byte-identical —
+/// the CI smoke's identity gate.
+fn submit_cmd(args: &Args) -> Result<String> {
+    let spec_v = spec_from_args(args)?;
+    let spec = JobSpec::parse(&spec_v)?;
+    let (socket, tcp) = serve_addr(args);
+    let req = JsonObj::new().str("op", "submit").field("spec", spec_v).build().render();
+    let resp = wire::expect_ok(wire::request(socket, tcp, &req)?)?;
+    let id = resp
+        .get("id")
+        .and_then(JsonValue::as_usize)
+        .ok_or_else(|| anyhow!("malformed submit response"))? as u64;
+    let label = resp.get("job").and_then(JsonValue::as_str).unwrap_or("?").to_string();
+    let mut text = format!("submitted job {id} ({label})\n");
+    if !args.flag("wait") && !args.flag("check") {
+        return Ok(text);
+    }
+    // Poll the lifecycle to retirement (bounded so a wedged daemon
+    // turns into an error, not a hang).
+    let mut retired = false;
+    for _ in 0..30_000 {
+        let st = wire::expect_ok(wire::request(
+            socket,
+            tcp,
+            &format!(r#"{{"op":"status","id":{id}}}"#),
+        )?)?;
+        let state = st
+            .get("status")
+            .and_then(|s| s.get("state"))
+            .and_then(JsonValue::as_str)
+            .unwrap_or("?")
+            .to_string();
+        if state == "retired" {
+            if let Some(status) = st.get("status") {
+                text.push_str(&format!("lifecycle: {}\n", status.render()));
+            }
+            retired = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    ensure!(retired, "job {id} did not retire within the polling deadline");
+    let fetched = wire::expect_ok(wire::request(
+        socket,
+        tcp,
+        &format!(r#"{{"op":"fetch","id":{id}}}"#),
+    )?)?;
+    let artifact = fetched
+        .get("artifact")
+        .ok_or_else(|| anyhow!("malformed fetch response"))?
+        .clone();
+    if args.flag("check") {
+        text.push_str(&check_served_identity(&spec, &artifact)?);
+    }
+    text.push_str(&artifact.render());
+    text.push('\n');
+    Ok(text)
+}
+
+/// Re-run a spec's gangs serially in-process and compare each served
+/// report byte-for-byte against `Report::from_outcome(...).to_json()`.
+fn check_served_identity(spec: &JobSpec, artifact: &JsonValue) -> Result<String> {
+    let served = artifact
+        .get("gangs")
+        .and_then(JsonValue::as_arr)
+        .ok_or_else(|| anyhow!("artifact has no `gangs` array"))?;
+    let gangs = spec.build()?;
+    ensure!(
+        served.len() == gangs.len(),
+        "artifact has {} gang(s), spec builds {}",
+        served.len(),
+        gangs.len()
+    );
+    let mut text = String::new();
+    for (gi, gang) in gangs.into_iter().enumerate() {
+        let name = gang.name.clone();
+        let out = GangScheduler::new(gang.cores()).run(vec![gang]);
+        let outcome = out.jobs[0]
+            .outcome
+            .as_ref()
+            .map_err(|e| anyhow!("check: serial re-run of gang `{name}` failed: {e}"))?;
+        let direct = Report::from_outcome(&out.jobs[0].machine, outcome).to_json();
+        let served_report = served[gi]
+            .get("report")
+            .map(JsonValue::render)
+            .ok_or_else(|| anyhow!("check: served gang `{name}` carries no report"))?;
+        ensure!(
+            served_report == direct,
+            "check: gang `{name}` served report differs from the serial run"
+        );
+        text.push_str(&format!("check {name}: byte-identical to serial ✓\n"));
+    }
+    Ok(text)
+}
+
+/// `bsps status <id>`: one lifecycle snapshot from a running service.
+fn status_cmd(args: &Args) -> Result<String> {
+    let id = serve_job_id(args)?;
+    let (socket, tcp) = serve_addr(args);
+    let resp = wire::expect_ok(wire::request(
+        socket,
+        tcp,
+        &format!(r#"{{"op":"status","id":{id}}}"#),
+    )?)?;
+    let status =
+        resp.get("status").ok_or_else(|| anyhow!("malformed status response"))?;
+    Ok(format!("{}\n", status.render()))
+}
+
+/// `bsps fetch <id>`: retrieve a retired job's artifact (with
+/// `--evict`, drop it from the service afterwards).
+fn fetch_cmd(args: &Args) -> Result<String> {
+    let id = serve_job_id(args)?;
+    let (socket, tcp) = serve_addr(args);
+    let resp = wire::expect_ok(wire::request(
+        socket,
+        tcp,
+        &format!(r#"{{"op":"fetch","id":{id}}}"#),
+    )?)?;
+    let artifact =
+        resp.get("artifact").ok_or_else(|| anyhow!("malformed fetch response"))?;
+    let mut text = format!("{}\n", artifact.render());
+    if args.flag("evict") {
+        wire::expect_ok(wire::request(
+            socket,
+            tcp,
+            &format!(r#"{{"op":"evict","id":{id}}}"#),
+        )?)?;
+        text.push_str(&format!("evicted artifact {id}\n"));
+    }
+    Ok(text)
+}
+
+/// `bsps shutdown`: ask a running service to drain and exit.
+fn shutdown_cmd(args: &Args) -> Result<String> {
+    let (socket, tcp) = serve_addr(args);
+    wire::expect_ok(wire::request(socket, tcp, r#"{"op":"shutdown"}"#)?)?;
+    Ok("server stopping (queued jobs drain with a shutdown error; \
+        in-flight jobs run to completion)\n"
+        .to_string())
 }
 
 /// `bsps benchdiff <old.json> <new.json>`: the perf-trajectory gate.
@@ -597,7 +872,7 @@ fn analyze_one(
         ensure!(machine.p >= 2, "analyze racy: needs at least two cores");
         let cfg = GangConfig { analysis: mode, ..Default::default() };
         let res = catch_unwind(AssertUnwindSafe(|| {
-            crate::bsp::run_gang_cfg(&machine, None, false, cfg, |ctx| {
+            crate::bsp::Gang::new(&machine).with_cfg(cfg).run(|ctx| {
                 let x = ctx.register("racy_x", 8).unwrap();
                 ctx.sync();
                 if ctx.pid() < 2 {
@@ -1034,6 +1309,61 @@ mod tests {
         assert!(out.contains("failed=0"), "{out}");
         assert!(out.contains("check sort_n2048: byte-identical to serial"), "{out}");
         assert!(out.contains("check sort_n4096: byte-identical to serial"), "{out}");
+    }
+
+    #[test]
+    fn submit_validates_the_spec_before_connecting() {
+        // A bad recipe errors client-side — no server, no connection.
+        let err = run("submit --algo frobnicate --socket /tmp/bsps-cli-test-none.sock")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown `algo`"), "{err}");
+        // A well-formed spec against a dead socket errors on connect.
+        let err = run("submit --algo sort --n 4096 --socket /tmp/bsps-cli-test-none.sock")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("is `bsps serve` running?"), "{err}");
+        // Client subcommands need an address.
+        let err = run("shutdown").unwrap_err().to_string();
+        assert!(err.contains("--socket"), "{err}");
+        let err = run("status --socket /tmp/bsps-cli-test-none.sock")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing job id"), "{err}");
+    }
+
+    #[test]
+    fn serve_round_trips_a_submit_over_tcp() {
+        use crate::serve::{BoundServer, ServeOptions};
+        let opts = ServeOptions {
+            socket: None,
+            tcp: Some("127.0.0.1:0".to_string()),
+            config: crate::serve::ServeConfig {
+                machines: Vec::new(),
+                cores: 16,
+                queue_cap: 4,
+            },
+        };
+        let server = BoundServer::bind(&opts).unwrap();
+        let addr = server.tcp_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || server.run().unwrap());
+        let out = run(&format!(
+            "submit --tcp {addr} --algo sort --n 4096 --seed 7 --wait --check"
+        ))
+        .unwrap();
+        assert!(out.contains("submitted job 1 (sort_n4096)"), "{out}");
+        assert!(out.contains("\"state\":\"retired\""), "{out}");
+        assert!(out.contains("check sort_n4096: byte-identical to serial ✓"), "{out}");
+        assert!(out.contains("\"report\""), "{out}");
+        let status = run(&format!("status 1 --tcp {addr}")).unwrap();
+        assert!(status.contains("\"state\":\"retired\""), "{status}");
+        let fetched = run(&format!("fetch 1 --tcp {addr} --evict")).unwrap();
+        assert!(fetched.contains("\"job\":\"sort_n4096\""), "{fetched}");
+        assert!(fetched.contains("evicted artifact 1"), "{fetched}");
+        let gone = run(&format!("fetch 1 --tcp {addr}")).unwrap_err().to_string();
+        assert!(gone.contains("unknown job id"), "{gone}");
+        run(&format!("shutdown --tcp {addr}")).unwrap();
+        handle.join().unwrap();
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::bsp::{run_gang_cfg, AnalysisMode, Ctx, FaultMode, GangConfig, RunOutcome};
+use crate::bsp::{AnalysisMode, Ctx, FaultMode, Gang, GangConfig, RunOutcome};
 use crate::coordinator::compute::ComputeBackend;
 use crate::coordinator::report::Report;
 use crate::model::params::AcceleratorParams;
@@ -116,7 +116,8 @@ where
         barrier_timeout: env.barrier_timeout,
         ..Default::default()
     };
-    let outcome = run_gang_cfg(&env.machine, Some(streams), env.prefetch, cfg, |ctx| {
+    let gang = Gang::new(&env.machine).with_streams(streams).with_prefetch(env.prefetch);
+    let outcome = gang.with_cfg(cfg).run(|ctx| {
         kernel(ctx, &backend);
     });
     let report = Report::from_outcome(&env.machine, &outcome);

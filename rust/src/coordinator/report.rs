@@ -8,6 +8,7 @@ use crate::bsp::RunOutcome;
 use crate::model::bsps::LedgerSummary;
 use crate::model::params::AcceleratorParams;
 use crate::util::humanfmt;
+use crate::util::json::{JsonObj, JsonValue};
 
 /// The combined result of a BSPS run: real numerics happened elsewhere;
 /// this captures the *cost* story.
@@ -99,6 +100,40 @@ impl Report {
             self.analysis.error_count(),
             self.analysis.warning_count(),
         )
+    }
+
+    /// The report as a compact single-line JSON document — the artifact
+    /// format `bsps serve` stores and hands back per job.
+    ///
+    /// Every field here is **deterministic** (model-priced costs and
+    /// virtual-clock timings); host wall-clock is deliberately excluded
+    /// so a daemon-run gang's artifact is byte-identical to a direct
+    /// run's. Wall time belongs to the job's lifecycle record, not the
+    /// cost report.
+    #[must_use]
+    pub fn to_json(&self) -> String {
+        self.to_json_value().render()
+    }
+
+    /// The same artifact as [`Report::to_json`], as a [`JsonValue`] —
+    /// for embedding inside a larger document (the serve artifact)
+    /// without a render/re-parse round-trip.
+    #[must_use]
+    pub fn to_json_value(&self) -> JsonValue {
+        JsonObj::new()
+            .str("machine", self.machine_name)
+            .num("supersteps", self.supersteps as f64)
+            .num("hypersteps", self.ledger.hypersteps as f64)
+            .num("bsp_flops", self.bsp_flops)
+            .num("bsp_flops_noc", self.bsp_flops_noc)
+            .num("bsps_flops", self.bsps_flops)
+            .num("sim_seconds", self.sim_seconds)
+            .num("measured_seconds", self.measured_seconds)
+            .num("bandwidth_heavy", self.ledger.bandwidth_heavy as f64)
+            .num("computation_heavy", self.ledger.computation_heavy as f64)
+            .num("analysis_errors", self.analysis.error_count() as f64)
+            .num("analysis_warnings", self.analysis.warning_count() as f64)
+            .build()
     }
 }
 
@@ -259,6 +294,7 @@ mod tests {
             ledger,
             timeline,
             wall_seconds: 0.5,
+            checkpoint_words: 0,
             analysis: Default::default(),
         };
         let r = Report::from_outcome(&m, &out);
@@ -274,6 +310,13 @@ mod tests {
         assert!(s.contains("hypersteps=1"));
         assert!(s.contains("measured="));
         assert!(s.contains("analysis_errors=0 analysis_warnings=0"));
+        let j = r.to_json();
+        assert!(j.starts_with(r#"{"machine":"epiphany3""#), "{j}");
+        assert!(j.contains(r#""supersteps":1"#), "{j}");
+        assert!(j.contains(r#""hypersteps":1"#), "{j}");
+        // Host wall-clock must not leak into the deterministic artifact.
+        assert!(!j.contains("wall"), "{j}");
+        crate::util::json::JsonValue::parse(&j).expect("artifact is valid JSON");
     }
 
     #[test]

@@ -36,6 +36,7 @@ pub mod config;
 pub mod coordinator;
 pub mod host;
 pub mod model;
+pub mod serve;
 pub mod stream;
 pub mod runtime;
 pub mod sim;

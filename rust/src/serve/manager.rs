@@ -1,0 +1,769 @@
+//! The service's two managers.
+//!
+//! * [`JobManager`] — owns the [`CoreBudget`] and a **bounded**
+//!   submission queue. Submissions past the bound are rejected
+//!   *gracefully* at the door (`rejected: queue-full`, budget
+//!   untouched); accepted jobs move through the lifecycle
+//!   `queued → admitted → running → retired`, each stage carrying its
+//!   wall-clock [`Duration`]. Admission is strictly FIFO — one
+//!   dispatcher thread holds the head job until its first gang owns a
+//!   [`CoreBudget`] lease, so a persistent queue can never starve a
+//!   wide job the way the batch scheduler's backfill pass can.
+//!   Execution lands in [`crate::bsp::sched`]'s `run_admitted` — the
+//!   same path `GangScheduler::run`'s runner threads use — which is
+//!   what makes daemon-run gangs byte-identical to batch runs.
+//! * [`ArtifactManager`] — stores each retired job's rendered artifact
+//!   (the per-gang [`Report`] JSON), keyed by job id, retrievable and
+//!   evictable independently of the execution side.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::bsp::sched::{run_admitted, GangJob, JobResult, SchedStats};
+use crate::coordinator::Report;
+use crate::model::hetero::REFERENCE_INTENSITY;
+use crate::model::params::AcceleratorParams;
+use crate::serve::spec::JobSpec;
+use crate::util::error::{bail, ensure, Result};
+use crate::util::json::{JsonObj, JsonValue};
+use crate::util::pool::{CoreBudget, CoreClass, GangPool};
+
+/// What the service runs under: the budget shape and the queue bound.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Budget classes, one per machine profile (weighted by per-core
+    /// throughput against the first). Fewer than two profiles means a
+    /// single uniform class of `cores`.
+    pub machines: Vec<AcceleratorParams>,
+    /// Single-class budget capacity (ignored on multi-class budgets).
+    pub cores: usize,
+    /// Submission-queue bound: jobs *queued but not yet dispatched*.
+    /// Submissions past it are rejected without touching the budget.
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { machines: Vec::new(), cores: CoreBudget::host().capacity(), queue_cap: 16 }
+    }
+}
+
+impl ServeConfig {
+    fn budget(&self) -> CoreBudget {
+        if self.machines.len() > 1 {
+            let classes = self
+                .machines
+                .iter()
+                .map(|u| (CoreClass::for_machine(u, &self.machines[0], REFERENCE_INTENSITY), u.p))
+                .collect();
+            CoreBudget::with_classes(classes)
+        } else {
+            CoreBudget::new(self.cores.max(1))
+        }
+    }
+}
+
+/// A point-in-time view of one job's lifecycle.
+#[derive(Debug, Clone)]
+pub struct JobStatus {
+    /// Job id (assigned at submission).
+    pub id: u64,
+    /// Display label.
+    pub label: String,
+    /// Current state: `queued | admitted | running | retired`.
+    pub state: &'static str,
+    /// Stage durations reached so far, in lifecycle order; the live
+    /// stage is measured up to now.
+    pub stages: Vec<(&'static str, Duration)>,
+    /// First failure (gang error or shutdown rejection), if any.
+    pub error: Option<String>,
+}
+
+impl JobStatus {
+    /// Render as a compact JSON object (stage durations in seconds).
+    #[must_use]
+    pub fn to_json(&self) -> String {
+        let mut stages = JsonObj::new();
+        for (stage, d) in &self.stages {
+            stages = stages.num(stage, d.as_secs_f64());
+        }
+        let mut o = JsonObj::new()
+            .num("id", self.id as f64)
+            .str("job", &self.label)
+            .str("state", self.state)
+            .field("stages", stages.build());
+        o = match &self.error {
+            Some(e) => o.str("error", e),
+            None => o.field("error", JsonValue::Null),
+        };
+        o.build().render()
+    }
+}
+
+struct JobRecord {
+    label: String,
+    submitted: Instant,
+    admitted: Option<Instant>,
+    running: Option<Instant>,
+    retired: Option<Instant>,
+    /// The dispatcher holds the queue until the head job's first gang
+    /// either owns a lease or is rejected — strict FIFO admission.
+    admission_done: bool,
+    error: Option<String>,
+    results: Option<Vec<JobResult>>,
+    /// Gangs awaiting dispatch (taken by the dispatcher).
+    gangs: Option<Vec<GangJob>>,
+}
+
+struct MgrState {
+    queue: VecDeque<u64>,
+    records: BTreeMap<u64, JobRecord>,
+    next_id: u64,
+    stop: bool,
+    /// Runner threads spawned but not yet retired.
+    active: usize,
+    dispatcher: Option<thread::JoinHandle<()>>,
+    // Aggregate stats, mirroring `GangScheduler::run`'s accounting.
+    first_activity: Option<Instant>,
+    last_retire: Option<Instant>,
+    peak_cores: usize,
+    peak_weighted: f64,
+    class_peaks: Vec<usize>,
+    core_seconds: f64,
+    weighted_core_seconds: f64,
+    serial_sum: f64,
+}
+
+/// The execution half of the sweep service: bounded submission queue,
+/// FIFO admission against a weighted [`CoreBudget`], lifecycle
+/// tracking, and retirement into an [`ArtifactManager`].
+pub struct JobManager {
+    budget: CoreBudget,
+    queue_cap: usize,
+    artifacts: Arc<ArtifactManager>,
+    state: Mutex<MgrState>,
+    cv: Condvar,
+}
+
+impl JobManager {
+    /// Build the budget from `cfg`, spawn the dispatcher thread, and
+    /// return the running manager.
+    #[must_use]
+    pub fn start(cfg: &ServeConfig, artifacts: Arc<ArtifactManager>) -> Arc<Self> {
+        let budget = cfg.budget();
+        // Same pool-retention policy as `GangScheduler::run`.
+        let thread_demand = budget.weighted_capacity().min(budget.capacity() as f64);
+        GangPool::global().set_helper_cap((thread_demand - 1.0).max(1.0));
+        let class_count = budget.class_count();
+        let mgr = Arc::new(Self {
+            budget,
+            queue_cap: cfg.queue_cap.max(1),
+            artifacts,
+            state: Mutex::new(MgrState {
+                queue: VecDeque::new(),
+                records: BTreeMap::new(),
+                next_id: 1,
+                stop: false,
+                active: 0,
+                dispatcher: None,
+                first_activity: None,
+                last_retire: None,
+                peak_cores: 0,
+                peak_weighted: 0.0,
+                class_peaks: vec![0; class_count],
+                core_seconds: 0.0,
+                weighted_core_seconds: 0.0,
+                serial_sum: 0.0,
+            }),
+            cv: Condvar::new(),
+        });
+        let m = Arc::clone(&mgr);
+        let handle = thread::Builder::new()
+            .name("bsps-serve-dispatch".into())
+            .spawn(move || dispatch_loop(&m))
+            .expect("spawn serve dispatcher");
+        mgr.state.lock().unwrap().dispatcher = Some(handle);
+        mgr
+    }
+
+    /// The artifact store retirements land in.
+    #[must_use]
+    pub fn artifacts(&self) -> &Arc<ArtifactManager> {
+        &self.artifacts
+    }
+
+    /// Parse-level entry: expand the spec and enqueue its gangs.
+    pub fn submit(&self, spec: &JobSpec) -> Result<u64> {
+        let gangs = spec.build()?;
+        self.submit_jobs(&spec.label(), gangs)
+    }
+
+    /// The gang-entry every submission path funnels through: enqueue
+    /// prebuilt gangs under one job id. Rejects — without touching the
+    /// budget — when the queue is at its bound or the manager is
+    /// shutting down.
+    pub fn submit_jobs(&self, label: &str, gangs: Vec<GangJob>) -> Result<u64> {
+        ensure!(!gangs.is_empty(), "job `{label}` has no gangs");
+        let now = Instant::now();
+        let gangs: Vec<GangJob> =
+            gangs.into_iter().map(|g| g.with_submission(now)).collect();
+        let mut st = self.state.lock().unwrap();
+        if st.stop {
+            bail!("rejected: server is shutting down");
+        }
+        if st.queue.len() >= self.queue_cap {
+            bail!(
+                "rejected: queue-full (cap {}, {} queued); budget untouched — retry later",
+                self.queue_cap,
+                st.queue.len()
+            );
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        st.records.insert(
+            id,
+            JobRecord {
+                label: label.to_string(),
+                submitted: now,
+                admitted: None,
+                running: None,
+                retired: None,
+                admission_done: false,
+                error: None,
+                results: None,
+                gangs: Some(gangs),
+            },
+        );
+        st.queue.push_back(id);
+        self.cv.notify_all();
+        Ok(id)
+    }
+
+    /// Lifecycle snapshot of a job; `None` for unknown (or forgotten)
+    /// ids.
+    #[must_use]
+    pub fn status(&self, id: u64) -> Option<JobStatus> {
+        let st = self.state.lock().unwrap();
+        let r = st.records.get(&id)?;
+        let now = Instant::now();
+        let mut stages =
+            vec![("queued", r.admitted.unwrap_or(now).duration_since(r.submitted))];
+        if let Some(adm) = r.admitted {
+            stages.push(("admitted", r.running.unwrap_or(now).duration_since(adm)));
+            if let Some(run) = r.running {
+                stages.push(("running", r.retired.unwrap_or(now).duration_since(run)));
+            }
+        }
+        let state = if r.retired.is_some() {
+            "retired"
+        } else if r.running.is_some() {
+            "running"
+        } else if r.admitted.is_some() {
+            "admitted"
+        } else {
+            "queued"
+        };
+        Some(JobStatus {
+            id,
+            label: r.label.clone(),
+            state,
+            stages,
+            error: r.error.clone(),
+        })
+    }
+
+    /// Block until the job retires; `None` for unknown ids.
+    #[must_use]
+    pub fn wait(&self, id: u64) -> Option<JobStatus> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match st.records.get(&id) {
+                None => return None,
+                Some(r) if r.retired.is_some() => break,
+                Some(_) => st = self.cv.wait(st).unwrap(),
+            }
+        }
+        drop(st);
+        self.status(id)
+    }
+
+    /// Move the job's per-gang results out (for in-process clients like
+    /// `bsps sweep`); subsequent calls return `None`.
+    #[must_use]
+    pub fn take_results(&self, id: u64) -> Option<Vec<JobResult>> {
+        self.state.lock().unwrap().records.get_mut(&id)?.results.take()
+    }
+
+    /// Drop a *retired* job's record and its stored artifact. Returns
+    /// whether anything was removed. Live jobs are left untouched.
+    #[must_use]
+    pub fn forget(&self, id: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let retired = st.records.get(&id).is_some_and(|r| r.retired.is_some());
+        if retired {
+            st.records.remove(&id);
+        }
+        drop(st);
+        let evicted = self.artifacts.evict(id);
+        retired || evicted
+    }
+
+    /// Aggregate scheduler-compatible stats over everything retired so
+    /// far (makespan runs first admission → last retirement).
+    #[must_use]
+    pub fn stats(&self) -> SchedStats {
+        let st = self.state.lock().unwrap();
+        let makespan_seconds = match (st.first_activity, st.last_retire) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        };
+        SchedStats {
+            budget_cores: self.budget.capacity(),
+            weighted_budget: self.budget.weighted_capacity(),
+            makespan_seconds,
+            serial_sum_seconds: st.serial_sum,
+            core_seconds: st.core_seconds,
+            weighted_core_seconds: st.weighted_core_seconds,
+            peak_cores: st.peak_cores,
+            peak_weighted: st.peak_weighted,
+            class_peak_cores: st.class_peaks.clone(),
+        }
+    }
+
+    /// Stop accepting submissions and tell the dispatcher to drain:
+    /// queued-but-undispatched jobs retire with a shutdown error,
+    /// in-flight jobs run to completion.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.stop = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Shut down and block until the dispatcher has exited and every
+    /// in-flight job has retired.
+    pub fn join(&self) {
+        self.shutdown();
+        let handle = self.state.lock().unwrap().dispatcher.take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+        let mut st = self.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn mark_admitted(&self, id: u64, real_admission: bool) {
+        let now = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        if let Some(r) = st.records.get_mut(&id) {
+            if r.admitted.is_none() {
+                r.admitted = Some(now);
+            }
+            r.admission_done = true;
+        }
+        if real_admission {
+            if st.first_activity.is_none() {
+                st.first_activity = Some(now);
+            }
+            let used = self.budget.capacity() - self.budget.available();
+            st.peak_cores = st.peak_cores.max(used);
+            st.peak_weighted = st.peak_weighted.max(self.budget.weighted_in_use());
+            for (c, peak) in st.class_peaks.iter_mut().enumerate() {
+                *peak = (*peak).max(self.budget.class_in_use(c));
+            }
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn mark_running(&self, id: u64) {
+        let now = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        if let Some(r) = st.records.get_mut(&id) {
+            if r.running.is_none() {
+                r.running = Some(now);
+            }
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn account(&self, res: &JobResult) {
+        let class = self.budget.class_for(res.machine.name).unwrap_or(0);
+        let weight = self.budget.class(class).weight;
+        let mut st = self.state.lock().unwrap();
+        st.core_seconds += res.cores as f64 * res.run_seconds;
+        st.weighted_core_seconds += weight * res.cores as f64 * res.run_seconds;
+        st.serial_sum += res.run_seconds;
+    }
+
+    /// Store the artifact, stamp retirement, release the runner slot.
+    fn retire(&self, id: u64, results: Vec<JobResult>, error: Option<String>) {
+        let label = self
+            .state
+            .lock()
+            .unwrap()
+            .records
+            .get(&id)
+            .map(|r| r.label.clone())
+            .unwrap_or_default();
+        // Artifact first, retirement stamp second: a client that
+        // observes `retired` is guaranteed to find the artifact.
+        self.artifacts.put(id, render_artifact(id, &label, &results));
+        let now = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        if let Some(r) = st.records.get_mut(&id) {
+            if r.admitted.is_none() {
+                r.admitted = Some(now);
+            }
+            if r.running.is_none() {
+                r.running = Some(now);
+            }
+            r.retired = Some(now);
+            r.error = error;
+            r.results = Some(results);
+        }
+        st.last_retire = Some(now);
+        st.active -= 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Retire a job the dispatcher drained at shutdown without ever
+    /// admitting it — budget untouched, error artifact stored.
+    fn retire_rejected(&self, id: u64, why: &str) {
+        let label = self
+            .state
+            .lock()
+            .unwrap()
+            .records
+            .get(&id)
+            .map(|r| r.label.clone())
+            .unwrap_or_default();
+        let artifact = JsonObj::new()
+            .num("id", id as f64)
+            .str("job", &label)
+            .str("error", why)
+            .build()
+            .render();
+        self.artifacts.put(id, artifact);
+        let now = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        if let Some(r) = st.records.get_mut(&id) {
+            r.gangs = None;
+            r.admitted = Some(now);
+            r.running = Some(now);
+            r.retired = Some(now);
+            r.admission_done = true;
+            r.error = Some(why.to_string());
+            r.results = Some(Vec::new());
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// One dispatcher per manager: pop the queue head, spawn its runner,
+/// and hold further dispatch until that job's first gang completed
+/// admission (lease owned or rejected) — strict FIFO, no backfill.
+fn dispatch_loop(mgr: &Arc<JobManager>) {
+    loop {
+        let popped = {
+            let mut st = mgr.state.lock().unwrap();
+            loop {
+                if let Some(id) = st.queue.pop_front() {
+                    let gangs = st
+                        .records
+                        .get_mut(&id)
+                        .and_then(|r| r.gangs.take())
+                        .unwrap_or_default();
+                    break Some((id, gangs, st.stop));
+                }
+                if st.stop {
+                    break None;
+                }
+                st = mgr.cv.wait(st).unwrap();
+            }
+        };
+        let Some((id, gangs, stopping)) = popped else { return };
+        if stopping || gangs.is_empty() {
+            mgr.retire_rejected(id, "rejected: server shutting down before admission");
+            continue;
+        }
+        mgr.state.lock().unwrap().active += 1;
+        let m = Arc::clone(mgr);
+        thread::Builder::new()
+            .name(format!("bsps-serve-job{id}"))
+            .spawn(move || run_job(&m, id, gangs))
+            .expect("spawn serve job runner");
+        let mut st = mgr.state.lock().unwrap();
+        while !st.records.get(&id).map_or(true, |r| r.admission_done) {
+            st = mgr.cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// Run one job's gangs in sequence on a dedicated thread. Each gang
+/// acquires its own FIFO lease and executes through
+/// [`crate::bsp::sched`]'s `run_admitted` — the batch scheduler's
+/// execution path, verbatim.
+fn run_job(mgr: &Arc<JobManager>, id: u64, gangs: Vec<GangJob>) {
+    let mut results: Vec<JobResult> = Vec::with_capacity(gangs.len());
+    let mut first_error: Option<String> = None;
+    for (gi, job) in gangs.into_iter().enumerate() {
+        let class = mgr.budget.class_for(job.machine.name).unwrap_or(0);
+        let cores = job.cores();
+        if cores > mgr.budget.class_capacity(class) {
+            let msg = format!(
+                "gang `{}` requests {cores} cores but the budget is {} — \
+                 it can never be admitted",
+                job.name,
+                mgr.budget.class_capacity(class)
+            );
+            let queue_wait_seconds =
+                job.submitted_at.map_or(0.0, |t| t.elapsed().as_secs_f64());
+            results.push(JobResult {
+                name: job.name,
+                cores,
+                machine: job.machine,
+                queue_wait_seconds,
+                run_seconds: 0.0,
+                attempts: 0,
+                recovery: None,
+                outcome: Err(msg.clone()),
+            });
+            if first_error.is_none() {
+                first_error = Some(msg);
+            }
+            if gi == 0 {
+                mgr.mark_admitted(id, false);
+            }
+            continue;
+        }
+        let lease = mgr.budget.acquire_class(class, cores);
+        let queue_wait_seconds =
+            job.submitted_at.map_or(0.0, |t| t.elapsed().as_secs_f64());
+        // For gang 0 this completes admission and unblocks the
+        // dispatcher; later gangs only refresh the peak readings.
+        mgr.mark_admitted(id, true);
+        mgr.mark_running(id);
+        let res = run_admitted(&mgr.budget, class, job, lease, queue_wait_seconds);
+        mgr.account(&res);
+        if first_error.is_none() {
+            if let Err(e) = &res.outcome {
+                first_error = Some(e.clone());
+            }
+        }
+        results.push(res);
+    }
+    mgr.retire(id, results, first_error);
+}
+
+/// Render a retired job's artifact: per-gang deterministic cost
+/// reports (or the gang's error), under the job label.
+fn render_artifact(id: u64, label: &str, results: &[JobResult]) -> String {
+    let mut gangs = Vec::with_capacity(results.len());
+    for r in results {
+        let mut o = JsonObj::new().str("name", &r.name).num("cores", r.cores as f64);
+        o = match &r.outcome {
+            Ok(out) => o.field("report", Report::from_outcome(&r.machine, out).to_json_value()),
+            Err(e) => o.str("error", e),
+        };
+        gangs.push(o.build());
+    }
+    JsonObj::new()
+        .num("id", id as f64)
+        .str("job", label)
+        .field("gangs", JsonValue::Arr(gangs))
+        .build()
+        .render()
+}
+
+/// The artifact half of the sweep service: rendered report JSON keyed
+/// by job id. Deliberately independent of the [`JobManager`] — clients
+/// fetch and evict artifacts without touching the execution side.
+#[derive(Debug, Default)]
+pub struct ArtifactManager {
+    store: Mutex<BTreeMap<u64, String>>,
+}
+
+impl ArtifactManager {
+    /// An empty store.
+    #[must_use]
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Store (or replace) a job's artifact.
+    pub fn put(&self, id: u64, artifact: String) {
+        self.store.lock().unwrap().insert(id, artifact);
+    }
+
+    /// A copy of the job's artifact, if retired and not evicted.
+    #[must_use]
+    pub fn fetch(&self, id: u64) -> Option<String> {
+        self.store.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Drop a stored artifact; returns whether it existed.
+    #[must_use]
+    pub fn evict(&self, id: u64) -> bool {
+        self.store.lock().unwrap().remove(&id).is_some()
+    }
+
+    /// Number of stored artifacts.
+    #[must_use]
+    pub fn len(&self) -> usize {
+        self.store.lock().unwrap().len()
+    }
+
+    /// Whether the store is empty.
+    #[must_use]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::sched::GangScheduler;
+
+    fn machine(p: usize) -> AcceleratorParams {
+        let mut m = AcceleratorParams::epiphany3();
+        m.p = p;
+        m
+    }
+
+    fn quick_job(name: &str, p: usize) -> GangJob {
+        GangJob::new(name, machine(p), |ctx| {
+            ctx.charge_flops(64.0);
+            ctx.sync();
+        })
+    }
+
+    #[test]
+    fn lifecycle_runs_to_retired_with_artifact() {
+        let artifacts = Arc::new(ArtifactManager::new());
+        let cfg = ServeConfig { machines: Vec::new(), cores: 4, queue_cap: 4 };
+        let mgr = JobManager::start(&cfg, Arc::clone(&artifacts));
+        let id = mgr.submit_jobs("one", vec![quick_job("g0", 2)]).unwrap();
+        let status = mgr.wait(id).expect("job known");
+        assert_eq!(status.state, "retired");
+        assert!(status.error.is_none(), "{:?}", status.error);
+        let names: Vec<&str> = status.stages.iter().map(|(s, _)| *s).collect();
+        assert_eq!(names, ["queued", "admitted", "running"]);
+        let art = artifacts.fetch(id).expect("artifact stored");
+        assert!(art.contains("\"job\":\"one\""), "{art}");
+        assert!(art.contains("\"report\""), "{art}");
+        mgr.join();
+    }
+
+    #[test]
+    fn artifact_byte_identical_to_batch_scheduler() {
+        let artifacts = Arc::new(ArtifactManager::new());
+        let cfg = ServeConfig { machines: Vec::new(), cores: 4, queue_cap: 4 };
+        let mgr = JobManager::start(&cfg, Arc::clone(&artifacts));
+        let id = mgr.submit_jobs("cmp", vec![quick_job("g0", 2)]).unwrap();
+        mgr.wait(id).unwrap();
+        mgr.join();
+        let art = artifacts.fetch(id).unwrap();
+        let parsed = JsonValue::parse(&art).unwrap();
+        let served = parsed.get("gangs").and_then(JsonValue::as_arr).unwrap()[0]
+            .get("report")
+            .unwrap()
+            .render();
+
+        let out = GangScheduler::new(4).run(vec![quick_job("g0", 2)]);
+        let direct = Report::from_outcome(
+            &out.jobs[0].machine,
+            out.jobs[0].outcome.as_ref().unwrap(),
+        )
+        .to_json();
+        assert_eq!(served, direct, "daemon artifact must be byte-identical");
+    }
+
+    #[test]
+    fn queue_bound_rejects_gracefully_and_recovers() {
+        let artifacts = Arc::new(ArtifactManager::new());
+        let cfg = ServeConfig { machines: Vec::new(), cores: 2, queue_cap: 1 };
+        let mgr = JobManager::start(&cfg, Arc::clone(&artifacts));
+        let slow = |name: &str| {
+            GangJob::new(name, machine(2), |ctx| {
+                std::thread::sleep(Duration::from_millis(150));
+                ctx.sync();
+            })
+        };
+        let id1 = mgr.submit_jobs("j1", vec![slow("g1")]).unwrap();
+        // Give the dispatcher time to admit j1 and pull j2 into its
+        // admission wait, so j3 occupies the whole queue bound.
+        std::thread::sleep(Duration::from_millis(50));
+        let id2 = mgr.submit_jobs("j2", vec![slow("g2")]).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let id3 = mgr.submit_jobs("j3", vec![slow("g3")]).unwrap();
+        let err = mgr
+            .submit_jobs("j4", vec![slow("g4")])
+            .expect_err("queue is at its bound")
+            .to_string();
+        assert!(err.contains("queue-full"), "{err}");
+        for id in [id1, id2, id3] {
+            let s = mgr.wait(id).unwrap();
+            assert_eq!(s.state, "retired");
+            assert!(s.error.is_none(), "{:?}", s.error);
+        }
+        // The rejection left the budget intact: a fresh job still runs.
+        let id5 = mgr.submit_jobs("j5", vec![quick_job("g5", 2)]).unwrap();
+        assert_eq!(mgr.wait(id5).unwrap().state, "retired");
+        mgr.join();
+        assert_eq!(artifacts.len(), 4);
+    }
+
+    #[test]
+    fn queue_wait_orders_fifo_behind_a_full_budget() {
+        let artifacts = Arc::new(ArtifactManager::new());
+        let cfg = ServeConfig { machines: Vec::new(), cores: 2, queue_cap: 8 };
+        let mgr = JobManager::start(&cfg, Arc::clone(&artifacts));
+        let slow = |name: &str| {
+            GangJob::new(name, machine(2), |ctx| {
+                std::thread::sleep(Duration::from_millis(60));
+                ctx.sync();
+            })
+        };
+        let a = mgr.submit_jobs("a", vec![slow("a")]).unwrap();
+        let b = mgr.submit_jobs("b", vec![slow("b")]).unwrap();
+        mgr.wait(a).unwrap();
+        mgr.wait(b).unwrap();
+        let ra = mgr.take_results(a).unwrap();
+        let rb = mgr.take_results(b).unwrap();
+        // b was parked behind a's lease: its queue wait covers a's run.
+        assert!(
+            rb[0].queue_wait_seconds >= ra[0].run_seconds * 0.5,
+            "b waited {} s, a ran {} s",
+            rb[0].queue_wait_seconds,
+            ra[0].run_seconds
+        );
+        mgr.join();
+        let stats = mgr.stats();
+        assert_eq!(stats.budget_cores, 2);
+        assert!(stats.peak_cores <= 2);
+        assert!(stats.makespan_seconds > 0.0);
+    }
+
+    #[test]
+    fn forget_drops_record_and_artifact() {
+        let artifacts = Arc::new(ArtifactManager::new());
+        let cfg = ServeConfig::default();
+        let mgr = JobManager::start(&cfg, Arc::clone(&artifacts));
+        let id = mgr.submit_jobs("gone", vec![quick_job("g", 2)]).unwrap();
+        mgr.wait(id).unwrap();
+        assert!(mgr.forget(id));
+        assert!(mgr.status(id).is_none());
+        assert!(artifacts.fetch(id).is_none());
+        assert!(!mgr.forget(id));
+        mgr.join();
+    }
+}

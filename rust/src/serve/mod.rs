@@ -1,0 +1,32 @@
+//! `bsps serve`: a persistent sweep service.
+//!
+//! The service splits three ways:
+//!
+//! * [`spec`] — [`spec::JobSpec`]: a parsed job request naming a
+//!   recipe (`inprod|cannon|cannon_ml|spmv|sort|hetero`), problem
+//!   size, machine profile(s), and [`crate::bsp::GangConfig`] knobs.
+//!   `JobSpec::build` is the one gang-entry point: every recipe turns
+//!   into plain [`crate::bsp::sched::GangJob`]s, so the daemon and the
+//!   batch [`crate::bsp::sched::GangScheduler`] execute identical
+//!   work and produce byte-identical reports.
+//! * [`manager`] — [`manager::JobManager`] owns admission against the
+//!   weighted [`crate::bsp::sched::CoreBudget`] and the job lifecycle
+//!   (`queued → admitted → running → retired`, each stage carrying a
+//!   `Duration`); [`manager::ArtifactManager`] keeps rendered report
+//!   JSON keyed by job id, retrievable and evictable independently of
+//!   the job records.
+//! * [`wire`] — newline-delimited JSON over a Unix-domain (optionally
+//!   TCP) socket, hand-rolled on [`crate::util::json`].
+//!
+//! Backpressure is graceful by construction: the submission queue is
+//! bounded, the bound is checked before the budget is touched, and a
+//! full queue yields an `ok:false` response (`rejected: queue-full`),
+//! never a hang. See `ARCHITECTURE.md` § "Sweep service".
+
+pub mod manager;
+pub mod spec;
+pub mod wire;
+
+pub use manager::{ArtifactManager, JobManager, JobStatus, ServeConfig};
+pub use spec::{JobSpec, Recipe};
+pub use wire::{serve, BoundServer, ServeOptions};

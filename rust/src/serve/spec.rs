@@ -1,0 +1,356 @@
+//! Job specifications: the JSON documents clients submit to the sweep
+//! service, parsed into [`JobSpec`] and expanded into the [`GangJob`]s
+//! the [`crate::serve::manager::JobManager`] admits.
+//!
+//! A spec names an algorithm recipe (`inprod | cannon | cannon_ml |
+//! spmv | sort | hetero`), its geometry knobs, the machine profile(s)
+//! it runs on, a PRNG seed, and an optional [`GangConfig`] object
+//! (parsed by [`GangConfig::from_json`]). Every parse error names the
+//! offending field so a client can fix its request without reading
+//! server logs.
+
+use crate::bsp::sched::{hetero_split_jobs, GangJob};
+use crate::bsp::GangConfig;
+use crate::model::params::AcceleratorParams;
+use crate::util::error::{bail, ensure, Result};
+use crate::util::json::JsonValue;
+
+use crate::algos::sort::SortConfig;
+use crate::algos::{cannon_ml, sort, spmv};
+
+/// The algorithm recipe a job spec names, with its geometry knobs.
+///
+/// `Cannon` covers both the `cannon` and `cannon_ml` spellings — the
+/// multi-level streaming Cannon is the crate's only budgeted Cannon
+/// entry; the spellings differ only in their default `(n, M)` point.
+#[derive(Debug, Clone)]
+pub enum Recipe {
+    /// Streaming inner product: `n` elements at arithmetic intensity
+    /// `intensity`, run as a one-unit split kernel.
+    Inprod {
+        /// Vector length (rounded up to whole grains by the split).
+        n: usize,
+        /// FLOPs per word each hyperstep realizes (`>= 1`).
+        intensity: f64,
+    },
+    /// Multi-level streaming Cannon: `n×n` matrices in `M×M` outer
+    /// blocks.
+    Cannon {
+        /// Matrix dimension.
+        n: usize,
+        /// Outer blocks per dimension.
+        m: usize,
+    },
+    /// Streaming ELLPACK SpMV on a seeded random matrix.
+    Spmv {
+        /// Matrix dimension.
+        n: usize,
+        /// ELLPACK slots per row.
+        nnz: usize,
+        /// Rows per stream token (`p · rows | n` required).
+        rows_per_token: usize,
+    },
+    /// Out-of-core streaming sample sort of `n` seeded random words.
+    Sort {
+        /// Input size in words.
+        n: usize,
+        /// Geometry knobs of the point.
+        cfg: SortConfig,
+    },
+    /// Heterogeneous split of `w_flops` total work across every
+    /// machine in the spec, one gang per unit.
+    Hetero {
+        /// FLOPs per word each hyperstep realizes (`>= 1`).
+        intensity: f64,
+        /// Total work to split, FLOPs.
+        w_flops: f64,
+    },
+}
+
+/// A parsed job specification: recipe + machines + seed + gang config.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Client-supplied label (defaults to a recipe-derived one).
+    pub name: Option<String>,
+    /// The algorithm recipe and its knobs.
+    pub recipe: Recipe,
+    /// Machine profile(s); exactly one except for `hetero`.
+    pub machines: Vec<AcceleratorParams>,
+    /// PRNG seed for operand generation.
+    pub seed: u64,
+    /// Gang configuration applied to every expanded gang.
+    pub cfg: GangConfig,
+}
+
+fn usize_field(v: &JsonValue, key: &str) -> Result<usize> {
+    match v.as_usize() {
+        Some(u) => Ok(u),
+        None => bail!("job spec: `{key}` must be a non-negative integer"),
+    }
+}
+
+fn positive_field(v: &JsonValue, key: &str) -> Result<usize> {
+    let u = usize_field(v, key)?;
+    ensure!(u > 0, "job spec: `{key}` must be positive");
+    Ok(u)
+}
+
+fn num_field(v: &JsonValue, key: &str) -> Result<f64> {
+    match v.as_num() {
+        Some(n) if n.is_finite() => Ok(n),
+        _ => bail!("job spec: `{key}` must be a finite number"),
+    }
+}
+
+fn str_field<'a>(v: &'a JsonValue, key: &str) -> Result<&'a str> {
+    match v.as_str() {
+        Some(s) => Ok(s),
+        None => bail!("job spec: `{key}` must be a string"),
+    }
+}
+
+fn machine_field(v: &JsonValue, key: &str) -> Result<AcceleratorParams> {
+    let name = str_field(v, key)?;
+    match AcceleratorParams::preset(name) {
+        Some(m) => Ok(m),
+        None => bail!(
+            "job spec: unknown machine `{name}` in `{key}` \
+             (want epiphany3|epiphany4|epiphany5|xeonphi_like)"
+        ),
+    }
+}
+
+impl JobSpec {
+    /// Parse a spec from its JSON text. See [`JobSpec::parse`].
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = JsonValue::parse(text).map_err(|e| e.context("job spec"))?;
+        Self::parse(&v)
+    }
+
+    /// Parse a spec from an already-parsed JSON value. Unknown fields
+    /// are rejected; every error names the field it is about. Knobs a
+    /// recipe does not use get recipe defaults when absent.
+    pub fn parse(v: &JsonValue) -> Result<Self> {
+        let JsonValue::Obj(fields) = v else {
+            bail!("job spec: expected a JSON object");
+        };
+        let mut algo: Option<String> = None;
+        let mut name: Option<String> = None;
+        let mut machines: Vec<AcceleratorParams> = Vec::new();
+        let mut n: Option<usize> = None;
+        let mut m: Option<usize> = None;
+        let mut nnz: Option<usize> = None;
+        let mut rows: Option<usize> = None;
+        let mut token_words: Option<usize> = None;
+        let mut chunk_words: Option<usize> = None;
+        let mut oversample: Option<usize> = None;
+        let mut intensity: Option<f64> = None;
+        let mut w_flops: Option<f64> = None;
+        let mut seed: u64 = 42;
+        let mut cfg = GangConfig::default();
+        for (key, val) in fields {
+            match key.as_str() {
+                "algo" => algo = Some(str_field(val, "algo")?.to_string()),
+                "name" => name = Some(str_field(val, "name")?.to_string()),
+                "machine" => machines = vec![machine_field(val, "machine")?],
+                "machines" => {
+                    let Some(items) = val.as_arr() else {
+                        bail!("job spec: `machines` must be an array of preset names");
+                    };
+                    machines = items
+                        .iter()
+                        .map(|it| machine_field(it, "machines"))
+                        .collect::<Result<_>>()?;
+                }
+                "n" => n = Some(positive_field(val, "n")?),
+                "m" => m = Some(positive_field(val, "m")?),
+                "nnz" => nnz = Some(positive_field(val, "nnz")?),
+                "rows" => rows = Some(positive_field(val, "rows")?),
+                "token_words" => token_words = Some(positive_field(val, "token_words")?),
+                "chunk_words" => chunk_words = Some(positive_field(val, "chunk_words")?),
+                "oversample" => oversample = Some(positive_field(val, "oversample")?),
+                "intensity" => {
+                    let i = num_field(val, "intensity")?;
+                    ensure!(i >= 1.0, "job spec: `intensity` must be >= 1");
+                    intensity = Some(i);
+                }
+                "w" => {
+                    let w = num_field(val, "w")?;
+                    ensure!(w > 0.0, "job spec: `w` must be positive");
+                    w_flops = Some(w);
+                }
+                "seed" => seed = usize_field(val, "seed")? as u64,
+                "cfg" => {
+                    cfg = GangConfig::from_json(&val.render())
+                        .map_err(|e| e.context("job spec: field `cfg`"))?;
+                }
+                other => bail!("job spec: unknown field `{other}`"),
+            }
+        }
+        let Some(algo) = algo else {
+            bail!("job spec: missing required field `algo`");
+        };
+        let recipe = match algo.as_str() {
+            "inprod" => Recipe::Inprod {
+                n: n.unwrap_or(65536),
+                intensity: intensity.unwrap_or(50.0),
+            },
+            "cannon" => Recipe::Cannon { n: n.unwrap_or(64), m: m.unwrap_or(2) },
+            "cannon_ml" => Recipe::Cannon { n: n.unwrap_or(128), m: m.unwrap_or(4) },
+            "spmv" => Recipe::Spmv {
+                n: n.unwrap_or(1024),
+                nnz: nnz.unwrap_or(8),
+                rows_per_token: rows.unwrap_or(16),
+            },
+            "sort" => Recipe::Sort {
+                n: n.unwrap_or(4096),
+                cfg: SortConfig {
+                    token_words: token_words.unwrap_or(64),
+                    chunk_words,
+                    oversample: oversample.unwrap_or(4),
+                },
+            },
+            "hetero" => Recipe::Hetero {
+                intensity: intensity.unwrap_or(50.0),
+                w_flops: w_flops.unwrap_or(2.0e7),
+            },
+            other => bail!(
+                "job spec: unknown `algo` `{other}` \
+                 (want inprod|cannon|cannon_ml|spmv|sort|hetero)"
+            ),
+        };
+        if machines.is_empty() {
+            machines = if matches!(recipe, Recipe::Hetero { .. }) {
+                vec![AcceleratorParams::epiphany3(), AcceleratorParams::xeonphi_like()]
+            } else {
+                vec![AcceleratorParams::epiphany3()]
+            };
+        }
+        if matches!(recipe, Recipe::Hetero { .. }) {
+            for (i, a) in machines.iter().enumerate() {
+                for b in &machines[i + 1..] {
+                    ensure!(
+                        a.name != b.name,
+                        "job spec: `machines` must be distinct for `hetero` \
+                         (got `{}` twice)",
+                        a.name
+                    );
+                }
+            }
+        } else {
+            ensure!(
+                machines.len() == 1,
+                "job spec: `machines` must name exactly one profile for `{algo}`"
+            );
+        }
+        Ok(Self { name, recipe, machines, seed, cfg })
+    }
+
+    /// The job's display label: the client-supplied `name`, else one
+    /// derived from the recipe point.
+    #[must_use]
+    pub fn label(&self) -> String {
+        if let Some(name) = &self.name {
+            return name.clone();
+        }
+        match &self.recipe {
+            Recipe::Inprod { n, .. } => format!("inprod_n{n}"),
+            Recipe::Cannon { n, m } => format!("cannon_n{n}_M{m}"),
+            Recipe::Spmv { n, .. } => format!("spmv_n{n}"),
+            Recipe::Sort { n, .. } => format!("sort_n{n}"),
+            Recipe::Hetero { .. } => format!("hetero_x{}", self.machines.len()),
+        }
+    }
+
+    /// Expand the spec into the gangs it runs — the single gang-entry
+    /// every recipe funnels through. Each gang gets this spec's
+    /// [`GangConfig`].
+    pub fn build(&self) -> Result<Vec<GangJob>> {
+        let jobs = match &self.recipe {
+            Recipe::Inprod { n, intensity } => {
+                let w = 2.0 * intensity * *n as f64;
+                hetero_split_jobs(&self.machines[..1], *intensity, w).jobs().0
+            }
+            Recipe::Hetero { intensity, w_flops } => {
+                hetero_split_jobs(&self.machines, *intensity, *w_flops).jobs().0
+            }
+            Recipe::Cannon { n, m } => {
+                cannon_ml::sweep_jobs(&self.machines[0], &[(*n, *m)], self.seed)?.0
+            }
+            Recipe::Spmv { n, nnz, rows_per_token } => {
+                vec![spmv::sweep_job(&self.machines[0], *n, *nnz, *rows_per_token, self.seed)?]
+            }
+            Recipe::Sort { n, cfg } => {
+                sort::sweep_jobs(&self.machines[0], &[*n], *cfg, self.seed)?.0
+            }
+        };
+        Ok(jobs.into_iter().map(|j| j.with_cfg(self.cfg.clone())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_sort_spec_and_builds_one_gang() {
+        let spec = JobSpec::from_json(r#"{"algo":"sort","n":4096,"seed":7}"#).unwrap();
+        assert_eq!(spec.label(), "sort_n4096");
+        assert_eq!(spec.machines.len(), 1);
+        let gangs = spec.build().unwrap();
+        assert_eq!(gangs.len(), 1);
+        assert_eq!(gangs[0].name, "sort_n4096");
+        assert_eq!(gangs[0].cores(), 16);
+    }
+
+    #[test]
+    fn cannon_defaults_and_custom_name() {
+        let spec =
+            JobSpec::from_json(r#"{"algo":"cannon","name":"my_point"}"#).unwrap();
+        assert_eq!(spec.label(), "my_point");
+        let gangs = spec.build().unwrap();
+        assert_eq!(gangs.len(), 1);
+        assert_eq!(gangs[0].name, "cannon_n64_M2");
+    }
+
+    #[test]
+    fn hetero_expands_one_gang_per_unit() {
+        let spec = JobSpec::from_json(
+            r#"{"algo":"hetero","machines":["epiphany3","xeonphi_like"],
+                "intensity":50,"w":2e7}"#,
+        )
+        .unwrap();
+        let gangs = spec.build().unwrap();
+        assert_eq!(gangs.len(), 2);
+    }
+
+    #[test]
+    fn spec_carries_the_gang_config() {
+        let spec = JobSpec::from_json(
+            r#"{"algo":"sort","n":4096,"cfg":{"apply_mode":"leader-only"}}"#,
+        )
+        .unwrap();
+        let gangs = spec.build().unwrap();
+        assert_eq!(gangs[0].cfg.to_json(), spec.cfg.to_json());
+        assert!(spec.cfg.to_json().contains("leader-only"));
+    }
+
+    #[test]
+    fn errors_name_the_field() {
+        for (doc, needle) in [
+            (r#"{"n":64}"#, "`algo`"),
+            (r#"{"algo":"warp"}"#, "`algo`"),
+            (r#"{"algo":"sort","n":-3}"#, "`n`"),
+            (r#"{"algo":"sort","n":0}"#, "`n`"),
+            (r#"{"algo":"sort","mystery":1}"#, "`mystery`"),
+            (r#"{"algo":"sort","machine":"cray"}"#, "`machine`"),
+            (r#"{"algo":"hetero","intensity":0.5}"#, "`intensity`"),
+            (r#"{"algo":"sort","cfg":{"apply_mode":"both"}}"#, "`apply_mode`"),
+            (r#"{"algo":"hetero","machines":["epiphany3","epiphany3"]}"#, "`machines`"),
+            (r#"[1,2]"#, "object"),
+        ] {
+            let err = JobSpec::from_json(doc).expect_err(doc).to_string();
+            assert!(err.contains(needle), "{doc}: {err} should mention {needle}");
+        }
+    }
+}

@@ -1,0 +1,429 @@
+//! The wire layer: newline-delimited JSON over a Unix-domain socket
+//! (optionally also TCP), hand-rolled on [`crate::util::json`].
+//!
+//! # Protocol
+//!
+//! One request line per connection; the server answers with one
+//! response line and closes. Every response carries `"ok"`.
+//!
+//! ```text
+//! request  := { "op": OP, ... } "\n"
+//! OP       := "submit" | "status" | "fetch" | "evict" | "ping"
+//!           | "shutdown"
+//! submit   := { "op":"submit", "spec": JOBSPEC }      -> { "ok":true, "id":N, "job":LABEL }
+//! status   := { "op":"status", "id":N }               -> { "ok":true, "status":{ id, job, state, stages, error } }
+//! fetch    := { "op":"fetch",  "id":N }               -> { "ok":true, "id":N, "artifact":{...} }
+//! evict    := { "op":"evict",  "id":N }               -> { "ok":true, "evicted":BOOL }
+//! ping     := { "op":"ping" }                         -> { "ok":true, "pong":true }
+//! shutdown := { "op":"shutdown" }                     -> { "ok":true, "stopping":true }
+//! error    :=                                         -> { "ok":false, "error":MSG }
+//! ```
+//!
+//! A full-queue submission is an `ok:false` *response*, never a hang —
+//! the bound lives in [`JobManager::submit_jobs`] and is checked
+//! before the budget is touched. `shutdown` stops the accept loop(s)
+//! in-process (no `process::exit`), drains the managers, and lets
+//! [`BoundServer::run`] return — which is what lets tests and the CI
+//! smoke run the daemon on an ordinary thread.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::UnixListener;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use crate::serve::manager::{ArtifactManager, JobManager, ServeConfig};
+use crate::serve::spec::JobSpec;
+use crate::util::error::{anyhow, bail, ensure, Result};
+use crate::util::json::{JsonObj, JsonValue};
+
+/// Where the server listens and what it runs under.
+#[derive(Debug, Clone, Default)]
+pub struct ServeOptions {
+    /// Unix-domain socket path (primary listener when set).
+    pub socket: Option<String>,
+    /// Optional TCP listen address (e.g. `127.0.0.1:7070`).
+    pub tcp: Option<String>,
+    /// Budget and queue bound.
+    pub config: ServeConfig,
+}
+
+struct ServerCtx {
+    mgr: Arc<JobManager>,
+    artifacts: Arc<ArtifactManager>,
+    stop: AtomicBool,
+}
+
+/// A server with its listeners bound but not yet accepting — split
+/// from [`serve`] so tests can learn the ephemeral TCP port before
+/// starting the (blocking) accept loop.
+pub struct BoundServer {
+    ctx: Arc<ServerCtx>,
+    #[cfg(unix)]
+    unix: Option<UnixListener>,
+    tcp: Option<TcpListener>,
+    socket_path: Option<String>,
+}
+
+impl BoundServer {
+    /// Bind the requested listeners and start the managers. A stale
+    /// socket file at the path is removed first.
+    pub fn bind(opts: &ServeOptions) -> Result<Self> {
+        #[cfg(not(unix))]
+        ensure!(
+            opts.socket.is_none(),
+            "unix-domain sockets are unsupported on this platform; use --tcp"
+        );
+        let artifacts = Arc::new(ArtifactManager::new());
+        let mgr = JobManager::start(&opts.config, Arc::clone(&artifacts));
+        let ctx = Arc::new(ServerCtx { mgr, artifacts, stop: AtomicBool::new(false) });
+        #[cfg(unix)]
+        let unix = match &opts.socket {
+            Some(path) => {
+                let _ = std::fs::remove_file(path);
+                Some(UnixListener::bind(path).map_err(|e| {
+                    anyhow!("serve: cannot bind unix socket `{path}`: {e}")
+                })?)
+            }
+            None => None,
+        };
+        let tcp = match &opts.tcp {
+            Some(addr) => Some(TcpListener::bind(addr.as_str()).map_err(|e| {
+                anyhow!("serve: cannot bind tcp address `{addr}`: {e}")
+            })?),
+            None => None,
+        };
+        #[cfg(unix)]
+        let have_primary = unix.is_some();
+        #[cfg(not(unix))]
+        let have_primary = false;
+        ensure!(
+            have_primary || tcp.is_some(),
+            "serve: need a unix socket path and/or a tcp address"
+        );
+        Ok(Self {
+            ctx,
+            #[cfg(unix)]
+            unix,
+            tcp,
+            socket_path: opts.socket.clone(),
+        })
+    }
+
+    /// The bound TCP address, when a TCP listener was requested.
+    #[must_use]
+    pub fn tcp_addr(&self) -> Option<SocketAddr> {
+        self.tcp.as_ref().and_then(|l| l.local_addr().ok())
+    }
+
+    /// Accept connections until a `shutdown` request arrives, then
+    /// drain the job manager and return a one-line summary. Blocks the
+    /// calling thread for the server's whole life.
+    pub fn run(self) -> Result<String> {
+        let ctx = self.ctx;
+        #[cfg(unix)]
+        let unix = self.unix;
+        let tcp = self.tcp;
+
+        #[cfg(unix)]
+        if let Some(ul) = unix {
+            if let Some(tl) = tcp {
+                // Both listeners: TCP on a helper thread; after the
+                // primary loop stops, a wake-up connection lets the
+                // helper observe the stop flag and exit.
+                let addr = tl.local_addr().ok();
+                let helper_ctx = Arc::clone(&ctx);
+                let helper = thread::Builder::new()
+                    .name("bsps-serve-tcp".into())
+                    .spawn(move || accept_tcp(&tl, &helper_ctx))
+                    .map_err(|e| anyhow!("serve: cannot spawn tcp listener: {e}"))?;
+                accept_unix(&ul, &ctx);
+                if let Some(addr) = addr {
+                    let _ = TcpStream::connect(addr);
+                }
+                let _ = helper.join();
+            } else {
+                accept_unix(&ul, &ctx);
+            }
+            return finish(&ctx, self.socket_path.as_deref());
+        }
+        if let Some(tl) = tcp {
+            accept_tcp(&tl, &ctx);
+        }
+        finish(&ctx, self.socket_path.as_deref())
+    }
+}
+
+fn finish(ctx: &ServerCtx, socket_path: Option<&str>) -> Result<String> {
+    ctx.mgr.join();
+    if let Some(path) = socket_path {
+        let _ = std::fs::remove_file(path);
+    }
+    Ok(format!("serve: stopped ({} artifacts retained)", ctx.artifacts.len()))
+}
+
+/// Bind and run in one call — the `bsps serve` entry point.
+pub fn serve(opts: &ServeOptions) -> Result<String> {
+    BoundServer::bind(opts)?.run()
+}
+
+#[cfg(unix)]
+fn accept_unix(listener: &UnixListener, ctx: &ServerCtx) {
+    for conn in listener.incoming() {
+        if let Ok(stream) = conn {
+            handle(stream, ctx);
+        }
+        if ctx.stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+}
+
+fn accept_tcp(listener: &TcpListener, ctx: &ServerCtx) {
+    for conn in listener.incoming() {
+        if let Ok(stream) = conn {
+            handle(stream, ctx);
+        }
+        if ctx.stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+}
+
+/// One connection: read a request line, answer one response line.
+/// Protocol errors become `ok:false` responses; transport errors drop
+/// the connection (the client sees EOF).
+fn handle<S: Read + Write>(stream: S, ctx: &ServerCtx) {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    if reader.read_line(&mut line).is_err() {
+        return;
+    }
+    let response = match respond(line.trim(), ctx) {
+        Ok(r) => r,
+        Err(e) => JsonObj::new()
+            .field("ok", JsonValue::Bool(false))
+            .str("error", &e.to_string())
+            .build()
+            .render(),
+    };
+    let mut stream = reader.into_inner();
+    let _ = writeln!(stream, "{response}");
+    let _ = stream.flush();
+}
+
+fn req_id(v: &JsonValue) -> Result<u64> {
+    match v.get("id").and_then(JsonValue::as_usize) {
+        Some(id) => Ok(id as u64),
+        None => bail!("request: `id` must be a non-negative integer"),
+    }
+}
+
+fn ok() -> JsonObj {
+    JsonObj::new().field("ok", JsonValue::Bool(true))
+}
+
+fn respond(line: &str, ctx: &ServerCtx) -> Result<String> {
+    let v = JsonValue::parse(line).map_err(|e| e.context("request"))?;
+    let Some(op) = v.get("op").and_then(JsonValue::as_str) else {
+        bail!("request: missing `op` (want submit|status|fetch|evict|ping|shutdown)");
+    };
+    match op {
+        "ping" => Ok(ok().field("pong", JsonValue::Bool(true)).build().render()),
+        "submit" => {
+            let Some(spec_v) = v.get("spec") else {
+                bail!("request: `submit` needs a `spec` object");
+            };
+            let spec = JobSpec::parse(spec_v)?;
+            let id = ctx.mgr.submit(&spec)?;
+            Ok(ok()
+                .num("id", id as f64)
+                .str("job", &spec.label())
+                .build()
+                .render())
+        }
+        "status" => {
+            let id = req_id(&v)?;
+            let Some(status) = ctx.mgr.status(id) else {
+                bail!("unknown job id {id}");
+            };
+            let status_v = JsonValue::parse(&status.to_json())
+                .map_err(|e| e.context("status render"))?;
+            Ok(ok().field("status", status_v).build().render())
+        }
+        "fetch" => {
+            let id = req_id(&v)?;
+            match ctx.artifacts.fetch(id) {
+                Some(artifact) => {
+                    let art_v = JsonValue::parse(&artifact)
+                        .map_err(|e| e.context("artifact render"))?;
+                    Ok(ok().num("id", id as f64).field("artifact", art_v).build().render())
+                }
+                None => match ctx.mgr.status(id) {
+                    Some(s) => bail!("job {id} not ready: state={}", s.state),
+                    None => bail!("unknown job id {id}"),
+                },
+            }
+        }
+        "evict" => {
+            let id = req_id(&v)?;
+            let evicted = ctx.mgr.forget(id);
+            Ok(ok().field("evicted", JsonValue::Bool(evicted)).build().render())
+        }
+        "shutdown" => {
+            ctx.stop.store(true, Ordering::SeqCst);
+            ctx.mgr.shutdown();
+            Ok(ok().field("stopping", JsonValue::Bool(true)).build().render())
+        }
+        other => bail!(
+            "request: unknown op `{other}` \
+             (want submit|status|fetch|evict|ping|shutdown)"
+        ),
+    }
+}
+
+/// Client side: one request/response round-trip against a running
+/// server, over the unix socket when given, else TCP.
+pub fn request(socket: Option<&str>, tcp: Option<&str>, line: &str) -> Result<JsonValue> {
+    #[cfg(unix)]
+    if let Some(path) = socket {
+        let stream = UnixStream::connect(path)
+            .map_err(|e| anyhow!("connect `{path}`: {e} (is `bsps serve` running?)"))?;
+        return roundtrip(stream, line);
+    }
+    #[cfg(not(unix))]
+    ensure!(socket.is_none(), "unix-domain sockets are unsupported on this platform");
+    match tcp {
+        Some(addr) => {
+            let stream = TcpStream::connect(addr)
+                .map_err(|e| anyhow!("connect `{addr}`: {e} (is `bsps serve` running?)"))?;
+            roundtrip(stream, line)
+        }
+        None => bail!("no server address: pass --socket <path> or --tcp <addr>"),
+    }
+}
+
+fn roundtrip<S: Read + Write>(stream: S, line: &str) -> Result<JsonValue> {
+    let mut stream = stream;
+    writeln!(stream, "{line}").map_err(|e| anyhow!("send request: {e}"))?;
+    stream.flush().map_err(|e| anyhow!("send request: {e}"))?;
+    let mut reader = BufReader::new(stream);
+    let mut response = String::new();
+    reader
+        .read_line(&mut response)
+        .map_err(|e| anyhow!("read response: {e}"))?;
+    ensure!(!response.trim().is_empty(), "server closed the connection without a response");
+    JsonValue::parse(response.trim()).map_err(|e| e.context("response"))
+}
+
+/// Unwrap a response: `Ok(v)` when `ok:true`, else the server's error.
+pub fn expect_ok(v: JsonValue) -> Result<JsonValue> {
+    if v.get("ok").and_then(JsonValue::as_bool) == Some(true) {
+        Ok(v)
+    } else {
+        let msg = v
+            .get("error")
+            .and_then(JsonValue::as_str)
+            .unwrap_or("malformed server response")
+            .to_string();
+        bail!("server: {msg}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcp_ping_and_shutdown_round_trip() {
+        let opts = ServeOptions {
+            socket: None,
+            tcp: Some("127.0.0.1:0".to_string()),
+            config: ServeConfig { machines: Vec::new(), cores: 4, queue_cap: 4 },
+        };
+        let server = BoundServer::bind(&opts).unwrap();
+        let addr = server.tcp_addr().expect("tcp bound").to_string();
+        let handle = thread::spawn(move || server.run().unwrap());
+
+        let pong =
+            expect_ok(request(None, Some(&addr), r#"{"op":"ping"}"#).unwrap()).unwrap();
+        assert_eq!(pong.get("pong").and_then(JsonValue::as_bool), Some(true));
+
+        let err = expect_ok(request(None, Some(&addr), r#"{"op":"warp"}"#).unwrap())
+            .expect_err("unknown op");
+        assert!(err.to_string().contains("unknown op"), "{err}");
+
+        let stop =
+            expect_ok(request(None, Some(&addr), r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+        assert_eq!(stop.get("stopping").and_then(JsonValue::as_bool), Some(true));
+        let summary = handle.join().unwrap();
+        assert!(summary.contains("stopped"), "{summary}");
+    }
+
+    #[test]
+    fn tcp_submit_fetch_evict_lifecycle() {
+        let opts = ServeOptions {
+            socket: None,
+            tcp: Some("127.0.0.1:0".to_string()),
+            config: ServeConfig { machines: Vec::new(), cores: 16, queue_cap: 4 },
+        };
+        let server = BoundServer::bind(&opts).unwrap();
+        let addr = server.tcp_addr().expect("tcp bound").to_string();
+        let handle = thread::spawn(move || server.run().unwrap());
+
+        let sub = expect_ok(
+            request(
+                None,
+                Some(&addr),
+                r#"{"op":"submit","spec":{"algo":"sort","n":4096,"seed":7}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let id = sub.get("id").and_then(JsonValue::as_usize).unwrap();
+        assert_eq!(sub.get("job").and_then(JsonValue::as_str), Some("sort_n4096"));
+
+        // Poll status until retired, then fetch.
+        let mut state = String::new();
+        for _ in 0..400 {
+            let st = expect_ok(
+                request(None, Some(&addr), &format!(r#"{{"op":"status","id":{id}}}"#))
+                    .unwrap(),
+            )
+            .unwrap();
+            state = st
+                .get("status")
+                .and_then(|s| s.get("state"))
+                .and_then(JsonValue::as_str)
+                .unwrap()
+                .to_string();
+            if state == "retired" {
+                break;
+            }
+            thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert_eq!(state, "retired");
+        let fetched = expect_ok(
+            request(None, Some(&addr), &format!(r#"{{"op":"fetch","id":{id}}}"#)).unwrap(),
+        )
+        .unwrap();
+        let art = fetched.get("artifact").unwrap();
+        assert_eq!(art.get("job").and_then(JsonValue::as_str), Some("sort_n4096"));
+
+        let evicted = expect_ok(
+            request(None, Some(&addr), &format!(r#"{{"op":"evict","id":{id}}}"#)).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(evicted.get("evicted").and_then(JsonValue::as_bool), Some(true));
+        let gone =
+            expect_ok(request(None, Some(&addr), &format!(r#"{{"op":"fetch","id":{id}}}"#)).unwrap());
+        assert!(gone.is_err(), "evicted artifact must not be fetchable");
+
+        expect_ok(request(None, Some(&addr), r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+        handle.join().unwrap();
+    }
+}

@@ -130,31 +130,7 @@ pub struct BenchRecorder {
     scalars: Vec<(String, f64)>,
 }
 
-/// Minimal JSON string escaping (quotes, backslashes, control chars).
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            '\r' => out.push_str("\\r"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
-
-/// A float as a JSON number (JSON has no NaN/Inf; those become null).
-fn json_num(v: f64) -> String {
-    if v.is_finite() {
-        format!("{v:e}")
-    } else {
-        "null".to_string()
-    }
-}
+use crate::util::json::{escape as json_escape, num as json_num};
 
 impl BenchRecorder {
     /// A recorder for the named suite.
@@ -232,219 +208,9 @@ impl BenchRecorder {
 // Perf-trajectory differ: parse two BENCH_<suite>.json files and fail
 // on throughput regressions (the `bsps benchdiff` subcommand + CI gate).
 
-/// A parsed JSON value (serde is not in the offline crate set; this
-/// recursive-descent parser covers everything [`BenchRecorder`] emits,
-/// which is plain standard JSON).
-#[derive(Debug, Clone, PartialEq)]
-pub enum JsonValue {
-    /// `null` (also what non-finite floats serialize to).
-    Null,
-    /// `true` / `false`.
-    Bool(bool),
-    /// Any JSON number.
-    Num(f64),
-    /// A string (escapes decoded).
-    Str(String),
-    /// An array.
-    Arr(Vec<JsonValue>),
-    /// An object, insertion-ordered.
-    Obj(Vec<(String, JsonValue)>),
-}
+pub use crate::util::json::JsonValue;
 
-impl JsonValue {
-    /// Parse a JSON document.
-    pub fn parse(text: &str) -> Result<JsonValue, Error> {
-        let bytes = text.as_bytes();
-        let mut pos = 0;
-        let v = parse_value(bytes, &mut pos)?;
-        skip_ws(bytes, &mut pos);
-        ensure!(pos == bytes.len(), "trailing garbage at byte {pos}");
-        Ok(v)
-    }
-
-    /// Object field lookup (None for non-objects / missing keys).
-    pub fn get(&self, key: &str) -> Option<&JsonValue> {
-        match self {
-            JsonValue::Obj(fields) => {
-                fields.iter().find_map(|(k, v)| (k == key).then_some(v))
-            }
-            _ => None,
-        }
-    }
-
-    /// The number in this value, if it is one.
-    pub fn as_num(&self) -> Option<f64> {
-        match self {
-            JsonValue::Num(n) => Some(*n),
-            _ => None,
-        }
-    }
-
-    /// The string in this value, if it is one.
-    pub fn as_str(&self) -> Option<&str> {
-        match self {
-            JsonValue::Str(s) => Some(s.as_str()),
-            _ => None,
-        }
-    }
-}
-
-use crate::util::error::{anyhow, bail, ensure, Error};
-
-fn skip_ws(b: &[u8], pos: &mut usize) {
-    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
-        *pos += 1;
-    }
-}
-
-fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), Error> {
-    skip_ws(b, pos);
-    ensure!(
-        *pos < b.len() && b[*pos] == c,
-        "expected `{}` at byte {pos}",
-        c as char
-    );
-    *pos += 1;
-    Ok(())
-}
-
-fn parse_value(b: &[u8], pos: &mut usize) -> Result<JsonValue, Error> {
-    skip_ws(b, pos);
-    ensure!(*pos < b.len(), "unexpected end of input");
-    match b[*pos] {
-        b'{' => parse_obj(b, pos),
-        b'[' => parse_arr(b, pos),
-        b'"' => Ok(JsonValue::Str(parse_string(b, pos)?)),
-        b't' => parse_lit(b, pos, "true", JsonValue::Bool(true)),
-        b'f' => parse_lit(b, pos, "false", JsonValue::Bool(false)),
-        b'n' => parse_lit(b, pos, "null", JsonValue::Null),
-        _ => parse_num(b, pos),
-    }
-}
-
-fn parse_lit(
-    b: &[u8],
-    pos: &mut usize,
-    lit: &str,
-    v: JsonValue,
-) -> Result<JsonValue, Error> {
-    ensure!(
-        b[*pos..].starts_with(lit.as_bytes()),
-        "bad literal at byte {pos}"
-    );
-    *pos += lit.len();
-    Ok(v)
-}
-
-fn parse_num(b: &[u8], pos: &mut usize) -> Result<JsonValue, Error> {
-    let start = *pos;
-    while *pos < b.len()
-        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
-    {
-        *pos += 1;
-    }
-    let text = std::str::from_utf8(&b[start..*pos]).expect("ascii");
-    text.parse::<f64>()
-        .map(JsonValue::Num)
-        .map_err(|_| anyhow!("bad number `{text}` at byte {start}"))
-}
-
-fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, Error> {
-    expect(b, pos, b'"')?;
-    let mut out = String::new();
-    loop {
-        ensure!(*pos < b.len(), "unterminated string");
-        match b[*pos] {
-            b'"' => {
-                *pos += 1;
-                return Ok(out);
-            }
-            b'\\' => {
-                *pos += 1;
-                ensure!(*pos < b.len(), "unterminated escape");
-                match b[*pos] {
-                    b'"' => out.push('"'),
-                    b'\\' => out.push('\\'),
-                    b'/' => out.push('/'),
-                    b'n' => out.push('\n'),
-                    b't' => out.push('\t'),
-                    b'r' => out.push('\r'),
-                    b'b' => out.push('\u{8}'),
-                    b'f' => out.push('\u{c}'),
-                    b'u' => {
-                        ensure!(*pos + 4 < b.len(), "truncated \\u escape");
-                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
-                            .map_err(|_| anyhow!("bad \\u escape"))?;
-                        let code = u32::from_str_radix(hex, 16)
-                            .map_err(|_| anyhow!("bad \\u escape `{hex}`"))?;
-                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
-                        *pos += 4;
-                    }
-                    c => bail!("bad escape `\\{}`", c as char),
-                }
-                *pos += 1;
-            }
-            _ => {
-                // Copy one UTF-8 scalar (multi-byte sequences intact).
-                let s = std::str::from_utf8(&b[*pos..])
-                    .map_err(|_| anyhow!("invalid UTF-8 in string"))?;
-                let c = s.chars().next().expect("non-empty");
-                out.push(c);
-                *pos += c.len_utf8();
-            }
-        }
-    }
-}
-
-fn parse_arr(b: &[u8], pos: &mut usize) -> Result<JsonValue, Error> {
-    expect(b, pos, b'[')?;
-    let mut items = Vec::new();
-    skip_ws(b, pos);
-    if *pos < b.len() && b[*pos] == b']' {
-        *pos += 1;
-        return Ok(JsonValue::Arr(items));
-    }
-    loop {
-        items.push(parse_value(b, pos)?);
-        skip_ws(b, pos);
-        ensure!(*pos < b.len(), "unterminated array");
-        match b[*pos] {
-            b',' => *pos += 1,
-            b']' => {
-                *pos += 1;
-                return Ok(JsonValue::Arr(items));
-            }
-            c => bail!("expected `,` or `]`, got `{}`", c as char),
-        }
-    }
-}
-
-fn parse_obj(b: &[u8], pos: &mut usize) -> Result<JsonValue, Error> {
-    expect(b, pos, b'{')?;
-    let mut fields = Vec::new();
-    skip_ws(b, pos);
-    if *pos < b.len() && b[*pos] == b'}' {
-        *pos += 1;
-        return Ok(JsonValue::Obj(fields));
-    }
-    loop {
-        skip_ws(b, pos);
-        let key = parse_string(b, pos)?;
-        expect(b, pos, b':')?;
-        let val = parse_value(b, pos)?;
-        fields.push((key, val));
-        skip_ws(b, pos);
-        ensure!(*pos < b.len(), "unterminated object");
-        match b[*pos] {
-            b',' => *pos += 1,
-            b'}' => {
-                *pos += 1;
-                return Ok(JsonValue::Obj(fields));
-            }
-            c => bail!("expected `,` or `}}`, got `{}`", c as char),
-        }
-    }
-}
+use crate::util::error::{anyhow, bail, Error};
 
 /// One benchmark row loaded back from a `BENCH_<suite>.json` file.
 #[derive(Debug, Clone, PartialEq)]

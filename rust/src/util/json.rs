@@ -1,0 +1,438 @@
+//! A reusable hand-rolled JSON reader/writer (serde is not in the
+//! offline crate set; the crate stays zero-dependency).
+//!
+//! Grown out of `util::benchtool`'s trajectory-file parser, promoted to
+//! its own module so every JSON surface in the crate — the
+//! `BENCH_*.json` perf files, [`GangConfig`](crate::bsp::GangConfig)
+//! round-trips, and the `bsps serve` wire protocol — parses and prints
+//! through one audited path.
+//!
+//! * [`JsonValue`] — a parsed document (recursive-descent parser over
+//!   the full standard grammar: objects, arrays, strings with escapes
+//!   incl. `\uXXXX`, numbers, literals; trailing garbage rejected).
+//! * [`escape`] / [`num`] — string-escaping and float-printing used by
+//!   every hand-rolled serializer.
+//! * [`JsonValue::render`] — the writer: serializes a value back to a
+//!   compact single-line document (object key order preserved), so
+//!   wire messages and stored artifacts are deterministic.
+//!
+//! ```
+//! use bsps::util::json::JsonValue;
+//!
+//! let v = JsonValue::parse(r#"{"op": "submit", "n": 4096}"#).unwrap();
+//! assert_eq!(v.get("op").and_then(JsonValue::as_str), Some("submit"));
+//! assert_eq!(v.get("n").and_then(JsonValue::as_num), Some(4096.0));
+//! assert_eq!(v.render(), r#"{"op":"submit","n":4096}"#);
+//! ```
+
+use crate::util::error::{anyhow, bail, ensure, Error};
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+#[must_use]
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A float as a JSON number (JSON has no NaN/Inf; those become `null`).
+///
+/// Integral values within the f64-exact range print as plain integers
+/// (`16`, not `1.6e1`) so ids and counts stay readable on the wire;
+/// everything else prints in exponent form, which `parse` reads back
+/// exactly.
+#[must_use]
+pub fn num(v: f64) -> String {
+    if !v.is_finite() {
+        "null".to_string()
+    } else if v == v.trunc() && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:e}")
+    }
+}
+
+/// A parsed JSON value (insertion-ordered objects; see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    /// `null` (also what non-finite floats serialize to).
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number.
+    Num(f64),
+    /// A string (escapes decoded).
+    Str(String),
+    /// An array.
+    Arr(Vec<JsonValue>),
+    /// An object, insertion-ordered.
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Parse a JSON document.
+    pub fn parse(text: &str) -> Result<JsonValue, Error> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        ensure!(pos == bytes.len(), "trailing garbage at byte {pos}");
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects / missing keys).
+    #[must_use]
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(fields) => {
+                fields.iter().find_map(|(k, v)| (k == key).then_some(v))
+            }
+            _ => None,
+        }
+    }
+
+    /// The number in this value, if it is one.
+    #[must_use]
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The string in this value, if it is one.
+    #[must_use]
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// The boolean in this value, if it is one.
+    #[must_use]
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The array items, if this value is an array.
+    #[must_use]
+    pub fn as_arr(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// The non-negative integer in this value, if it is one (rejects
+    /// fractional and out-of-range numbers rather than truncating).
+    #[must_use]
+    pub fn as_usize(&self) -> Option<usize> {
+        let n = self.as_num()?;
+        (n >= 0.0 && n == n.trunc() && n < 9.0e15).then_some(n as usize)
+    }
+
+    /// Serialize back to a compact single-line JSON document (object
+    /// key order preserved; see [`num`] for float printing).
+    #[must_use]
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Num(v) => out.push_str(&num(*v)),
+            JsonValue::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
+            JsonValue::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\":");
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// An insertion-ordered JSON object under construction: the writer-side
+/// companion to [`JsonValue`] for code that builds documents field by
+/// field (wire responses, stored artifacts, config round-trips).
+#[derive(Debug, Default)]
+pub struct JsonObj {
+    fields: Vec<(String, JsonValue)>,
+}
+
+impl JsonObj {
+    /// An empty object.
+    #[must_use]
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a field (builder-style).
+    #[must_use]
+    pub fn field(mut self, key: &str, value: JsonValue) -> Self {
+        self.fields.push((key.to_string(), value));
+        self
+    }
+
+    /// Append a string field.
+    #[must_use]
+    pub fn str(self, key: &str, value: &str) -> Self {
+        self.field(key, JsonValue::Str(value.to_string()))
+    }
+
+    /// Append a numeric field.
+    #[must_use]
+    pub fn num(self, key: &str, value: f64) -> Self {
+        self.field(key, JsonValue::Num(value))
+    }
+
+    /// Finish: the assembled [`JsonValue::Obj`].
+    #[must_use]
+    pub fn build(self) -> JsonValue {
+        JsonValue::Obj(self.fields)
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), Error> {
+    skip_ws(b, pos);
+    ensure!(
+        *pos < b.len() && b[*pos] == c,
+        "expected `{}` at byte {pos}",
+        c as char
+    );
+    *pos += 1;
+    Ok(())
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<JsonValue, Error> {
+    skip_ws(b, pos);
+    ensure!(*pos < b.len(), "unexpected end of input");
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(JsonValue::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", JsonValue::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", JsonValue::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", JsonValue::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn parse_lit(
+    b: &[u8],
+    pos: &mut usize,
+    lit: &str,
+    v: JsonValue,
+) -> Result<JsonValue, Error> {
+    ensure!(
+        b[*pos..].starts_with(lit.as_bytes()),
+        "bad literal at byte {pos}"
+    );
+    *pos += lit.len();
+    Ok(v)
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<JsonValue, Error> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos]).expect("ascii");
+    text.parse::<f64>()
+        .map(JsonValue::Num)
+        .map_err(|_| anyhow!("bad number `{text}` at byte {start}"))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, Error> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        ensure!(*pos < b.len(), "unterminated string");
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                ensure!(*pos < b.len(), "unterminated escape");
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        ensure!(*pos + 4 < b.len(), "truncated \\u escape");
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
+                            .map_err(|_| anyhow!("bad \\u escape"))?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .map_err(|_| anyhow!("bad \\u escape `{hex}`"))?;
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    c => bail!("bad escape `\\{}`", c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // Copy one UTF-8 scalar (multi-byte sequences intact).
+                let s = std::str::from_utf8(&b[*pos..])
+                    .map_err(|_| anyhow!("invalid UTF-8 in string"))?;
+                let c = s.chars().next().expect("non-empty");
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<JsonValue, Error> {
+    expect(b, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(JsonValue::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        ensure!(*pos < b.len(), "unterminated array");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(JsonValue::Arr(items));
+            }
+            c => bail!("expected `,` or `]`, got `{}`", c as char),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<JsonValue, Error> {
+    expect(b, pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(JsonValue::Obj(fields));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        expect(b, pos, b':')?;
+        let val = parse_value(b, pos)?;
+        fields.push((key, val));
+        skip_ws(b, pos);
+        ensure!(*pos < b.len(), "unterminated object");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(JsonValue::Obj(fields));
+            }
+            c => bail!("expected `,` or `}}`, got `{}`", c as char),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_roundtrips_through_parse() {
+        let doc = r#"{"op":"submit","n":4096,"ok":true,"tags":["a","b"],"none":null,"x":1.5e-3}"#;
+        let v = JsonValue::parse(doc).unwrap();
+        let rendered = v.render();
+        assert_eq!(JsonValue::parse(&rendered).unwrap(), v);
+        // Integral numbers print as integers, not exponent form.
+        assert!(rendered.contains("\"n\":4096"), "{rendered}");
+        assert!(rendered.contains("\"x\":1.5e-3"), "{rendered}");
+    }
+
+    #[test]
+    fn num_prints_integers_and_nulls() {
+        assert_eq!(num(16.0), "16");
+        assert_eq!(num(-3.0), "-3");
+        assert_eq!(num(0.5), "5e-1");
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+        // Past the f64-exact integer range: exponent form, not a lie.
+        assert_eq!(num(1e16), "1e16");
+    }
+
+    #[test]
+    fn as_usize_rejects_fractional_and_negative() {
+        assert_eq!(JsonValue::Num(64.0).as_usize(), Some(64));
+        assert_eq!(JsonValue::Num(-1.0).as_usize(), None);
+        assert_eq!(JsonValue::Num(1.5).as_usize(), None);
+        assert_eq!(JsonValue::Str("64".into()).as_usize(), None);
+    }
+
+    #[test]
+    fn obj_builder_preserves_field_order() {
+        let v = JsonObj::new()
+            .str("op", "submit")
+            .num("id", 7.0)
+            .field("ok", JsonValue::Bool(true))
+            .build();
+        assert_eq!(v.render(), r#"{"op":"submit","id":7,"ok":true}"#);
+    }
+
+    #[test]
+    fn escape_covers_control_chars() {
+        assert_eq!(escape("a\"b\\c\nd\u{1}"), "a\\\"b\\\\c\\nd\\u0001");
+    }
+}

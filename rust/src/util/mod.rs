@@ -13,6 +13,10 @@
 //!   from simulated core-to-core write timings, exactly like §5).
 //! * [`prop`] — a miniature property-testing harness (random cases with
 //!   shrink-by-halving on failure).
+//! * [`json`] — a reusable hand-rolled JSON reader/writer (parser,
+//!   escaping, deterministic compact rendering) shared by the bench
+//!   trajectory files, `GangConfig` round-trips, and the `bsps serve`
+//!   wire protocol.
 //! * [`benchtool`] — a criterion-flavoured bench runner (warmup, timed
 //!   samples, mean ± CI, throughput rows, JSON trajectory files).
 //! * [`pool`] — thread/buffer pools: the persistent SPMD gang pool,
@@ -25,6 +29,7 @@ pub mod benchtool;
 pub mod error;
 pub mod fit;
 pub mod humanfmt;
+pub mod json;
 pub mod pool;
 pub mod prng;
 pub mod prop;

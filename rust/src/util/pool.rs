@@ -1,11 +1,11 @@
 //! Thread and buffer pools: scoped SPMD launch, a **persistent gang
 //! pool** (the SPMD core threads are spawned once per process and
-//! checked out per run, not re-spawned per `run_gang`), a recycling
+//! checked out per run, not re-spawned per gang launch), a recycling
 //! [`BufferPool`] for token/message payloads, a typed [`TaskPool`]
 //! whose submits are plain queue pushes (no per-job boxing) — the
 //! substrates behind the engine's zero-allocation steady state — and
 //! [`CoreBudget`], the budget-aware checkout/waitlist the multi-gang
-//! scheduler admits gangs against instead of letting every `run_gang`
+//! scheduler admits gangs against instead of letting every gang launch
 //! grow the worker pool ad hoc.
 //!
 //! (tokio is not in the offline crate set; the BSP runtime needs only
@@ -135,7 +135,7 @@ struct GangWorker {
 /// cores must occupy distinct threads; a shared job queue could
 /// deadlock two concurrent gangs). Workers are spawned on demand, kept
 /// for the life of the process, and reused by later runs: repeated
-/// `run_gang` calls stop paying `p` thread spawns + joins each.
+/// `Gang::run` calls stop paying `p` thread spawns + joins each.
 ///
 /// Panics in any core are caught, the remaining cores are joined (the
 /// engine's poisoned barrier unwinds them), and the first panic is
@@ -600,7 +600,7 @@ impl CoreBudget {
 
     /// Check `cores` out of class 0, blocking on a strictly FIFO
     /// waitlist until they are free. This is the scheduler-mediated
-    /// entry point's checkout (`bsp::engine::run_gang_budgeted`).
+    /// entry point's checkout (`bsp::engine::Gang::with_budget`).
     ///
     /// Panics if `cores` exceeds the class capacity (waiting would
     /// deadlock: the request can never be satisfied).

@@ -11,7 +11,7 @@
 
 use std::sync::Mutex;
 
-use bsps::bsp::{run_gang_cfg, ApplyMode, GangConfig};
+use bsps::bsp::{ApplyMode, Gang, GangConfig};
 use bsps::model::params::AcceleratorParams;
 use bsps::util::prng::SplitMix64;
 
@@ -28,7 +28,7 @@ fn run_once(seed: u64, run_idx: u64, mode: ApplyMode) -> Vec<u32> {
     let digests: Mutex<Vec<Vec<u32>>> = Mutex::new(vec![Vec::new(); P]);
     let cfg = GangConfig { apply_mode: mode, ..Default::default() };
 
-    let _ = run_gang_cfg(&m, None, false, cfg, |ctx| {
+    let _ = Gang::new(&m).with_cfg(cfg).run(|ctx| {
         let s = ctx.pid();
         let v1 = ctx.register("v1", VAR_LEN).unwrap();
         let v2 = ctx.register("v2", VAR_LEN).unwrap();

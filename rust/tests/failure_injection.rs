@@ -8,7 +8,7 @@ use std::time::Duration;
 
 use bsps::bsp::fault::{sweep_matrix, CaseOutcome};
 use bsps::bsp::{
-    run_gang, run_gang_cfg, CheckpointPolicy, FaultMode, FaultSite, GangConfig, VarHandle,
+    CheckpointPolicy, FaultMode, FaultSite, Gang, GangConfig, VarHandle,
 };
 use bsps::model::params::AcceleratorParams;
 use bsps::model::predict;
@@ -24,7 +24,7 @@ fn machine(p: usize) -> AcceleratorParams {
 #[test]
 fn panic_before_first_sync_unwinds_gang() {
     let r = std::panic::catch_unwind(|| {
-        let _ = run_gang(&machine(8), None, false, |ctx| {
+        let _ = Gang::new(&machine(8)).run(|ctx| {
             if ctx.pid() == 0 {
                 panic!("early death");
             }
@@ -43,7 +43,7 @@ fn panic_mid_hyperstep_unwinds_gang() {
     }
     let reg = Arc::new(reg);
     let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        let _ = run_gang(&m, Some(reg), true, |ctx| {
+        let _ = Gang::new(&m).with_streams(reg).with_prefetch(true).run(|ctx| {
             let h = ctx.stream_open(ctx.pid()).unwrap();
             let mut buf = Vec::new();
             for i in 0..4 {
@@ -71,7 +71,7 @@ fn panic_with_prefetch_in_flight_unwinds_gang() {
     }
     let reg = Arc::new(reg);
     let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        let _ = run_gang(&m, Some(reg), true, |ctx| {
+        let _ = Gang::new(&m).with_streams(reg).with_prefetch(true).run(|ctx| {
             let h = ctx.stream_open(ctx.pid()).unwrap();
             let mut buf = Vec::new();
             for i in 0..8 {
@@ -97,7 +97,7 @@ fn overflowing_put_aborts_the_gang_instead_of_hanging_it() {
     // poison guard unwinds every parked core, and this test completes
     // with an error instead of timing out.
     let r = std::panic::catch_unwind(|| {
-        let _ = run_gang(&machine(8), None, false, |ctx| {
+        let _ = Gang::new(&machine(8)).run(|ctx| {
             let x = ctx.register("x", 2).unwrap();
             ctx.sync();
             if ctx.pid() == 1 {
@@ -117,7 +117,7 @@ fn out_of_range_get_aborts_the_gang_instead_of_hanging_it() {
     // the issuing core with a named diagnostic (see the engine unit
     // tests for the message contents) and the gang unwinds cleanly.
     let r = std::panic::catch_unwind(|| {
-        let _ = run_gang(&machine(8), None, false, |ctx| {
+        let _ = Gang::new(&machine(8)).run(|ctx| {
             let x = ctx.register("x", 4).unwrap();
             ctx.sync();
             if ctx.pid() == 3 {
@@ -136,7 +136,7 @@ fn var_resize_race_is_caught_at_the_plan_phase() {
     // smaller. Whichever side loses the race (enqueue check or the
     // plan leader's re-check), the gang must abort cleanly.
     let r = std::panic::catch_unwind(|| {
-        let _ = run_gang(&machine(2), None, false, |ctx| {
+        let _ = Gang::new(&machine(2)).run(|ctx| {
             let x = ctx.register("x", 8).unwrap();
             ctx.sync();
             if ctx.pid() == 0 {
@@ -158,7 +158,7 @@ fn double_open_is_an_error_not_a_crash() {
     let reg = Arc::new(reg);
     let errors = Arc::new(AtomicUsize::new(0));
     let errors2 = Arc::clone(&errors);
-    let _ = run_gang(&m, Some(reg), true, move |ctx| {
+    let _ = Gang::new(&m).with_streams(reg).with_prefetch(true).run(move |ctx| {
         // Both cores race for stream 0; exactly one must win.
         match ctx.stream_open(0) {
             Ok(h) => {
@@ -179,7 +179,7 @@ fn cursor_overrun_is_an_error_not_a_crash() {
     let m = machine(1);
     let mut reg = StreamRegistry::new(&m);
     reg.create(8, 4, None).unwrap();
-    let _ = run_gang(&m, Some(Arc::new(reg)), true, |ctx| {
+    let _ = Gang::new(&m).with_streams(Arc::new(reg)).with_prefetch(true).run(|ctx| {
         let h = ctx.stream_open(0).unwrap();
         let mut buf = Vec::new();
         ctx.stream_move_down(h, &mut buf).unwrap();
@@ -199,7 +199,7 @@ fn unregistered_var_put_panics_cleanly() {
     // loudly — at enqueue, on the issuing core's thread — not corrupt
     // memory or hang the gang.
     let r = std::panic::catch_unwind(|| {
-        let _ = run_gang(&machine(2), None, false, |ctx| {
+        let _ = Gang::new(&machine(2)).run(|ctx| {
             if ctx.pid() == 0 {
                 ctx.put(1, VarHandle::from_raw(7), 0, &[1.0]);
             }
@@ -211,10 +211,10 @@ fn unregistered_var_put_panics_cleanly() {
 
 #[test]
 fn gang_reuse_after_failure_is_fresh() {
-    // A failed run must not poison *subsequent* gangs (each run_gang
+    // A failed run must not poison *subsequent* gangs (each Gang::run
     // builds fresh shared state).
     let _ = std::panic::catch_unwind(|| {
-        let _ = run_gang(&machine(4), None, false, |ctx| {
+        let _ = Gang::new(&machine(4)).run(|ctx| {
             if ctx.pid() == 3 {
                 panic!("boom");
             }
@@ -222,7 +222,7 @@ fn gang_reuse_after_failure_is_fresh() {
         });
     });
     // Fresh gang works fine.
-    let out = run_gang(&machine(4), None, false, |ctx| {
+    let out = Gang::new(&machine(4)).run(|ctx| {
         ctx.sync();
     });
     assert_eq!(out.cost.len(), 1);
@@ -327,7 +327,8 @@ fn barrier_watchdog_names_the_never_arriving_core() {
     };
     let t0 = std::time::Instant::now();
     let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        let _ = run_gang_cfg(&m, Some(Arc::new(reg)), true, cfg, |ctx| {
+        let gang = Gang::new(&m).with_streams(Arc::new(reg)).with_prefetch(true);
+        let _ = gang.with_cfg(cfg).run(|ctx| {
             let h = ctx.stream_open(ctx.pid()).unwrap();
             let mut buf = Vec::new();
             for _ in 0..4 {
@@ -377,12 +378,12 @@ fn checkpoint_charge_matches_the_closed_form() {
         }
         ctx.stream_close(h).unwrap();
     };
-    let plain = run_gang_cfg(&m, Some(mk_reg()), true, GangConfig::default(), kernel);
+    let plain = Gang::new(&m).with_streams(mk_reg()).with_prefetch(true).run(kernel);
     let cfg = GangConfig {
         checkpoint: Some(CheckpointPolicy::every(2)),
         ..Default::default()
     };
-    let ckpt = run_gang_cfg(&m, Some(mk_reg()), true, cfg, kernel);
+    let ckpt = Gang::new(&m).with_streams(mk_reg()).with_prefetch(true).with_cfg(cfg).run(kernel);
     // 4 checkpoints × (4 cores × 16 words of `state`) = 256 words.
     assert_eq!(ckpt.checkpoint_words, 256);
     assert_eq!(plain.checkpoint_words, 0);

@@ -8,7 +8,7 @@
 //! the engine's hop-weighted `h_noc` must collapse onto the flat `h`
 //! when the mesh routes are free (`hop_cycles == 0`).
 
-use bsps::bsp::{run_gang_cfg, Ctx, GangConfig};
+use bsps::bsp::{Ctx, Gang, GangConfig};
 use bsps::model::params::AcceleratorParams;
 use bsps::sim::noc::Noc;
 use bsps::sim::CYCLES_PER_FLOP;
@@ -84,7 +84,7 @@ fn exchange(noc: Option<Noc>, seed: u64) -> Vec<(u64, f64)> {
     let mut m = AcceleratorParams::epiphany3();
     m.p = 16;
     let cfg = GangConfig { noc, ..Default::default() };
-    let out = run_gang_cfg(&m, None, false, cfg, move |ctx: &mut Ctx| {
+    let out = Gang::new(&m).with_cfg(cfg).run(move |ctx: &mut Ctx| {
         let x = ctx.register("x", 64).unwrap();
         ctx.sync();
         let mut rng = bsps::util::prng::SplitMix64::new(seed ^ ctx.pid() as u64);

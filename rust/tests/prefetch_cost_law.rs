@@ -11,7 +11,7 @@
 use std::sync::Arc;
 
 use bsps::algos::inner_product;
-use bsps::bsp::{run_gang, Ctx};
+use bsps::bsp::{Ctx, Gang};
 use bsps::coordinator::BspsEnv;
 use bsps::model::params::AcceleratorParams;
 use bsps::stream::StreamRegistry;
@@ -44,7 +44,7 @@ fn token_loop(
         }
         ctx.stream_close(h).unwrap();
     };
-    run_gang(m, Some(Arc::new(reg)), prefetch, kernel)
+    Gang::new(m).with_streams(Arc::new(reg)).with_prefetch(prefetch).run(kernel)
 }
 
 #[test]

@@ -12,7 +12,7 @@ use std::time::Duration;
 use bsps::algos::sort::{self, SortConfig};
 use bsps::bsp::sched::{GangJob, GangScheduler};
 use bsps::bsp::{
-    run_gang, run_gang_cfg, CheckpointPolicy, Ctx, FaultMode, FaultSite, GangConfig, RetryPolicy,
+    CheckpointPolicy, Ctx, FaultMode, FaultSite, Gang, GangConfig, RetryPolicy,
 };
 use bsps::coordinator::SweepReport;
 use bsps::model::params::AcceleratorParams;
@@ -81,7 +81,7 @@ fn oversubscribed_queue_matches_serial_execution() {
     for i in 0..JOBS {
         let sink = Arc::new(Mutex::new(BTreeMap::new()));
         let kern = stress_kernel(1000 + i as u64, Arc::clone(&sink));
-        let out = run_gang(&machine(P), None, false, |ctx| kern(ctx));
+        let out = Gang::new(&machine(P)).run(|ctx| kern(ctx));
         serial_digests.push(sink.lock().unwrap().clone());
         serial_costs.push(out.cost.supersteps.clone());
     }
@@ -175,7 +175,7 @@ fn failure_injection_retires_the_faulty_gang_without_wedging() {
     // The process-wide pools survived the poisoned gang: run once more.
     let sink = Arc::new(Mutex::new(BTreeMap::new()));
     let kern = stress_kernel(99, Arc::clone(&sink));
-    let _ = run_gang(&machine(4), None, false, |ctx| kern(ctx));
+    let _ = Gang::new(&machine(4)).run(|ctx| kern(ctx));
     assert_eq!(sink.lock().unwrap().len(), 4);
 }
 
@@ -298,7 +298,7 @@ fn retried_gangs_interleave_with_healthy_ones_under_a_shared_budget() {
         // cold, which lands in a different ledger row than a staged
         // prefetch would — the blocking-fetch path keeps the Eq. 1
         // rows byte-comparable (same trade the fault sweep makes).
-        let out = run_gang_cfg(&m, Some(mk_reg(seed)), false, cfg, |ctx| kern(ctx));
+        let out = Gang::new(&m).with_streams(mk_reg(seed)).with_cfg(cfg).run(|ctx| kern(ctx));
         let digests = sink.lock().unwrap().clone();
         reference.push((out, digests));
     }

@@ -1,0 +1,251 @@
+//! End-to-end lifecycle tests for the `bsps serve` sweep service: two
+//! concurrent clients interleaving sort and cannon jobs over a
+//! unix-domain socket, full lifecycle observation
+//! (`queued → admitted → running → retired`), byte-identity of served
+//! artifacts against direct `GangScheduler` runs, graceful bounded-queue
+//! rejection (never a hang, budget untouched), and a job-spec parse
+//! fuzz (malformed JSON must fail cleanly, naming the offending field).
+
+#![cfg(unix)]
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use bsps::bsp::sched::GangScheduler;
+use bsps::coordinator::Report;
+use bsps::serve::wire::{expect_ok, request};
+use bsps::serve::{BoundServer, JobSpec, ServeConfig, ServeOptions};
+use bsps::util::json::JsonValue;
+use bsps::util::prop::{check, Gen};
+
+/// A unique per-test socket path under the system temp dir.
+fn socket_path(tag: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("bsps-serve-{tag}-{}.sock", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+/// Start a service on a fresh unix socket; returns (path, join handle).
+fn start(tag: &str, cores: usize, queue_cap: usize) -> (String, thread::JoinHandle<String>) {
+    let path = socket_path(tag);
+    let opts = ServeOptions {
+        socket: Some(path.clone()),
+        tcp: None,
+        config: ServeConfig { machines: Vec::new(), cores, queue_cap },
+    };
+    let server = BoundServer::bind(&opts).expect("bind serve socket");
+    let handle = thread::spawn(move || server.run().expect("serve run"));
+    // The listener exists as soon as bind returns; confirm liveness.
+    let pong = req(&path, r#"{"op":"ping"}"#);
+    assert_eq!(pong.get("pong").and_then(JsonValue::as_bool), Some(true));
+    (path, handle)
+}
+
+/// One ok-checked request round-trip over the unix socket.
+fn req(sock: &str, line: &str) -> JsonValue {
+    expect_ok(request(Some(sock), None, line).expect("request")).expect("server ok")
+}
+
+/// Submit a spec; returns the assigned job id.
+fn submit(sock: &str, spec: &str) -> u64 {
+    let resp = req(sock, &format!(r#"{{"op":"submit","spec":{spec}}}"#));
+    resp.get("id").and_then(JsonValue::as_usize).expect("job id") as u64
+}
+
+/// Poll a job to retirement, asserting every observed state is a legal
+/// lifecycle state and that the stages object is always present.
+/// Panics (not hangs) if the job wedges past the deadline.
+fn wait_retired(sock: &str, id: u64) -> JsonValue {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let resp = req(sock, &format!(r#"{{"op":"status","id":{id}}}"#));
+        let status = resp.get("status").expect("status object").clone();
+        let state = status.get("state").and_then(JsonValue::as_str).expect("state");
+        assert!(
+            ["queued", "admitted", "running", "retired"].contains(&state),
+            "job {id} reported unknown state `{state}`"
+        );
+        assert!(status.get("stages").is_some(), "job {id} status has no stages");
+        if state == "retired" {
+            return status;
+        }
+        assert!(Instant::now() < deadline, "job {id} wedged (state `{state}`)");
+        thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Fetch a retired job's artifact object.
+fn fetch(sock: &str, id: u64) -> JsonValue {
+    req(sock, &format!(r#"{{"op":"fetch","id":{id}}}"#))
+        .get("artifact")
+        .expect("artifact")
+        .clone()
+}
+
+/// The serial oracle: build the spec's gangs in-process and run them
+/// through the batch scheduler; returns the rendered per-gang reports.
+fn serial_reports(spec: &str, cores: usize) -> Vec<String> {
+    let gangs = JobSpec::from_json(spec).expect("spec parses").build().expect("spec builds");
+    let out = GangScheduler::new(cores).run(gangs);
+    out.jobs
+        .iter()
+        .map(|j| {
+            Report::from_outcome(&j.machine, j.outcome.as_ref().expect("gang ran")).to_json()
+        })
+        .collect()
+}
+
+/// Served artifact vs serial oracle, gang by gang, byte for byte.
+fn assert_artifact_identical(label: &str, artifact: &JsonValue, spec: &str, cores: usize) {
+    let served: Vec<String> = artifact
+        .get("gangs")
+        .and_then(JsonValue::as_arr)
+        .expect("gangs array")
+        .iter()
+        .map(|g| g.get("report").expect("gang report").render())
+        .collect();
+    let direct = serial_reports(spec, cores);
+    assert_eq!(served.len(), direct.len(), "{label}: gang count differs");
+    for (gi, (s, d)) in served.iter().zip(&direct).enumerate() {
+        assert_eq!(s, d, "{label}: gang {gi} served report differs from serial run");
+    }
+}
+
+const SORT_SPEC: &str = r#"{"algo":"sort","n":4096,"seed":7}"#;
+const CANNON_SPEC: &str = r#"{"algo":"cannon","n":64,"m":2,"seed":9}"#;
+
+#[test]
+fn two_clients_interleave_sort_and_cannon_byte_identical() {
+    let (sock, server) = start("interleave", 16, 8);
+    let mut clients = Vec::new();
+    for (tag, spec) in [("sort", SORT_SPEC), ("cannon", CANNON_SPEC)] {
+        let sock = sock.clone();
+        clients.push(thread::spawn(move || {
+            // Each client interleaves two submissions of its recipe.
+            let a = submit(&sock, spec);
+            let b = submit(&sock, spec);
+            for id in [a, b] {
+                let status = wait_retired(&sock, id);
+                assert!(
+                    status.get("error").map(JsonValue::render) == Some("null".to_string()),
+                    "{tag} job {id} errored: {}",
+                    status.render()
+                );
+                assert_artifact_identical(tag, &fetch(&sock, id), spec, 16);
+            }
+            (a, b)
+        }));
+    }
+    let ids: Vec<(u64, u64)> =
+        clients.into_iter().map(|c| c.join().expect("client thread")).collect();
+    // Four distinct ids across the two clients.
+    let mut all: Vec<u64> = ids.iter().flat_map(|(a, b)| [*a, *b]).collect();
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len(), 4, "ids collided: {ids:?}");
+    req(&sock, r#"{"op":"shutdown"}"#);
+    let summary = server.join().expect("server thread");
+    assert!(summary.contains("stopped"), "{summary}");
+}
+
+#[test]
+fn bounded_queue_rejects_gracefully_and_budget_survives() {
+    // cores == one sort gang: at most one job runs, the next blocks in
+    // admission, one fits the queue — further submissions must be
+    // rejected at the door with `queue-full`, without touching the
+    // budget and without ever hanging this client.
+    let (sock, server) = start("backpressure", 16, 1);
+    let mut accepted = Vec::new();
+    let mut rejected = 0;
+    for i in 0..12 {
+        let spec = format!(r#"{{"algo":"sort","n":65536,"seed":{i}}}"#);
+        let resp =
+            request(Some(&sock), None, &format!(r#"{{"op":"submit","spec":{spec}}}"#))
+                .expect("request");
+        if resp.get("ok").and_then(JsonValue::as_bool) == Some(true) {
+            accepted.push(resp.get("id").and_then(JsonValue::as_usize).unwrap() as u64);
+        } else {
+            let err = resp.get("error").and_then(JsonValue::as_str).unwrap_or("");
+            assert!(err.contains("queue-full"), "unexpected rejection: {err}");
+            rejected += 1;
+        }
+    }
+    assert!(rejected > 0, "queue bound never reached across 12 submissions");
+    assert!(!accepted.is_empty(), "every submission was rejected");
+    // Every accepted job retires cleanly: rejections stranded nothing.
+    for id in &accepted {
+        let status = wait_retired(&sock, *id);
+        assert_eq!(
+            status.get("error").map(JsonValue::render),
+            Some("null".to_string()),
+            "job {id} errored after queue backpressure: {}",
+            status.render()
+        );
+    }
+    // The budget is untouched by rejections: a fresh job still runs.
+    let id = submit(&sock, SORT_SPEC);
+    wait_retired(&sock, id);
+    assert_artifact_identical("post-rejection", &fetch(&sock, id), SORT_SPEC, 16);
+    req(&sock, r#"{"op":"shutdown"}"#);
+    server.join().expect("server thread");
+}
+
+/// Building blocks for malformed specs: a well-formed base plus a pool
+/// of corruptions. Every corruption must yield a clean `Err` whose
+/// message names the offending field (or the parse context) — never a
+/// panic, never an empty message.
+#[test]
+fn job_spec_fuzz_fails_clean_naming_the_field() {
+    // Targeted corruptions with the field the error must name.
+    let targeted: [(&str, &str); 8] = [
+        (r#"{"algo":"warp"}"#, "algo"),
+        (r#"{"algo":"sort","n":-4}"#, "n"),
+        (r#"{"algo":"sort","n":"big"}"#, "n"),
+        (r#"{"algo":"cannon","m":0}"#, "m"),
+        (r#"{"algo":"sort","frobnicate":1}"#, "frobnicate"),
+        (r#"{"algo":"sort","machine":"banana"}"#, "machine"),
+        (r#"{"algo":"hetero","intensity":0}"#, "intensity"),
+        (r#"{"algo":"hetero","w":-1}"#, "w"),
+    ];
+    for (spec, field) in targeted {
+        let err = JobSpec::from_json(spec).expect_err(spec).to_string();
+        assert!(err.contains("job spec"), "`{spec}` → `{err}`");
+        assert!(err.contains(field), "`{spec}` error `{err}` does not name `{field}`");
+    }
+    // Random structural corruption: truncations and token splices into
+    // a valid spec must all come back as clean errors in the job-spec
+    // context. (`JobSpec::from_json` returning at all proves no panic.)
+    let base = r#"{"algo":"sort","n":4096,"token_words":64,"seed":7}"#;
+    let splice_pool =
+        ["]", "}", "{", "\"", ",,", ":null:", "1e999", "--", "\u{0}", "nul"];
+    check("malformed job specs fail clean", 200, |g: &mut Gen| {
+        let cut = g.rng.next_range(1, base.len());
+        let splice = splice_pool[g.rng.next_range(0, splice_pool.len())];
+        let corrupted = format!("{}{}{}", &base[..cut], splice, &base[cut..]);
+        if let Err(e) = JobSpec::from_json(&corrupted) {
+            let msg = e.to_string();
+            assert!(!msg.is_empty(), "empty error for `{corrupted}`");
+            assert!(msg.contains("job spec"), "`{corrupted}` → `{msg}`");
+        }
+        // A truncation can never parse: it must error, not panic.
+        let truncated = &base[..cut];
+        let err = JobSpec::from_json(truncated).expect_err(truncated).to_string();
+        assert!(err.contains("job spec"), "`{truncated}` → `{err}`");
+    });
+    // The same guarantees hold over the wire: a malformed spec is an
+    // `ok:false` response, and the connection survives for the next op.
+    let (sock, server) = start("fuzz", 16, 4);
+    let resp = request(
+        Some(&sock),
+        None,
+        r#"{"op":"submit","spec":{"algo":"sort","n":"big"}}"#,
+    )
+    .expect("request");
+    assert_eq!(resp.get("ok").and_then(JsonValue::as_bool), Some(false));
+    let err = resp.get("error").and_then(JsonValue::as_str).unwrap_or("");
+    assert!(err.contains("n"), "wire error must name the field: {err}");
+    let pong = req(&sock, r#"{"op":"ping"}"#);
+    assert_eq!(pong.get("pong").and_then(JsonValue::as_bool), Some(true));
+    req(&sock, r#"{"op":"shutdown"}"#);
+    server.join().expect("server thread");
+}

@@ -11,7 +11,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 use bsps::algos::{cannon_ml, inner_product, sort, spmv, video};
-use bsps::bsp::{run_gang_cfg, AnalysisMode, FindingKind, GangConfig};
+use bsps::bsp::{AnalysisMode, FindingKind, Gang, GangConfig};
 use bsps::coordinator::BspsEnv;
 use bsps::model::params::AcceleratorParams;
 use bsps::stream::StreamRegistry;
@@ -37,7 +37,7 @@ fn deny_cfg() -> GangConfig {
 fn detector_write_write_conflict() {
     // Two cores put overlapping halves of the same interval on one
     // destination in one superstep: last-apply-wins nondeterminism.
-    let out = run_gang_cfg(&epiphany(4), None, false, warn_cfg(), |ctx| {
+    let out = Gang::new(&epiphany(4)).with_cfg(warn_cfg()).run(|ctx| {
         let x = ctx.register("x", 8).unwrap();
         ctx.sync();
         if ctx.pid() < 2 {
@@ -57,7 +57,7 @@ fn detector_write_write_conflict() {
 fn detector_local_write_clobber() {
     // Core 0 writes x[0] locally while core 1 puts into the same word:
     // the put lands at the sync and silently overwrites the local write.
-    let out = run_gang_cfg(&epiphany(2), None, false, warn_cfg(), |ctx| {
+    let out = Gang::new(&epiphany(2)).with_cfg(warn_cfg()).run(|ctx| {
         let x = ctx.register("x", 4).unwrap();
         ctx.sync();
         if ctx.pid() == 1 {
@@ -77,7 +77,7 @@ fn detector_local_write_clobber() {
 fn detector_barrier_divergence_mixed_shapes() {
     // Same barrier crossing, different shapes: core 0 treats it as a
     // plain superstep sync, core 1 as a hyperstep boundary.
-    let out = run_gang_cfg(&epiphany(2), None, false, warn_cfg(), |ctx| {
+    let out = Gang::new(&epiphany(2)).with_cfg(warn_cfg()).run(|ctx| {
         if ctx.pid() == 0 {
             ctx.sync();
         } else {
@@ -93,7 +93,7 @@ fn detector_barrier_divergence_unequal_counts() {
     // Core 1 exits without ever syncing: without the analyzer this
     // deadlocks; with it the gang aborts with a divergence diagnostic.
     let r = catch_unwind(|| {
-        let _ = run_gang_cfg(&epiphany(2), None, false, warn_cfg(), |ctx| {
+        let _ = Gang::new(&epiphany(2)).with_cfg(warn_cfg()).run(|ctx| {
             if ctx.pid() == 0 {
                 ctx.sync();
             }
@@ -113,7 +113,7 @@ fn detector_scratchpad_over_budget() {
     // put arena then pushes core 1 past `L`.
     let mut m = epiphany(2);
     m.local_mem = 256;
-    let out = run_gang_cfg(&m, None, false, warn_cfg(), |ctx| {
+    let out = Gang::new(&m).with_cfg(warn_cfg()).run(|ctx| {
         let x = ctx.register("x", 64).unwrap();
         ctx.sync();
         if ctx.pid() == 1 {
@@ -134,7 +134,8 @@ fn detector_stream_token_hazard() {
     let m = epiphany(1);
     let mut reg = StreamRegistry::new(&m);
     reg.create(16, 4, None).unwrap();
-    let out = run_gang_cfg(&m, Some(Arc::new(reg)), true, warn_cfg(), |ctx| {
+    let gang = Gang::new(&m).with_streams(Arc::new(reg)).with_prefetch(true);
+    let out = gang.with_cfg(warn_cfg()).run(|ctx| {
         let h = ctx.stream_open(0).unwrap();
         let mut buf = Vec::new();
         ctx.stream_move_down(h, &mut buf).unwrap();
@@ -152,7 +153,7 @@ fn detector_stream_token_hazard() {
 fn detector_late_registration() {
     // A brand-new variable past the first sync: under Deny the call
     // fails with a recoverable error (not a poison) and is reported.
-    let out = run_gang_cfg(&epiphany(2), None, false, deny_cfg(), |ctx| {
+    let out = Gang::new(&epiphany(2)).with_cfg(deny_cfg()).run(|ctx| {
         let _early = ctx.register("early", 2).unwrap();
         ctx.sync();
         let e = ctx.register("late", 2).unwrap_err().to_string();
@@ -170,7 +171,7 @@ fn detector_late_registration() {
 #[test]
 fn deny_mode_aborts_with_the_finding_as_diagnostic() {
     let r = catch_unwind(|| {
-        let _ = run_gang_cfg(&epiphany(2), None, false, deny_cfg(), |ctx| {
+        let _ = Gang::new(&epiphany(2)).with_cfg(deny_cfg()).run(|ctx| {
             let x = ctx.register("x", 4).unwrap();
             ctx.sync();
             ctx.put(0, x, 0, &[1.0; 4]); // both cores write core 0's x

@@ -12,7 +12,7 @@
 //! message-heavy BSP programs are allocation-free too.
 //!
 //! The window also pins the fault subsystem's default cost: with
-//! `FaultMode::Off` (the `run_gang` default) every injection hook in
+//! `FaultMode::Off` (the `Gang` builder default) every injection hook in
 //! `move_down` / `hyperstep_sync` is a free branch, the checkpoint hook
 //! is a skipped `None`, and the always-on per-token checksum verify is
 //! a lock plus an FNV fold over the delivered words — none of which may
@@ -26,7 +26,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use bsps::bsp::run_gang;
+use bsps::bsp::Gang;
 use bsps::model::params::AcceleratorParams;
 use bsps::stream::StreamRegistry;
 
@@ -84,7 +84,7 @@ fn steady_state_token_loop_is_allocation_free() {
     }
     let reg = Arc::new(reg);
 
-    let _ = run_gang(&m, Some(reg), true, |ctx| {
+    let _ = Gang::new(&m).with_streams(reg).with_prefetch(true).run(|ctx| {
         let pid = ctx.pid();
         let h = ctx.stream_open(pid).unwrap();
         // 65 registered variables span two chunks of the engine's
